@@ -1,0 +1,81 @@
+//! Continuous operation (Fig. 1 Step 7 run as a loop): 12 simulated hours
+//! with a usage-characteristic drift halfway through, driven by a JSON
+//! config — the deployment shape a provider would actually run.
+//!
+//!     cargo run --release --example adaptive_operation
+
+use repro::apps::registry;
+use repro::coordinator::adaptive::{run_adaptive, AdaptiveConfig};
+use repro::coordinator::config::RunConfig;
+use repro::coordinator::{Approval, ProductionEnv};
+use repro::fpga::device::ReconfigKind;
+use repro::fpga::part::D5005;
+use repro::offload::{search, OffloadConfig};
+use repro::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    // Everything configurable lives in one JSON document.
+    let cfg_json = r#"{
+        "window_hours": 1.0,
+        "threshold": 2.0,
+        "top_apps": 2,
+        "reconfig": "static",
+        "seed": 42
+    }"#;
+    let run_cfg = RunConfig::parse(cfg_json)?;
+    println!("config:\n{cfg_json}\n");
+
+    let mut env = ProductionEnv::new(registry(), D5005);
+    let reg = registry();
+    let td = repro::apps::find(&reg, "tdfir").unwrap();
+    let pre = search(td, "large", &OffloadConfig::default())?;
+    env.deploy(ReconfigKind::Static, "tdfir", &pre.best.variant, pre.improvement);
+
+    let cfg = AdaptiveConfig {
+        recon: run_cfg.recon.clone(),
+        windows: 12,
+        window_secs: run_cfg.window_secs,
+        cooldown_windows: 1,
+        flap_ratio: 4.0,
+    };
+    let mut approval = Approval::auto_yes();
+
+    // Drift: from hour 6, MRI-Q traffic disappears and DFT spikes.
+    let reports = run_adaptive(&mut env, &cfg, &mut approval, |w, env| {
+        if w == 6 {
+            for app in env.registry.iter_mut() {
+                match app.name {
+                    "mriq" => app.rate_per_hour = 0.0,
+                    "dft" => app.rate_per_hour = 30.0,
+                    _ => {}
+                }
+            }
+            println!("-- hour 6: usage drift (mriq -> 0 req/h, dft -> 30 req/h) --");
+        }
+    })?;
+
+    let mut t = Table::new(vec!["hour", "requests", "serving", "reconfigured", "effect ratio"]);
+    for r in &reports {
+        t.row(vec![
+            r.window.to_string(),
+            r.requests.to_string(),
+            r.serving.clone().unwrap_or_default(),
+            if r.reconfigured { "YES" } else { "" }.to_string(),
+            r.outcome
+                .as_ref()
+                .and_then(|o| o.proposal.as_ref())
+                .map(|p| format!("{:.2}", p.ratio))
+                .unwrap_or_else(|| "(cooldown)".into()),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let switches: Vec<_> = reports
+        .iter()
+        .filter(|r| r.reconfigured)
+        .map(|r| (r.window, r.serving.clone().unwrap_or_default()))
+        .collect();
+    println!("\nlogic changes: {switches:?}");
+    println!("total card outage: {:.2} s over 12 h", env.device.total_downtime());
+    Ok(())
+}

@@ -1,0 +1,170 @@
+//! END-TO-END DRIVER (the EXPERIMENTS.md run): the paper's full §4
+//! evaluation scenario on a real workload, with real PJRT executions on
+//! the request path samples, proving all three layers compose.
+//!
+//!  1. pre-launch §3.1 auto-offload of tdFIR (user-specified, §4.1.2);
+//!  2. one hour of production traffic: tdFIR 300 req/h (FPGA), MRI-Q 10,
+//!     Himeno 3, Symm 2, DFT 1 (CPU), size mix 3:5:2 — service times on
+//!     the virtual clock, and the FIRST request of every (app, size)
+//!     class additionally executed through its real AOT artifact with
+//!     output checked against the CPU-variant artifact;
+//!  3. the §3.3 six-step reconfiguration cycle: load analysis with
+//!     improvement-coefficient correction, mode-based representative
+//!     data, verification-env pattern search, threshold 2.0, approval,
+//!     static reconfiguration — plus the measured wall-clock PJRT swap;
+//!  4. a second production hour after the reconfiguration, confirming
+//!     MRI-Q now rides the FPGA.
+//!
+//!     cargo run --release --example e2e_reconfiguration
+
+use std::collections::BTreeSet;
+
+use repro::apps::{find, registry};
+use repro::coordinator::{
+    run_reconfiguration, Approval, ProductionEnv, ReconConfig, ServedBy,
+};
+use repro::fpga::device::ReconfigKind;
+use repro::fpga::part::D5005;
+use repro::offload::{search, OffloadConfig};
+use repro::report;
+use repro::runtime::Runtime;
+use repro::util::table::{fmt_secs, Table};
+use repro::workload::generate;
+
+fn main() -> anyhow::Result<()> {
+    let seed = 42;
+    let mut rt = Runtime::new("artifacts")?;
+
+    // ---- 1. pre-launch auto-offload of tdFIR ------------------------------
+    let reg = registry();
+    let td = find(&reg, "tdfir").unwrap();
+    let pre = search(td, "large", &OffloadConfig::default())?;
+    println!(
+        "[1] pre-launch offload: tdfir:{} ({} vs cpu {}; coefficient {:.2})",
+        pre.best.variant,
+        fmt_secs(pre.best.time_secs),
+        fmt_secs(pre.cpu_time_secs),
+        pre.improvement
+    );
+
+    let mut env = ProductionEnv::new(registry(), D5005);
+    env.deploy(ReconfigKind::Static, "tdfir", &pre.best.variant, pre.improvement);
+
+    // ---- 2. one production hour, with sampled REAL executions -------------
+    let trace = generate(&env.registry, 3600.0, seed);
+    println!(
+        "[2] production hour: {} requests ({} tdfir)",
+        trace.len(),
+        trace.iter().filter(|r| r.app == "tdfir").count()
+    );
+    let mut validated: BTreeSet<(String, String)> = BTreeSet::new();
+    let mut real_execs = Table::new(vec![
+        "request", "artifact", "exec wall", "vs cpu-variant |diff|",
+    ]);
+    for req in &trace {
+        let rec = env.serve(req)?;
+        let class = (req.app.clone(), req.size.clone());
+        if !validated.contains(&class) {
+            validated.insert(class);
+            // Execute this request's real artifact: the variant the card
+            // serves for the deployed app, cpu build otherwise.
+            let app = find(&reg, &req.app).unwrap();
+            let variant = if rec.served_by == ServedBy::Fpga {
+                env.deployment.as_ref().unwrap().variant.clone()
+            } else {
+                "cpu".to_string()
+            };
+            let key = app.artifact_key(&req.size, &variant);
+            let out = rt.execute_seeded(&key, req.id)?;
+            let diff = rt.compare_variants(
+                &app.artifact_key(&req.size, "cpu"),
+                &key,
+                req.id,
+            )?;
+            real_execs.row(vec![
+                format!("{}@{}", req.app, req.size),
+                key,
+                fmt_secs(out.exec_secs),
+                format!("{diff:.2e}"),
+            ]);
+        }
+    }
+    println!("\nreal PJRT executions (first request of each class):");
+    print!("{}", real_execs.render());
+
+    // ---- 3. the §3.3 reconfiguration cycle --------------------------------
+    let cfg = ReconConfig::default();
+    let mut approval = Approval::auto_yes();
+    let out = run_reconfiguration(&mut env, &cfg, &mut approval)?;
+    println!("\n[3] §3.3 cycle:");
+    println!("STEP1 — load ranking:");
+    print!("{}", report::load_ranking(&out).render());
+    println!("STEP1 — representative data:");
+    print!("{}", report::representatives(&out).render());
+    let p = out.proposal.as_ref().unwrap();
+    println!(
+        "STEP4 — ratio {:.2} >= 2.0 => {}   STEP5 — user approved",
+        p.ratio,
+        if p.proposed { "PROPOSE" } else { "no action" }
+    );
+    println!("\nFIG4 — improvement through reconfiguration:");
+    print!("{}", report::fig4_improvement(&out).render());
+    println!("TXT-STEPS:");
+    print!("{}", report::step_durations(&out).render());
+
+    // Measured wall-clock swap (TXT-DOWNTIME).
+    let to_app = find(&reg, &p.best.app).unwrap();
+    let rep_size = out
+        .representatives
+        .iter()
+        .find(|r| r.app == p.best.app)
+        .map(|r| r.size.as_str())
+        .unwrap_or("large");
+    let from_key = td.artifact_key("large", &p.current.variant);
+    let to_key = to_app.artifact_key(rep_size, &p.best.variant);
+    rt.load(&from_key)?;
+    let swap = rt.swap(Some(&from_key), &to_key)?;
+    println!(
+        "TXT-DOWNTIME — virtual static outage {} | measured PJRT swap: compile {} + warmup {} = {}",
+        fmt_secs(out.reconfig.as_ref().unwrap().downtime_secs),
+        fmt_secs(swap.compile_secs),
+        fmt_secs(swap.warmup_secs),
+        fmt_secs(swap.total_secs()),
+    );
+
+    // ---- 4. the hour after: MRI-Q rides the FPGA --------------------------
+    let t0 = env.clock.now() + 1.0;
+    let mut after = generate(&env.registry, 3600.0, seed + 1);
+    for r in &mut after {
+        r.arrival += t0;
+    }
+    env.run_window(&after)?;
+    let mriq_fpga = env
+        .history
+        .all()
+        .iter()
+        .filter(|r| r.arrival >= t0 && r.app == "mriq" && r.served_by == ServedBy::Fpga)
+        .count();
+    let mriq_total = env
+        .history
+        .all()
+        .iter()
+        .filter(|r| r.arrival >= t0 && r.app == "mriq")
+        .count();
+    let mean_after: f64 = {
+        let recs: Vec<_> = env
+            .history
+            .all()
+            .iter()
+            .filter(|r| r.arrival >= t0 && r.app == "mriq")
+            .collect();
+        recs.iter().map(|r| r.service_secs).sum::<f64>() / recs.len().max(1) as f64
+    };
+    println!(
+        "\n[4] hour after reconfiguration: {mriq_fpga}/{mriq_total} MRI-Q requests on FPGA, mean service {} (was ~{} CPU-only)",
+        fmt_secs(mean_after),
+        fmt_secs(p.best.cpu_secs),
+    );
+    println!("\nE2E OK");
+    Ok(())
+}

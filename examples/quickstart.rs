@@ -1,0 +1,64 @@
+//! Quickstart: offload one application to the (simulated) FPGA, serve a
+//! short production window, and run one real request through the PJRT
+//! artifact to prove the three layers compose.
+//!
+//!     cargo run --release --example quickstart
+
+use repro::apps::{find, registry};
+use repro::coordinator::ProductionEnv;
+use repro::fpga::device::ReconfigKind;
+use repro::fpga::part::D5005;
+use repro::offload::{search, OffloadConfig};
+use repro::runtime::Runtime;
+use repro::util::table::fmt_secs;
+use repro::workload::generate;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pre-launch: automatically offload tdFIR (§3.1).
+    let reg = registry();
+    let tdfir = find(&reg, "tdfir").unwrap();
+    let result = search(tdfir, "large", &OffloadConfig::default())?;
+    println!(
+        "offload search: best pattern `{}`, {} vs cpu {} ({:.2}x)",
+        result.best.variant,
+        fmt_secs(result.best.time_secs),
+        fmt_secs(result.cpu_time_secs),
+        result.improvement
+    );
+
+    // 2. Deploy to the production card and serve 10 minutes of traffic.
+    let mut env = ProductionEnv::new(registry(), D5005);
+    env.deploy(
+        ReconfigKind::Static,
+        "tdfir",
+        &result.best.variant,
+        result.improvement,
+    );
+    let trace = generate(&env.registry, 600.0, 1);
+    env.run_window(&trace)?;
+    let (sum, n) = env.history.totals_in_window("tdfir", 0.0, f64::INFINITY);
+    println!(
+        "served {} requests ({} tdfir on FPGA, mean {})",
+        trace.len(),
+        n,
+        fmt_secs(sum / n.max(1) as f64)
+    );
+
+    // 3. Execute the selected pattern's real AOT artifact through PJRT.
+    let key = tdfir.artifact_key("large", &result.best.variant);
+    let mut rt = Runtime::new("artifacts")?;
+    let out = rt.execute_seeded(&key, 42)?;
+    let energy = out.outputs[2].to_vec::<f32>()?;
+    println!(
+        "real PJRT execution of `{key}`: {} outputs, filter-0 energy {:.3} ({} exec)",
+        out.outputs.len(),
+        energy[0],
+        fmt_secs(out.exec_secs)
+    );
+
+    // 4. Cross-check against the CPU-only artifact on identical inputs.
+    let cpu_key = tdfir.artifact_key("large", "cpu");
+    let diff = rt.compare_variants(&cpu_key, &key, 42)?;
+    println!("offloaded vs cpu variant: max |diff| = {diff:.2e} (reconfiguration-safe)");
+    Ok(())
+}

@@ -1,0 +1,113 @@
+"""AOT lowering: every (app, size, variant) -> artifacts/*.hlo.txt + manifest.
+
+This is the single build-time entry point (`make artifacts`). Python never
+runs on the request path: the rust coordinator loads the HLO text artifacts
+through PJRT and serves from them.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate binds) rejects with
+`proto.id() <= INT_MAX`; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import apps as apps_mod
+from compile.apps import VARIANTS, variant_stages
+
+DTYPE = "f32"
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax Lowered to XLA HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_name(app: str, size: str, variant: str) -> str:
+    return f"{app}__{size}__{variant}.hlo.txt"
+
+
+def lower_one(spec, size: str, variant: str):
+    """Lower one (app, size, variant) to HLO text; returns (text, meta)."""
+    dims = spec.sizes[size]
+    pattern = variant_stages(variant)
+    fn = spec.make_fn(pattern, dims)
+    in_specs = spec.input_specs(dims)
+    args = [jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in in_specs]
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    meta = {
+        "app": spec.name,
+        "size": size,
+        "variant": variant,
+        "stages": sorted(pattern),
+        "stage_names": list(spec.stage_names),
+        "dims": dims,
+        "path": artifact_name(spec.name, size, variant),
+        "inputs": [
+            {"name": n, "shape": list(shape), "dtype": DTYPE}
+            for n, shape in in_specs
+        ],
+        "num_outputs": spec.num_outputs,
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    return text, meta
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--apps", default="", help="comma-separated app filter")
+    ap.add_argument("--variants", default="", help="comma-separated variant filter")
+    ns = ap.parse_args()
+
+    out_dir = ns.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+    app_filter = set(filter(None, ns.apps.split(",")))
+    var_filter = set(filter(None, ns.variants.split(",")))
+
+    manifest = {"format": 1, "dtype": DTYPE, "artifacts": []}
+    t0 = time.time()
+    count = 0
+    for spec in apps_mod.all_apps():
+        if app_filter and spec.name not in app_filter:
+            continue
+        for size in spec.sizes:
+            for variant in VARIANTS:
+                if var_filter and variant not in var_filter:
+                    continue
+                text, meta = lower_one(spec, size, variant)
+                path = os.path.join(out_dir, meta["path"])
+                with open(path, "w") as f:
+                    f.write(text)
+                manifest["artifacts"].append(meta)
+                count += 1
+                print(
+                    f"[{count:3d}] {meta['path']}  "
+                    f"({len(text) // 1024} KiB, {time.time() - t0:.1f}s)",
+                    flush=True,
+                )
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {count} artifacts + manifest.json in {time.time() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

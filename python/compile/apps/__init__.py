@@ -1,0 +1,86 @@
+"""Layer-2 application registry.
+
+Each application is a jax pipeline of four offloadable stages (see
+kernels/ref.py). A *variant* selects which stages run through the Pallas
+kernels ("offloaded to the FPGA logic") versus plain jnp (the CPU path):
+
+  variant "cpu"   — no stage offloaded (the CPU-only executable);
+  variant "o1"    — stage s1 offloaded;
+  variant "o12"   — stages s1+s2 offloaded (a combination pattern), etc.
+
+The §3.1/§3.3 pattern searches run on the rust side over loop-IR analysis;
+every pattern they can choose corresponds to one variant lowered here, so the
+chosen pattern is always a runnable PJRT artifact. Variants = cpu + 4 singles
++ all 6 pairs (the paper measures 3 singles + the best-2 combination; lowering
+every pair keeps the rust-side choice unconstrained).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+
+STAGE_COUNT = 4
+
+#: All lowered variants: cpu, 4 singles, 6 pairs.
+VARIANTS: List[str] = ["cpu"] + [f"o{i}" for i in range(STAGE_COUNT)] + [
+    f"o{i}{j}" for i, j in itertools.combinations(range(STAGE_COUNT), 2)
+]
+
+
+def variant_stages(variant: str) -> frozenset:
+    """Decode a variant name into the set of offloaded stage indices."""
+    if variant == "cpu":
+        return frozenset()
+    assert variant.startswith("o"), variant
+    return frozenset(int(ch) for ch in variant[1:])
+
+
+def variant_name(stages: Sequence[int]) -> str:
+    """Canonical variant name for a set of offloaded stage indices."""
+    if not stages:
+        return "cpu"
+    return "o" + "".join(str(i) for i in sorted(set(stages)))
+
+
+@dataclass
+class AppSpec:
+    """Static description of one application's lowering interface."""
+
+    name: str
+    #: size name -> dict of dimension names -> ints (validation scale).
+    sizes: Dict[str, Dict[str, int]]
+    #: stage index -> human name (for the manifest / reports).
+    stage_names: Tuple[str, str, str, str]
+    #: (size dims) -> list of (input name, shape tuple).
+    input_specs: Callable[[Dict[str, int]], List[Tuple[str, Tuple[int, ...]]]]
+    #: (pattern frozenset, size dims) -> jax-traceable fn over the inputs.
+    make_fn: Callable[[frozenset, Dict[str, int]], Callable]
+    #: number of outputs the fn returns.
+    num_outputs: int = 0
+    extra: Dict[str, int] = field(default_factory=dict)
+
+
+_REGISTRY: Dict[str, AppSpec] = {}
+
+
+def register(spec: AppSpec) -> AppSpec:
+    assert spec.name not in _REGISTRY, spec.name
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get(name: str) -> AppSpec:
+    if name not in _REGISTRY:
+        all_apps()  # trigger registration imports
+    return _REGISTRY[name]
+
+
+def all_apps() -> List[AppSpec]:
+    # Import registers everything on first use.
+    from compile.apps import tdfir, mriq, himeno, symm, dft  # noqa: F401
+
+    return [_REGISTRY[k] for k in sorted(_REGISTRY)]

@@ -1,0 +1,54 @@
+"""Layer-2 DFT app: window -> transform -> magnitude -> normalize."""
+
+from __future__ import annotations
+
+from compile.apps import AppSpec, register
+from compile.kernels import ref
+from compile.kernels import dft as k
+
+
+SIZES = {
+    "sample": {"n": 256},
+}
+
+
+def input_specs(dims):
+    n = dims["n"]
+    return [("xr", (n,)), ("xi", (n,))]
+
+
+def make_fn(pattern: frozenset, dims):
+    n = dims["n"]
+
+    def fn(xr, xi):
+        if 0 in pattern:
+            xr, xi = k.window(xr, xi)
+        else:
+            xr, xi = ref.dft_window(xr, xi)
+        if 1 in pattern:
+            x_r, x_i = k.transform(xr, xi)
+        else:
+            x_r, x_i = ref.dft_transform(xr, xi)
+        if 2 in pattern:
+            xm = k.magnitude(x_r, x_i)
+        else:
+            xm = ref.dft_magnitude(x_r, x_i)
+        if 3 in pattern:
+            xn = k.normalize(xm, n)
+        else:
+            xn = ref.dft_normalize(xm, n)
+        return x_r, x_i, xn
+
+    return fn
+
+
+SPEC = register(
+    AppSpec(
+        name="dft",
+        sizes=SIZES,
+        stage_names=("window", "transform", "magnitude", "normalize"),
+        input_specs=input_specs,
+        make_fn=make_fn,
+        num_outputs=3,
+    )
+)

@@ -1,0 +1,66 @@
+"""Layer-2 Himeno app: init, then ITERS x (stencil -> gosa -> copy).
+
+Himeno/Symm/DFT are driven with their sample data only (§4.1.2), so a single
+"sample" size is lowered.
+"""
+
+from __future__ import annotations
+
+from compile.apps import AppSpec, register
+from compile.kernels import ref
+from compile.kernels import himeno as k
+
+ITERS = 2
+
+SIZES = {
+    "sample": {"i": 16, "j": 16, "kk": 32, "iters": ITERS},
+}
+
+
+def input_specs(dims):
+    shape = (dims["i"], dims["j"], dims["kk"])
+    return [
+        ("p", shape),
+        ("bnd", shape),
+        ("wrk1", shape),
+        ("coef", (10,)),
+    ]
+
+
+def make_fn(pattern: frozenset, dims):
+    iters = dims["iters"]
+
+    def fn(p, bnd, wrk1, coef):
+        if 0 in pattern:
+            p = k.init(p)
+        else:
+            p = ref.himeno_init(p)
+        gosa = None
+        for _ in range(iters):
+            if 1 in pattern:
+                wrk2, ss = k.stencil(p, bnd, wrk1, coef)
+            else:
+                wrk2, ss = ref.himeno_stencil(p, bnd, wrk1, coef)
+            if 2 in pattern:
+                gosa = k.gosa(ss)
+            else:
+                gosa = ref.himeno_gosa(ss)
+            if 3 in pattern:
+                p = k.copy(p, wrk2)
+            else:
+                p = ref.himeno_copy(p, wrk2)
+        return p, gosa
+
+    return fn
+
+
+SPEC = register(
+    AppSpec(
+        name="himeno",
+        sizes=SIZES,
+        stage_names=("init", "stencil", "gosa", "copy"),
+        input_specs=input_specs,
+        make_fn=make_fn,
+        num_outputs=2,
+    )
+)

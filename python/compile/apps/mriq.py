@@ -1,0 +1,66 @@
+"""Layer-2 MRI-Q app: phiMag -> Q -> scale -> magnitude."""
+
+from __future__ import annotations
+
+from compile.apps import AppSpec, register
+from compile.kernels import ref
+from compile.kernels import mriq as k
+
+
+SIZES = {
+    "small": {"numk": 256, "numx": 1024},
+    "large": {"numk": 384, "numx": 2048},
+    # "Large copied once to double it" (§4.1.2): twice the voxels.
+    "xlarge": {"numk": 384, "numx": 4096},
+}
+
+
+def input_specs(dims):
+    kk, xx = dims["numk"], dims["numx"]
+    return [
+        ("kx", (kk,)),
+        ("ky", (kk,)),
+        ("kz", (kk,)),
+        ("phir", (kk,)),
+        ("phii", (kk,)),
+        ("x", (xx,)),
+        ("y", (xx,)),
+        ("z", (xx,)),
+    ]
+
+
+def make_fn(pattern: frozenset, dims):
+    numk = dims["numk"]
+
+    def fn(kx, ky, kz, phir, phii, x, y, z):
+        if 0 in pattern:
+            pm = k.phimag(phir, phii)
+        else:
+            pm = ref.mriq_phimag(phir, phii)
+        if 1 in pattern:
+            qr, qi = k.q(kx, ky, kz, pm, x, y, z)
+        else:
+            qr, qi = ref.mriq_q(kx, ky, kz, pm, x, y, z)
+        if 2 in pattern:
+            qr, qi = k.scale(qr, qi, numk)
+        else:
+            qr, qi = ref.mriq_scale(qr, qi, numk)
+        if 3 in pattern:
+            qm = k.magnitude(qr, qi)
+        else:
+            qm = ref.mriq_magnitude(qr, qi)
+        return qr, qi, qm
+
+    return fn
+
+
+SPEC = register(
+    AppSpec(
+        name="mriq",
+        sizes=SIZES,
+        stage_names=("phimag", "q", "scale", "magnitude"),
+        input_specs=input_specs,
+        make_fn=make_fn,
+        num_outputs=3,
+    )
+)

@@ -1,0 +1,56 @@
+"""Layer-2 Symm app: symmetrize -> matmul -> combine -> rownorm."""
+
+from __future__ import annotations
+
+from compile.apps import AppSpec, register
+from compile.kernels import ref
+from compile.kernels import symm as k
+
+
+SIZES = {
+    "sample": {"m": 48, "n": 64},
+}
+
+
+def input_specs(dims):
+    m, n = dims["m"], dims["n"]
+    return [
+        ("a_low", (m, m)),
+        ("b", (m, n)),
+        ("c", (m, n)),
+    ]
+
+
+def make_fn(pattern: frozenset, dims):
+    def fn(a_low, b, c):
+        if 0 in pattern:
+            a_full = k.symmetrize(a_low)
+        else:
+            a_full = ref.symm_symmetrize(a_low)
+        if 1 in pattern:
+            p = k.matmul(a_full, b)
+        else:
+            p = ref.symm_matmul(a_full, b)
+        if 2 in pattern:
+            c_out = k.combine(p, c)
+        else:
+            c_out = ref.symm_combine(p, c)
+        if 3 in pattern:
+            r = k.rownorm(c_out)
+        else:
+            r = ref.symm_rownorm(c_out)
+        return c_out, r
+
+    return fn
+
+
+SPEC = register(
+    AppSpec(
+        name="symm",
+        sizes=SIZES,
+        stage_names=("symmetrize", "matmul", "combine", "rownorm"),
+        input_specs=input_specs,
+        make_fn=make_fn,
+        num_outputs=2,
+    )
+)

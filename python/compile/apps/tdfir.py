@@ -1,0 +1,65 @@
+"""Layer-2 tdFIR app: window -> conv -> normalize -> energy.
+
+Validation-scale sizes; the paper-scale dimensions used by the rust loop-IR
+analysis live in assets/apps/tdfir.lc. The size mix (small/large/xlarge with
+xlarge = large duplicated once, per §4.1.2) is mirrored here.
+"""
+
+from __future__ import annotations
+
+from compile.apps import AppSpec, register
+from compile.kernels import ref
+from compile.kernels import tdfir as k
+
+
+SIZES = {
+    "small": {"m": 4, "n": 256, "k": 16},
+    "large": {"m": 8, "n": 512, "k": 32},
+    # "Large copied once to double it" (§4.1.2): twice the filters.
+    "xlarge": {"m": 16, "n": 512, "k": 32},
+}
+
+
+def input_specs(dims):
+    m, n, kk = dims["m"], dims["n"], dims["k"]
+    return [
+        ("xr", (m, n)),
+        ("xi", (m, n)),
+        ("hr", (m, kk)),
+        ("hi", (m, kk)),
+    ]
+
+
+def make_fn(pattern: frozenset, dims):
+    def fn(xr, xi, hr, hi):
+        if 0 in pattern:
+            xr, xi = k.window(xr, xi)
+        else:
+            xr, xi = ref.tdfir_window(xr, xi)
+        if 1 in pattern:
+            yr, yi = k.conv(xr, xi, hr, hi)
+        else:
+            yr, yi = ref.tdfir_conv(xr, xi, hr, hi)
+        if 2 in pattern:
+            yr, yi = k.normalize(yr, yi, hr, hi)
+        else:
+            yr, yi = ref.tdfir_normalize(yr, yi, hr, hi)
+        if 3 in pattern:
+            e = k.energy(yr, yi)
+        else:
+            e = ref.tdfir_energy(yr, yi)
+        return yr, yi, e
+
+    return fn
+
+
+SPEC = register(
+    AppSpec(
+        name="tdfir",
+        sizes=SIZES,
+        stage_names=("window", "conv", "normalize", "energy"),
+        input_specs=input_specs,
+        make_fn=make_fn,
+        num_outputs=3,
+    )
+)

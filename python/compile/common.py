@@ -1,0 +1,97 @@
+"""Shared helpers for the Layer-1 Pallas kernels.
+
+Everything here is build-time only: kernels are authored in Pallas, verified
+against the pure-jnp oracles in ``kernels/ref.py``, lowered together with the
+Layer-2 app graphs by ``aot.py``, and never imported at runtime.
+
+All kernels run with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode is the correctness path and the
+TPU-perf story is carried by the BlockSpec structure (see DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see DESIGN.md.
+
+
+def cdiv(a: int, b: int) -> int:
+    """Ceiling division used for grid sizing."""
+    return -(-a // b)
+
+
+def pallas_call(kernel, **kwargs):
+    """``pl.pallas_call`` pinned to interpret mode for this repo."""
+    return pl.pallas_call(kernel, interpret=INTERPRET, **kwargs)
+
+
+def row_block_spec(block_rows: int, cols: int):
+    """BlockSpec tiling a 2-D array into row panels of ``block_rows``.
+
+    This is the HBM->VMEM schedule all the row-parallel kernels share: one
+    grid step streams ``block_rows`` rows into VMEM, mirroring the OpenCL
+    host->global->local staging of the paper's FPGA pipelines.
+    """
+    return pl.BlockSpec((block_rows, cols), lambda i: (i, 0))
+
+
+def full_spec(shape):
+    """BlockSpec that maps the whole array into every grid step."""
+    ndim = len(shape)
+    return pl.BlockSpec(tuple(shape), lambda *_: (0,) * ndim)
+
+
+def vec_block_spec(block: int):
+    """BlockSpec tiling a 1-D array into contiguous chunks of ``block``."""
+    return pl.BlockSpec((block,), lambda i: (i,))
+
+
+def ew_vecwise(fn, *arrays, block: int = 256, out_dtype=None):
+    """Run an elementwise ``fn`` over equally-shaped 1-D arrays via Pallas."""
+    n = arrays[0].shape[0]
+    b = min(block, n)
+    grid = (cdiv(n, b),)
+    dtype = out_dtype or arrays[0].dtype
+
+    def kernel(*refs):
+        out_ref = refs[-1]
+        out_ref[...] = fn(*[r[...] for r in refs[:-1]])
+
+    return pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[vec_block_spec(b) for _ in arrays],
+        out_specs=vec_block_spec(b),
+        out_shape=jax.ShapeDtypeStruct((n,), dtype),
+    )(*arrays)
+
+
+def ew_rowwise(fn, *arrays, block_rows: int = 8):
+    """Run an elementwise ``fn`` over equally-shaped 2-D arrays via Pallas.
+
+    ``fn`` receives jnp views of one row panel per input and must return the
+    output panel. Used by the small "secondary loop" offload stages (window,
+    scale, magnitude, ...) so that even the non-headline offload patterns are
+    genuinely kernelized.
+    """
+    x0 = arrays[0]
+    rows, cols = x0.shape
+    br = min(block_rows, rows)
+    grid = (cdiv(rows, br),)
+
+    def kernel(*refs):
+        out_ref = refs[-1]
+        out_ref[...] = fn(*[r[...] for r in refs[:-1]])
+
+    return pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[row_block_spec(br, cols) for _ in arrays],
+        out_specs=row_block_spec(br, cols),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), x0.dtype),
+    )(*arrays)

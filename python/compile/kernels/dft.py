@@ -1,0 +1,72 @@
+"""Layer-1 Pallas kernels for the naive O(N^2) DFT.
+
+``transform`` computes output-frequency blocks: each grid step derives its
+global frequency indices from pl.program_id, builds the twiddle tile in VMEM,
+and contracts it against the full input frame — the matrix form of the DFT,
+which is the MXU-friendly translation of the FPGA's butterfly pipeline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.common import cdiv, ew_vecwise, full_spec, pallas_call, vec_block_spec
+from compile.kernels import ref
+
+DEFAULT_BLOCK_K = 64
+
+
+def window(xr, xi, block: int = DEFAULT_BLOCK_K):
+    """s0 kernel: Hann window over the input frame."""
+    n = xr.shape[0]
+    w = ref.hann(n, xr.dtype)
+    return (
+        ew_vecwise(lambda a, b: a * b, xr, w, block=block),
+        ew_vecwise(lambda a, b: a * b, xi, w, block=block),
+    )
+
+
+def _transform_kernel(xr_ref, xi_ref, or_ref, oi_ref, *, n, bk):
+    kb = pl.program_id(0)
+    ks = (kb * bk + jnp.arange(bk)).astype(jnp.float32)
+    ns = jnp.arange(n, dtype=jnp.float32)
+    ang = 2.0 * jnp.pi * jnp.outer(ks, ns) / float(n)
+    cs, sn = jnp.cos(ang), jnp.sin(ang)
+    xr = xr_ref[...]
+    xi = xi_ref[...]
+    or_ref[...] = cs @ xr + sn @ xi
+    oi_ref[...] = cs @ xi - sn @ xr
+
+
+def transform(xr, xi, block: int = DEFAULT_BLOCK_K):
+    """s1 kernel: the headline DFT double loop in matrix form."""
+    import functools
+
+    n = xr.shape[0]
+    bk = min(block, n)
+    kernel = functools.partial(_transform_kernel, n=n, bk=bk)
+    return pallas_call(
+        kernel,
+        grid=(cdiv(n, bk),),
+        in_specs=[full_spec((n,)), full_spec((n,))],
+        out_specs=[vec_block_spec(bk), vec_block_spec(bk)],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), xr.dtype),
+            jax.ShapeDtypeStruct((n,), xr.dtype),
+        ],
+    )(xr, xi)
+
+
+def magnitude(x_r, x_i, block: int = DEFAULT_BLOCK_K):
+    """s2 kernel: magnitude spectrum."""
+    return ew_vecwise(
+        lambda a, b: jnp.sqrt(a * a + b * b + ref.EPS), x_r, x_i, block=block
+    )
+
+
+def normalize(xm, n: int, block: int = DEFAULT_BLOCK_K):
+    """s3 kernel: scale the spectrum by 1/N."""
+    inv = 1.0 / float(n)
+    return ew_vecwise(lambda a: a * inv, xm, block=block)

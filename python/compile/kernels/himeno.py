@@ -1,0 +1,87 @@
+"""Layer-1 Pallas kernels for the Himeno 19-point Jacobi benchmark.
+
+The validation grids are small enough (≈64 KiB per array) that each kernel
+maps the whole 3-D grid into a single VMEM block; the TPU-scale version would
+tile k-planes with halo exchange, which is recorded as the BlockSpec schedule
+in DESIGN.md §7. The stencil body is identical to the ref.py oracle — the
+kernel boundary (HBM->VMEM staging + fused sweep) is what the FPGA offload
+maps onto.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.common import full_spec, pallas_call
+from compile.kernels import ref
+
+
+def init(p):
+    """s0 kernel: normalize the pressure grid by its max magnitude."""
+    def kernel(p_ref, o_ref):
+        x = p_ref[...]
+        o_ref[...] = x / (jnp.max(jnp.abs(x)) + ref.EPS)
+
+    return pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[full_spec(p.shape)],
+        out_specs=full_spec(p.shape),
+        out_shape=jax.ShapeDtypeStruct(p.shape, p.dtype),
+    )(p)
+
+
+def stencil(p, bnd, wrk1, coef):
+    """s1 kernel: one fused 19-point Jacobi sweep producing (wrk2, ss)."""
+    def kernel(p_ref, bnd_ref, wrk1_ref, coef_ref, wrk2_ref, ss_ref):
+        wrk2, ss = ref.himeno_stencil(
+            p_ref[...], bnd_ref[...], wrk1_ref[...], coef_ref[...]
+        )
+        wrk2_ref[...] = wrk2
+        ss_ref[...] = ss  # ref.himeno_stencil already pads ss to full shape
+
+    return pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            full_spec(p.shape),
+            full_spec(bnd.shape),
+            full_spec(wrk1.shape),
+            full_spec(coef.shape),
+        ],
+        out_specs=[full_spec(p.shape), full_spec(p.shape)],
+        out_shape=[
+            jax.ShapeDtypeStruct(p.shape, p.dtype),
+            jax.ShapeDtypeStruct(p.shape, p.dtype),
+        ],
+    )(p, bnd, wrk1, coef)
+
+
+def gosa(ss):
+    """s2 kernel: residual reduction gosa = sum(ss^2) -> shape (1,)."""
+    def kernel(ss_ref, o_ref):
+        x = ss_ref[...]
+        o_ref[...] = jnp.sum(x * x).reshape((1,))
+
+    return pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[full_spec(ss.shape)],
+        out_specs=full_spec((1,)),
+        out_shape=jax.ShapeDtypeStruct((1,), ss.dtype),
+    )(ss)
+
+
+def copy(p, wrk2):
+    """s3 kernel: interior copy-back with frozen boundary shell."""
+    def kernel(p_ref, w_ref, o_ref):
+        o_ref[...] = ref.himeno_copy(p_ref[...], w_ref[...])
+
+    return pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[full_spec(p.shape), full_spec(p.shape)],
+        out_specs=full_spec(p.shape),
+        out_shape=jax.ShapeDtypeStruct(p.shape, p.dtype),
+    )(p, wrk2)

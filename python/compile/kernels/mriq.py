@@ -1,0 +1,80 @@
+"""Layer-1 Pallas kernels for MRI-Q (Parboil Q-matrix computation).
+
+The headline kernel is ``q`` — the paper's MRI-Q offload target. On the
+FPGA this is a deep sin/cos pipeline over k-space samples per voxel; here a
+grid over voxel blocks stages the voxel coordinates into VMEM while the full
+k-space sample arrays stay resident (they are the reused operand, exactly the
+on-chip table the OpenCL version keeps in local memory).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.common import cdiv, ew_vecwise, full_spec, pallas_call, vec_block_spec
+from compile.kernels import ref
+
+DEFAULT_BLOCK_X = 256
+
+
+def phimag(phi_r, phi_i, block: int = DEFAULT_BLOCK_X):
+    """s0 kernel: phiMag[k] = phiR^2 + phiI^2."""
+    return ew_vecwise(lambda a, b: a * a + b * b, phi_r, phi_i, block=block)
+
+
+def _q_kernel(kx_ref, ky_ref, kz_ref, pm_ref, x_ref, y_ref, z_ref, qr_ref, qi_ref):
+    x = x_ref[...]
+    y = y_ref[...]
+    z = z_ref[...]
+    expnt = 2.0 * jnp.pi * (
+        jnp.outer(x, kx_ref[...])
+        + jnp.outer(y, ky_ref[...])
+        + jnp.outer(z, kz_ref[...])
+    )
+    pm = pm_ref[...][None, :]
+    qr_ref[...] = jnp.sum(pm * jnp.cos(expnt), axis=1)
+    qi_ref[...] = jnp.sum(pm * jnp.sin(expnt), axis=1)
+
+
+def q(kx, ky, kz, phi_mag, x, y, z, block: int = DEFAULT_BLOCK_X):
+    """s1 kernel: the headline voxel loop (MRI-Q's offload loop)."""
+    num_k = kx.shape[0]
+    num_x = x.shape[0]
+    bx = min(block, num_x)
+    return pallas_call(
+        _q_kernel,
+        grid=(cdiv(num_x, bx),),
+        in_specs=[
+            full_spec((num_k,)),
+            full_spec((num_k,)),
+            full_spec((num_k,)),
+            full_spec((num_k,)),
+            vec_block_spec(bx),
+            vec_block_spec(bx),
+            vec_block_spec(bx),
+        ],
+        out_specs=[vec_block_spec(bx), vec_block_spec(bx)],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_x,), x.dtype),
+            jax.ShapeDtypeStruct((num_x,), x.dtype),
+        ],
+    )(kx, ky, kz, phi_mag, x, y, z)
+
+
+def scale(qr, qi, num_k: int, block: int = DEFAULT_BLOCK_X):
+    """s2 kernel: calibration scaling by 1/sqrt(K)."""
+    s = 1.0 / float(num_k) ** 0.5
+
+    return (
+        ew_vecwise(lambda a: a * s, qr, block=block),
+        ew_vecwise(lambda a: a * s, qi, block=block),
+    )
+
+
+def magnitude(qr, qi, block: int = DEFAULT_BLOCK_X):
+    """s3 kernel: |Q| per voxel."""
+    return ew_vecwise(
+        lambda a, b: jnp.sqrt(a * a + b * b + ref.EPS), qr, qi, block=block
+    )

@@ -1,0 +1,267 @@
+"""Pure-jnp oracles for every offloadable stage of the five applications.
+
+These are the ground truth the Pallas kernels (Layer 1) and the pattern
+variants (Layer 2) are tested against. Each application is decomposed into
+exactly four offloadable stages — mirroring the paper's §3.3 step 2-1, which
+narrows each app to its top-4 arithmetic-intensity loop statements — plus a
+full-pipeline reference.
+
+Conventions:
+ - complex data travels as separate (re, im) float32 arrays so the AOT HLO
+   interface stays plain f32 tensors for the rust PJRT loader;
+ - every stage is a pure function so jnp-vs-Pallas equivalence is exact up to
+   float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# tdFIR — time-domain finite impulse response filter bank (HPEC challenge).
+# M independent filters, N samples, K complex taps each.
+# ---------------------------------------------------------------------------
+
+def hann(n: int, dtype=jnp.float32):
+    """Hann window of length ``n`` (the s0 pre-filter windowing loop)."""
+    idx = jnp.arange(n, dtype=dtype)
+    return 0.5 - 0.5 * jnp.cos(2.0 * jnp.pi * idx / jnp.asarray(n, dtype))
+
+
+def tdfir_window(xr, xi):
+    """s0: apply a Hann window to every filter's input stream."""
+    w = hann(xr.shape[1], xr.dtype)
+    return xr * w, xi * w
+
+
+def tdfir_conv(xr, xi, hr, hi):
+    """s1: the headline complex convolution loop.
+
+    y[m, n] = sum_k h[m, k] * x[m, n - k]   (x[m, j] = 0 for j < 0)
+    """
+    m, n = xr.shape
+    k = hr.shape[1]
+    pad = ((0, 0), (k - 1, 0))
+    xr_p = jnp.pad(xr, pad)
+    xi_p = jnp.pad(xi, pad)
+    yr = jnp.zeros((m, n), xr.dtype)
+    yi = jnp.zeros((m, n), xr.dtype)
+    for kk in range(k):
+        # x[m, n - kk] == xr_p[:, (k - 1 - kk) : (k - 1 - kk) + n]
+        sl = slice(k - 1 - kk, k - 1 - kk + n)
+        xrs, xis = xr_p[:, sl], xi_p[:, sl]
+        hrk = hr[:, kk : kk + 1]
+        hik = hi[:, kk : kk + 1]
+        yr = yr + hrk * xrs - hik * xis
+        yi = yi + hrk * xis + hik * xrs
+    return yr, yi
+
+
+def tdfir_normalize(yr, yi, hr, hi):
+    """s2: normalize each filter's output by its tap energy."""
+    e = jnp.sum(hr * hr + hi * hi, axis=1, keepdims=True)
+    scale = 1.0 / jnp.sqrt(e + EPS)
+    return yr * scale, yi * scale
+
+
+def tdfir_energy(yr, yi):
+    """s3: per-filter output energy reduction."""
+    return jnp.sum(yr * yr + yi * yi, axis=1)
+
+
+def tdfir_ref(xr, xi, hr, hi):
+    """Full tdFIR pipeline: window -> conv -> normalize -> energy."""
+    xr, xi = tdfir_window(xr, xi)
+    yr, yi = tdfir_conv(xr, xi, hr, hi)
+    yr, yi = tdfir_normalize(yr, yi, hr, hi)
+    e = tdfir_energy(yr, yi)
+    return yr, yi, e
+
+
+# ---------------------------------------------------------------------------
+# MRI-Q — Q-matrix computation for non-Cartesian 3-D MRI reconstruction
+# (Parboil). K k-space samples, X voxels.
+# ---------------------------------------------------------------------------
+
+def mriq_phimag(phi_r, phi_i):
+    """s0: k-space sample magnitude phiMag[k] = phiR^2 + phiI^2."""
+    return phi_r * phi_r + phi_i * phi_i
+
+
+def mriq_q(kx, ky, kz, phi_mag, x, y, z):
+    """s1: the headline voxel loop.
+
+    Q(x_i) = sum_k phiMag[k] * exp(i * 2*pi * (kx x + ky y + kz z))
+    """
+    expnt = 2.0 * jnp.pi * (
+        jnp.outer(x, kx) + jnp.outer(y, ky) + jnp.outer(z, kz)
+    )
+    qr = jnp.sum(phi_mag[None, :] * jnp.cos(expnt), axis=1)
+    qi = jnp.sum(phi_mag[None, :] * jnp.sin(expnt), axis=1)
+    return qr, qi
+
+
+def mriq_scale(qr, qi, num_k: int):
+    """s2: calibration scaling by 1/sqrt(K)."""
+    s = 1.0 / jnp.sqrt(jnp.asarray(num_k, qr.dtype))
+    return qr * s, qi * s
+
+
+def mriq_magnitude(qr, qi):
+    """s3: |Q| per voxel."""
+    return jnp.sqrt(qr * qr + qi * qi + EPS)
+
+
+def mriq_ref(kx, ky, kz, phi_r, phi_i, x, y, z):
+    """Full MRI-Q pipeline: phiMag -> Q -> scale -> magnitude."""
+    phi_mag = mriq_phimag(phi_r, phi_i)
+    qr, qi = mriq_q(kx, ky, kz, phi_mag, x, y, z)
+    qr, qi = mriq_scale(qr, qi, kx.shape[0])
+    qm = mriq_magnitude(qr, qi)
+    return qr, qi, qm
+
+
+# ---------------------------------------------------------------------------
+# Himeno — 19-point Jacobi pressure solve on a 3-D grid (RIKEN benchmark).
+# coef packs (a0..a3, b0..b2, c0..c2); OMEGA is the relaxation factor.
+# ---------------------------------------------------------------------------
+
+OMEGA = 0.8
+
+
+def himeno_init(p):
+    """s0: normalize the pressure grid by its max magnitude."""
+    m = jnp.max(jnp.abs(p)) + EPS
+    return p / m
+
+
+def himeno_stencil(p, bnd, wrk1, coef):
+    """s1: one 19-point Jacobi sweep; returns (wrk2, ss) full-grid arrays.
+
+    ss is zero on the boundary shell; wrk2 equals p there.
+    """
+    a0, a1, a2, a3 = coef[0], coef[1], coef[2], coef[3]
+    b0, b1, b2 = coef[4], coef[5], coef[6]
+    c0, c1, c2 = coef[7], coef[8], coef[9]
+    c = p[1:-1, 1:-1, 1:-1]
+    s0 = (
+        a0 * p[2:, 1:-1, 1:-1]
+        + a1 * p[1:-1, 2:, 1:-1]
+        + a2 * p[1:-1, 1:-1, 2:]
+        + b0 * (p[2:, 2:, 1:-1] - p[2:, :-2, 1:-1] - p[:-2, 2:, 1:-1] + p[:-2, :-2, 1:-1])
+        + b1 * (p[1:-1, 2:, 2:] - p[1:-1, :-2, 2:] - p[1:-1, 2:, :-2] + p[1:-1, :-2, :-2])
+        + b2 * (p[2:, 1:-1, 2:] - p[:-2, 1:-1, 2:] - p[2:, 1:-1, :-2] + p[:-2, 1:-1, :-2])
+        + c0 * p[:-2, 1:-1, 1:-1]
+        + c1 * p[1:-1, :-2, 1:-1]
+        + c2 * p[1:-1, 1:-1, :-2]
+        + wrk1[1:-1, 1:-1, 1:-1]
+    )
+    ss_in = (s0 * a3 - c) * bnd[1:-1, 1:-1, 1:-1]
+    ss = jnp.pad(ss_in, 1)
+    wrk2 = p + OMEGA * ss
+    return wrk2, ss
+
+
+def himeno_gosa(ss):
+    """s2: residual reduction gosa = sum(ss^2), returned as shape (1,)."""
+    return jnp.sum(ss * ss).reshape((1,))
+
+
+def himeno_copy(p, wrk2):
+    """s3: copy-back with frozen boundary shell: p <- wrk2 (interior)."""
+    mask = jnp.zeros(p.shape, p.dtype)
+    mask = mask.at[1:-1, 1:-1, 1:-1].set(1.0)
+    return p * (1.0 - mask) + wrk2 * mask
+
+
+def himeno_ref(p, bnd, wrk1, coef, iters: int = 3):
+    """Full Himeno pipeline: init then `iters` x (stencil, gosa, copy)."""
+    p = himeno_init(p)
+    gosa = jnp.zeros((1,), p.dtype)
+    for _ in range(iters):
+        wrk2, ss = himeno_stencil(p, bnd, wrk1, coef)
+        gosa = himeno_gosa(ss)
+        p = himeno_copy(p, wrk2)
+    return p, gosa
+
+
+# ---------------------------------------------------------------------------
+# Symm — symmetric matrix multiply, C := alpha*A*B + beta*C (PolyBench).
+# A arrives as its lower triangle (upper half is ignored).
+# ---------------------------------------------------------------------------
+
+ALPHA = 1.5
+BETA = 1.2
+
+
+def symm_symmetrize(a_low):
+    """s0: materialize the full symmetric A from its lower triangle."""
+    lo = jnp.tril(a_low)
+    return lo + jnp.tril(a_low, -1).T
+
+
+def symm_matmul(a_full, b):
+    """s1: the headline dense product P = A @ B."""
+    return a_full @ b
+
+
+def symm_combine(p, c):
+    """s2: C' = alpha*P + beta*C."""
+    return ALPHA * p + BETA * c
+
+
+def symm_rownorm(c_out):
+    """s3: per-row L1 norm of the updated C."""
+    return jnp.sum(jnp.abs(c_out), axis=1)
+
+
+def symm_ref(a_low, b, c):
+    """Full Symm pipeline: symmetrize -> matmul -> combine -> rownorm."""
+    a_full = symm_symmetrize(a_low)
+    p = symm_matmul(a_full, b)
+    c_out = symm_combine(p, c)
+    r = symm_rownorm(c_out)
+    return c_out, r
+
+
+# ---------------------------------------------------------------------------
+# DFT — naive O(N^2) discrete Fourier transform.
+# ---------------------------------------------------------------------------
+
+def dft_window(xr, xi):
+    """s0: Hann window over the input frame."""
+    w = hann(xr.shape[0], xr.dtype)
+    return xr * w, xi * w
+
+
+def dft_transform(xr, xi):
+    """s1: the headline double loop, X[k] = sum_n x[n] e^{-i 2 pi k n / N}."""
+    n = xr.shape[0]
+    idx = jnp.arange(n, dtype=xr.dtype)
+    ang = 2.0 * jnp.pi * jnp.outer(idx, idx) / jnp.asarray(n, xr.dtype)
+    cs, sn = jnp.cos(ang), jnp.sin(ang)
+    x_r = cs @ xr + sn @ xi
+    x_i = cs @ xi - sn @ xr
+    return x_r, x_i
+
+
+def dft_magnitude(x_r, x_i):
+    """s2: magnitude spectrum."""
+    return jnp.sqrt(x_r * x_r + x_i * x_i + EPS)
+
+
+def dft_normalize(xm, n: int):
+    """s3: scale the spectrum by 1/N."""
+    return xm / jnp.asarray(n, xm.dtype)
+
+
+def dft_ref(xr, xi):
+    """Full DFT pipeline: window -> transform -> magnitude -> normalize."""
+    xr, xi = dft_window(xr, xi)
+    x_r, x_i = dft_transform(xr, xi)
+    xm = dft_magnitude(x_r, x_i)
+    xn = dft_normalize(xm, xr.shape[0])
+    return x_r, x_i, xn

@@ -1,0 +1,80 @@
+"""Layer-1 Pallas kernels for Symm (PolyBench symmetric matmul).
+
+``matmul`` is the MXU-path kernel: a classic (M/bm, N/bn) output tiling where
+each grid step stages a row panel of A and a column panel of B into VMEM and
+issues one dense matmul — the TPU translation of the paper's FPGA
+systolic/pipelined inner product.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.common import cdiv, ew_rowwise, full_spec, pallas_call, row_block_spec
+from compile.kernels import ref
+
+DEFAULT_BLOCK_M = 16
+DEFAULT_BLOCK_N = 32
+
+
+def symmetrize(a_low):
+    """s0 kernel: materialize full symmetric A from the lower triangle."""
+    def kernel(a_ref, o_ref):
+        o_ref[...] = ref.symm_symmetrize(a_ref[...])
+
+    m = a_low.shape[0]
+    return pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[full_spec((m, m))],
+        out_specs=full_spec((m, m)),
+        out_shape=jax.ShapeDtypeStruct((m, m), a_low.dtype),
+    )(a_low)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] @ b_ref[...]
+
+
+def matmul(a_full, b, bm: int = DEFAULT_BLOCK_M, bn: int = DEFAULT_BLOCK_N):
+    """s1 kernel: tiled dense product P = A @ B (the MXU hot loop)."""
+    m, k = a_full.shape
+    _, n = b.shape
+    bm = min(bm, m)
+    bn = min(bn, n)
+    return pallas_call(
+        _matmul_kernel,
+        grid=(cdiv(m, bm), cdiv(n, bn)),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a_full.dtype),
+    )(a_full, b)
+
+
+def combine(p, c, block_rows: int = DEFAULT_BLOCK_M):
+    """s2 kernel: C' = alpha*P + beta*C."""
+    return ew_rowwise(
+        lambda a, b: ref.ALPHA * a + ref.BETA * b, p, c, block_rows=block_rows
+    )
+
+
+def rownorm(c_out, block_rows: int = DEFAULT_BLOCK_M):
+    """s3 kernel: per-row L1 norm reduction to (M,)."""
+    m, n = c_out.shape
+    bm = min(block_rows, m)
+
+    def kernel(c_ref, o_ref):
+        o_ref[...] = jnp.sum(jnp.abs(c_ref[...]), axis=1)
+
+    return pallas_call(
+        kernel,
+        grid=(cdiv(m, bm),),
+        in_specs=[row_block_spec(bm, n)],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), c_out.dtype),
+    )(c_out)

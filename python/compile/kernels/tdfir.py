@@ -1,0 +1,145 @@
+"""Layer-1 Pallas kernels for the tdFIR filter bank.
+
+The headline kernel is ``conv`` — the paper's tdFIR offload target. On the
+paper's FPGA this is a K-deep tap pipeline per filter; here the same insight
+(a statically scheduled MAC engine fed from on-chip memory) is expressed as a
+grid over filter row-panels whose BlockSpec stages the padded input stream
+and the tap vectors into VMEM, with a fori_loop MAC over the taps.
+
+All kernels run under interpret=True (see compile.common).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from compile.common import (
+    cdiv,
+    ew_rowwise,
+    pallas_call,
+    row_block_spec,
+)
+from compile.kernels import ref
+
+DEFAULT_BLOCK_M = 4
+
+
+def window(xr, xi, block_rows: int = DEFAULT_BLOCK_M):
+    """s0 kernel: Hann window over each filter's input stream."""
+    def fn(a):
+        w = ref.hann(a.shape[1], a.dtype)
+        return a * w
+
+    return (
+        ew_rowwise(fn, xr, block_rows=block_rows),
+        ew_rowwise(fn, xi, block_rows=block_rows),
+    )
+
+
+def _conv_kernel(xr_ref, xi_ref, hr_ref, hi_ref, yr_ref, yi_ref, *, n, k):
+    """One grid step: complex FIR over a panel of filters.
+
+    The input refs hold the front-padded streams (bm, n + k - 1); taps are
+    (bm, k). The tap loop is the FPGA pipeline axis.
+    """
+    bm = xr_ref.shape[0]
+    acc_r = jnp.zeros((bm, n), xr_ref.dtype)
+    acc_i = jnp.zeros((bm, n), xr_ref.dtype)
+
+    def body(kk, carry):
+        acc_r, acc_i = carry
+        start = k - 1 - kk
+        xrs = pl.load(xr_ref, (slice(None), pl.dslice(start, n)))
+        xis = pl.load(xi_ref, (slice(None), pl.dslice(start, n)))
+        hrk = pl.load(hr_ref, (slice(None), pl.dslice(kk, 1)))
+        hik = pl.load(hi_ref, (slice(None), pl.dslice(kk, 1)))
+        return (
+            acc_r + hrk * xrs - hik * xis,
+            acc_i + hrk * xis + hik * xrs,
+        )
+
+    acc_r, acc_i = jax.lax.fori_loop(0, k, body, (acc_r, acc_i))
+    yr_ref[...] = acc_r
+    yi_ref[...] = acc_i
+
+
+def conv(xr, xi, hr, hi, block_rows: int = DEFAULT_BLOCK_M):
+    """s1 kernel: the headline complex convolution (tdFIR's offload loop)."""
+    m, n = xr.shape
+    k = hr.shape[1]
+    bm = min(block_rows, m)
+    pad = ((0, 0), (k - 1, 0))
+    xr_p = jnp.pad(xr, pad)
+    xi_p = jnp.pad(xi, pad)
+
+    kernel = functools.partial(_conv_kernel, n=n, k=k)
+    yr, yi = pallas_call(
+        kernel,
+        grid=(cdiv(m, bm),),
+        in_specs=[
+            row_block_spec(bm, n + k - 1),
+            row_block_spec(bm, n + k - 1),
+            row_block_spec(bm, k),
+            row_block_spec(bm, k),
+        ],
+        out_specs=[row_block_spec(bm, n), row_block_spec(bm, n)],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), xr.dtype),
+            jax.ShapeDtypeStruct((m, n), xr.dtype),
+        ],
+    )(xr_p, xi_p, hr, hi)
+    return yr, yi
+
+
+def _normalize_kernel(yr_ref, yi_ref, hr_ref, hi_ref, or_ref, oi_ref):
+    hr = hr_ref[...]
+    hi = hi_ref[...]
+    e = jnp.sum(hr * hr + hi * hi, axis=1, keepdims=True)
+    scale = 1.0 / jnp.sqrt(e + ref.EPS)
+    or_ref[...] = yr_ref[...] * scale
+    oi_ref[...] = yi_ref[...] * scale
+
+
+def normalize(yr, yi, hr, hi, block_rows: int = DEFAULT_BLOCK_M):
+    """s2 kernel: tap-energy normalization per filter row."""
+    m, n = yr.shape
+    k = hr.shape[1]
+    bm = min(block_rows, m)
+    return pallas_call(
+        _normalize_kernel,
+        grid=(cdiv(m, bm),),
+        in_specs=[
+            row_block_spec(bm, n),
+            row_block_spec(bm, n),
+            row_block_spec(bm, k),
+            row_block_spec(bm, k),
+        ],
+        out_specs=[row_block_spec(bm, n), row_block_spec(bm, n)],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), yr.dtype),
+            jax.ShapeDtypeStruct((m, n), yr.dtype),
+        ],
+    )(yr, yi, hr, hi)
+
+
+def _energy_kernel(yr_ref, yi_ref, e_ref):
+    yr = yr_ref[...]
+    yi = yi_ref[...]
+    e_ref[...] = jnp.sum(yr * yr + yi * yi, axis=1)
+
+
+def energy(yr, yi, block_rows: int = DEFAULT_BLOCK_M):
+    """s3 kernel: per-filter output energy reduction to a (M,) vector."""
+    m, n = yr.shape
+    bm = min(block_rows, m)
+    return pallas_call(
+        _energy_kernel,
+        grid=(cdiv(m, bm),),
+        in_specs=[row_block_spec(bm, n), row_block_spec(bm, n)],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), yr.dtype),
+    )(yr, yi)

@@ -1,0 +1,41 @@
+"""Shared fixtures: deterministic input generation for the five apps."""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+import jax
+import pytest
+
+# Tests import `compile.*` relative to the python/ directory.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(20220707)
+
+
+def gen_inputs(spec, size: str, seed: int = 20220707):
+    """Deterministic float32 inputs for an app spec at a given size."""
+    rng = np.random.default_rng(seed)
+    dims = spec.sizes[size]
+    out = []
+    for name, shape in spec.input_specs(dims):
+        if name == "bnd":
+            arr = np.ones(shape, np.float32)
+        elif name == "coef":
+            # Himeno-style coefficients, perturbed so every term is live.
+            base = np.array(
+                [1.0, 1.0, 1.0, 1.0 / 6.0, 0.05, 0.05, 0.05, 1.0, 1.0, 1.0],
+                np.float32,
+            )
+            arr = base + rng.normal(scale=0.01, size=10).astype(np.float32)
+        else:
+            arr = rng.normal(scale=1.0, size=shape).astype(np.float32)
+        out.append(arr)
+    return out

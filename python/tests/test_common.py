@@ -1,0 +1,40 @@
+"""Unit tests for the shared Pallas helpers in compile.common."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.common import cdiv, ew_rowwise, ew_vecwise
+
+
+def test_cdiv():
+    assert cdiv(8, 4) == 2
+    assert cdiv(9, 4) == 3
+    assert cdiv(1, 4) == 1
+
+
+@pytest.mark.parametrize("n,block", [(16, 4), (17, 4), (5, 8), (256, 64)])
+def test_ew_vecwise_matches_numpy(n, block):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    got = ew_vecwise(lambda a, b: a * b + 1.0, x, y, block=block)
+    np.testing.assert_allclose(got, np.asarray(x) * np.asarray(y) + 1.0, rtol=1e-6)
+
+
+@pytest.mark.parametrize("rows,cols,br", [(8, 16, 2), (7, 5, 3), (4, 4, 8)])
+def test_ew_rowwise_matches_numpy(rows, cols, br):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32))
+    got = ew_rowwise(lambda a: a * a, x, block_rows=br)
+    np.testing.assert_allclose(got, np.asarray(x) ** 2, rtol=1e-6)
+
+
+def test_ew_vecwise_block_invariance():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=100).astype(np.float32))
+    a = ew_vecwise(lambda v: jnp.sqrt(jnp.abs(v)), x, block=7)
+    b = ew_vecwise(lambda v: jnp.sqrt(jnp.abs(v)), x, block=100)
+    np.testing.assert_allclose(a, b, rtol=1e-6)

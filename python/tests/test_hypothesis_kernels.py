@@ -1,0 +1,109 @@
+"""Hypothesis sweeps: Pallas kernels vs oracles across shapes and data.
+
+The paper's offload must be correct for *whatever* request data arrives in
+production (§3.2: real data can differ arbitrarily from the pre-launch
+assumption) — these sweeps randomize both shapes and value distributions.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dft, mriq, ref, symm, tdfir
+
+COMMON = dict(max_examples=25, deadline=None)
+
+
+def arr(rng_seed: int, *shape, scale: float = 1.0):
+    rng = np.random.default_rng(rng_seed)
+    return jnp.asarray(rng.normal(scale=scale, size=shape).astype(np.float32))
+
+
+@settings(**COMMON)
+@given(
+    m=st.integers(1, 12),
+    n=st.integers(4, 160),
+    k=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.01, 1.0, 100.0]),
+)
+def test_tdfir_conv_sweep(m, n, k, seed, scale):
+    xr = arr(seed, m, n, scale=scale)
+    xi = arr(seed + 1, m, n, scale=scale)
+    hr = arr(seed + 2, m, k, scale=scale)
+    hi = arr(seed + 3, m, k, scale=scale)
+    got = tdfir.conv(xr, xi, hr, hi)
+    want = ref.tdfir_conv(xr, xi, hr, hi)
+    tol = 1e-4 * max(1.0, scale * scale * k)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-3, atol=tol)
+
+
+@settings(**COMMON)
+@given(
+    num_k=st.integers(1, 96),
+    num_x=st.integers(1, 300),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mriq_q_sweep(num_k, num_x, seed):
+    kx, ky, kz, pr, pi = (arr(seed + i, num_k, scale=0.5) for i in range(5))
+    x, y, z = (arr(seed + 5 + i, num_x, scale=0.5) for i in range(3))
+    pm = ref.mriq_phimag(pr, pi)
+    got = mriq.q(kx, ky, kz, pm, x, y, z)
+    want = ref.mriq_q(kx, ky, kz, pm, x, y, z)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-3, atol=1e-2)
+
+
+@settings(**COMMON)
+@given(
+    m=st.integers(1, 40),
+    n=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_symm_matmul_sweep(m, n, seed):
+    a = ref.symm_symmetrize(arr(seed, m, m))
+    b = arr(seed + 1, m, n)
+    np.testing.assert_allclose(
+        symm.matmul(a, b), ref.symm_matmul(a, b), rtol=1e-3, atol=1e-3
+    )
+
+
+@settings(**COMMON)
+@given(n=st.integers(2, 160), seed=st.integers(0, 2**31 - 1))
+def test_dft_transform_sweep(n, seed):
+    xr, xi = arr(seed, n), arr(seed + 1, n)
+    got_r, got_i = dft.transform(xr, xi)
+    want = np.fft.fft(np.asarray(xr) + 1j * np.asarray(xi))
+    np.testing.assert_allclose(got_r, want.real, rtol=1e-3, atol=n * 2e-5)
+    np.testing.assert_allclose(got_i, want.imag, rtol=1e-3, atol=n * 2e-5)
+
+
+@settings(**COMMON)
+@given(
+    m=st.integers(1, 10),
+    n=st.integers(2, 64),
+    k=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tdfir_linearity(m, n, k, seed):
+    """Property: conv is linear — conv(a*x) == a*conv(x)."""
+    xr, xi = arr(seed, m, n), arr(seed + 1, m, n)
+    hr, hi = arr(seed + 2, m, k), arr(seed + 3, m, k)
+    y1r, y1i = tdfir.conv(xr * 3.0, xi * 3.0, hr, hi)
+    y2r, y2i = tdfir.conv(xr, xi, hr, hi)
+    np.testing.assert_allclose(y1r, 3.0 * np.asarray(y2r), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(y1i, 3.0 * np.asarray(y2i), rtol=1e-3, atol=1e-3)
+
+
+@settings(**COMMON)
+@given(n=st.integers(2, 96), seed=st.integers(0, 2**31 - 1))
+def test_dft_parseval(n, seed):
+    """Property: Parseval — sum|X|^2 == N * sum|x|^2."""
+    xr, xi = arr(seed, n), arr(seed + 1, n)
+    got_r, got_i = dft.transform(xr, xi)
+    lhs = np.sum(np.asarray(got_r) ** 2 + np.asarray(got_i) ** 2)
+    rhs = n * np.sum(np.asarray(xr) ** 2 + np.asarray(xi) ** 2)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-3)

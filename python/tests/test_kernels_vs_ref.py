@@ -1,0 +1,299 @@
+"""Layer-1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+This is the core correctness signal for the kernels the FPGA-offload story
+rests on. Tolerances are float32-scale; the interpret-mode kernels and the
+jnp oracles follow different summation orders, so exact equality is not
+expected for reductions.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.kernels import dft, himeno, mriq, ref, symm, tdfir
+
+RTOL = 1e-4
+ATOL = 1e-4
+
+
+def f32(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- tdFIR ----
+
+class TestTdfir:
+    M, N, K = 8, 128, 16
+
+    def _data(self, rng):
+        return (
+            f32(rng, self.M, self.N),
+            f32(rng, self.M, self.N),
+            f32(rng, self.M, self.K),
+            f32(rng, self.M, self.K),
+        )
+
+    def test_window(self, rng):
+        xr, xi, _, _ = self._data(rng)
+        got = tdfir.window(xr, xi)
+        want = ref.tdfir_window(xr, xi)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=RTOL, atol=ATOL)
+
+    def test_conv(self, rng):
+        xr, xi, hr, hi = self._data(rng)
+        got = tdfir.conv(xr, xi, hr, hi)
+        want = ref.tdfir_conv(xr, xi, hr, hi)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=RTOL, atol=ATOL)
+
+    def test_conv_is_causal(self, rng):
+        """An impulse at t=0 through taps h must reproduce h itself."""
+        xr = jnp.zeros((1, 32)).at[0, 0].set(1.0)
+        xi = jnp.zeros((1, 32))
+        hr, hi = f32(rng, 1, 8), f32(rng, 1, 8)
+        yr, yi = tdfir.conv(xr, xi, hr, hi)
+        np.testing.assert_allclose(yr[0, :8], hr[0], rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(yi[0, :8], hi[0], rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(yr[0, 8:], 0.0, atol=ATOL)
+
+    def test_normalize(self, rng):
+        xr, xi, hr, hi = self._data(rng)
+        got = tdfir.normalize(xr, xi, hr, hi)
+        want = ref.tdfir_normalize(xr, xi, hr, hi)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=RTOL, atol=ATOL)
+
+    def test_energy(self, rng):
+        xr, xi, _, _ = self._data(rng)
+        np.testing.assert_allclose(
+            tdfir.energy(xr, xi), ref.tdfir_energy(xr, xi), rtol=RTOL, atol=ATOL
+        )
+
+    def test_energy_nonnegative(self, rng):
+        xr, xi, _, _ = self._data(rng)
+        assert np.all(np.asarray(tdfir.energy(xr, xi)) >= 0.0)
+
+    @pytest.mark.parametrize("bm", [1, 2, 3, 8])
+    def test_conv_block_rows_invariant(self, rng, bm):
+        """The kernel result must not depend on the VMEM panel size."""
+        xr, xi, hr, hi = self._data(rng)
+        base = tdfir.conv(xr, xi, hr, hi, block_rows=4)
+        got = tdfir.conv(xr, xi, hr, hi, block_rows=bm)
+        for g, w in zip(got, base):
+            np.testing.assert_allclose(g, w, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------- MRI-Q ----
+
+class TestMriq:
+    K, X = 64, 256
+
+    def _data(self, rng):
+        ks = [f32(rng, self.K) for _ in range(5)]
+        vox = [f32(rng, self.X) for _ in range(3)]
+        return ks, vox
+
+    def test_phimag(self, rng):
+        (_, _, _, pr, pi), _ = self._data(rng)
+        np.testing.assert_allclose(
+            mriq.phimag(pr, pi), ref.mriq_phimag(pr, pi), rtol=RTOL, atol=ATOL
+        )
+
+    def test_q(self, rng):
+        (kx, ky, kz, pr, pi), (x, y, z) = self._data(rng)
+        pm = ref.mriq_phimag(pr, pi)
+        got = mriq.q(kx, ky, kz, pm, x, y, z)
+        want = ref.mriq_q(kx, ky, kz, pm, x, y, z)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-3, atol=1e-3)
+
+    def test_q_zero_phimag_gives_zero(self, rng):
+        (kx, ky, kz, _, _), (x, y, z) = self._data(rng)
+        pm = jnp.zeros((self.K,))
+        qr, qi = mriq.q(kx, ky, kz, pm, x, y, z)
+        np.testing.assert_allclose(qr, 0.0, atol=ATOL)
+        np.testing.assert_allclose(qi, 0.0, atol=ATOL)
+
+    def test_scale(self, rng):
+        _, (x, y, _) = self._data(rng)
+        got = mriq.scale(x, y, self.K)
+        want = ref.mriq_scale(x, y, self.K)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=RTOL, atol=ATOL)
+
+    def test_magnitude(self, rng):
+        _, (x, y, _) = self._data(rng)
+        np.testing.assert_allclose(
+            mriq.magnitude(x, y), ref.mriq_magnitude(x, y), rtol=RTOL, atol=ATOL
+        )
+
+    @pytest.mark.parametrize("block", [32, 100, 256])
+    def test_q_block_invariant(self, rng, block):
+        (kx, ky, kz, pr, pi), (x, y, z) = self._data(rng)
+        pm = ref.mriq_phimag(pr, pi)
+        base = mriq.q(kx, ky, kz, pm, x, y, z, block=64)
+        got = mriq.q(kx, ky, kz, pm, x, y, z, block=block)
+        for g, w in zip(got, base):
+            np.testing.assert_allclose(g, w, rtol=1e-3, atol=1e-3)
+
+
+# --------------------------------------------------------------- Himeno ----
+
+class TestHimeno:
+    SHAPE = (8, 10, 12)
+
+    def _data(self, rng):
+        p = f32(rng, *self.SHAPE)
+        bnd = jnp.asarray(
+            (rng.uniform(size=self.SHAPE) > 0.2).astype(np.float32)
+        )
+        wrk1 = f32(rng, *self.SHAPE) * 0.01
+        coef = f32(rng, 10)
+        return p, bnd, wrk1, coef
+
+    def test_init(self, rng):
+        p, *_ = self._data(rng)
+        np.testing.assert_allclose(
+            himeno.init(p), ref.himeno_init(p), rtol=RTOL, atol=ATOL
+        )
+
+    def test_init_bounded(self, rng):
+        p, *_ = self._data(rng)
+        assert np.max(np.abs(np.asarray(himeno.init(p)))) <= 1.0 + 1e-5
+
+    def test_stencil(self, rng):
+        p, bnd, wrk1, coef = self._data(rng)
+        got = himeno.stencil(p, bnd, wrk1, coef)
+        want = ref.himeno_stencil(p, bnd, wrk1, coef)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=RTOL, atol=ATOL)
+
+    def test_stencil_boundary_frozen(self, rng):
+        """ss must vanish on the boundary shell; wrk2 must equal p there."""
+        p, bnd, wrk1, coef = self._data(rng)
+        wrk2, ss = himeno.stencil(p, bnd, wrk1, coef)
+        ss = np.asarray(ss)
+        wrk2 = np.asarray(wrk2)
+        pn = np.asarray(p)
+        for arr, want in ((ss[0], 0.0), (ss[-1], 0.0)):
+            np.testing.assert_allclose(arr, want, atol=ATOL)
+        np.testing.assert_allclose(wrk2[0], pn[0], atol=ATOL)
+        np.testing.assert_allclose(wrk2[:, 0], pn[:, 0], atol=ATOL)
+        np.testing.assert_allclose(wrk2[:, :, -1], pn[:, :, -1], atol=ATOL)
+
+    def test_gosa(self, rng):
+        p, *_ = self._data(rng)
+        np.testing.assert_allclose(
+            himeno.gosa(p), ref.himeno_gosa(p), rtol=RTOL, atol=ATOL
+        )
+
+    def test_copy(self, rng):
+        p, _, wrk1, _ = self._data(rng)
+        np.testing.assert_allclose(
+            himeno.copy(p, wrk1), ref.himeno_copy(p, wrk1), rtol=RTOL, atol=ATOL
+        )
+
+
+# ----------------------------------------------------------------- Symm ----
+
+class TestSymm:
+    M, N = 32, 48
+
+    def _data(self, rng):
+        return f32(rng, self.M, self.M), f32(rng, self.M, self.N), f32(rng, self.M, self.N)
+
+    def test_symmetrize(self, rng):
+        a, _, _ = self._data(rng)
+        got = np.asarray(symm.symmetrize(a))
+        np.testing.assert_allclose(got, ref.symm_symmetrize(a), rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(got, got.T, rtol=RTOL, atol=ATOL)
+
+    def test_matmul(self, rng):
+        a, b, _ = self._data(rng)
+        af = ref.symm_symmetrize(a)
+        np.testing.assert_allclose(
+            symm.matmul(af, b), ref.symm_matmul(af, b), rtol=1e-3, atol=1e-3
+        )
+
+    def test_matmul_identity(self, rng):
+        _, b, _ = self._data(rng)
+        eye = jnp.eye(self.M, dtype=jnp.float32)
+        np.testing.assert_allclose(symm.matmul(eye, b), b, rtol=RTOL, atol=ATOL)
+
+    def test_combine(self, rng):
+        _, b, c = self._data(rng)
+        np.testing.assert_allclose(
+            symm.combine(b, c), ref.symm_combine(b, c), rtol=RTOL, atol=ATOL
+        )
+
+    def test_rownorm(self, rng):
+        _, _, c = self._data(rng)
+        np.testing.assert_allclose(
+            symm.rownorm(c), ref.symm_rownorm(c), rtol=RTOL, atol=ATOL
+        )
+
+    @pytest.mark.parametrize("bm,bn", [(8, 16), (16, 48), (32, 8)])
+    def test_matmul_tile_invariant(self, rng, bm, bn):
+        a, b, _ = self._data(rng)
+        af = ref.symm_symmetrize(a)
+        np.testing.assert_allclose(
+            symm.matmul(af, b, bm=bm, bn=bn),
+            ref.symm_matmul(af, b),
+            rtol=1e-3,
+            atol=1e-3,
+        )
+
+
+# ------------------------------------------------------------------ DFT ----
+
+class TestDft:
+    N = 128
+
+    def _data(self, rng):
+        return f32(rng, self.N), f32(rng, self.N)
+
+    def test_window(self, rng):
+        xr, xi = self._data(rng)
+        got = dft.window(xr, xi)
+        want = ref.dft_window(xr, xi)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=RTOL, atol=ATOL)
+
+    def test_transform(self, rng):
+        xr, xi = self._data(rng)
+        got = dft.transform(xr, xi)
+        want = ref.dft_transform(xr, xi)
+        for g, w in zip(got, want):
+            np.testing.assert_allclose(g, w, rtol=1e-3, atol=1e-3)
+
+    def test_transform_matches_numpy_fft(self, rng):
+        """The s1 loop must agree with np.fft on a complex frame."""
+        xr, xi = self._data(rng)
+        got_r, got_i = dft.transform(xr, xi)
+        want = np.fft.fft(np.asarray(xr) + 1j * np.asarray(xi))
+        np.testing.assert_allclose(got_r, want.real, rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(got_i, want.imag, rtol=1e-3, atol=1e-3)
+
+    def test_transform_dc_component(self):
+        """X[0] of a constant real signal is N; all other bins vanish."""
+        xr = jnp.ones((self.N,), jnp.float32)
+        xi = jnp.zeros((self.N,), jnp.float32)
+        got_r, got_i = dft.transform(xr, xi)
+        np.testing.assert_allclose(got_r[0], self.N, rtol=1e-4)
+        np.testing.assert_allclose(got_r[1:], 0.0, atol=2e-3)
+        np.testing.assert_allclose(got_i, 0.0, atol=2e-3)
+
+    def test_magnitude(self, rng):
+        xr, xi = self._data(rng)
+        np.testing.assert_allclose(
+            dft.magnitude(xr, xi), ref.dft_magnitude(xr, xi), rtol=RTOL, atol=ATOL
+        )
+
+    def test_normalize(self, rng):
+        xr, _ = self._data(rng)
+        np.testing.assert_allclose(
+            dft.normalize(xr, self.N), ref.dft_normalize(xr, self.N), rtol=RTOL
+        )

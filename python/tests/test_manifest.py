@@ -1,0 +1,62 @@
+"""Manifest + artifact integrity: what aot.py wrote is loadable and honest."""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+
+import pytest
+
+from compile import apps as apps_mod
+from compile.apps import VARIANTS
+from compile.aot import artifact_name
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART_DIR, "manifest.json")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first"
+)
+
+
+@needs_artifacts
+def test_manifest_covers_all_variants():
+    with open(MANIFEST) as f:
+        man = json.load(f)
+    have = {(a["app"], a["size"], a["variant"]) for a in man["artifacts"]}
+    for spec in apps_mod.all_apps():
+        for size in spec.sizes:
+            for variant in VARIANTS:
+                assert (spec.name, size, variant) in have
+
+
+@needs_artifacts
+def test_artifact_files_exist_and_hash():
+    with open(MANIFEST) as f:
+        man = json.load(f)
+    for a in man["artifacts"]:
+        path = os.path.join(ART_DIR, a["path"])
+        assert os.path.exists(path), a["path"]
+        with open(path, "rb") as f:
+            text = f.read()
+        assert hashlib.sha256(text).hexdigest() == a["sha256"]
+        assert text.startswith(b"HloModule"), a["path"]
+
+
+@needs_artifacts
+def test_manifest_shapes_match_specs():
+    with open(MANIFEST) as f:
+        man = json.load(f)
+    for a in man["artifacts"]:
+        spec = apps_mod.get(a["app"])
+        want = spec.input_specs(spec.sizes[a["size"]])
+        got = [(i["name"], tuple(i["shape"])) for i in a["inputs"]]
+        assert got == [(n, tuple(s)) for n, s in want]
+        assert a["num_outputs"] == spec.num_outputs
+        assert all(i["dtype"] == "f32" for i in a["inputs"])
+
+
+@needs_artifacts
+def test_artifact_naming_is_stable():
+    assert artifact_name("tdfir", "small", "o12") == "tdfir__small__o12.hlo.txt"

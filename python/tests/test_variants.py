@@ -1,0 +1,62 @@
+"""Layer-2 correctness: every offload-pattern variant == the cpu variant.
+
+A reconfiguration in production swaps one variant's executable for another;
+the user must observe identical results (modulo float tolerance). This is the
+invariant that makes the paper's step-6 static reconfiguration safe.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from compile import apps as apps_mod
+from compile.apps import VARIANTS, variant_name, variant_stages
+from tests.conftest import gen_inputs
+
+RTOL = 2e-3
+ATOL = 2e-3
+
+
+def smallest_size(spec):
+    return sorted(spec.sizes, key=lambda s: sum(spec.sizes[s].values()))[0]
+
+
+@pytest.mark.parametrize(
+    "app", ["tdfir", "mriq", "himeno", "symm", "dft"]
+)
+@pytest.mark.parametrize("variant", [v for v in VARIANTS if v != "cpu"])
+def test_variant_equals_cpu(app, variant):
+    spec = apps_mod.get(app)
+    size = smallest_size(spec)
+    dims = spec.sizes[size]
+    inputs = gen_inputs(spec, size)
+    cpu_fn = spec.make_fn(frozenset(), dims)
+    var_fn = spec.make_fn(variant_stages(variant), dims)
+    want = cpu_fn(*inputs)
+    got = var_fn(*inputs)
+    assert len(want) == spec.num_outputs
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=RTOL, atol=ATOL)
+
+
+def test_variant_roundtrip_names():
+    for v in VARIANTS:
+        assert variant_name(variant_stages(v)) == v
+
+
+def test_all_apps_registered():
+    names = [s.name for s in apps_mod.all_apps()]
+    assert names == ["dft", "himeno", "mriq", "symm", "tdfir"]
+
+
+def test_paper_size_mix_present():
+    """tdFIR and MRI-Q carry the 3-size mix of §4.1.2; others sample-only."""
+    for app, sizes in [
+        ("tdfir", {"small", "large", "xlarge"}),
+        ("mriq", {"small", "large", "xlarge"}),
+        ("himeno", {"sample"}),
+        ("symm", {"sample"}),
+        ("dft", {"sample"}),
+    ]:
+        assert set(apps_mod.get(app).sizes) == sizes

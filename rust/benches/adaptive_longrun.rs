@@ -1,0 +1,89 @@
+//! Long-run adaptation bench: 24 simulated hours with drifting usage
+//! characteristics — the paper's Step-7 premise run continuously.
+//!
+//! Hours 0-7: the paper's nominal rates (tdFIR-heavy + MRI-Q).
+//! Hours 8-15: MRI-Q traffic stops, DFT ramps to 40 req/h (drift).
+//! Hours 16-23: back to nominal.
+//!
+//! The controller should move the card tdFIR->MRI-Q early, MRI-Q->DFT
+//! after the drift, and return to MRI-Q when the drift reverts — with
+//! every move gated by the 2.0 threshold and the cooldown.
+
+use repro::apps::registry;
+use repro::coordinator::adaptive::{run_adaptive, AdaptiveConfig};
+use repro::coordinator::{Approval, ProductionEnv};
+use repro::fpga::device::ReconfigKind;
+use repro::fpga::part::D5005;
+use repro::offload::{search, OffloadConfig};
+use repro::util::bench::Bench;
+use repro::util::table::Table;
+
+fn main() {
+    println!("== adaptive long-run: 24 simulated hours with drift ==\n");
+    let mut env = ProductionEnv::new(registry(), D5005);
+    let reg = registry();
+    let td = repro::apps::find(&reg, "tdfir").unwrap();
+    let pre = search(td, "large", &OffloadConfig::default()).unwrap();
+    env.deploy(ReconfigKind::Static, "tdfir", &pre.best.variant, pre.improvement);
+
+    let cfg = AdaptiveConfig {
+        windows: 24,
+        cooldown_windows: 1,
+        ..Default::default()
+    };
+    let mut approval = Approval::auto_yes();
+    let t0 = std::time::Instant::now();
+    let reports = run_adaptive(&mut env, &cfg, &mut approval, |w, env| {
+        let phase = w / 8;
+        for app in env.registry.iter_mut() {
+            app.rate_per_hour = match (phase, app.name) {
+                (1, "mriq") => 0.0,
+                (1, "dft") => 40.0,
+                (_, "tdfir") => 300.0,
+                (_, "mriq") => 10.0,
+                (_, "himeno") => 3.0,
+                (_, "symm") => 2.0,
+                (_, "dft") => 1.0,
+                _ => app.rate_per_hour,
+            };
+        }
+    })
+    .unwrap();
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(vec!["hour", "requests", "serving", "reconfigured", "ratio"]);
+    for r in &reports {
+        t.row(vec![
+            r.window.to_string(),
+            r.requests.to_string(),
+            r.serving.clone().unwrap_or_default(),
+            if r.reconfigured { "YES" } else { "" }.to_string(),
+            r.outcome
+                .as_ref()
+                .and_then(|o| o.proposal.as_ref())
+                .map(|p| format!("{:.2}", p.ratio))
+                .unwrap_or_default(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    let switches: Vec<(usize, String)> = reports
+        .iter()
+        .filter(|r| r.reconfigured)
+        .map(|r| (r.window, r.serving.clone().unwrap_or_default()))
+        .collect();
+    println!("\nswitches: {switches:?}");
+    println!("wall: {wall:.2}s for 24 simulated hours (ratio {:.0}x)", 24.0 * 3600.0 / wall);
+    assert!(
+        !switches.is_empty() && switches.len() <= 6,
+        "controller should adapt without flapping: {switches:?}"
+    );
+    // The drift phase should pull the card off mriq at some point.
+    let final_serving = reports.last().unwrap().serving.clone();
+    println!("final logic: {final_serving:?}");
+
+    println!("\n== wall cost per adaptive window ==");
+    let mut b = Bench::new();
+    b.record("adaptive_24h_total", wall);
+    b.record("adaptive_per_window", wall / 24.0);
+}

@@ -1,0 +1,90 @@
+//! TXT-DOWNTIME bench: reconfiguration outage, three ways.
+//!
+//!  * virtual static outage  — the paper's ~1 s Acceleration Stack figure;
+//!  * virtual dynamic outage — the paper's "ms order" partial reconfig;
+//!  * measured PJRT swap     — real wall clock of compiling + warming the
+//!    incoming executable (requires `make artifacts`; skipped otherwise).
+
+use repro::fpga::device::{FpgaDevice, ReconfigKind};
+use repro::fpga::part::D5005;
+use repro::runtime::Runtime;
+use repro::util::bench::Bench;
+use repro::util::stats::Summary;
+use repro::util::table::{fmt_secs, Table};
+
+fn main() {
+    println!("== TXT-DOWNTIME: reconfiguration outage ==\n");
+
+    let mut t = Table::new(vec!["flavor", "outage", "paper"]);
+    let mut dev = FpgaDevice::new(D5005);
+    let r1 = dev.reconfigure(0.0, ReconfigKind::Static, "tdfir", "o1");
+    let r2 = dev.reconfigure(10.0, ReconfigKind::Static, "mriq", "o1");
+    t.row(vec![
+        "static (virtual)".to_string(),
+        fmt_secs(r2.downtime_secs),
+        "~1 s".to_string(),
+    ]);
+    let r3 = dev.reconfigure(20.0, ReconfigKind::Dynamic, "tdfir", "o1");
+    t.row(vec![
+        "dynamic (virtual)".to_string(),
+        fmt_secs(r3.downtime_secs),
+        "ms order".to_string(),
+    ]);
+    let _ = r1;
+
+    match Runtime::new("artifacts") {
+        Ok(mut rt) => {
+            // Repeated measured swaps tdfir <-> mriq.
+            let mut compile = Summary::new();
+            let mut total = Summary::new();
+            let pairs = [
+                ("tdfir__large__o1", "mriq__large__o1"),
+                ("mriq__large__o1", "tdfir__large__o1"),
+            ];
+            rt.load("tdfir__large__o1").unwrap();
+            for i in 0..6 {
+                let (from, to) = pairs[i % 2];
+                let s = rt.swap(Some(from), to).unwrap();
+                compile.add(s.compile_secs);
+                total.add(s.total_secs());
+            }
+            t.row(vec![
+                "measured PJRT swap (compile+warmup)".to_string(),
+                format!(
+                    "{} mean / {} p95",
+                    fmt_secs(total.mean()),
+                    fmt_secs(total.percentile(95.0))
+                ),
+                "~1 s (static)".to_string(),
+            ]);
+            print!("{}", t.render());
+            println!(
+                "\nmeasured compile-only: mean {} (n={})",
+                fmt_secs(compile.mean()),
+                compile.count()
+            );
+            assert!(
+                total.mean() < 30.0,
+                "swap should be same order as the paper's 1 s"
+            );
+        }
+        Err(e) => {
+            print!("{}", t.render());
+            println!("\n(measured swap skipped: {e})");
+        }
+    }
+
+    println!("\n== virtual reconfigure cost (control-plane hot path) ==");
+    let mut b = Bench::new();
+    let mut dev = FpgaDevice::new(D5005);
+    let mut now = 0.0;
+    b.run("device_reconfigure_virtual", || {
+        now += 2.0;
+        let _ = std::hint::black_box(dev.reconfigure(
+            now,
+            ReconfigKind::Static,
+            "tdfir",
+            "o1",
+        ));
+    });
+}

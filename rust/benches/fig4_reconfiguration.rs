@@ -1,0 +1,100 @@
+//! FIG4 bench: regenerate the paper's headline table — improvement effect
+//! before vs after the in-operation reconfiguration — across seeds, and
+//! time the full cycle (1 simulated hour + 6-step controller) in wall
+//! clock.
+//!
+//! Paper values: before = tdFIR, 41.1 sec/h effect, 79.7 s corrected sum;
+//! after = MRI-Q, 252 sec/h, 274 s; ratio 6.1 >= threshold 2.0.
+
+use repro::apps::registry;
+use repro::coordinator::{run_reconfiguration, Approval, ProductionEnv, ReconConfig};
+use repro::fpga::device::ReconfigKind;
+use repro::fpga::part::D5005;
+use repro::offload::{search, OffloadConfig};
+use repro::util::bench::Bench;
+use repro::util::stats::Summary;
+use repro::util::table::Table;
+use repro::workload::generate;
+
+fn one_cycle(seed: u64) -> (f64, f64, f64, f64, f64) {
+    let mut env = ProductionEnv::new(registry(), D5005);
+    let reg = registry();
+    let td = repro::apps::find(&reg, "tdfir").unwrap();
+    let pre = search(td, "large", &OffloadConfig::default()).unwrap();
+    env.deploy(ReconfigKind::Static, "tdfir", &pre.best.variant, pre.improvement);
+    let trace = generate(&env.registry, 3600.0, seed);
+    env.run_window(&trace).unwrap();
+    let mut approval = Approval::auto_yes();
+    let out =
+        run_reconfiguration(&mut env, &ReconConfig::default(), &mut approval).unwrap();
+    let p = out.proposal.unwrap();
+    let before_sum = out
+        .rankings
+        .iter()
+        .find(|r| r.app == "tdfir")
+        .map(|r| r.corrected_total_secs)
+        .unwrap_or(0.0);
+    let after_sum = out
+        .rankings
+        .iter()
+        .find(|r| r.app == p.best.app)
+        .map(|r| r.corrected_total_secs)
+        .unwrap_or(0.0);
+    (
+        p.current.effect_secs,
+        p.best.effect_secs,
+        p.ratio,
+        before_sum,
+        after_sum,
+    )
+}
+
+fn main() {
+    println!("== FIG4: reconfiguration improvement (10 seeded production hours) ==\n");
+    let (mut eb, mut ea, mut ratio, mut sb, mut sa) = (
+        Summary::new(),
+        Summary::new(),
+        Summary::new(),
+        Summary::new(),
+        Summary::new(),
+    );
+    for seed in 0..10 {
+        let (b, a, r, tb, ta) = one_cycle(seed);
+        eb.add(b);
+        ea.add(a);
+        ratio.add(r);
+        sb.add(tb);
+        sa.add(ta);
+    }
+    let mut t = Table::new(vec!["", "Application", "Improvement (sec/h)", "Corrected sum (sec)", "Paper"]);
+    t.row(vec![
+        "Before reconfiguration".to_string(),
+        "tdfir".to_string(),
+        format!("{:.1} (p50 {:.1})", eb.mean(), eb.median()),
+        format!("{:.1}", sb.mean()),
+        "41.1 / 79.7".to_string(),
+    ]);
+    t.row(vec![
+        "After reconfiguration".to_string(),
+        "mriq".to_string(),
+        format!("{:.1} (p50 {:.1})", ea.mean(), ea.median()),
+        format!("{:.1}", sa.mean()),
+        "252 / 274".to_string(),
+    ]);
+    print!("{}", t.render());
+    println!(
+        "\neffect ratio: mean {:.2}, min {:.2}, max {:.2} (paper: 6.1, threshold 2.0)",
+        ratio.mean(),
+        ratio.min(),
+        ratio.max()
+    );
+    assert!(ratio.mean() > 2.0, "mean ratio must clear the threshold");
+
+    println!("\n== wall-clock cost of one full cycle (1 simulated hour) ==");
+    let mut b = Bench::new();
+    let mut seed = 100u64;
+    b.run("fig4_full_cycle", || {
+        seed += 1;
+        let _ = std::hint::black_box(one_cycle(seed));
+    });
+}

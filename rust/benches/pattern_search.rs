@@ -1,0 +1,44 @@
+//! FIG2 bench: the §3.1 pattern search per application — wall-clock cost
+//! of analysis + narrowing + 4 pattern measurements, and the virtual
+//! compile-farm time the paper reports as ">1 day per app".
+
+use repro::apps::registry;
+use repro::offload::{search, OffloadConfig};
+use repro::util::bench::Bench;
+use repro::util::table::{fmt_secs, Table};
+
+fn main() {
+    println!("== FIG2: §3.1 offload pattern search ==\n");
+    let reg = registry();
+    let cfg = OffloadConfig::default();
+
+    let mut t = Table::new(vec![
+        "app",
+        "best",
+        "improvement",
+        "virtual compile time",
+        "paper step duration",
+    ]);
+    for app in &reg {
+        let size = app.sizes.last().unwrap().name;
+        let r = search(app, size, &cfg).unwrap();
+        t.row(vec![
+            app.name.to_string(),
+            r.best.variant.clone(),
+            format!("{:.2}x", r.improvement),
+            fmt_secs(r.compile_virtual_secs),
+            ">= 1 day".to_string(),
+        ]);
+        assert_eq!(r.trials.len().min(4), r.trials.len(), "at most 4 patterns");
+    }
+    print!("{}", t.render());
+
+    println!("\n== wall-clock search cost per app ==");
+    let mut b = Bench::new();
+    for app in &reg {
+        let size = app.sizes.last().unwrap().name;
+        b.run(&format!("search_{}", app.name), || {
+            let _ = std::hint::black_box(search(app, size, &cfg).unwrap());
+        });
+    }
+}

@@ -1,0 +1,53 @@
+//! L3 hot-path bench: coordinator routing/serving throughput.
+//!
+//! The paper's workload is 316 req/h; this bench stresses the coordinator
+//! far beyond that to show L3 is never the bottleneck (perf target in
+//! DESIGN.md §8: >= 100k simulated requests/s through `serve`).
+
+use repro::apps::registry;
+use repro::coordinator::ProductionEnv;
+use repro::fpga::device::ReconfigKind;
+use repro::fpga::part::D5005;
+use repro::util::bench::Bench;
+use repro::workload::{generate, Request};
+
+fn main() {
+    println!("== L3 coordinator throughput ==\n");
+
+    // Pre-generate a large trace so generation cost isn't measured.
+    let reg = registry();
+    let trace: Vec<Request> = generate(&reg, 400.0 * 3600.0, 9); // ~126k reqs
+    println!("trace: {} requests (400 simulated hours)", trace.len());
+
+    let mut b = Bench::new();
+
+    // Cold env per iteration batch: serve the whole trace.
+    let mut env = ProductionEnv::new(registry(), D5005);
+    env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+    let m = b.run("serve_126k_requests", || {
+        let mut env = ProductionEnv::new(registry(), D5005);
+        env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+        for r in &trace {
+            let _ = std::hint::black_box(env.serve(r).unwrap());
+        }
+    });
+    let rps = trace.len() as f64 / m.mean_s;
+    println!("\nthroughput: {rps:.0} simulated requests/s (target >= 100k)");
+
+    // Single-request latency on a warm env.
+    let req = trace[0].clone();
+    let mut i = 0u64;
+    b.run("serve_single_request_warm", || {
+        let mut r = req.clone();
+        i += 1;
+        r.arrival = i as f64 * 1e-3;
+        let _ = std::hint::black_box(env.serve(&r).unwrap());
+    });
+
+    // Workload generation itself.
+    b.run("workload_generate_1h", || {
+        let _ = std::hint::black_box(generate(&reg, 3600.0, 3));
+    });
+
+    assert!(rps > 10_000.0, "coordinator should not be the bottleneck");
+}

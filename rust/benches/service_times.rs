@@ -1,0 +1,59 @@
+//! TXT-SERVICE bench: per-request service times per app/size, CPU-only vs
+//! best offload pattern, from the calibrated models.
+//!
+//! Paper anchors (mode-size data): tdFIR 0.266 -> 0.129 s;
+//! MRI-Q 27.4 -> 2.23 s.
+
+use repro::apps::registry;
+use repro::fpga::part::D5005;
+use repro::fpga::perf::PerfModel;
+use repro::offload::{search, OffloadConfig};
+use repro::util::bench::Bench;
+use repro::util::table::{fmt_secs, Table};
+
+fn main() {
+    println!("== TXT-SERVICE: per-request service times ==\n");
+    let reg = registry();
+    let cfg = OffloadConfig::default();
+    let mut t = Table::new(vec![
+        "app", "size", "cpu-only", "best pattern", "time", "improvement", "paper",
+    ]);
+    for app in &reg {
+        for sz in &app.sizes {
+            let r = search(app, sz.name, &cfg).unwrap();
+            let paper = match (app.name, sz.name) {
+                ("tdfir", "large") => "0.266 -> 0.129 s (2.07x)",
+                ("mriq", "large") => "27.4 -> 2.23 s (12.3x)",
+                _ => "-",
+            };
+            t.row(vec![
+                app.name.to_string(),
+                sz.name.to_string(),
+                fmt_secs(r.cpu_time_secs),
+                r.best.variant.clone(),
+                fmt_secs(r.best.time_secs),
+                format!("{:.2}x", r.improvement),
+                paper.to_string(),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+
+    // Calibration guards (the paper's anchors).
+    let td = repro::apps::find(&reg, "tdfir").unwrap();
+    let r = search(td, "large", &cfg).unwrap();
+    assert!((0.21..0.33).contains(&r.cpu_time_secs), "tdfir cpu calibration");
+    assert!((1.6..2.6).contains(&r.improvement), "tdfir improvement calibration");
+    let mq = repro::apps::find(&reg, "mriq").unwrap();
+    let r = search(mq, "large", &cfg).unwrap();
+    assert!((22.0..33.0).contains(&r.cpu_time_secs), "mriq cpu calibration");
+    assert!(r.improvement > 6.0, "mriq improvement calibration");
+
+    println!("\n== model evaluation cost (hot path: one request_time call) ==");
+    let mut b = Bench::new();
+    let model = PerfModel::new(td.program(), &td.bindings("large"), D5005).unwrap();
+    let nests = td.nests_for_variant("o1");
+    b.run("perfmodel_request_time", || {
+        let _ = std::hint::black_box(model.request_time(&nests));
+    });
+}

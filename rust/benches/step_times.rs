@@ -1,0 +1,74 @@
+//! TXT-STEPS bench: durations of the §3.3 steps, paper vs measured.
+//!
+//! Paper: request analysis + representative selection ~1 s; improvement
+//! effect calculation ~1 day (4 patterns x >=6 h compiles); reconfig ~1 s.
+
+use repro::apps::registry;
+use repro::coordinator::recon::analyze_load;
+use repro::coordinator::{run_reconfiguration, Approval, ProductionEnv, ReconConfig};
+use repro::fpga::device::ReconfigKind;
+use repro::fpga::part::D5005;
+use repro::offload::{search, OffloadConfig};
+use repro::util::bench::Bench;
+use repro::util::table::{fmt_secs, Table};
+use repro::workload::generate;
+
+fn paper_env(seed: u64) -> ProductionEnv {
+    let mut env = ProductionEnv::new(registry(), D5005);
+    let reg = registry();
+    let td = repro::apps::find(&reg, "tdfir").unwrap();
+    let pre = search(td, "large", &OffloadConfig::default()).unwrap();
+    env.deploy(ReconfigKind::Static, "tdfir", &pre.best.variant, pre.improvement);
+    let trace = generate(&env.registry, 3600.0, seed);
+    env.run_window(&trace).unwrap();
+    env
+}
+
+fn main() {
+    println!("== TXT-STEPS: step durations ==\n");
+    let mut env = paper_env(42);
+    let mut approval = Approval::auto_yes();
+    let out = run_reconfiguration(&mut env, &ReconConfig::default(), &mut approval).unwrap();
+
+    let mut t = Table::new(vec!["step", "this repo", "paper"]);
+    t.row(vec![
+        "1: request analysis + representative selection".to_string(),
+        format!("{} (wall)", fmt_secs(out.steps.analysis_wall_secs)),
+        "~1 s".to_string(),
+    ]);
+    t.row(vec![
+        "2/3: improvement-effect calculation".to_string(),
+        format!("{} (virtual compile farm)", fmt_secs(out.steps.search_virtual_secs)),
+        "~1 day".to_string(),
+    ]);
+    t.row(vec![
+        "6: reconfiguration outage".to_string(),
+        format!("{} (virtual static)", fmt_secs(out.steps.reconfig_downtime_secs)),
+        "~1 s".to_string(),
+    ]);
+    print!("{}", t.render());
+
+    assert!(out.steps.search_virtual_secs >= 24.0 * 3600.0);
+    assert!((out.steps.reconfig_downtime_secs - 1.0).abs() < 1e-9);
+
+    println!("\n== step-1 analysis wall cost vs history size ==");
+    let mut b = Bench::new();
+    for hours in [1.0, 4.0, 16.0] {
+        let mut env = ProductionEnv::new(registry(), D5005);
+        let reg = registry();
+        let td = repro::apps::find(&reg, "tdfir").unwrap();
+        let pre = search(td, "large", &OffloadConfig::default()).unwrap();
+        env.deploy(ReconfigKind::Static, "tdfir", &pre.best.variant, pre.improvement);
+        let trace = generate(&env.registry, hours * 3600.0, 1);
+        env.run_window(&trace).unwrap();
+        let cfg = ReconConfig {
+            long_window_secs: hours * 3600.0,
+            short_window_secs: hours * 3600.0,
+            ..Default::default()
+        };
+        b.run(&format!("analyze_load_{}h_history", hours as u32), || {
+            let _ = std::hint::black_box(analyze_load(&mut env, &cfg).unwrap());
+        });
+    }
+    println!("\n(the paper notes analysis time grows with history size — the sweep above shows the scaling)");
+}

@@ -1,0 +1,71 @@
+//! Offload-candidate narrowing (paper step 2-1).
+//!
+//! From all loop statements of an application, keep the top `keep` by
+//! arithmetic intensity (the paper uses 4). Loops with zero intensity
+//! (init/copy nests) can never be candidates.
+
+use super::intensity::{intensity_report, ranked, LoopIntensity};
+use crate::loopir::walk::Bindings;
+use crate::loopir::Program;
+
+/// An offload candidate: one loop statement and its analysis record.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    pub nest_index: usize,
+    pub stage: Option<String>,
+    pub intensity: f64,
+    pub flops: f64,
+    pub footprint_bytes: f64,
+    pub inner_trips: f64,
+}
+
+/// Paper step 2-1: top-`keep` loop statements by arithmetic intensity.
+pub fn select_candidates(
+    prog: &Program,
+    over: &Bindings,
+    keep: usize,
+) -> anyhow::Result<Vec<Candidate>> {
+    let report = intensity_report(prog, over)?;
+    let order = ranked(&report);
+    Ok(order
+        .into_iter()
+        .map(|i| &report[i])
+        .filter(|r| r.intensity > 0.0)
+        .take(keep)
+        .map(|r: &LoopIntensity| Candidate {
+            nest_index: r.nest_index,
+            stage: r.stage.clone(),
+            intensity: r.intensity,
+            flops: r.flops,
+            footprint_bytes: r.footprint_bytes,
+            inner_trips: r.inner_trips,
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loopir::parse;
+
+    #[test]
+    fn keeps_top_k_and_skips_zero_intensity() {
+        let src = r#"
+            app t;
+            param N = 32;
+            array x[N]: f32 in;
+            array y[N]: f32 out;
+            loop i in 0..N { y[i] = 0.0; }
+            stage s0 loop i in 0..N { y[i] = x[i] * 2.0; }
+            stage s1 loop i in 0..N { loop j in 0..N { y[i] += x[j] * x[j]; } }
+            stage s2 loop i in 0..N { y[i] = cos(x[i]) * sin(x[i]); }
+        "#;
+        let prog = parse(src).unwrap();
+        let cands = select_candidates(&prog, &Bindings::new(), 4).unwrap();
+        assert_eq!(cands.len(), 3, "init nest must not be a candidate");
+        assert!(cands.iter().all(|c| c.stage.is_some()));
+        let cands2 = select_candidates(&prog, &Bindings::new(), 2).unwrap();
+        assert_eq!(cands2.len(), 2);
+        assert!(cands2[0].intensity >= cands2[1].intensity);
+    }
+}

@@ -1,0 +1,159 @@
+//! Arithmetic-intensity analysis (ROSE framework stand-in).
+//!
+//! The paper: "arithmetic intensity rises with calculation count and falls
+//! with data size; high-intensity loop statements are heavy processing".
+//! Per loop statement (nest) we compute total weighted FLOPs divided by the
+//! *data footprint* — the bytes of every array the nest references — which
+//! is the "calculation count up / data size down" metric of §3.1.
+
+use crate::loopir::walk::{analyze, bindings_with, eval_bound, Bindings, NestCounts};
+use crate::loopir::Program;
+
+/// Software cost (flops) charged per transcendental (sin/cos/exp).
+///
+/// Calibration: with this weight and the CPU model constants in
+/// `fpga::perf`, the paper-scale tdFIR and MRI-Q CPU service times land on
+/// the paper's measured 0.266 s and 27.4 s (see DESIGN.md §6). It also
+/// makes trig-heavy loops rank as heavy, matching how a ROSE flop analysis
+/// scores sinf/cosf call sites.
+pub const TRANS_WEIGHT: f64 = 12.0;
+
+/// Intensity record for one loop statement.
+#[derive(Clone, Debug)]
+pub struct LoopIntensity {
+    pub nest_index: usize,
+    pub stage: Option<String>,
+    /// Total weighted FLOPs for one request.
+    pub flops: f64,
+    /// Data footprint: bytes of all arrays the nest references.
+    pub footprint_bytes: f64,
+    /// Streaming traffic (loads+stores), used by the CPU memory term.
+    pub traffic_bytes: f64,
+    /// flops / footprint — the paper's ranking metric.
+    pub intensity: f64,
+    pub inner_trips: f64,
+    pub counts: NestCounts,
+}
+
+/// Footprint of a set of arrays under a binding (bytes, f32 elements).
+pub fn arrays_footprint(
+    prog: &Program,
+    over: &Bindings,
+    arrays: &[String],
+) -> anyhow::Result<f64> {
+    let b = bindings_with(prog, over);
+    let mut bytes = 0.0;
+    for name in arrays {
+        let decl = prog
+            .array(name)
+            .ok_or_else(|| anyhow::anyhow!("undeclared array `{name}`"))?;
+        let mut elems = 1.0;
+        for d in &decl.dims {
+            elems *= eval_bound(d, prog, &b)? as f64;
+        }
+        bytes += 4.0 * elems;
+    }
+    Ok(bytes)
+}
+
+/// Analyze all loop statements of a program under a size binding.
+pub fn intensity_report(
+    prog: &Program,
+    over: &Bindings,
+) -> anyhow::Result<Vec<LoopIntensity>> {
+    let counts = analyze(prog, over)?;
+    counts
+        .into_iter()
+        .map(|c| {
+            let flops = c.ops.flops(TRANS_WEIGHT);
+            let footprint = arrays_footprint(prog, over, &c.arrays)?;
+            Ok(LoopIntensity {
+                nest_index: c.nest_index,
+                stage: c.stage.clone(),
+                flops,
+                footprint_bytes: footprint,
+                traffic_bytes: c.ops.bytes(),
+                intensity: if footprint > 0.0 { flops / footprint } else { 0.0 },
+                inner_trips: c.inner_trips,
+                counts: c,
+            })
+        })
+        .collect()
+}
+
+/// Indices of nests sorted by intensity descending; ties broken toward the
+/// earlier loop statement (deterministic, matches declaration order).
+pub fn ranked(report: &[LoopIntensity]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..report.len()).collect();
+    idx.sort_by(|&a, &b| {
+        report[b]
+            .intensity
+            .partial_cmp(&report[a].intensity)
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loopir::parse;
+
+    #[test]
+    fn stage_loops_outrank_init_loops() {
+        let src = r#"
+            app t;
+            param N = 64;
+            array x[N]: f32 in;
+            array y[N]: f32 out;
+            loop i in 0..N { y[i] = 0.0; }
+            stage heavy loop i in 0..N {
+                loop j in 0..N { y[i] += x[j] * x[j] + cos(1.0 * j); }
+            }
+        "#;
+        let prog = parse(src).unwrap();
+        let rep = intensity_report(&prog, &Bindings::new()).unwrap();
+        let order = ranked(&rep);
+        assert_eq!(order[0], 1, "heavy stage must rank first");
+        assert!(rep[1].intensity > rep[0].intensity);
+        assert_eq!(rep[0].flops, 0.0); // pure zero-fill has no flops
+    }
+
+    #[test]
+    fn intensity_falls_with_data_size() {
+        // Same flops; `two` references more arrays => larger footprint.
+        let src = r#"
+            app t;
+            param N = 16;
+            array a[N]: f32 in;
+            array b[N]: f32 in;
+            array c[N]: f32 in;
+            array y[N]: f32 out;
+            stage one loop i in 0..N { t = a[i]; y[i] = t * t + t; }
+            stage two loop i in 0..N { y[i] = a[i] * b[i] + c[i]; }
+        "#;
+        let prog = parse(src).unwrap();
+        let rep = intensity_report(&prog, &Bindings::new()).unwrap();
+        assert_eq!(rep[0].flops, rep[1].flops);
+        assert!(rep[0].footprint_bytes < rep[1].footprint_bytes);
+        assert!(rep[0].intensity > rep[1].intensity);
+    }
+
+    #[test]
+    fn footprint_uses_declared_dims_under_binding() {
+        let src = r#"
+            app t;
+            param N = 4;
+            array a[N][N]: f32 in;
+            array y[N]: f32 out;
+            stage s loop i in 0..N { y[i] = a[i][i] * 2.0; }
+        "#;
+        let prog = parse(src).unwrap();
+        let mut over = Bindings::new();
+        over.insert("N".into(), 8);
+        let rep = intensity_report(&prog, &over).unwrap();
+        // footprint = a (8*8*4) + y (8*4)
+        assert_eq!(rep[0].footprint_bytes, 256.0 + 32.0);
+    }
+}

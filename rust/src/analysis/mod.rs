@@ -1,0 +1,15 @@
+//! Code analysis pipeline (the ROSE / gcov stand-ins of §3.1).
+//!
+//! [`intensity`] scores every loop statement's arithmetic intensity,
+//! [`profile`] provides dynamic loop counts, and [`candidates`] applies the
+//! paper's step 2-1 narrowing: the top-4 loop statements by arithmetic
+//! intensity (weighted by dynamic trip counts) become the offload
+//! candidates.
+
+pub mod candidates;
+pub mod intensity;
+pub mod profile;
+
+pub use candidates::{select_candidates, Candidate};
+pub use intensity::{intensity_report, LoopIntensity, TRANS_WEIGHT};
+pub use profile::{profile_analytic, profile_measured, LoopProfile};

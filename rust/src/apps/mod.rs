@@ -1,0 +1,313 @@
+//! Application registry: the five paper workloads (§4.1.1).
+//!
+//! Each app couples
+//!  * its loop-IR source at paper scale (`assets/apps/*.lc`) — what the
+//!    analysis pipeline and the perf models consume;
+//!  * per-size parameter bindings (the Small / Large / 2xLarge request mix
+//!    of §4.1.2, where 2xLarge is "Large copied once to double it");
+//!  * the mapping to validation-scale AOT artifacts (`artifacts/*.hlo.txt`)
+//!    executed by the runtime;
+//!  * the production request rates of §4.1.2.
+
+use once_cell::sync::OnceCell;
+
+use crate::loopir::walk::{io_bytes, Bindings};
+use crate::loopir::{parse, Program};
+
+/// One request size class.
+#[derive(Clone, Debug)]
+pub struct SizeSpec {
+    pub name: &'static str,
+    /// Paper-scale parameter overrides for the loop IR.
+    pub overrides: Vec<(&'static str, i64)>,
+    /// Which artifact size this maps to (validation scale).
+    pub artifact_size: &'static str,
+    /// Relative request frequency (the 3:5:2 mix).
+    pub weight: f64,
+}
+
+/// Static description of one application.
+pub struct AppSpec {
+    pub name: &'static str,
+    pub source: &'static str,
+    pub sizes: Vec<SizeSpec>,
+    /// Production request rate (requests per hour, §4.1.2).
+    pub rate_per_hour: f64,
+    program: OnceCell<Program>,
+}
+
+impl AppSpec {
+    /// Parsed loop-IR program (cached).
+    pub fn program(&self) -> &Program {
+        self.program
+            .get_or_init(|| parse(self.source).expect("embedded .lc must parse"))
+    }
+
+    pub fn size(&self, name: &str) -> Option<&SizeSpec> {
+        self.sizes.iter().find(|s| s.name == name)
+    }
+
+    /// Parameter bindings for a size class.
+    pub fn bindings(&self, size: &str) -> Bindings {
+        let spec = self.size(size).unwrap_or(&self.sizes[0]);
+        spec.overrides
+            .iter()
+            .map(|(k, v)| (k.to_string(), *v))
+            .collect()
+    }
+
+    /// Request data size in bytes (input arrays) for a size class — the
+    /// axis of the paper's step 1-4 frequency distribution.
+    pub fn request_bytes(&self, size: &str) -> f64 {
+        let b = self.bindings(size);
+        let (i, _o) = io_bytes(self.program(), &b).expect("io_bytes");
+        i
+    }
+
+    /// Ordered stage names (loop-IR stage markers, == python stage order).
+    pub fn stage_names(&self) -> Vec<String> {
+        self.program()
+            .stages()
+            .iter()
+            .map(|n| n.stage.clone().unwrap())
+            .collect()
+    }
+
+    /// Stage index (0..4) of a nest, if it is a stage nest.
+    pub fn stage_index_of_nest(&self, nest_index: usize) -> Option<usize> {
+        let nest = self.program().nests.get(nest_index)?;
+        let stage = nest.stage.as_ref()?;
+        self.stage_names().iter().position(|s| s == stage)
+    }
+
+    /// Artifact variant name for a set of offloaded nest indices
+    /// ("cpu", "o1", "o12", ...) — must match python/compile/apps naming.
+    pub fn variant_for_nests(&self, nests: &[usize]) -> String {
+        let mut stages: Vec<usize> = nests
+            .iter()
+            .filter_map(|&n| self.stage_index_of_nest(n))
+            .collect();
+        stages.sort_unstable();
+        stages.dedup();
+        if stages.is_empty() {
+            "cpu".to_string()
+        } else {
+            let mut s = String::from("o");
+            for i in stages {
+                s.push_str(&i.to_string());
+            }
+            s
+        }
+    }
+
+    /// Nest indices for a variant name (inverse of `variant_for_nests`).
+    pub fn nests_for_variant(&self, variant: &str) -> Vec<usize> {
+        if variant == "cpu" {
+            return Vec::new();
+        }
+        let names = self.stage_names();
+        variant[1..]
+            .chars()
+            .filter_map(|c| c.to_digit(10))
+            .filter_map(|i| {
+                names
+                    .get(i as usize)
+                    .and_then(|s| self.program().stage_nest_index(s))
+            })
+            .collect()
+    }
+
+    /// Artifact key (file-name stem) for a size + variant.
+    pub fn artifact_key(&self, size: &str, variant: &str) -> String {
+        let art_size = self
+            .size(size)
+            .map(|s| s.artifact_size)
+            .unwrap_or("sample");
+        format!("{}__{}__{}", self.name, art_size, variant)
+    }
+}
+
+/// The five applications with the paper's workload parameters.
+pub fn registry() -> Vec<AppSpec> {
+    vec![
+        AppSpec {
+            name: "tdfir",
+            source: include_str!("../../../assets/apps/tdfir.lc"),
+            sizes: vec![
+                SizeSpec {
+                    name: "small",
+                    overrides: vec![("M", 32)],
+                    artifact_size: "small",
+                    weight: 3.0,
+                },
+                SizeSpec {
+                    name: "large",
+                    overrides: vec![("M", 64)],
+                    artifact_size: "large",
+                    weight: 5.0,
+                },
+                SizeSpec {
+                    name: "xlarge",
+                    overrides: vec![("M", 128)],
+                    artifact_size: "xlarge",
+                    weight: 2.0,
+                },
+            ],
+            rate_per_hour: 300.0,
+            program: OnceCell::new(),
+        },
+        AppSpec {
+            name: "mriq",
+            source: include_str!("../../../assets/apps/mriq.lc"),
+            sizes: vec![
+                SizeSpec {
+                    name: "small",
+                    overrides: vec![("X", 131072)],
+                    artifact_size: "small",
+                    weight: 3.0,
+                },
+                SizeSpec {
+                    name: "large",
+                    overrides: vec![("X", 262144)],
+                    artifact_size: "large",
+                    weight: 5.0,
+                },
+                SizeSpec {
+                    name: "xlarge",
+                    overrides: vec![("X", 524288)],
+                    artifact_size: "xlarge",
+                    weight: 2.0,
+                },
+            ],
+            rate_per_hour: 10.0,
+            program: OnceCell::new(),
+        },
+        AppSpec {
+            name: "himeno",
+            source: include_str!("../../../assets/apps/himeno.lc"),
+            sizes: vec![SizeSpec {
+                name: "sample",
+                overrides: vec![],
+                artifact_size: "sample",
+                weight: 1.0,
+            }],
+            rate_per_hour: 3.0,
+            program: OnceCell::new(),
+        },
+        AppSpec {
+            name: "symm",
+            source: include_str!("../../../assets/apps/symm.lc"),
+            sizes: vec![SizeSpec {
+                name: "sample",
+                overrides: vec![],
+                artifact_size: "sample",
+                weight: 1.0,
+            }],
+            rate_per_hour: 2.0,
+            program: OnceCell::new(),
+        },
+        AppSpec {
+            name: "dft",
+            source: include_str!("../../../assets/apps/dft.lc"),
+            sizes: vec![SizeSpec {
+                name: "sample",
+                overrides: vec![],
+                artifact_size: "sample",
+                weight: 1.0,
+            }],
+            rate_per_hour: 1.0,
+            program: OnceCell::new(),
+        },
+    ]
+}
+
+/// Look up one app from a registry slice.
+pub fn find<'a>(registry: &'a [AppSpec], name: &str) -> Option<&'a AppSpec> {
+    registry.iter().find(|a| a.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_sources_parse_with_paper_loop_counts() {
+        // §4.1.2: tdFIR 6, MRI-Q 16, Himeno 13, Symm 9, DFT 10.
+        let want = [
+            ("tdfir", 6),
+            ("mriq", 16),
+            ("himeno", 13),
+            ("symm", 9),
+            ("dft", 10),
+        ];
+        let reg = registry();
+        for (name, loops) in want {
+            let app = find(&reg, name).unwrap();
+            assert_eq!(
+                app.program().nests.len(),
+                loops,
+                "{name} loop-statement count"
+            );
+            assert_eq!(app.program().stages().len(), 4, "{name} stage count");
+        }
+    }
+
+    #[test]
+    fn stage_names_match_python_order() {
+        let reg = registry();
+        let expect: [(&str, &[&str]); 5] = [
+            ("tdfir", &["window", "conv", "normalize", "energy"]),
+            ("mriq", &["phimag", "q", "scale", "magnitude"]),
+            ("himeno", &["init", "stencil", "gosa", "copy"]),
+            ("symm", &["symmetrize", "matmul", "combine", "rownorm"]),
+            ("dft", &["window", "transform", "magnitude", "normalize"]),
+        ];
+        for (name, stages) in expect {
+            let app = find(&reg, name).unwrap();
+            assert_eq!(app.stage_names(), stages, "{name}");
+        }
+    }
+
+    #[test]
+    fn variant_roundtrip() {
+        let reg = registry();
+        let app = find(&reg, "tdfir").unwrap();
+        let conv = app.program().stage_nest_index("conv").unwrap();
+        let norm = app.program().stage_nest_index("normalize").unwrap();
+        assert_eq!(app.variant_for_nests(&[conv]), "o1");
+        assert_eq!(app.variant_for_nests(&[norm, conv]), "o12");
+        assert_eq!(app.variant_for_nests(&[]), "cpu");
+        assert_eq!(app.nests_for_variant("o12"), vec![conv, norm]);
+        assert_eq!(app.nests_for_variant("cpu"), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn request_bytes_grow_with_size() {
+        let reg = registry();
+        for name in ["tdfir", "mriq"] {
+            let app = find(&reg, name).unwrap();
+            let s = app.request_bytes("small");
+            let l = app.request_bytes("large");
+            let x = app.request_bytes("xlarge");
+            assert!(s < l && l < x, "{name}: {s} {l} {x}");
+            // 2xLarge is "Large copied once" — exactly double.
+            assert!((x / l - 2.0).abs() < 0.05, "{name}: xlarge/large = {}", x / l);
+        }
+    }
+
+    #[test]
+    fn artifact_keys_match_manifest_convention() {
+        let reg = registry();
+        let app = find(&reg, "tdfir").unwrap();
+        assert_eq!(app.artifact_key("large", "o1"), "tdfir__large__o1");
+        let h = find(&reg, "himeno").unwrap();
+        assert_eq!(h.artifact_key("sample", "cpu"), "himeno__sample__cpu");
+    }
+
+    #[test]
+    fn paper_request_rates() {
+        let reg = registry();
+        let rates: Vec<f64> = reg.iter().map(|a| a.rate_per_hour).collect();
+        assert_eq!(rates, vec![300.0, 10.0, 3.0, 2.0, 1.0]);
+    }
+}

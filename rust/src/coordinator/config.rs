@@ -1,0 +1,206 @@
+//! JSON configuration for the whole deployment (the "real config system").
+//!
+//! A single config file drives the CLI and the examples: workload rates,
+//! analysis windows, thresholds, narrowing parameters, reconfiguration
+//! flavor, compile-farm sizing. Every field is optional and defaults to
+//! the paper's §4.1.2 values, so an empty object `{}` is the paper run.
+//!
+//! ```json
+//! {
+//!   "window_hours": 1.0,
+//!   "threshold": 2.0,
+//!   "top_apps": 2,
+//!   "intensity_keep": 4,
+//!   "efficiency_keep": 3,
+//!   "bin_width_mb": 1.0,
+//!   "reconfig": "static",
+//!   "compile_hours": 6.0,
+//!   "farm_slots": 1,
+//!   "seed": 42,
+//!   "rates_per_hour": {"tdfir": 300, "mriq": 10}
+//! }
+//! ```
+
+use std::path::Path;
+
+use crate::coordinator::policy::ThresholdPolicy;
+use crate::coordinator::recon::ReconConfig;
+use crate::fpga::device::ReconfigKind;
+use crate::offload::OffloadConfig;
+use crate::util::json::Json;
+
+/// Fully resolved run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub recon: ReconConfig,
+    pub window_secs: f64,
+    pub seed: u64,
+    /// Per-app rate overrides (requests/hour).
+    pub rate_overrides: Vec<(String, f64)>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            recon: ReconConfig::default(),
+            window_secs: 3600.0,
+            seed: 42,
+            rate_overrides: Vec::new(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from JSON text; unknown keys are rejected (typo safety).
+    pub fn parse(text: &str) -> anyhow::Result<RunConfig> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("config: {e}"))?;
+        let obj = match &j {
+            Json::Obj(m) => m,
+            _ => anyhow::bail!("config must be a JSON object"),
+        };
+        const KNOWN: &[&str] = &[
+            "window_hours",
+            "threshold",
+            "top_apps",
+            "intensity_keep",
+            "efficiency_keep",
+            "bin_width_mb",
+            "reconfig",
+            "compile_hours",
+            "farm_slots",
+            "seed",
+            "rates_per_hour",
+        ];
+        for k in obj.keys() {
+            anyhow::ensure!(KNOWN.contains(&k.as_str()), "unknown config key `{k}`");
+        }
+
+        let mut cfg = RunConfig::default();
+        let f = |key: &str| j.get(key).and_then(Json::as_f64);
+        if let Some(h) = f("window_hours") {
+            anyhow::ensure!(h > 0.0, "window_hours must be positive");
+            cfg.window_secs = h * 3600.0;
+            cfg.recon.long_window_secs = cfg.window_secs;
+            cfg.recon.short_window_secs = cfg.window_secs;
+        }
+        if let Some(t) = f("threshold") {
+            anyhow::ensure!(t >= 1.0, "threshold must be >= 1.0");
+            cfg.recon.policy = ThresholdPolicy {
+                min_effect_ratio: t,
+            };
+        }
+        if let Some(n) = j.get("top_apps").and_then(Json::as_usize) {
+            anyhow::ensure!(n >= 1, "top_apps must be >= 1");
+            cfg.recon.top_apps = n;
+        }
+        let mut off = OffloadConfig::default();
+        if let Some(n) = j.get("intensity_keep").and_then(Json::as_usize) {
+            anyhow::ensure!(n >= 1, "intensity_keep must be >= 1");
+            off.intensity_keep = n;
+        }
+        if let Some(n) = j.get("efficiency_keep").and_then(Json::as_usize) {
+            anyhow::ensure!(n >= 1, "efficiency_keep must be >= 1");
+            off.efficiency_keep = n;
+        }
+        if let Some(h) = f("compile_hours") {
+            anyhow::ensure!(h >= 0.0, "compile_hours must be >= 0");
+            off.compile_secs = h * 3600.0;
+        }
+        if let Some(n) = j.get("farm_slots").and_then(Json::as_usize) {
+            anyhow::ensure!(n >= 1, "farm_slots must be >= 1");
+            off.farm_slots = n;
+        }
+        cfg.recon.offload = off;
+        if let Some(mb) = f("bin_width_mb") {
+            anyhow::ensure!(mb > 0.0, "bin_width_mb must be positive");
+            cfg.recon.bin_width_bytes = mb * 1024.0 * 1024.0;
+        }
+        if let Some(kind) = j.get("reconfig").and_then(Json::as_str) {
+            cfg.recon.kind = match kind {
+                "static" => ReconfigKind::Static,
+                "dynamic" => ReconfigKind::Dynamic,
+                other => anyhow::bail!("reconfig must be static|dynamic, got `{other}`"),
+            };
+        }
+        if let Some(s) = j.get("seed").and_then(Json::as_usize) {
+            cfg.seed = s as u64;
+        }
+        if let Some(Json::Obj(rates)) = j.get("rates_per_hour") {
+            for (app, v) in rates {
+                let r = v
+                    .as_f64()
+                    .ok_or_else(|| anyhow::anyhow!("rate for `{app}` must be a number"))?;
+                anyhow::ensure!(r >= 0.0, "rate for `{app}` must be >= 0");
+                cfg.rate_overrides.push((app.clone(), r));
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<RunConfig> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            anyhow::anyhow!("cannot read config {}: {e}", path.as_ref().display())
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Apply rate overrides onto a registry.
+    pub fn apply_rates(&self, registry: &mut [crate::apps::AppSpec]) {
+        for (app, rate) in &self.rate_overrides {
+            if let Some(spec) = registry.iter_mut().find(|a| a.name == app) {
+                spec.rate_per_hour = *rate;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_object_is_the_paper_run() {
+        let c = RunConfig::parse("{}").unwrap();
+        assert_eq!(c.window_secs, 3600.0);
+        assert_eq!(c.recon.policy.min_effect_ratio, 2.0);
+        assert_eq!(c.recon.top_apps, 2);
+        assert_eq!(c.recon.offload.intensity_keep, 4);
+        assert_eq!(c.recon.offload.efficiency_keep, 3);
+        assert_eq!(c.seed, 42);
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let c = RunConfig::parse(
+            r#"{
+                "window_hours": 2.0, "threshold": 3.5, "top_apps": 3,
+                "intensity_keep": 5, "efficiency_keep": 2,
+                "bin_width_mb": 0.5, "reconfig": "dynamic",
+                "compile_hours": 1.0, "farm_slots": 4, "seed": 7,
+                "rates_per_hour": {"tdfir": 100, "dft": 50}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(c.window_secs, 7200.0);
+        assert_eq!(c.recon.policy.min_effect_ratio, 3.5);
+        assert_eq!(c.recon.offload.farm_slots, 4);
+        assert_eq!(c.recon.kind, ReconfigKind::Dynamic);
+        assert_eq!(c.rate_overrides.len(), 2);
+
+        let mut reg = crate::apps::registry();
+        c.apply_rates(&mut reg);
+        assert_eq!(crate::apps::find(&reg, "tdfir").unwrap().rate_per_hour, 100.0);
+        assert_eq!(crate::apps::find(&reg, "dft").unwrap().rate_per_hour, 50.0);
+        assert_eq!(crate::apps::find(&reg, "mriq").unwrap().rate_per_hour, 10.0);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        assert!(RunConfig::parse(r#"{"thresold": 2.0}"#).is_err());
+        assert!(RunConfig::parse(r#"{"threshold": 0.5}"#).is_err());
+        assert!(RunConfig::parse(r#"{"reconfig": "magic"}"#).is_err());
+        assert!(RunConfig::parse(r#"{"window_hours": -1}"#).is_err());
+        assert!(RunConfig::parse(r#"[1,2]"#).is_err());
+        assert!(RunConfig::parse("nonsense").is_err());
+    }
+}

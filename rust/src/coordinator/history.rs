@@ -1,0 +1,130 @@
+//! Commercial request history (the input of §3.3 step 1).
+
+/// Where a request was served.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServedBy {
+    Cpu,
+    Fpga,
+}
+
+/// One served request.
+#[derive(Clone, Debug)]
+pub struct RequestRecord {
+    pub id: u64,
+    pub app: String,
+    pub size: String,
+    pub bytes: f64,
+    pub arrival: f64,
+    pub start: f64,
+    pub finish: f64,
+    /// Pure service time (finish - start).
+    pub service_secs: f64,
+    pub served_by: ServedBy,
+}
+
+impl RequestRecord {
+    pub fn wait_secs(&self) -> f64 {
+        self.start - self.arrival
+    }
+}
+
+/// Append-only history store with window queries.
+#[derive(Clone, Debug, Default)]
+pub struct HistoryStore {
+    records: Vec<RequestRecord>,
+}
+
+impl HistoryStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: RequestRecord) {
+        self.records.push(r);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn all(&self) -> &[RequestRecord] {
+        &self.records
+    }
+
+    /// Records whose arrival falls in [from, to).
+    pub fn window(&self, from: f64, to: f64) -> impl Iterator<Item = &RequestRecord> {
+        self.records
+            .iter()
+            .filter(move |r| r.arrival >= from && r.arrival < to)
+    }
+
+    /// Distinct app names seen in a window.
+    pub fn apps_in_window(&self, from: f64, to: f64) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for r in self.window(from, to) {
+            if !out.contains(&r.app) {
+                out.push(r.app.clone());
+            }
+        }
+        out
+    }
+
+    /// (total service seconds, request count) per app in a window.
+    pub fn totals_in_window(&self, app: &str, from: f64, to: f64) -> (f64, u64) {
+        let mut sum = 0.0;
+        let mut n = 0;
+        for r in self.window(from, to) {
+            if r.app == app {
+                sum += r.service_secs;
+                n += 1;
+            }
+        }
+        (sum, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(app: &str, arrival: f64, service: f64) -> RequestRecord {
+        RequestRecord {
+            id: 0,
+            app: app.into(),
+            size: "large".into(),
+            bytes: 1e6,
+            arrival,
+            start: arrival,
+            finish: arrival + service,
+            service_secs: service,
+            served_by: ServedBy::Cpu,
+        }
+    }
+
+    #[test]
+    fn window_queries() {
+        let mut h = HistoryStore::new();
+        h.push(rec("a", 0.0, 1.0));
+        h.push(rec("a", 10.0, 2.0));
+        h.push(rec("b", 20.0, 3.0));
+        assert_eq!(h.window(0.0, 15.0).count(), 2);
+        assert_eq!(h.apps_in_window(0.0, 30.0), vec!["a", "b"]);
+        let (sum, n) = h.totals_in_window("a", 0.0, 30.0);
+        assert_eq!(sum, 3.0);
+        assert_eq!(n, 2);
+        let (sum_b, n_b) = h.totals_in_window("b", 0.0, 15.0);
+        assert_eq!(sum_b, 0.0);
+        assert_eq!(n_b, 0);
+    }
+
+    #[test]
+    fn wait_time() {
+        let mut r = rec("a", 5.0, 1.0);
+        r.start = 7.5;
+        assert_eq!(r.wait_secs(), 2.5);
+    }
+}

@@ -1,0 +1,21 @@
+//! Layer-3 coordinator: the production environment and the paper's §3.3
+//! in-operation FPGA reconfiguration method.
+//!
+//!  * [`history`] — the commercial request history store (step 1 input);
+//!  * [`server`]  — the production environment: request routing between
+//!    the CPU pool and the FPGA card, service accounting on the virtual
+//!    clock;
+//!  * [`recon`]   — the six-step reconfiguration controller;
+//!  * [`policy`]  — threshold decision and user approval (step 4/5).
+
+pub mod adaptive;
+pub mod config;
+pub mod history;
+pub mod policy;
+pub mod recon;
+pub mod server;
+
+pub use history::{HistoryStore, RequestRecord, ServedBy};
+pub use policy::{Approval, ApprovalDecision, ThresholdPolicy};
+pub use recon::{run_reconfiguration, ReconConfig, ReconOutcome, ReconProposal};
+pub use server::{Deployment, ProductionEnv};

@@ -1,0 +1,98 @@
+//! Step 4/5: threshold decision and user approval.
+//!
+//! The paper limits reconfiguration churn: the new pattern's improvement
+//! effect must exceed the current pattern's by a threshold (2.0 in §4.1.2)
+//! before the provider even proposes the change, and the contract user
+//! must approve it (step 5) before anything touches production.
+
+/// Threshold policy for step 4.
+#[derive(Clone, Copy, Debug)]
+pub struct ThresholdPolicy {
+    /// Minimum (new effect) / (current effect) ratio (paper: 2.0).
+    pub min_effect_ratio: f64,
+}
+
+impl Default for ThresholdPolicy {
+    fn default() -> Self {
+        ThresholdPolicy {
+            min_effect_ratio: 2.0,
+        }
+    }
+}
+
+impl ThresholdPolicy {
+    /// Step 4-1: propose iff new/current >= threshold.
+    pub fn should_propose(&self, current_effect: f64, new_effect: f64) -> bool {
+        if current_effect <= 0.0 {
+            // Nothing offloaded yet (or the current pattern pays nothing):
+            // any positive effect clears the bar.
+            return new_effect > 0.0;
+        }
+        new_effect / current_effect >= self.min_effect_ratio
+    }
+}
+
+/// Step 5: user approval.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ApprovalDecision {
+    Approved,
+    Rejected,
+}
+
+/// Approval source: automatic (contract pre-authorizes) or a callback
+/// (interactive CLI).
+pub enum Approval {
+    Auto(ApprovalDecision),
+    Ask(Box<dyn FnMut(&str) -> ApprovalDecision>),
+}
+
+impl Approval {
+    pub fn auto_yes() -> Self {
+        Approval::Auto(ApprovalDecision::Approved)
+    }
+
+    pub fn auto_no() -> Self {
+        Approval::Auto(ApprovalDecision::Rejected)
+    }
+
+    pub fn decide(&mut self, proposal_text: &str) -> ApprovalDecision {
+        match self {
+            Approval::Auto(d) => *d,
+            Approval::Ask(f) => f(proposal_text),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_at_two() {
+        let p = ThresholdPolicy::default();
+        assert!(p.should_propose(41.1, 252.0)); // the paper's 6.1x
+        assert!(p.should_propose(10.0, 20.0)); // exactly 2.0
+        assert!(!p.should_propose(10.0, 19.9));
+    }
+
+    #[test]
+    fn zero_current_effect_always_proposes_positive() {
+        let p = ThresholdPolicy::default();
+        assert!(p.should_propose(0.0, 1.0));
+        assert!(!p.should_propose(0.0, 0.0));
+    }
+
+    #[test]
+    fn approval_modes() {
+        let mut yes = Approval::auto_yes();
+        assert_eq!(yes.decide("x"), ApprovalDecision::Approved);
+        let mut no = Approval::auto_no();
+        assert_eq!(no.decide("x"), ApprovalDecision::Rejected);
+        let mut count = 0;
+        let mut ask = Approval::Ask(Box::new(move |_| {
+            count += 1;
+            ApprovalDecision::Approved
+        }));
+        assert_eq!(ask.decide("proposal"), ApprovalDecision::Approved);
+    }
+}

@@ -1,0 +1,177 @@
+//! Simulated FPGA card: one logic slot, reconfiguration, downtime.
+//!
+//! The card holds one application's offload logic at a time (the paper's
+//! premise — reconfiguring the FPGA from tdFIR to MRI-Q is the whole
+//! point). Reconfiguration comes in the two flavors of §3.2:
+//!
+//!  * static  — stop the running logic, reprogram, restart: ~1 s outage;
+//!  * dynamic — partial reconfiguration while running: ~ms outage.
+//!
+//! Downtime is charged on the virtual clock; the *measured* wall-clock
+//! swap (PJRT executable load + compile + warm-up) is reported separately
+//! by `runtime::swap` and compared in the TXT-DOWNTIME experiment.
+
+use super::part::Part;
+
+/// Reconfiguration flavor (§3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReconfigKind {
+    /// Stop-the-world reprogram via the Acceleration Stack (~1 s).
+    Static,
+    /// Intel/Xilinx partial reconfiguration (~ms order).
+    Dynamic,
+}
+
+impl ReconfigKind {
+    /// Virtual outage charged for this flavor (seconds).
+    pub fn downtime_secs(&self) -> f64 {
+        match self {
+            // §4.2: "OpenCL static reconfiguration is about 1 second".
+            ReconfigKind::Static => 1.0,
+            // §3.2: "ms order" — modeled as 5 ms.
+            ReconfigKind::Dynamic => 5e-3,
+        }
+    }
+}
+
+/// What is currently programmed into the card's kernel region.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LoadedLogic {
+    pub app: String,
+    pub variant: String,
+}
+
+/// One reconfiguration event (for reports and the downtime bench).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReconfigReport {
+    pub kind: ReconfigKind,
+    pub from: Option<LoadedLogic>,
+    pub to: LoadedLogic,
+    pub started_at: f64,
+    pub downtime_secs: f64,
+}
+
+/// The simulated card.
+#[derive(Clone, Debug)]
+pub struct FpgaDevice {
+    pub part: Part,
+    logic: Option<LoadedLogic>,
+    /// Virtual time until which the card is unavailable (reconfiguring).
+    outage_until: f64,
+    /// Virtual time until which the kernel pipeline is busy with requests.
+    busy_until: f64,
+    pub reconfig_log: Vec<ReconfigReport>,
+}
+
+impl FpgaDevice {
+    pub fn new(part: Part) -> Self {
+        FpgaDevice {
+            part,
+            logic: None,
+            outage_until: 0.0,
+            busy_until: 0.0,
+            reconfig_log: Vec::new(),
+        }
+    }
+
+    pub fn logic(&self) -> Option<&LoadedLogic> {
+        self.logic.as_ref()
+    }
+
+    /// Is `app` currently accelerated by this card?
+    pub fn serves(&self, app: &str) -> bool {
+        self.logic.as_ref().map(|l| l.app == app).unwrap_or(false)
+    }
+
+    /// Program logic into the slot (initial deployment or reconfig).
+    /// Returns the report; the card is unavailable for the outage window.
+    pub fn reconfigure(
+        &mut self,
+        now: f64,
+        kind: ReconfigKind,
+        app: impl Into<String>,
+        variant: impl Into<String>,
+    ) -> ReconfigReport {
+        let to = LoadedLogic {
+            app: app.into(),
+            variant: variant.into(),
+        };
+        let downtime = kind.downtime_secs();
+        let report = ReconfigReport {
+            kind,
+            from: self.logic.clone(),
+            to: to.clone(),
+            started_at: now,
+            downtime_secs: downtime,
+        };
+        // In-flight work is cut off by the outage (requests arriving
+        // during it queue behind `outage_until`).
+        self.outage_until = now + downtime;
+        self.busy_until = self.busy_until.max(self.outage_until);
+        self.logic = Some(to);
+        self.reconfig_log.push(report.clone());
+        report
+    }
+
+    /// Schedule one request on the card's pipeline (serialized FIFO).
+    /// Returns (start, finish) in virtual time.
+    pub fn schedule(&mut self, arrival: f64, service_secs: f64) -> (f64, f64) {
+        let start = arrival.max(self.busy_until).max(self.outage_until);
+        let finish = start + service_secs;
+        self.busy_until = finish;
+        (start, finish)
+    }
+
+    /// Card available (not in an outage window) at `t`?
+    pub fn available_at(&self, t: f64) -> bool {
+        t >= self.outage_until
+    }
+
+    /// Total outage charged so far (sum of reconfig downtimes).
+    pub fn total_downtime(&self) -> f64 {
+        self.reconfig_log.iter().map(|r| r.downtime_secs).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::part::D5005;
+
+    #[test]
+    fn static_reconfig_costs_a_second() {
+        let mut d = FpgaDevice::new(D5005);
+        let r = d.reconfigure(10.0, ReconfigKind::Static, "tdfir", "o1");
+        assert_eq!(r.downtime_secs, 1.0);
+        assert!(!d.available_at(10.5));
+        assert!(d.available_at(11.0));
+        assert!(d.serves("tdfir"));
+    }
+
+    #[test]
+    fn dynamic_is_ms_order() {
+        assert!(ReconfigKind::Dynamic.downtime_secs() < 0.01);
+        assert!(ReconfigKind::Static.downtime_secs() / ReconfigKind::Dynamic.downtime_secs() > 100.0);
+    }
+
+    #[test]
+    fn requests_queue_behind_outage_and_each_other() {
+        let mut d = FpgaDevice::new(D5005);
+        d.reconfigure(0.0, ReconfigKind::Static, "mriq", "o1");
+        let (s1, f1) = d.schedule(0.2, 2.0);
+        assert_eq!(s1, 1.0, "must wait for the outage to end");
+        let (s2, _f2) = d.schedule(0.3, 2.0);
+        assert_eq!(s2, f1, "FIFO behind the first request");
+    }
+
+    #[test]
+    fn reconfig_tracks_from_to() {
+        let mut d = FpgaDevice::new(D5005);
+        d.reconfigure(0.0, ReconfigKind::Static, "tdfir", "o1");
+        let r = d.reconfigure(100.0, ReconfigKind::Static, "mriq", "o13");
+        assert_eq!(r.from.as_ref().unwrap().app, "tdfir");
+        assert_eq!(r.to.app, "mriq");
+        assert_eq!(d.total_downtime(), 2.0);
+        assert_eq!(d.reconfig_log.len(), 2);
+    }
+}

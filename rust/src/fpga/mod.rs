@@ -1,0 +1,24 @@
+//! Simulated FPGA substrate (the paper's Intel PAC D5005 testbed).
+//!
+//! The real hardware is unavailable (repro band 0), so every role it plays
+//! in the paper is rebuilt:
+//!  * [`part`] — device catalog (Stratix 10 GX 2800 resources);
+//!  * [`resource`] — the "HDL-level precompile" resource estimator that
+//!    makes step 2-2's resource-efficiency pruning possible in minutes;
+//!  * [`perf`] — calibrated CPU and FPGA service-time models (§6 of
+//!    DESIGN.md documents the calibration against the paper's numbers);
+//!  * [`compiler`] — the compile farm charging 6 simulated hours per full
+//!    FPGA compile (and really compiling the PJRT artifact);
+//!  * [`device`] — the card itself: one logic slot, static/dynamic
+//!    reconfiguration with measured downtime.
+
+pub mod compiler;
+pub mod device;
+pub mod part;
+pub mod perf;
+pub mod resource;
+
+pub use device::{FpgaDevice, ReconfigKind, ReconfigReport};
+pub use part::Part;
+pub use perf::{cpu_time, fpga_time, PerfModel};
+pub use resource::{estimate, ResourceEstimate};

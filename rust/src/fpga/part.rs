@@ -1,0 +1,61 @@
+//! FPGA part catalog.
+
+/// Physical resource inventory of an FPGA part.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Part {
+    pub name: &'static str,
+    /// Adaptive logic modules.
+    pub alms: f64,
+    /// Logic elements (marketing count; the paper quotes LE 2,800,000).
+    pub les: f64,
+    /// Hardened DSP blocks (fp32-capable on Stratix 10).
+    pub dsps: f64,
+    /// M20K on-chip RAM blocks (20 kbit each).
+    pub m20ks: f64,
+    /// Peak OpenCL kernel clock this part reaches in practice (Hz).
+    pub fmax_hz: f64,
+    /// Host<->card DMA bandwidth (bytes/s), PCIe gen3 x16 effective.
+    pub dma_bw: f64,
+    /// Static-region overhead fraction reserved by the shell (BSP).
+    pub shell_overhead: f64,
+}
+
+/// Intel PAC D5005: Stratix 10 GX 2800 (the paper's card, Fig. 3).
+pub const D5005: Part = Part {
+    name: "Intel PAC D5005 (Stratix 10 GX 2800)",
+    alms: 933_120.0,
+    les: 2_800_000.0,
+    dsps: 5_760.0,
+    m20ks: 11_721.0,
+    fmax_hz: 260.0e6,
+    dma_bw: 12.0e9,
+    shell_overhead: 0.20,
+};
+
+impl Part {
+    /// Resources usable by kernels after the shell (partial-reconfig region).
+    pub fn usable_alms(&self) -> f64 {
+        self.alms * (1.0 - self.shell_overhead)
+    }
+
+    pub fn usable_dsps(&self) -> f64 {
+        self.dsps * (1.0 - self.shell_overhead)
+    }
+
+    pub fn usable_m20ks(&self) -> f64 {
+        self.m20ks * (1.0 - self.shell_overhead)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn d5005_matches_fig3() {
+        assert!(D5005.name.contains("Stratix 10"));
+        assert_eq!(D5005.les, 2_800_000.0);
+        assert!(D5005.usable_alms() < D5005.alms);
+        assert!(D5005.usable_dsps() < D5005.dsps);
+    }
+}

@@ -1,0 +1,208 @@
+//! Calibrated CPU and FPGA service-time models.
+//!
+//! The real testbed (Xeon Bronze 3206R + PAC D5005 via the Intel
+//! Acceleration Stack) is unavailable, so request service times come from
+//! analytic models over the loop-IR counts. Calibration (DESIGN.md §6,
+//! verified by unit tests below):
+//!
+//! CPU (single scalar core, the paper's C binaries):
+//!   t = Σ_nests weighted_flops / CPU_FLOPS + traffic_bytes / CPU_MEMBW
+//!   with TRANS_WEIGHT = 12 flops per sinf/cosf. This lands paper-scale
+//!   tdFIR at ≈0.27 s (paper: 0.266 s) and MRI-Q at ≈27 s (paper: 27.4 s).
+//!
+//! FPGA (OpenCL pipeline on the D5005):
+//!   each offloaded nest becomes one II=1 pipeline at FMAX — the paper's
+//!   single-kernel compile, no compute-unit replication — so
+//!   t = inner_trips / FMAX + fill + launch, plus one host<->card DMA of
+//!   the app's IO bytes per request. This lands tdFIR-conv at ≈0.129 s
+//!   (paper: 0.129 s) and MRI-Q-q at ≈3.2 s (paper: 2.23 s, same order,
+//!   same winner). The trig advantage (hard CORDIC pipelines vs ~12-flop
+//!   software sincos) is exactly what makes MRI-Q's offload pay 8-12x
+//!   while tdFIR's pays ~2x — the paper's Fig. 4 contrast.
+
+use super::part::Part;
+use crate::analysis::intensity::LoopIntensity;
+use crate::loopir::walk::{io_bytes, Bindings};
+use crate::loopir::Program;
+
+/// Effective scalar-CPU flop rate (flops/s), Xeon Bronze 3206R class.
+pub const CPU_FLOPS: f64 = 1.3e9;
+/// Effective CPU streaming bandwidth (bytes/s).
+pub const CPU_MEMBW: f64 = 24.0e9;
+/// Pipeline fill depth (cycles) charged once per kernel invocation.
+pub const PIPE_FILL_CYCLES: f64 = 400.0;
+/// Host-side kernel launch overhead per offloaded nest (s).
+pub const LAUNCH_OVERHEAD: f64 = 0.5e-3;
+
+/// Per-request service-time model for one application under one offload
+/// pattern (set of offloaded nest indices).
+#[derive(Clone, Debug)]
+pub struct PerfModel {
+    /// Intensity/count records for every nest (from `intensity_report`).
+    pub nests: Vec<LoopIntensity>,
+    /// Whole-request IO bytes (in + out), for DMA sizing.
+    pub io_bytes: f64,
+    pub part: Part,
+}
+
+impl PerfModel {
+    pub fn new(
+        prog: &Program,
+        over: &Bindings,
+        part: Part,
+    ) -> anyhow::Result<PerfModel> {
+        let nests = crate::analysis::intensity::intensity_report(prog, over)?;
+        let (i, o) = io_bytes(prog, over)?;
+        Ok(PerfModel {
+            nests,
+            io_bytes: i + o,
+            part,
+        })
+    }
+
+    /// CPU time of one nest.
+    pub fn nest_cpu_time(&self, nest_index: usize) -> f64 {
+        let n = &self.nests[nest_index];
+        n.flops / CPU_FLOPS + n.traffic_bytes / CPU_MEMBW
+    }
+
+    /// FPGA pipeline time of one nest (kernel body only).
+    pub fn nest_fpga_time(&self, nest_index: usize) -> f64 {
+        let n = &self.nests[nest_index];
+        (n.inner_trips + PIPE_FILL_CYCLES) / self.part.fmax_hz + LAUNCH_OVERHEAD
+    }
+
+    /// Full-request CPU-only service time.
+    pub fn cpu_request_time(&self) -> f64 {
+        (0..self.nests.len()).map(|i| self.nest_cpu_time(i)).sum()
+    }
+
+    /// Full-request service time under an offload pattern.
+    ///
+    /// Non-offloaded nests run on the CPU; offloaded nests run as FPGA
+    /// pipelines; one DMA round-trip of the request IO is charged when
+    /// anything is offloaded (the OpenCL host moves buffers once).
+    pub fn request_time(&self, offloaded: &[usize]) -> f64 {
+        let mut t = 0.0;
+        for i in 0..self.nests.len() {
+            if offloaded.contains(&i) {
+                t += self.nest_fpga_time(i);
+            } else {
+                t += self.nest_cpu_time(i);
+            }
+        }
+        if !offloaded.is_empty() {
+            t += self.io_bytes / self.part.dma_bw;
+        }
+        t
+    }
+
+    /// Improvement factor of a pattern vs CPU-only (the paper's 改善度).
+    pub fn improvement(&self, offloaded: &[usize]) -> f64 {
+        self.cpu_request_time() / self.request_time(offloaded)
+    }
+}
+
+/// Convenience: CPU-only time for a program/size.
+pub fn cpu_time(prog: &Program, over: &Bindings, part: Part) -> anyhow::Result<f64> {
+    Ok(PerfModel::new(prog, over, part)?.cpu_request_time())
+}
+
+/// Convenience: pattern time for a program/size.
+pub fn fpga_time(
+    prog: &Program,
+    over: &Bindings,
+    part: Part,
+    offloaded: &[usize],
+) -> anyhow::Result<f64> {
+    Ok(PerfModel::new(prog, over, part)?.request_time(offloaded))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::part::D5005;
+    use crate::loopir::parse;
+
+    fn model(path: &str) -> PerfModel {
+        let src = std::fs::read_to_string(path).unwrap();
+        let prog = parse(&src).unwrap();
+        PerfModel::new(&prog, &Bindings::new(), D5005).unwrap()
+    }
+
+    /// Calibration check: paper-scale tdFIR CPU time ≈ 0.266 s (±20%).
+    #[test]
+    fn tdfir_cpu_calibration() {
+        let m = model("assets/apps/tdfir.lc");
+        let t = m.cpu_request_time();
+        assert!(
+            (0.21..0.33).contains(&t),
+            "tdfir cpu time {t} out of calibration band"
+        );
+    }
+
+    /// Calibration check: paper-scale MRI-Q CPU time ≈ 27.4 s (±20%).
+    #[test]
+    fn mriq_cpu_calibration() {
+        let m = model("assets/apps/mriq.lc");
+        let t = m.cpu_request_time();
+        assert!(
+            (22.0..33.0).contains(&t),
+            "mriq cpu time {t} out of calibration band"
+        );
+    }
+
+    /// Calibration check: offloading tdFIR's conv lands near the paper's
+    /// 0.129 s per request and ≈2x improvement.
+    #[test]
+    fn tdfir_offload_calibration() {
+        let src = std::fs::read_to_string("assets/apps/tdfir.lc").unwrap();
+        let prog = parse(&src).unwrap();
+        let m = PerfModel::new(&prog, &Bindings::new(), D5005).unwrap();
+        let conv = prog.stage_nest_index("conv").unwrap();
+        let t = m.request_time(&[conv]);
+        assert!((0.11..0.18).contains(&t), "tdfir offloaded {t}");
+        let imp = m.improvement(&[conv]);
+        assert!((1.6..2.6).contains(&imp), "tdfir improvement {imp}");
+    }
+
+    /// Calibration check: offloading MRI-Q's q loop gives a large win
+    /// (paper: 27.4 -> 2.23 s, 12.3x; model: ≈3.2 s, ≈8x — same shape).
+    #[test]
+    fn mriq_offload_calibration() {
+        let src = std::fs::read_to_string("assets/apps/mriq.lc").unwrap();
+        let prog = parse(&src).unwrap();
+        let m = PerfModel::new(&prog, &Bindings::new(), D5005).unwrap();
+        let q = prog.stage_nest_index("q").unwrap();
+        let t = m.request_time(&[q]);
+        assert!((2.0..4.5).contains(&t), "mriq offloaded {t}");
+        let imp = m.improvement(&[q]);
+        assert!(imp > 6.0, "mriq improvement {imp}");
+    }
+
+    /// The paper's headline contrast: MRI-Q's offload improvement factor
+    /// must far exceed tdFIR's.
+    #[test]
+    fn trig_advantage_orders_improvements() {
+        let td = model("assets/apps/tdfir.lc");
+        let src = std::fs::read_to_string("assets/apps/mriq.lc").unwrap();
+        let prog = parse(&src).unwrap();
+        let mq = PerfModel::new(&prog, &Bindings::new(), D5005).unwrap();
+        let td_prog = parse(&std::fs::read_to_string("assets/apps/tdfir.lc").unwrap()).unwrap();
+        let td_imp = td.improvement(&[td_prog.stage_nest_index("conv").unwrap()]);
+        let mq_imp = mq.improvement(&[prog.stage_nest_index("q").unwrap()]);
+        assert!(mq_imp > 2.0 * td_imp, "mriq {mq_imp} vs tdfir {td_imp}");
+    }
+
+    #[test]
+    fn offloading_low_intensity_nest_does_not_pay() {
+        // Offloading only the window stage must beat nothing by much and
+        // can even lose (DMA + launch overhead vs tiny compute).
+        let src = std::fs::read_to_string("assets/apps/tdfir.lc").unwrap();
+        let prog = parse(&src).unwrap();
+        let m = PerfModel::new(&prog, &Bindings::new(), D5005).unwrap();
+        let w = prog.stage_nest_index("window").unwrap();
+        let conv = prog.stage_nest_index("conv").unwrap();
+        assert!(m.request_time(&[w]) > m.request_time(&[conv]));
+    }
+}

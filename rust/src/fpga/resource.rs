@@ -1,0 +1,189 @@
+//! FPGA resource estimation from kernel structure (the "HDL precompile").
+//!
+//! The paper prunes offload candidates by resource efficiency = arithmetic
+//! intensity / resource usage rate, where usage is read off the HDL-level
+//! intermediate a few minutes into an OpenCL compile. We reproduce that
+//! with a structural model over the loop body's operation mix:
+//!
+//!  * fp32 mul/div      -> hardened DSP blocks (1 / 2 per op)
+//!  * fp32 add/sub      -> DSPs in fp-accumulate mode (0.5) plus ALMs
+//!  * sin/cos/exp       -> CORDIC-style chains: DSPs + a large ALM block
+//!  * sqrt              -> iterative unit: ALMs + 2 DSPs
+//!  * on-chip buffering -> M20K blocks for every array the kernel touches,
+//!    capped at a per-array tile budget (the OpenCL local-memory tile)
+//!
+//! The model's absolute numbers are unimportant; what matters (and is
+//! tested) is the *ordering* it induces — trig-heavy loops cost far more
+//! area per flop than MAC loops, matching published OpenCL-HLS reports.
+
+use super::part::Part;
+use crate::loopir::walk::{NestCounts, OpCount};
+
+/// Per-op area coefficients (one pipelined operator instance each).
+const DSP_PER_MUL: f64 = 1.0;
+const DSP_PER_DIV: f64 = 2.0;
+const DSP_PER_ADD: f64 = 0.5;
+const DSP_PER_TRANS: f64 = 8.0;
+const DSP_PER_SQRT: f64 = 2.0;
+
+const ALM_PER_MUL: f64 = 120.0;
+const ALM_PER_DIV: f64 = 800.0;
+const ALM_PER_ADD: f64 = 220.0;
+const ALM_PER_TRANS: f64 = 2600.0;
+const ALM_PER_SQRT: f64 = 1200.0;
+const ALM_PER_ABS: f64 = 30.0;
+/// Control/datapath overhead per loop level (counters, LSUs).
+const ALM_PER_LOOP_LEVEL: f64 = 1500.0;
+/// Fixed kernel harness (Avalon interfaces, dispatch logic).
+const ALM_BASE: f64 = 8000.0;
+
+/// Local-memory tile budget per streamed array (bytes) — the OpenCL
+/// local-memory window, not the whole DDR-resident array.
+const TILE_BYTES_PER_ARRAY: f64 = 64.0 * 1024.0;
+/// Usable bits per M20K block.
+const M20K_BITS: f64 = 20.0 * 1024.0;
+
+/// Structural resource estimate for one kernel (one offloaded nest).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ResourceEstimate {
+    pub alms: f64,
+    pub dsps: f64,
+    pub m20ks: f64,
+}
+
+impl ResourceEstimate {
+    pub fn add(&mut self, other: &ResourceEstimate) {
+        self.alms += other.alms;
+        self.dsps += other.dsps;
+        self.m20ks += other.m20ks;
+    }
+
+    /// Usage rate on a part: the binding (max) resource category, as the
+    /// fraction of the usable (post-shell) inventory.
+    pub fn usage_rate(&self, part: &Part) -> f64 {
+        let a = self.alms / part.usable_alms();
+        let d = self.dsps / part.usable_dsps();
+        let m = self.m20ks / part.usable_m20ks();
+        a.max(d).max(m)
+    }
+
+    /// How many copies of this kernel fit (pipeline replication factor).
+    pub fn replication(&self, part: &Part) -> usize {
+        let rate = self.usage_rate(part);
+        if rate <= 0.0 {
+            1
+        } else {
+            ((1.0 / rate).floor() as usize).max(1)
+        }
+    }
+}
+
+/// Estimate the area of a pipelined kernel implementing one loop body.
+///
+/// `body_ops` is the static per-iteration op mix; `arrays` the number of
+/// distinct arrays the kernel streams; `depth` the loop nest depth.
+pub fn estimate_body(body_ops: &OpCount, arrays: usize, depth: usize) -> ResourceEstimate {
+    let dsps = body_ops.muls * DSP_PER_MUL
+        + body_ops.divs * DSP_PER_DIV
+        + body_ops.adds * DSP_PER_ADD
+        + body_ops.transcendental * DSP_PER_TRANS
+        + body_ops.sqrts * DSP_PER_SQRT;
+    let alms = ALM_BASE
+        + depth as f64 * ALM_PER_LOOP_LEVEL
+        + body_ops.muls * ALM_PER_MUL
+        + body_ops.divs * ALM_PER_DIV
+        + body_ops.adds * ALM_PER_ADD
+        + body_ops.transcendental * ALM_PER_TRANS
+        + body_ops.sqrts * ALM_PER_SQRT
+        + body_ops.abses * ALM_PER_ABS;
+    let m20ks = arrays as f64 * (TILE_BYTES_PER_ARRAY * 8.0 / M20K_BITS).ceil();
+    ResourceEstimate { alms, dsps, m20ks }
+}
+
+/// Estimate for a nest analysis record.
+pub fn estimate(counts: &NestCounts) -> ResourceEstimate {
+    estimate_body(&counts.body_ops, counts.arrays.len(), counts.depth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::part::D5005;
+    use crate::loopir::parse;
+    use crate::loopir::walk::{analyze, Bindings};
+
+    fn estimates(src: &str) -> Vec<ResourceEstimate> {
+        let prog = parse(src).unwrap();
+        analyze(&prog, &Bindings::new())
+            .unwrap()
+            .iter()
+            .map(estimate)
+            .collect()
+    }
+
+    #[test]
+    fn trig_costs_more_area_than_mac() {
+        let est = estimates(
+            r#"
+            app t;
+            param N = 8;
+            array x[N]: f32 in;
+            array y[N]: f32 out;
+            stage mac loop i in 0..N { y[i] += x[i] * x[i]; }
+            stage trig loop i in 0..N { y[i] = cos(x[i]) + sin(x[i]); }
+        "#,
+        );
+        assert!(est[1].alms > est[0].alms);
+        assert!(est[1].dsps > est[0].dsps);
+    }
+
+    #[test]
+    fn usage_rate_and_replication() {
+        let small = ResourceEstimate {
+            alms: 50_000.0,
+            dsps: 100.0,
+            m20ks: 100.0,
+        };
+        let rate = small.usage_rate(&D5005);
+        assert!(rate > 0.0 && rate < 0.2, "rate={rate}");
+        assert!(small.replication(&D5005) >= 5);
+
+        let big = ResourceEstimate {
+            alms: 900_000.0,
+            dsps: 0.0,
+            m20ks: 0.0,
+        };
+        assert_eq!(big.replication(&D5005), 1);
+    }
+
+    #[test]
+    fn deeper_nests_cost_control_area() {
+        let est = estimates(
+            r#"
+            app t;
+            param N = 4;
+            array y[N]: f32 out;
+            stage flat loop i in 0..N { y[i] = 1.0; }
+            stage deep loop i in 0..N loop j in 0..N loop k in 0..N { y[i] = 1.0; }
+        "#,
+        );
+        assert!(est[1].alms > est[0].alms);
+    }
+
+    #[test]
+    fn estimate_is_additive() {
+        let mut a = ResourceEstimate {
+            alms: 1.0,
+            dsps: 2.0,
+            m20ks: 3.0,
+        };
+        a.add(&ResourceEstimate {
+            alms: 10.0,
+            dsps: 20.0,
+            m20ks: 30.0,
+        });
+        assert_eq!(a.alms, 11.0);
+        assert_eq!(a.dsps, 22.0);
+        assert_eq!(a.m20ks, 33.0);
+    }
+}

@@ -1,0 +1,26 @@
+//! Reproduction of Yamato (2022), "Proposal of FPGA logic change after
+//! service launch for environment adaptation".
+//!
+//! Three-layer architecture: this rust crate is Layer 3 — the production
+//! coordinator, the §3.1 pre-launch auto-offload pipeline and the §3.3
+//! in-operation reconfiguration controller — plus every substrate the
+//! paper's testbed assumed (loop-IR analysis, FPGA device/resource/perf
+//! simulation, PJRT runtime, workload generation). Layers 2 (JAX app
+//! graphs) and 1 (Pallas kernels) live in `python/compile/` and are AOT
+//! lowered to `artifacts/*.hlo.txt`, which [`runtime`] loads and executes
+//! via the PJRT CPU client. Python never runs on the request path.
+//!
+//! See DESIGN.md for the system inventory and per-experiment index.
+
+pub mod analysis;
+pub mod apps;
+pub mod coordinator;
+pub mod fpga;
+pub mod loopir;
+pub mod offload;
+pub mod opencl;
+pub mod report;
+pub mod runtime;
+pub mod simtime;
+pub mod util;
+pub mod workload;

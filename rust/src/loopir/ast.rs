@@ -1,0 +1,163 @@
+//! AST for the loop-nest language.
+//!
+//! Grammar (see parser.rs for the concrete syntax):
+//!
+//! ```text
+//! program   := "app" ident ";" item*
+//! item      := param | array | nest
+//! param     := "param" ident "=" int ";"
+//! array     := "array" ident ("[" expr "]")+ ":" "f32" kind ";"
+//! kind      := "in" | "out" | "tmp"
+//! nest      := ("stage" ident)? loop
+//! loop      := "loop" ident "in" expr ".." expr "{" (stmt | loop)* "}"
+//! stmt      := lvalue ("=" | "+=") expr ";"
+//! ```
+
+/// Whole program: one application's loop-level description.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Program {
+    pub name: String,
+    pub params: Vec<(String, i64)>,
+    pub arrays: Vec<ArrayDecl>,
+    pub nests: Vec<Nest>,
+}
+
+/// Array declaration with dimension expressions over params.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArrayDecl {
+    pub name: String,
+    pub dims: Vec<Expr>,
+    pub kind: ArrayKind,
+}
+
+/// Whether an array is a request input, a result, or scratch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArrayKind {
+    In,
+    Out,
+    Tmp,
+}
+
+/// A top-level loop statement — the paper's unit of offload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Nest {
+    /// Offloadable stage name (None for init/aux nests).
+    pub stage: Option<String>,
+    pub root: Loop,
+}
+
+/// One loop level.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Loop {
+    pub var: String,
+    pub lo: Expr,
+    pub hi: Expr,
+    pub body: Vec<Item>,
+}
+
+/// Loop body item: a statement or a nested loop.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Item {
+    Stmt(Stmt),
+    Loop(Loop),
+}
+
+/// Assignment statement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Stmt {
+    pub lhs: LValue,
+    pub accumulate: bool, // `+=` vs `=`
+    pub rhs: Expr,
+}
+
+/// Assignment target: array element or scalar local.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LValue {
+    pub name: String,
+    pub indices: Vec<Expr>, // empty => scalar
+}
+
+/// Arithmetic expression.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Num(f64),
+    /// Loop variable, param, or scalar local.
+    Ident(String),
+    /// Array element access.
+    Index(String, Vec<Expr>),
+    Bin(Op, Box<Expr>, Box<Expr>),
+    Neg(Box<Expr>),
+    Call(Func, Vec<Expr>),
+}
+
+/// Binary operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+/// Built-in math functions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Func {
+    Cos,
+    Sin,
+    Sqrt,
+    Abs,
+    Exp,
+}
+
+impl Func {
+    pub fn from_name(s: &str) -> Option<Func> {
+        Some(match s {
+            "cos" => Func::Cos,
+            "sin" => Func::Sin,
+            "sqrt" => Func::Sqrt,
+            "abs" => Func::Abs,
+            "exp" => Func::Exp,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Func::Cos => "cos",
+            Func::Sin => "sin",
+            Func::Sqrt => "sqrt",
+            Func::Abs => "abs",
+            Func::Exp => "exp",
+        }
+    }
+
+    /// True for the trig/exp units that dominate FPGA area and derate fmax.
+    pub fn is_transcendental(&self) -> bool {
+        matches!(self, Func::Cos | Func::Sin | Func::Exp)
+    }
+}
+
+impl Program {
+    pub fn array(&self, name: &str) -> Option<&ArrayDecl> {
+        self.arrays.iter().find(|a| a.name == name)
+    }
+
+    pub fn param(&self, name: &str) -> Option<i64> {
+        self.params
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+    }
+
+    /// Nests carrying a stage marker, in declaration order.
+    pub fn stages(&self) -> Vec<&Nest> {
+        self.nests.iter().filter(|n| n.stage.is_some()).collect()
+    }
+
+    /// Index of a nest (loop statement number) by stage name.
+    pub fn stage_nest_index(&self, stage: &str) -> Option<usize> {
+        self.nests
+            .iter()
+            .position(|n| n.stage.as_deref() == Some(stage))
+    }
+}

@@ -1,0 +1,265 @@
+//! Lexer for the loop-nest language.
+
+use std::fmt;
+
+/// Token kinds. Keywords are folded into `Kw`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Num(f64),
+    Kw(&'static str),
+    // punctuation
+    Semi,
+    Colon,
+    Comma,
+    DotDot,
+    LBracket,
+    RBracket,
+    LBrace,
+    RBrace,
+    LParen,
+    RParen,
+    Assign,
+    PlusAssign,
+    Plus,
+    Minus,
+    Star,
+    Slash,
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Ident(s) => write!(f, "identifier `{s}`"),
+            Tok::Num(x) => write!(f, "number `{x}`"),
+            Tok::Kw(k) => write!(f, "keyword `{k}`"),
+            other => write!(f, "{other:?}"),
+        }
+    }
+}
+
+const KEYWORDS: &[&str] = &[
+    "app", "param", "array", "stage", "loop", "in", "out", "tmp", "f32",
+];
+
+/// A token with its source line (1-based) for error messages.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Spanned {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+/// Lex error.
+#[derive(Debug, thiserror::Error)]
+#[error("lex error at line {line}: {msg}")]
+pub struct LexError {
+    pub line: u32,
+    pub msg: String,
+}
+
+/// Tokenize a source file. `//` comments run to end of line.
+pub fn lex(src: &str) -> Result<Vec<Spanned>, LexError> {
+    let b = src.as_bytes();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let mut out = Vec::new();
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            b' ' | b'\t' | b'\r' => i += 1,
+            b'/' if i + 1 < b.len() && b[i + 1] == b'/' => {
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b';' => {
+                out.push(Spanned { tok: Tok::Semi, line });
+                i += 1;
+            }
+            b':' => {
+                out.push(Spanned { tok: Tok::Colon, line });
+                i += 1;
+            }
+            b',' => {
+                out.push(Spanned { tok: Tok::Comma, line });
+                i += 1;
+            }
+            b'[' => {
+                out.push(Spanned { tok: Tok::LBracket, line });
+                i += 1;
+            }
+            b']' => {
+                out.push(Spanned { tok: Tok::RBracket, line });
+                i += 1;
+            }
+            b'{' => {
+                out.push(Spanned { tok: Tok::LBrace, line });
+                i += 1;
+            }
+            b'}' => {
+                out.push(Spanned { tok: Tok::RBrace, line });
+                i += 1;
+            }
+            b'(' => {
+                out.push(Spanned { tok: Tok::LParen, line });
+                i += 1;
+            }
+            b')' => {
+                out.push(Spanned { tok: Tok::RParen, line });
+                i += 1;
+            }
+            b'*' => {
+                out.push(Spanned { tok: Tok::Star, line });
+                i += 1;
+            }
+            b'/' => {
+                out.push(Spanned { tok: Tok::Slash, line });
+                i += 1;
+            }
+            b'-' => {
+                out.push(Spanned { tok: Tok::Minus, line });
+                i += 1;
+            }
+            b'+' => {
+                if i + 1 < b.len() && b[i + 1] == b'=' {
+                    out.push(Spanned { tok: Tok::PlusAssign, line });
+                    i += 2;
+                } else {
+                    out.push(Spanned { tok: Tok::Plus, line });
+                    i += 1;
+                }
+            }
+            b'=' => {
+                out.push(Spanned { tok: Tok::Assign, line });
+                i += 1;
+            }
+            b'.' => {
+                if i + 1 < b.len() && b[i + 1] == b'.' {
+                    out.push(Spanned { tok: Tok::DotDot, line });
+                    i += 2;
+                } else {
+                    return Err(LexError {
+                        line,
+                        msg: "stray '.'".into(),
+                    });
+                }
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < b.len() && b[i].is_ascii_digit() {
+                    i += 1;
+                }
+                // A '.' starts a fraction only if NOT '..' (range operator).
+                if i + 1 < b.len() && b[i] == b'.' && b[i + 1] != b'.' {
+                    i += 1;
+                    while i < b.len() && b[i].is_ascii_digit() {
+                        i += 1;
+                    }
+                }
+                let text = std::str::from_utf8(&b[start..i]).unwrap();
+                let x: f64 = text.parse().map_err(|_| LexError {
+                    line,
+                    msg: format!("bad number `{text}`"),
+                })?;
+                out.push(Spanned { tok: Tok::Num(x), line });
+            }
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                let text = std::str::from_utf8(&b[start..i]).unwrap();
+                if let Some(kw) = KEYWORDS.iter().find(|k| **k == text) {
+                    out.push(Spanned { tok: Tok::Kw(kw), line });
+                } else {
+                    out.push(Spanned {
+                        tok: Tok::Ident(text.to_string()),
+                        line,
+                    });
+                }
+            }
+            other => {
+                return Err(LexError {
+                    line,
+                    msg: format!("unexpected character `{}`", other as char),
+                })
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|s| s.tok).collect()
+    }
+
+    #[test]
+    fn lexes_ranges_and_floats() {
+        assert_eq!(
+            toks("0..N 0.5 1.25"),
+            vec![
+                Tok::Num(0.0),
+                Tok::DotDot,
+                Tok::Ident("N".into()),
+                Tok::Num(0.5),
+                Tok::Num(1.25),
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_plus_assign() {
+        assert_eq!(
+            toks("a += b + 1;"),
+            vec![
+                Tok::Ident("a".into()),
+                Tok::PlusAssign,
+                Tok::Ident("b".into()),
+                Tok::Plus,
+                Tok::Num(1.0),
+                Tok::Semi,
+            ]
+        );
+    }
+
+    #[test]
+    fn keywords_and_comments() {
+        assert_eq!(
+            toks("loop i in 0..4 { } // comment\napp"),
+            vec![
+                Tok::Kw("loop"),
+                Tok::Ident("i".into()),
+                Tok::Kw("in"),
+                Tok::Num(0.0),
+                Tok::DotDot,
+                Tok::Num(4.0),
+                Tok::LBrace,
+                Tok::RBrace,
+                Tok::Kw("app"),
+            ]
+        );
+    }
+
+    #[test]
+    fn tracks_lines() {
+        let s = lex("a\nb\n\nc").unwrap();
+        assert_eq!(
+            s.iter().map(|t| t.line).collect::<Vec<_>>(),
+            vec![1, 2, 4]
+        );
+    }
+
+    #[test]
+    fn rejects_stray_chars() {
+        assert!(lex("a ? b").is_err());
+        assert!(lex("x .").is_err());
+    }
+}

@@ -1,0 +1,20 @@
+//! Loop-nest IR: the mini C-like language the analysis pipeline consumes.
+//!
+//! This is the repo's stand-in for Clang in the paper's §3.1 flow: the five
+//! applications are described as loop-nest programs (`assets/apps/*.lc`)
+//! carrying the paper-scale dimensions and the paper's loop-statement
+//! counts; [`lexer`]/[`parser`] produce the [`ast`], and [`walk`] derives
+//! per-nest operation/byte/trip counts that feed arithmetic-intensity
+//! analysis (ROSE stand-in), profiling (gcov stand-in), the FPGA resource
+//! estimator and the performance models.
+
+pub mod ast;
+pub mod interp;
+pub mod lexer;
+pub mod parser;
+pub mod pretty;
+pub mod walk;
+
+pub use ast::{ArrayKind, Expr, Func, Item, Loop, LValue, Nest, Op, Program, Stmt};
+pub use parser::parse;
+pub use walk::{Bindings, NestCounts, OpCount};

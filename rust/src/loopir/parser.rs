@@ -1,0 +1,446 @@
+//! Recursive-descent parser for the loop-nest language.
+
+use super::ast::*;
+use super::lexer::{lex, Spanned, Tok};
+
+/// Parse error with source line.
+#[derive(Debug, thiserror::Error)]
+#[error("parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: u32,
+    pub msg: String,
+}
+
+/// Parse a `.lc` source file into a [`Program`].
+pub fn parse(src: &str) -> anyhow::Result<Program> {
+    let toks = lex(src)?;
+    let mut p = P { toks, pos: 0 };
+    let prog = p.program()?;
+    Ok(prog)
+}
+
+struct P {
+    toks: Vec<Spanned>,
+    pos: usize,
+}
+
+impl P {
+    fn line(&self) -> u32 {
+        self.toks
+            .get(self.pos.min(self.toks.len().saturating_sub(1)))
+            .map(|t| t.line)
+            .unwrap_or(0)
+    }
+
+    fn err(&self, msg: impl Into<String>) -> ParseError {
+        ParseError {
+            line: self.line(),
+            msg: msg.into(),
+        }
+    }
+
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos).map(|t| &t.tok)
+    }
+
+    fn bump(&mut self) -> Option<Tok> {
+        let t = self.toks.get(self.pos).map(|t| t.tok.clone());
+        if t.is_some() {
+            self.pos += 1;
+        }
+        t
+    }
+
+    fn eat(&mut self, want: &Tok) -> Result<(), ParseError> {
+        match self.peek() {
+            Some(t) if t == want => {
+                self.pos += 1;
+                Ok(())
+            }
+            Some(t) => Err(self.err(format!("expected {want}, found {t}"))),
+            None => Err(self.err(format!("expected {want}, found end of file"))),
+        }
+    }
+
+    fn eat_kw(&mut self, kw: &'static str) -> Result<(), ParseError> {
+        self.eat(&Tok::Kw(kw))
+    }
+
+    fn ident(&mut self) -> Result<String, ParseError> {
+        match self.bump() {
+            Some(Tok::Ident(s)) => Ok(s),
+            Some(t) => Err(self.err(format!("expected identifier, found {t}"))),
+            None => Err(self.err("expected identifier, found end of file")),
+        }
+    }
+
+    fn int(&mut self) -> Result<i64, ParseError> {
+        match self.bump() {
+            Some(Tok::Num(x)) if x.fract() == 0.0 => Ok(x as i64),
+            Some(t) => Err(self.err(format!("expected integer, found {t}"))),
+            None => Err(self.err("expected integer, found end of file")),
+        }
+    }
+
+    fn program(&mut self) -> Result<Program, ParseError> {
+        self.eat_kw("app")?;
+        let name = self.ident()?;
+        self.eat(&Tok::Semi)?;
+        let mut prog = Program {
+            name,
+            params: Vec::new(),
+            arrays: Vec::new(),
+            nests: Vec::new(),
+        };
+        while let Some(tok) = self.peek() {
+            match tok {
+                Tok::Kw("param") => {
+                    self.bump();
+                    let name = self.ident()?;
+                    self.eat(&Tok::Assign)?;
+                    let val = self.int()?;
+                    self.eat(&Tok::Semi)?;
+                    prog.params.push((name, val));
+                }
+                Tok::Kw("array") => {
+                    self.bump();
+                    let name = self.ident()?;
+                    let mut dims = Vec::new();
+                    while self.peek() == Some(&Tok::LBracket) {
+                        self.bump();
+                        dims.push(self.expr()?);
+                        self.eat(&Tok::RBracket)?;
+                    }
+                    if dims.is_empty() {
+                        return Err(self.err("array needs at least one dimension"));
+                    }
+                    self.eat(&Tok::Colon)?;
+                    self.eat_kw("f32")?;
+                    let kind = match self.bump() {
+                        Some(Tok::Kw("in")) => ArrayKind::In,
+                        Some(Tok::Kw("out")) => ArrayKind::Out,
+                        Some(Tok::Kw("tmp")) => ArrayKind::Tmp,
+                        _ => return Err(self.err("expected in/out/tmp")),
+                    };
+                    self.eat(&Tok::Semi)?;
+                    prog.arrays.push(ArrayDecl { name, dims, kind });
+                }
+                Tok::Kw("stage") => {
+                    self.bump();
+                    let stage = self.ident()?;
+                    let root = self.loop_()?;
+                    prog.nests.push(Nest {
+                        stage: Some(stage),
+                        root,
+                    });
+                }
+                Tok::Kw("loop") => {
+                    let root = self.loop_()?;
+                    prog.nests.push(Nest { stage: None, root });
+                }
+                t => return Err(self.err(format!("unexpected {t} at top level"))),
+            }
+        }
+        validate(&prog).map_err(|msg| self.err(msg))?;
+        Ok(prog)
+    }
+
+    /// `loop v in lo..hi <loop ...>* { body }` — consecutive `loop` headers
+    /// before `{` nest inline (perfect-nest shorthand).
+    fn loop_(&mut self) -> Result<Loop, ParseError> {
+        self.eat_kw("loop")?;
+        let var = self.ident()?;
+        self.eat_kw("in")?;
+        let lo = self.expr()?;
+        self.eat(&Tok::DotDot)?;
+        let hi = self.expr()?;
+        if self.peek() == Some(&Tok::Kw("loop")) {
+            let inner = self.loop_()?;
+            return Ok(Loop {
+                var,
+                lo,
+                hi,
+                body: vec![Item::Loop(inner)],
+            });
+        }
+        self.eat(&Tok::LBrace)?;
+        let mut body = Vec::new();
+        loop {
+            match self.peek() {
+                Some(Tok::RBrace) => {
+                    self.bump();
+                    break;
+                }
+                Some(Tok::Kw("loop")) => body.push(Item::Loop(self.loop_()?)),
+                Some(_) => body.push(Item::Stmt(self.stmt()?)),
+                None => return Err(self.err("unterminated loop body")),
+            }
+        }
+        Ok(Loop { var, lo, hi, body })
+    }
+
+    fn stmt(&mut self) -> Result<Stmt, ParseError> {
+        let name = self.ident()?;
+        let mut indices = Vec::new();
+        while self.peek() == Some(&Tok::LBracket) {
+            self.bump();
+            indices.push(self.expr()?);
+            self.eat(&Tok::RBracket)?;
+        }
+        let accumulate = match self.bump() {
+            Some(Tok::Assign) => false,
+            Some(Tok::PlusAssign) => true,
+            _ => return Err(self.err("expected `=` or `+=`")),
+        };
+        let rhs = self.expr()?;
+        self.eat(&Tok::Semi)?;
+        Ok(Stmt {
+            lhs: LValue { name, indices },
+            accumulate,
+            rhs,
+        })
+    }
+
+    // expr := term (("+"|"-") term)*
+    fn expr(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.term()?;
+        loop {
+            let op = match self.peek() {
+                Some(Tok::Plus) => Op::Add,
+                Some(Tok::Minus) => Op::Sub,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.term()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    // term := factor (("*"|"/") factor)*
+    fn term(&mut self) -> Result<Expr, ParseError> {
+        let mut lhs = self.factor()?;
+        loop {
+            let op = match self.peek() {
+                Some(Tok::Star) => Op::Mul,
+                Some(Tok::Slash) => Op::Div,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.factor()?;
+            lhs = Expr::Bin(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn factor(&mut self) -> Result<Expr, ParseError> {
+        match self.bump() {
+            Some(Tok::Num(x)) => Ok(Expr::Num(x)),
+            Some(Tok::Minus) => Ok(Expr::Neg(Box::new(self.factor()?))),
+            Some(Tok::LParen) => {
+                let e = self.expr()?;
+                self.eat(&Tok::RParen)?;
+                Ok(e)
+            }
+            Some(Tok::Ident(name)) => {
+                if self.peek() == Some(&Tok::LParen) {
+                    // function call
+                    let func = Func::from_name(&name)
+                        .ok_or_else(|| self.err(format!("unknown function `{name}`")))?;
+                    self.bump();
+                    let mut args = vec![self.expr()?];
+                    while self.peek() == Some(&Tok::Comma) {
+                        self.bump();
+                        args.push(self.expr()?);
+                    }
+                    self.eat(&Tok::RParen)?;
+                    if args.len() != 1 {
+                        return Err(self.err(format!("{name}() takes one argument")));
+                    }
+                    Ok(Expr::Call(func, args))
+                } else if self.peek() == Some(&Tok::LBracket) {
+                    let mut indices = Vec::new();
+                    while self.peek() == Some(&Tok::LBracket) {
+                        self.bump();
+                        indices.push(self.expr()?);
+                        self.eat(&Tok::RBracket)?;
+                    }
+                    Ok(Expr::Index(name, indices))
+                } else {
+                    Ok(Expr::Ident(name))
+                }
+            }
+            Some(t) => Err(self.err(format!("unexpected {t} in expression"))),
+            None => Err(self.err("unexpected end of file in expression")),
+        }
+    }
+}
+
+/// Static checks: array arity, stage-name uniqueness.
+fn validate(prog: &Program) -> Result<(), String> {
+    let mut stages = std::collections::BTreeSet::new();
+    for nest in &prog.nests {
+        if let Some(s) = &nest.stage {
+            if !stages.insert(s.clone()) {
+                return Err(format!("duplicate stage `{s}`"));
+            }
+        }
+        check_loop(prog, &nest.root)?;
+    }
+    Ok(())
+}
+
+fn check_loop(prog: &Program, l: &Loop) -> Result<(), String> {
+    for item in &l.body {
+        match item {
+            Item::Loop(inner) => check_loop(prog, inner)?,
+            Item::Stmt(s) => {
+                if !s.lhs.indices.is_empty() {
+                    let decl = prog
+                        .array(&s.lhs.name)
+                        .ok_or_else(|| format!("undeclared array `{}`", s.lhs.name))?;
+                    if decl.dims.len() != s.lhs.indices.len() {
+                        return Err(format!(
+                            "array `{}` has {} dims, indexed with {}",
+                            s.lhs.name,
+                            decl.dims.len(),
+                            s.lhs.indices.len()
+                        ));
+                    }
+                }
+                check_expr(prog, &s.rhs)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn check_expr(prog: &Program, e: &Expr) -> Result<(), String> {
+    match e {
+        Expr::Index(name, idx) => {
+            let decl = prog
+                .array(name)
+                .ok_or_else(|| format!("undeclared array `{name}`"))?;
+            if decl.dims.len() != idx.len() {
+                return Err(format!(
+                    "array `{name}` has {} dims, indexed with {}",
+                    decl.dims.len(),
+                    idx.len()
+                ));
+            }
+            for i in idx {
+                check_expr(prog, i)?;
+            }
+            Ok(())
+        }
+        Expr::Bin(_, a, b) => {
+            check_expr(prog, a)?;
+            check_expr(prog, b)
+        }
+        Expr::Neg(a) => check_expr(prog, a),
+        Expr::Call(_, args) => {
+            for a in args {
+                check_expr(prog, a)?;
+            }
+            Ok(())
+        }
+        _ => Ok(()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SRC: &str = r#"
+        app demo;
+        param N = 16;
+        array x[N]: f32 in;
+        array y[N]: f32 out;
+
+        loop i in 0..N { y[i] = 0.0; }
+
+        stage axpy loop i in 0..N {
+            y[i] += 2.5 * x[i] + 1.0;
+        }
+
+        stage wsum loop i in 0..N {
+            acc = 0.0;
+            loop j in 0..N {
+                acc += x[j] * x[j];
+            }
+            y[i] = y[i] / sqrt(acc + 0.000001);
+        }
+    "#;
+
+    #[test]
+    fn parses_demo() {
+        let p = parse(SRC).unwrap();
+        assert_eq!(p.name, "demo");
+        assert_eq!(p.params, vec![("N".to_string(), 16)]);
+        assert_eq!(p.arrays.len(), 2);
+        assert_eq!(p.nests.len(), 3);
+        assert_eq!(p.stages().len(), 2);
+        assert_eq!(p.stage_nest_index("axpy"), Some(1));
+        assert_eq!(p.stage_nest_index("wsum"), Some(2));
+    }
+
+    #[test]
+    fn perfect_nest_shorthand() {
+        let p = parse(
+            "app t; param M = 2; param N = 3; array a[M][N]: f32 out;
+             loop i in 0..M loop j in 0..N { a[i][j] = 1.0; }",
+        )
+        .unwrap();
+        let root = &p.nests[0].root;
+        assert_eq!(root.var, "i");
+        match &root.body[0] {
+            Item::Loop(inner) => assert_eq!(inner.var, "j"),
+            other => panic!("expected inner loop, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn range_expressions() {
+        let p = parse(
+            "app t; param N = 8; array a[N]: f32 out;
+             loop i in 1..N-1 { a[i] = a[i-1] + a[i+1]; }",
+        )
+        .unwrap();
+        assert_eq!(p.nests.len(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_arity() {
+        let r = parse(
+            "app t; param N = 4; array a[N][N]: f32 out;
+             loop i in 0..N { a[i] = 0.0; }",
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_function() {
+        let r = parse(
+            "app t; param N = 4; array a[N]: f32 out;
+             loop i in 0..N { a[i] = tan(1.0); }",
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_stage() {
+        let r = parse(
+            "app t; param N = 4; array a[N]: f32 out;
+             stage s loop i in 0..N { a[i] = 0.0; }
+             stage s loop i in 0..N { a[i] = 1.0; }",
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_undeclared_array() {
+        let r = parse("app t; param N = 4; loop i in 0..N { q[i] = 0.0; }");
+        assert!(r.is_err());
+    }
+}

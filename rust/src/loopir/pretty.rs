@@ -1,0 +1,148 @@
+//! Pretty-printer for the loop-nest language.
+//!
+//! `print(parse(src))` re-parses to the identical AST (property-tested),
+//! which gives the analysis reports and the OpenCL generator a canonical
+//! way to quote source, and makes `.lc` programs serializable artifacts.
+
+use super::ast::*;
+
+/// Render a full program as canonical `.lc` source.
+pub fn print_program(p: &Program) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("app {};\n\n", p.name));
+    for (name, val) in &p.params {
+        out.push_str(&format!("param {name} = {val};\n"));
+    }
+    if !p.params.is_empty() {
+        out.push('\n');
+    }
+    for a in &p.arrays {
+        out.push_str(&format!("array {}", a.name));
+        for d in &a.dims {
+            out.push_str(&format!("[{}]", print_expr(d)));
+        }
+        let kind = match a.kind {
+            ArrayKind::In => "in",
+            ArrayKind::Out => "out",
+            ArrayKind::Tmp => "tmp",
+        };
+        out.push_str(&format!(": f32 {kind};\n"));
+    }
+    for n in &p.nests {
+        out.push('\n');
+        if let Some(stage) = &n.stage {
+            out.push_str(&format!("stage {stage} "));
+        }
+        print_loop(&n.root, 0, &mut out);
+    }
+    out
+}
+
+fn print_loop(l: &Loop, indent: usize, out: &mut String) {
+    out.push_str(&format!(
+        "loop {} in {}..{} {{\n",
+        l.var,
+        print_expr(&l.lo),
+        print_expr(&l.hi)
+    ));
+    for item in &l.body {
+        out.push_str(&"  ".repeat(indent + 1));
+        match item {
+            Item::Stmt(s) => out.push_str(&print_stmt(s)),
+            Item::Loop(inner) => print_loop(inner, indent + 1, out),
+        }
+    }
+    out.push_str(&"  ".repeat(indent));
+    out.push_str("}\n");
+}
+
+fn print_stmt(s: &Stmt) -> String {
+    let mut lhs = s.lhs.name.clone();
+    for i in &s.lhs.indices {
+        lhs.push_str(&format!("[{}]", print_expr(i)));
+    }
+    format!(
+        "{lhs} {} {};\n",
+        if s.accumulate { "+=" } else { "=" },
+        print_expr(&s.rhs)
+    )
+}
+
+/// Render an expression with explicit parentheses (parse-stable).
+pub fn print_expr(e: &Expr) -> String {
+    match e {
+        Expr::Num(x) => {
+            if x.fract() == 0.0 && x.abs() < 1e15 {
+                // Integers print bare; the lexer reads them back as Num.
+                format!("{}", *x as i64)
+            } else {
+                format!("{x}")
+            }
+        }
+        Expr::Ident(s) => s.clone(),
+        Expr::Index(name, idx) => {
+            let mut out = name.clone();
+            for i in idx {
+                out.push_str(&format!("[{}]", print_expr(i)));
+            }
+            out
+        }
+        Expr::Bin(op, l, r) => {
+            let sym = match op {
+                Op::Add => "+",
+                Op::Sub => "-",
+                Op::Mul => "*",
+                Op::Div => "/",
+            };
+            format!("({} {} {})", print_expr(l), sym, print_expr(r))
+        }
+        Expr::Neg(i) => format!("(-{})", print_expr(i)),
+        Expr::Call(f, args) => format!("{}({})", f.name(), print_expr(&args[0])),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loopir::parse;
+
+    #[test]
+    fn roundtrips_demo() {
+        let src = r#"
+            app demo;
+            param N = 16;
+            array x[N]: f32 in;
+            array y[N][N]: f32 out;
+            loop i in 0..N loop j in 0..N { y[i][j] = 0.0; }
+            stage s loop i in 1..N-1 {
+                acc = 0.0;
+                loop j in 0..N { acc += x[j] * cos(1.0 * j) - x[j-1]; }
+                y[i][0] = acc / sqrt(acc + 0.000001);
+            }
+        "#;
+        let p1 = parse(src).unwrap();
+        let printed = print_program(&p1);
+        let p2 = parse(&printed).unwrap();
+        assert_eq!(p1, p2, "pretty-print must round-trip:\n{printed}");
+    }
+
+    #[test]
+    fn all_embedded_apps_roundtrip() {
+        for app in crate::apps::registry() {
+            let p1 = app.program().clone();
+            let printed = print_program(&p1);
+            let p2 = parse(&printed)
+                .unwrap_or_else(|e| panic!("{}: reparse failed: {e}\n{printed}", app.name));
+            assert_eq!(p1, p2, "{} round-trip", app.name);
+        }
+    }
+
+    #[test]
+    fn negative_and_precedence() {
+        let src = "app t; param N = 4; array y[N]: f32 out;
+                   loop i in 0..N { y[i] = -1.0 * (2.0 + 3.0) / 4.0; }";
+        let p1 = parse(src).unwrap();
+        let p2 = parse(&print_program(&p1)).unwrap();
+        assert_eq!(p1, p2);
+    }
+}

@@ -1,0 +1,413 @@
+//! Static counting walks over the AST: operations, bytes, trip counts.
+//!
+//! These counts are the shared input of the ROSE stand-in (arithmetic
+//! intensity), the gcov stand-in (trip counts), the FPGA resource estimator
+//! and both performance models. Counts are *analytic* — evaluated from the
+//! loop bounds under a parameter binding — so paper-scale programs (10^8+
+//! iterations) are analyzed in microseconds, exactly like the paper's
+//! "HDL-level estimation in minutes instead of a 6-hour compile".
+
+use std::collections::BTreeMap;
+
+use super::ast::*;
+
+/// Parameter bindings (sizes). Missing params fall back to declared values.
+pub type Bindings = BTreeMap<String, i64>;
+
+/// Per-category operation counts for one execution of a region.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct OpCount {
+    pub adds: f64,
+    pub muls: f64,
+    pub divs: f64,
+    pub transcendental: f64, // sin/cos/exp
+    pub sqrts: f64,
+    pub abses: f64,
+    pub loads: f64,  // array element reads
+    pub stores: f64, // array element writes
+}
+
+impl OpCount {
+    pub fn add(&mut self, other: &OpCount) {
+        self.adds += other.adds;
+        self.muls += other.muls;
+        self.divs += other.divs;
+        self.transcendental += other.transcendental;
+        self.sqrts += other.sqrts;
+        self.abses += other.abses;
+        self.loads += other.loads;
+        self.stores += other.stores;
+    }
+
+    pub fn scale(&self, k: f64) -> OpCount {
+        OpCount {
+            adds: self.adds * k,
+            muls: self.muls * k,
+            divs: self.divs * k,
+            transcendental: self.transcendental * k,
+            sqrts: self.sqrts * k,
+            abses: self.abses * k,
+            loads: self.loads * k,
+            stores: self.stores * k,
+        }
+    }
+
+    /// Weighted FLOP count. Transcendentals are charged `trans_weight`
+    /// flops (their software cost on a scalar CPU); sqrt/div a bit more
+    /// than 1. This matches how arithmetic-intensity analyses score heavy
+    /// operations.
+    pub fn flops(&self, trans_weight: f64) -> f64 {
+        self.adds
+            + self.muls
+            + 4.0 * self.divs
+            + trans_weight * self.transcendental
+            + 4.0 * self.sqrts
+            + self.abses
+    }
+
+    /// Bytes moved assuming 4-byte elements and no cache reuse (worst-case
+    /// streaming traffic, the convention the paper's intensity metric uses).
+    pub fn bytes(&self) -> f64 {
+        4.0 * (self.loads + self.stores)
+    }
+}
+
+/// Full analysis result for one nest under a binding.
+#[derive(Clone, Debug)]
+pub struct NestCounts {
+    /// Loop-statement index within the program.
+    pub nest_index: usize,
+    /// Stage marker, if offloadable.
+    pub stage: Option<String>,
+    /// Total iterations of the *innermost* statements (gcov's hottest line).
+    pub inner_trips: f64,
+    /// Iterations per loop level, outermost first.
+    pub level_trips: Vec<f64>,
+    /// Dynamic op counts for one request.
+    pub ops: OpCount,
+    /// Static op counts of the nest body (one innermost iteration).
+    pub body_ops: OpCount,
+    /// Distinct arrays referenced (for DMA sizing / BRAM mapping).
+    pub arrays: Vec<String>,
+    /// Loop nest depth.
+    pub depth: usize,
+}
+
+/// Evaluate an integer-valued bound expression under bindings.
+pub fn eval_bound(e: &Expr, prog: &Program, b: &Bindings) -> anyhow::Result<i64> {
+    Ok(match e {
+        Expr::Num(x) => *x as i64,
+        Expr::Ident(name) => b
+            .get(name)
+            .copied()
+            .or_else(|| prog.param(name))
+            .ok_or_else(|| anyhow::anyhow!("unbound param `{name}` in loop bound"))?,
+        Expr::Bin(op, l, r) => {
+            let l = eval_bound(l, prog, b)?;
+            let r = eval_bound(r, prog, b)?;
+            match op {
+                Op::Add => l + r,
+                Op::Sub => l - r,
+                Op::Mul => l * r,
+                Op::Div => l / r,
+            }
+        }
+        Expr::Neg(inner) => -eval_bound(inner, prog, b)?,
+        other => anyhow::bail!("non-integer expression in loop bound: {other:?}"),
+    })
+}
+
+/// Effective bindings: declared params overridden by `over`.
+pub fn bindings_with(prog: &Program, over: &Bindings) -> Bindings {
+    let mut b: Bindings = prog.params.iter().cloned().collect();
+    for (k, v) in over {
+        b.insert(k.clone(), *v);
+    }
+    b
+}
+
+/// Count ops in an expression (static, one evaluation).
+pub fn expr_ops(e: &Expr, ops: &mut OpCount) {
+    match e {
+        Expr::Num(_) | Expr::Ident(_) => {}
+        Expr::Index(_, idx) => {
+            ops.loads += 1.0;
+            // Index arithmetic is address computation, not FLOPs; skip.
+            for _i in idx {}
+        }
+        Expr::Bin(op, l, r) => {
+            match op {
+                Op::Add | Op::Sub => ops.adds += 1.0,
+                Op::Mul => ops.muls += 1.0,
+                Op::Div => ops.divs += 1.0,
+            }
+            expr_ops(l, ops);
+            expr_ops(r, ops);
+        }
+        Expr::Neg(inner) => {
+            ops.adds += 1.0;
+            expr_ops(inner, ops);
+        }
+        Expr::Call(f, args) => {
+            match f {
+                Func::Cos | Func::Sin | Func::Exp => ops.transcendental += 1.0,
+                Func::Sqrt => ops.sqrts += 1.0,
+                Func::Abs => ops.abses += 1.0,
+            }
+            for a in args {
+                expr_ops(a, ops);
+            }
+        }
+    }
+}
+
+fn stmt_ops(s: &Stmt, ops: &mut OpCount) {
+    if s.lhs.indices.is_empty() {
+        // scalar local: register, no memory traffic
+    } else {
+        ops.stores += 1.0;
+        if s.accumulate {
+            ops.loads += 1.0; // read-modify-write
+        }
+    }
+    if s.accumulate {
+        ops.adds += 1.0;
+    }
+    expr_ops(&s.rhs, ops);
+}
+
+fn collect_arrays_expr(e: &Expr, out: &mut Vec<String>) {
+    match e {
+        Expr::Index(name, idx) => {
+            if !out.contains(name) {
+                out.push(name.clone());
+            }
+            for i in idx {
+                collect_arrays_expr(i, out);
+            }
+        }
+        Expr::Bin(_, l, r) => {
+            collect_arrays_expr(l, out);
+            collect_arrays_expr(r, out);
+        }
+        Expr::Neg(i) => collect_arrays_expr(i, out),
+        Expr::Call(_, args) => {
+            for a in args {
+                collect_arrays_expr(a, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Recursive walk: returns (dynamic ops, innermost trips) for one loop.
+/// `mult` is the number of times this loop header executes (product of
+/// enclosing trip counts), so `level_trips` records total dynamic
+/// iterations per depth.
+#[allow(clippy::too_many_arguments)]
+fn walk_loop(
+    l: &Loop,
+    prog: &Program,
+    b: &Bindings,
+    mult: f64,
+    level_trips: &mut Vec<f64>,
+    arrays: &mut Vec<String>,
+    depth: usize,
+    max_depth: &mut usize,
+) -> anyhow::Result<(OpCount, f64)> {
+    let lo = eval_bound(&l.lo, prog, b)?;
+    let hi = eval_bound(&l.hi, prog, b)?;
+    let trips = (hi - lo).max(0) as f64;
+    if level_trips.len() <= depth {
+        level_trips.push(0.0);
+    }
+    level_trips[depth] += mult * trips;
+    *max_depth = (*max_depth).max(depth + 1);
+
+    let mut per_iter = OpCount::default();
+    let mut inner_ops = OpCount::default();
+    let mut stmt_trips = 0.0;
+    let mut has_stmts = false;
+    for item in &l.body {
+        match item {
+            Item::Stmt(s) => {
+                stmt_ops(s, &mut per_iter);
+                has_stmts = true;
+                if !s.lhs.indices.is_empty() && !arrays.contains(&s.lhs.name) {
+                    arrays.push(s.lhs.name.clone());
+                }
+                collect_arrays_expr(&s.rhs, arrays);
+            }
+            Item::Loop(inner) => {
+                let (ops, it) = walk_loop(
+                    inner,
+                    prog,
+                    b,
+                    mult * trips,
+                    level_trips,
+                    arrays,
+                    depth + 1,
+                    max_depth,
+                )?;
+                inner_ops.add(&ops);
+                stmt_trips += it;
+            }
+        }
+    }
+    let mut total = per_iter.scale(trips);
+    total.add(&inner_ops.scale(trips));
+    let innermost = if has_stmts {
+        trips + trips * stmt_trips
+    } else {
+        trips * stmt_trips
+    };
+    Ok((total, innermost))
+}
+
+/// Analyze every nest of a program under size overrides.
+pub fn analyze(prog: &Program, over: &Bindings) -> anyhow::Result<Vec<NestCounts>> {
+    let b = bindings_with(prog, over);
+    let mut out = Vec::new();
+    for (i, nest) in prog.nests.iter().enumerate() {
+        let mut level_trips = Vec::new();
+        let mut arrays = Vec::new();
+        let mut depth = 0usize;
+        let (ops, inner_trips) = walk_loop(
+            &nest.root,
+            prog,
+            &b,
+            1.0,
+            &mut level_trips,
+            &mut arrays,
+            0,
+            &mut depth,
+        )?;
+        // Static body ops: one innermost iteration (ops / inner_trips).
+        let body_ops = if inner_trips > 0.0 {
+            ops.scale(1.0 / inner_trips)
+        } else {
+            OpCount::default()
+        };
+        out.push(NestCounts {
+            nest_index: i,
+            stage: nest.stage.clone(),
+            inner_trips,
+            level_trips,
+            ops,
+            body_ops,
+            arrays,
+            depth,
+        });
+    }
+    Ok(out)
+}
+
+/// Total request bytes: all `in` arrays + all `out` arrays (DMA sizing and
+/// the data-size axis of the paper's frequency distribution).
+pub fn io_bytes(prog: &Program, over: &Bindings) -> anyhow::Result<(f64, f64)> {
+    let b = bindings_with(prog, over);
+    let mut input = 0.0;
+    let mut output = 0.0;
+    for a in &prog.arrays {
+        let mut elems = 1.0;
+        for d in &a.dims {
+            elems *= eval_bound(d, prog, &b)? as f64;
+        }
+        match a.kind {
+            ArrayKind::In => input += 4.0 * elems,
+            ArrayKind::Out => output += 4.0 * elems,
+            ArrayKind::Tmp => {}
+        }
+    }
+    Ok((input, output))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loopir::parse;
+
+    const SRC: &str = r#"
+        app demo;
+        param M = 4;
+        param N = 8;
+        array x[M][N]: f32 in;
+        array y[M][N]: f32 out;
+
+        loop m in 0..M loop n in 0..N { y[m][n] = 0.0; }
+
+        stage mac loop m in 0..M loop n in 0..N {
+            y[m][n] += 2.0 * x[m][n] + cos(1.0 * n);
+        }
+
+        stage rowsum loop m in 0..M {
+            acc = 0.0;
+            loop n in 0..N { acc += x[m][n]; }
+            y[m][0] = acc;
+        }
+    "#;
+
+    fn prog() -> Program {
+        parse(SRC).unwrap()
+    }
+
+    #[test]
+    fn trip_counts() {
+        let counts = analyze(&prog(), &Bindings::new()).unwrap();
+        assert_eq!(counts[0].inner_trips, 32.0);
+        assert_eq!(counts[1].inner_trips, 32.0);
+        // rowsum: stmts at depth 0 (M trips) plus inner loop M*N trips.
+        assert_eq!(counts[2].inner_trips, 4.0 + 32.0);
+        assert_eq!(counts[1].level_trips, vec![4.0, 32.0]);
+    }
+
+    #[test]
+    fn size_override_scales_trips() {
+        let mut over = Bindings::new();
+        over.insert("N".into(), 16);
+        let counts = analyze(&prog(), &over).unwrap();
+        assert_eq!(counts[0].inner_trips, 64.0);
+    }
+
+    #[test]
+    fn op_counts_mac() {
+        let counts = analyze(&prog(), &Bindings::new()).unwrap();
+        let mac = &counts[1];
+        // Per iteration: += (1 add), 2.0*x (1 mul), +cos (1 add, 1 trans, 1 mul).
+        assert_eq!(mac.ops.muls, 2.0 * 32.0);
+        assert_eq!(mac.ops.adds, 2.0 * 32.0);
+        assert_eq!(mac.ops.transcendental, 32.0);
+        // loads: x + y(rmw); stores: y.
+        assert_eq!(mac.ops.loads, 2.0 * 32.0);
+        assert_eq!(mac.ops.stores, 32.0);
+    }
+
+    #[test]
+    fn flops_weighting() {
+        let mut oc = OpCount::default();
+        oc.adds = 1.0;
+        oc.transcendental = 1.0;
+        assert_eq!(oc.flops(8.0), 9.0);
+        assert_eq!(oc.bytes(), 0.0);
+    }
+
+    #[test]
+    fn arrays_collected() {
+        let counts = analyze(&prog(), &Bindings::new()).unwrap();
+        assert_eq!(counts[1].arrays, vec!["y".to_string(), "x".to_string()]);
+    }
+
+    #[test]
+    fn io_bytes_in_out() {
+        let (i, o) = io_bytes(&prog(), &Bindings::new()).unwrap();
+        assert_eq!(i, 4.0 * 32.0);
+        assert_eq!(o, 4.0 * 32.0);
+    }
+
+    #[test]
+    fn depth_recorded() {
+        let counts = analyze(&prog(), &Bindings::new()).unwrap();
+        assert_eq!(counts[1].depth, 2);
+        assert_eq!(counts[2].depth, 2);
+    }
+}

@@ -1,0 +1,378 @@
+//! `repro` — CLI for the Yamato-2022 reproduction.
+//!
+//! Subcommands:
+//!   report-env                         print the Fig. 3 environment table
+//!   analyze     --app A [--size S]    loop-IR analysis report (§3.1 front)
+//!   opencl      --app A [--nest I]    dump generated OpenCL kernel/host
+//!   offload     --app A [--size S]    run the §3.1 pattern search
+//!   serve       [--hours H] [--seed N] [--deploy APP]
+//!                                      simulate a production window
+//!   reconfigure [--hours H] [--seed N] [--threshold X] [--no-approve]
+//!                                      full §3.3 cycle incl. Fig. 4 table
+//!   validate    [--seed N]            cross-variant artifact equivalence
+//!
+//! Run with no arguments for help.
+
+use repro::apps::{find, registry};
+use repro::coordinator::{
+    run_reconfiguration, Approval, ProductionEnv, ReconConfig, ThresholdPolicy,
+};
+use repro::fpga::device::ReconfigKind;
+use repro::fpga::part::D5005;
+use repro::offload::{search, OffloadConfig};
+use repro::report;
+use repro::runtime::Runtime;
+use repro::util::cli::Args;
+use repro::util::table::{fmt_bytes, fmt_secs, Table};
+use repro::workload::generate;
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.cmd.as_deref() {
+        Some("report-env") => cmd_report_env(),
+        Some("analyze") => cmd_analyze(&args),
+        Some("opencl") => cmd_opencl(&args),
+        Some("offload") => cmd_offload(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("reconfigure") => cmd_reconfigure(&args),
+        Some("validate") => cmd_validate(&args),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "\
+repro — reproduction of `FPGA logic change after service launch` (Yamato 2022)
+
+USAGE: repro <COMMAND> [OPTIONS]
+
+COMMANDS:
+  report-env                              Fig. 3 environment table
+  analyze --app A [--size S]              loop-statement analysis (intensity, trips)
+  opencl --app A [--nest I]               generated OpenCL kernel + host
+  offload --app A [--size S]              pre-launch pattern search (Fig. 2 flow)
+  serve [--hours H] [--seed N] [--deploy APP]   simulate production traffic
+  reconfigure [--hours H] [--seed N] [--threshold X] [--no-approve] [--real-swap]
+                                          full in-operation reconfiguration cycle
+  validate [--seed N]                     artifact cross-variant equivalence
+";
+
+fn cmd_report_env() -> anyhow::Result<()> {
+    println!("FIG3 — evaluation environment (simulated substrates)\n");
+    print!("{}", report::fig3_environment().render());
+    Ok(())
+}
+
+fn app_arg<'a>(
+    reg: &'a [repro::apps::AppSpec],
+    args: &Args,
+) -> anyhow::Result<&'a repro::apps::AppSpec> {
+    let name = args
+        .get("app")
+        .ok_or_else(|| anyhow::anyhow!("--app is required (tdfir|mriq|himeno|symm|dft)"))?;
+    find(reg, name).ok_or_else(|| anyhow::anyhow!("unknown app `{name}`"))
+}
+
+fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
+    let reg = registry();
+    let app = app_arg(&reg, args)?;
+    let size = args.get_or("size", app.sizes.last().unwrap().name);
+    let over = app.bindings(size);
+    let rep = repro::analysis::intensity_report(app.program(), &over)?;
+    println!(
+        "app {} @ {size}: {} loop statements, request data {}\n",
+        app.name,
+        rep.len(),
+        fmt_bytes(app.request_bytes(size)),
+    );
+    let mut t = Table::new(vec![
+        "nest", "stage", "trips", "flops", "footprint", "intensity",
+    ]);
+    for r in &rep {
+        t.row(vec![
+            r.nest_index.to_string(),
+            r.stage.clone().unwrap_or_else(|| "-".into()),
+            format!("{:.3e}", r.inner_trips),
+            format!("{:.3e}", r.flops),
+            fmt_bytes(r.footprint_bytes),
+            format!("{:.3}", r.intensity),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_opencl(args: &Args) -> anyhow::Result<()> {
+    let reg = registry();
+    let app = app_arg(&reg, args)?;
+    let nests = if args.get("nest").is_some() {
+        vec![args.get_usize("nest", 0)?]
+    } else {
+        // Default: the app's headline stage (s1).
+        vec![app
+            .program()
+            .stage_nest_index(&app.stage_names()[1])
+            .unwrap()]
+    };
+    let pair = repro::opencl::generate(app.program(), &nests);
+    println!(
+        "// ===== kernel ({} lines) =====",
+        pair.kernel_src.lines().count()
+    );
+    print!("{}", pair.kernel_src);
+    println!("// ===== host =====");
+    print!("{}", pair.host_src);
+    Ok(())
+}
+
+fn cmd_offload(args: &Args) -> anyhow::Result<()> {
+    let reg = registry();
+    let app = app_arg(&reg, args)?;
+    let size = args.get_or("size", app.sizes.last().unwrap().name);
+    let r = search(app, size, &OffloadConfig::default())?;
+    println!("§3.1 offload search — app {} @ {}\n", r.app, r.size);
+
+    let mut t = Table::new(vec!["step", "detail"]);
+    t.row(vec![
+        "2-1 intensity top-4".to_string(),
+        r.candidates
+            .iter()
+            .map(|c| {
+                format!(
+                    "{}({:.2})",
+                    c.stage
+                        .clone()
+                        .unwrap_or_else(|| format!("#{}", c.nest_index)),
+                    c.intensity
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", "),
+    ]);
+    t.row(vec![
+        "2-2 efficiency top-3".to_string(),
+        r.efficient
+            .iter()
+            .map(|e| {
+                format!(
+                    "{}(eff {:.0}, rate {:.3})",
+                    e.candidate
+                        .stage
+                        .clone()
+                        .unwrap_or_else(|| format!("#{}", e.candidate.nest_index)),
+                    e.efficiency,
+                    e.usage_rate
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(", "),
+    ]);
+    for (i, trial) in r.trials.iter().enumerate() {
+        t.row(vec![
+            format!("2-3 pattern {}", i + 1),
+            format!("{} -> {}", trial.variant, fmt_secs(trial.time_secs)),
+        ]);
+    }
+    t.row(vec![
+        "2-4 best".to_string(),
+        format!(
+            "{} ({} vs cpu {}; improvement {:.2}x)",
+            r.best.variant,
+            fmt_secs(r.best.time_secs),
+            fmt_secs(r.cpu_time_secs),
+            r.improvement
+        ),
+    ]);
+    t.row(vec![
+        "compile farm (virtual)".to_string(),
+        fmt_secs(r.compile_virtual_secs),
+    ]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    // Optional JSON config file (workload rates etc.; see coordinator::config).
+    let run_cfg = match args.get("config") {
+        Some(path) => repro::coordinator::config::RunConfig::load(path)?,
+        None => repro::coordinator::config::RunConfig::default(),
+    };
+    let hours = args.get_f64("hours", run_cfg.window_secs / 3600.0)?;
+    let seed = args.get_u64("seed", run_cfg.seed)?;
+    let mut reg_conf = registry();
+    run_cfg.apply_rates(&mut reg_conf);
+    let mut env = ProductionEnv::new(reg_conf, D5005);
+    if let Some(dep) = args.get("deploy") {
+        let reg = registry();
+        let app = find(&reg, dep).ok_or_else(|| anyhow::anyhow!("unknown app `{dep}`"))?;
+        let r = search(app, app.sizes.last().unwrap().name, &OffloadConfig::default())?;
+        env.deploy(ReconfigKind::Static, dep, &r.best.variant, r.improvement);
+        println!(
+            "deployed {dep}:{} (pre-launch improvement {:.2}x)\n",
+            r.best.variant, r.improvement
+        );
+    }
+    // Trace replay takes precedence over generation; --record saves the
+    // generated trace for later bit-identical replay.
+    let trace = if let Some(path) = args.get("replay") {
+        let text = std::fs::read_to_string(path)?;
+        let j = repro::util::json::Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("trace {path}: {e}"))?;
+        repro::workload::trace_from_json(&j)?
+    } else {
+        generate(&env.registry, hours * 3600.0, seed)
+    };
+    if let Some(path) = args.get("record") {
+        std::fs::write(path, repro::workload::trace_to_json(&trace).to_pretty())?;
+        println!("recorded trace -> {path}");
+    }
+    println!(
+        "serving {} requests over {:.1} h (virtual)...",
+        trace.len(),
+        hours
+    );
+    env.run_window(&trace)?;
+
+    let mut t = Table::new(vec!["app", "requests", "total service", "mean", "served by"]);
+    for app in env.history.apps_in_window(0.0, f64::INFINITY) {
+        let (sum, n) = env.history.totals_in_window(&app, 0.0, f64::INFINITY);
+        let fpga = env
+            .history
+            .all()
+            .iter()
+            .any(|r| r.app == app && r.served_by == repro::coordinator::ServedBy::Fpga);
+        t.row(vec![
+            app.clone(),
+            n.to_string(),
+            fmt_secs(sum),
+            fmt_secs(sum / n.max(1) as f64),
+            if fpga { "FPGA" } else { "CPU" }.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_reconfigure(args: &Args) -> anyhow::Result<()> {
+    let hours = args.get_f64("hours", 1.0)?;
+    let seed = args.get_u64("seed", 42)?;
+    let threshold = args.get_f64("threshold", 2.0)?;
+
+    // Pre-launch: user specifies tdFIR (§4.1.2).
+    let mut env = ProductionEnv::new(registry(), D5005);
+    let reg = registry();
+    let td = find(&reg, "tdfir").unwrap();
+    let pre = search(td, "large", &OffloadConfig::default())?;
+    env.deploy(ReconfigKind::Static, "tdfir", &pre.best.variant, pre.improvement);
+    println!(
+        "pre-launch: tdfir:{} deployed, improvement coefficient {:.2}\n",
+        pre.best.variant, pre.improvement
+    );
+
+    // Production window.
+    let trace = generate(&env.registry, hours * 3600.0, seed);
+    env.run_window(&trace)?;
+    println!(
+        "served {} requests over {:.1} h (virtual)\n",
+        trace.len(),
+        hours
+    );
+
+    // §3.3 cycle.
+    let cfg = ReconConfig {
+        long_window_secs: hours * 3600.0,
+        short_window_secs: hours * 3600.0,
+        policy: ThresholdPolicy {
+            min_effect_ratio: threshold,
+        },
+        ..Default::default()
+    };
+    let mut approval = if args.flag("no-approve") {
+        Approval::auto_no()
+    } else {
+        Approval::auto_yes()
+    };
+    let out = run_reconfiguration(&mut env, &cfg, &mut approval)?;
+
+    println!("STEP1 — load ranking (coefficient-corrected):");
+    print!("{}", report::load_ranking(&out).render());
+    println!("\nSTEP1 — representative data (mode of size distribution):");
+    print!("{}", report::representatives(&out).render());
+    if let Some(p) = &out.proposal {
+        println!(
+            "\nSTEP4 — effect ratio {:.2} (threshold {threshold}) => {}",
+            p.ratio,
+            if p.proposed { "PROPOSE" } else { "no action" }
+        );
+    }
+    println!("\nFIG4 — improvement through reconfiguration:");
+    print!("{}", report::fig4_improvement(&out).render());
+    println!("\nTXT-STEPS — step durations:");
+    print!("{}", report::step_durations(&out).render());
+
+    // Optionally do the real PJRT swap to measure wall-clock downtime.
+    if args.flag("real-swap") {
+        if let (Some(p), Some(rc)) = (&out.proposal, &out.reconfig) {
+            let mut rt = Runtime::new("artifacts")?;
+            let from_key = format!("tdfir__large__{}", p.current.variant);
+            let to_app = find(&reg, &p.best.app).unwrap();
+            let to_key = to_app.artifact_key(
+                out.representatives
+                    .iter()
+                    .find(|r| r.app == p.best.app)
+                    .map(|r| r.size.as_str())
+                    .unwrap_or("large"),
+                &p.best.variant,
+            );
+            rt.load(&from_key)?;
+            let swap = rt.swap(Some(&from_key), &to_key)?;
+            println!(
+                "\nTXT-DOWNTIME — measured PJRT swap {} -> {}: compile {} + warmup {} = {} (virtual static outage: {})",
+                from_key,
+                to_key,
+                fmt_secs(swap.compile_secs),
+                fmt_secs(swap.warmup_secs),
+                fmt_secs(swap.total_secs()),
+                fmt_secs(rc.downtime_secs),
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> anyhow::Result<()> {
+    let seed = args.get_u64("seed", 7)?;
+    let mut rt = Runtime::new("artifacts")?;
+    let reg = registry();
+    let mut t = Table::new(vec!["app", "size", "variant", "max |diff| vs cpu"]);
+    let mut worst = 0.0f64;
+    for app in &reg {
+        for sz in &app.sizes {
+            let cpu = app.artifact_key(sz.name, "cpu");
+            for var in ["o0", "o1", "o2", "o3", "o01", "o12", "o13", "o23"] {
+                let key = app.artifact_key(sz.name, var);
+                if rt.manifest.get(&key).is_none() {
+                    continue;
+                }
+                let d = rt.compare_variants(&cpu, &key, seed)?;
+                worst = worst.max(d);
+                t.row(vec![
+                    app.name.to_string(),
+                    sz.name.to_string(),
+                    var.to_string(),
+                    format!("{d:.2e}"),
+                ]);
+            }
+        }
+    }
+    print!("{}", t.render());
+    println!("worst-case max |diff| = {worst:.3e}");
+    anyhow::ensure!(worst < 2e-2, "cross-variant divergence too large");
+    Ok(())
+}

@@ -1,0 +1,283 @@
+//! Pre-launch automatic FPGA offload (§3.1 / Fig. 2) — and the pattern
+//! search reused in-operation by step 2 of §3.3.
+//!
+//! Flow (paper steps 2-1 .. 2-4):
+//!  1. parse + analyze the app's loop statements (Clang/ROSE/gcov
+//!     stand-ins in `loopir`/`analysis`);
+//!  2. keep the top-4 loop statements by arithmetic intensity;
+//!  3. OpenCL-ize each candidate, "precompile" it through the resource
+//!     estimator, keep the top-3 by resource efficiency
+//!     (= intensity / resource usage rate);
+//!  4. measure the 3 single-loop patterns in the verification environment,
+//!     then the combination of the best 2, and pick the fastest of the 4.
+//!
+//! "Measurement" is the calibrated perf model; each measured pattern also
+//! charges a full FPGA compile (6 virtual hours) on the compile farm,
+//! reproducing the paper's >1 day step-duration. Every selected pattern
+//! maps onto a prebuilt AOT artifact variant, so the winner is runnable.
+
+use crate::analysis::{select_candidates, Candidate};
+use crate::apps::AppSpec;
+use crate::fpga::compiler::CompileFarm;
+use crate::fpga::part::Part;
+use crate::fpga::perf::PerfModel;
+use crate::fpga::resource::{estimate, ResourceEstimate};
+use crate::opencl;
+
+/// Search configuration (paper defaults from §4.1.2).
+#[derive(Clone, Debug)]
+pub struct OffloadConfig {
+    /// Step 2-1: arithmetic-intensity narrowing (paper: 4).
+    pub intensity_keep: usize,
+    /// Step 2-2: resource-efficiency narrowing (paper: 3).
+    pub efficiency_keep: usize,
+    pub part: Part,
+    /// Virtual seconds per full FPGA compile.
+    pub compile_secs: f64,
+    /// Parallel build machines in the verification environment.
+    pub farm_slots: usize,
+}
+
+impl Default for OffloadConfig {
+    fn default() -> Self {
+        OffloadConfig {
+            intensity_keep: 4,
+            efficiency_keep: 3,
+            part: crate::fpga::part::D5005,
+            compile_secs: crate::fpga::compiler::FULL_COMPILE_SECS,
+            farm_slots: 1,
+        }
+    }
+}
+
+/// A candidate that survived the resource-efficiency pruning (step 2-2).
+#[derive(Clone, Debug)]
+pub struct EfficientCandidate {
+    pub candidate: Candidate,
+    pub resources: ResourceEstimate,
+    pub usage_rate: f64,
+    /// intensity / usage_rate — the paper's リソース効率.
+    pub efficiency: f64,
+    /// Lines of generated OpenCL kernel source (fidelity artifact).
+    pub opencl_kernel_lines: usize,
+}
+
+/// One measured offload pattern (step 2-3).
+#[derive(Clone, Debug)]
+pub struct PatternTrial {
+    /// Offloaded nest indices.
+    pub nests: Vec<usize>,
+    /// Artifact variant name ("o1", "o12", ...).
+    pub variant: String,
+    /// Verification-environment service time (perf model, seconds).
+    pub time_secs: f64,
+}
+
+/// Result of the §3.1 search for one (app, size).
+#[derive(Clone, Debug)]
+pub struct OffloadResult {
+    pub app: String,
+    pub size: String,
+    pub candidates: Vec<Candidate>,
+    pub efficient: Vec<EfficientCandidate>,
+    pub trials: Vec<PatternTrial>,
+    pub best: PatternTrial,
+    /// CPU-only service time at this size.
+    pub cpu_time_secs: f64,
+    /// cpu_time / best.time — the paper's 改善度 (improvement factor).
+    pub improvement: f64,
+    /// Virtual time consumed compiling the measured patterns.
+    pub compile_virtual_secs: f64,
+}
+
+/// Run the §3.1 search for one app at one size class.
+pub fn search(
+    app: &AppSpec,
+    size: &str,
+    cfg: &OffloadConfig,
+) -> anyhow::Result<OffloadResult> {
+    let prog = app.program();
+    let over = app.bindings(size);
+
+    // Step 2-1: arithmetic-intensity top-k.
+    let candidates = select_candidates(prog, &over, cfg.intensity_keep)?;
+    anyhow::ensure!(
+        !candidates.is_empty(),
+        "{}: no offloadable loop statements",
+        app.name
+    );
+
+    // Step 2-2: OpenCL-ize + resource estimate -> efficiency top-k.
+    let model = PerfModel::new(prog, &over, cfg.part)?;
+    let mut efficient: Vec<EfficientCandidate> = candidates
+        .iter()
+        .map(|c| {
+            let counts = &model.nests[c.nest_index].counts;
+            let res = estimate(counts);
+            let rate = res.usage_rate(&cfg.part);
+            let pair = opencl::generate(prog, &[c.nest_index]);
+            EfficientCandidate {
+                candidate: c.clone(),
+                resources: res,
+                usage_rate: rate,
+                efficiency: if rate > 0.0 { c.intensity / rate } else { 0.0 },
+                opencl_kernel_lines: pair.kernel_src.lines().count(),
+            }
+        })
+        .collect();
+    efficient.sort_by(|a, b| b.efficiency.partial_cmp(&a.efficiency).unwrap());
+    efficient.truncate(cfg.efficiency_keep);
+
+    // Step 2-3: measure the singles in the verification environment.
+    let mut farm = CompileFarm::new(cfg.compile_secs, cfg.farm_slots);
+    let mut trials: Vec<PatternTrial> = Vec::new();
+    for ec in &efficient {
+        let nests = vec![ec.candidate.nest_index];
+        let variant = app.variant_for_nests(&nests);
+        farm.submit(0.0, format!("{}:{}", app.name, variant));
+        trials.push(PatternTrial {
+            time_secs: model.request_time(&nests),
+            nests,
+            variant,
+        });
+    }
+
+    // Combination of the best two singles.
+    if trials.len() >= 2 {
+        let mut order: Vec<usize> = (0..trials.len()).collect();
+        order.sort_by(|&a, &b| {
+            trials[a]
+                .time_secs
+                .partial_cmp(&trials[b].time_secs)
+                .unwrap()
+        });
+        let mut nests = trials[order[0]].nests.clone();
+        nests.extend_from_slice(&trials[order[1]].nests);
+        nests.sort_unstable();
+        let variant = app.variant_for_nests(&nests);
+        farm.submit(0.0, format!("{}:{}", app.name, variant));
+        trials.push(PatternTrial {
+            time_secs: model.request_time(&nests),
+            nests,
+            variant,
+        });
+    }
+
+    // Step 2-4: fastest measured pattern wins.
+    let best = trials
+        .iter()
+        .min_by(|a, b| a.time_secs.partial_cmp(&b.time_secs).unwrap())
+        .cloned()
+        .expect("at least one trial");
+
+    let cpu_time_secs = model.cpu_request_time();
+    let compile_virtual_secs = farm
+        .jobs
+        .iter()
+        .map(|j| j.ready_at)
+        .fold(0.0f64, f64::max);
+    Ok(OffloadResult {
+        app: app.name.to_string(),
+        size: size.to_string(),
+        improvement: cpu_time_secs / best.time_secs,
+        cpu_time_secs,
+        candidates,
+        efficient,
+        trials,
+        best,
+        compile_virtual_secs,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{find, registry};
+
+    fn run(app: &str, size: &str) -> OffloadResult {
+        let reg = registry();
+        search(find(&reg, app).unwrap(), size, &OffloadConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn tdfir_search_follows_paper_shape() {
+        let r = run("tdfir", "large");
+        // 2-1: 4 candidates, all stage nests.
+        assert_eq!(r.candidates.len(), 4);
+        assert!(r.candidates.iter().all(|c| c.stage.is_some()));
+        // conv must rank first by intensity.
+        assert_eq!(r.candidates[0].stage.as_deref(), Some("conv"));
+        // 2-2: pruned to 3.
+        assert_eq!(r.efficient.len(), 3);
+        // 2-3: 3 singles + 1 combo = 4 measured patterns (paper: 4).
+        assert_eq!(r.trials.len(), 4);
+        // The winner must include the conv nest.
+        let conv = find(&registry(), "tdfir")
+            .unwrap()
+            .program()
+            .stage_nest_index("conv")
+            .unwrap();
+        assert!(r.best.nests.contains(&conv), "best={:?}", r.best);
+        // Paper: pre-launch improvement 2.07 on assumed (large) data.
+        assert!(
+            (1.6..2.6).contains(&r.improvement),
+            "improvement {}",
+            r.improvement
+        );
+    }
+
+    #[test]
+    fn mriq_search_huge_improvement() {
+        let r = run("mriq", "large");
+        assert_eq!(r.trials.len(), 4);
+        let q = find(&registry(), "mriq")
+            .unwrap()
+            .program()
+            .stage_nest_index("q")
+            .unwrap();
+        assert!(r.best.nests.contains(&q));
+        assert!(r.improvement > 6.0, "improvement {}", r.improvement);
+    }
+
+    #[test]
+    fn all_apps_search_and_map_to_artifacts() {
+        let reg = registry();
+        for app in &reg {
+            let size = app.sizes.last().unwrap().name;
+            let r = search(app, size, &OffloadConfig::default()).unwrap();
+            assert!(!r.best.variant.is_empty());
+            assert!(r.best.variant.starts_with('o'));
+            assert!(r.improvement > 0.9, "{}: {}", app.name, r.improvement);
+            // The winning variant must be one python lowered (cpu + 4
+            // singles + 6 pairs => any 1-2 stage combination).
+            assert!(r.best.variant.len() <= 3, "{}", r.best.variant);
+        }
+    }
+
+    #[test]
+    fn four_pattern_compiles_exceed_a_day() {
+        // TXT-STEPS: improvement-effect calculation takes ~1 day because
+        // 4 patterns x 6 h compile on one build machine.
+        let r = run("tdfir", "large");
+        assert!(
+            r.compile_virtual_secs >= 24.0 * 3600.0,
+            "{}",
+            r.compile_virtual_secs
+        );
+    }
+
+    #[test]
+    fn narrower_config_is_respected() {
+        let reg = registry();
+        let app = find(&reg, "dft").unwrap();
+        let cfg = OffloadConfig {
+            intensity_keep: 2,
+            efficiency_keep: 1,
+            ..Default::default()
+        };
+        let r = search(app, "sample", &cfg).unwrap();
+        assert_eq!(r.candidates.len(), 2);
+        assert_eq!(r.efficient.len(), 1);
+        assert_eq!(r.trials.len(), 1, "no combo with a single survivor");
+    }
+}

@@ -1,0 +1,255 @@
+//! OpenCL kernel/host source generation from loop-IR patterns.
+
+use crate::loopir::{ArrayKind, Expr, Func, Item, Loop, Op, Program, Stmt};
+
+/// Generated kernel + host sources for one offload pattern.
+#[derive(Clone, Debug)]
+pub struct OpenClPair {
+    pub kernel_src: String,
+    pub host_src: String,
+    /// Kernel names, one per offloaded nest.
+    pub kernel_names: Vec<String>,
+}
+
+fn expr_c(e: &Expr, out: &mut String) {
+    match e {
+        Expr::Num(x) => {
+            if x.fract() == 0.0 {
+                out.push_str(&format!("{:.1}f", x));
+            } else {
+                out.push_str(&format!("{x}f"));
+            }
+        }
+        Expr::Ident(s) => out.push_str(s),
+        Expr::Index(name, idx) => {
+            out.push_str(name);
+            for i in idx {
+                out.push('[');
+                expr_c(i, out);
+                out.push(']');
+            }
+        }
+        Expr::Bin(op, l, r) => {
+            out.push('(');
+            expr_c(l, out);
+            out.push_str(match op {
+                Op::Add => " + ",
+                Op::Sub => " - ",
+                Op::Mul => " * ",
+                Op::Div => " / ",
+            });
+            expr_c(r, out);
+            out.push(')');
+        }
+        Expr::Neg(i) => {
+            out.push_str("(-");
+            expr_c(i, out);
+            out.push(')');
+        }
+        Expr::Call(f, args) => {
+            out.push_str(match f {
+                Func::Cos => "native_cos",
+                Func::Sin => "native_sin",
+                Func::Sqrt => "native_sqrt",
+                Func::Abs => "fabs",
+                Func::Exp => "native_exp",
+            });
+            out.push('(');
+            expr_c(&args[0], out);
+            out.push(')');
+        }
+    }
+}
+
+fn stmt_c(s: &Stmt, indent: usize, out: &mut String) {
+    out.push_str(&"  ".repeat(indent));
+    out.push_str(&s.lhs.name);
+    for i in &s.lhs.indices {
+        out.push('[');
+        expr_c(i, out);
+        out.push(']');
+    }
+    out.push_str(if s.accumulate { " += " } else { " = " });
+    expr_c(&s.rhs, out);
+    out.push_str(";\n");
+}
+
+fn loop_c(l: &Loop, indent: usize, out: &mut String) {
+    let mut declared = Vec::new();
+    loop_c_inner(l, indent, out, &mut declared);
+}
+
+fn loop_c_inner(l: &Loop, indent: usize, out: &mut String, declared: &mut Vec<String>) {
+    out.push_str(&"  ".repeat(indent));
+    let mut lo = String::new();
+    expr_c(&l.lo, &mut lo);
+    let mut hi = String::new();
+    expr_c(&l.hi, &mut hi);
+    // Bounds are integer expressions; strip the float suffixes we emit for
+    // numeric literals in value context.
+    let lo = lo.replace(".0f", "").replace('f', "");
+    let hi = hi.replace(".0f", "").replace('f', "");
+    out.push_str(&format!(
+        "for (int {v} = {lo}; {v} < {hi}; {v}++) {{\n",
+        v = l.var
+    ));
+    // Declare scalar locals assigned in this body (once per kernel).
+    for item in &l.body {
+        if let Item::Stmt(s) = item {
+            if s.lhs.indices.is_empty() && !declared.contains(&s.lhs.name) {
+                out.push_str(&"  ".repeat(indent + 1));
+                out.push_str(&format!("float {} = 0.0f;\n", s.lhs.name));
+                declared.push(s.lhs.name.clone());
+            }
+        }
+    }
+    for item in &l.body {
+        match item {
+            Item::Stmt(s) => stmt_c(s, indent + 1, out),
+            Item::Loop(inner) => loop_c_inner(inner, indent + 1, out, declared),
+        }
+    }
+    out.push_str(&"  ".repeat(indent));
+    out.push_str("}\n");
+}
+
+fn array_params(prog: &Program) -> String {
+    prog.arrays
+        .iter()
+        .map(|a| {
+            let qual = match a.kind {
+                ArrayKind::In => "__global const float* restrict",
+                _ => "__global float* restrict",
+            };
+            format!("{qual} {}", a.name)
+        })
+        .collect::<Vec<_>>()
+        .join(", ")
+}
+
+/// Generate the OpenCL kernel/host pair for a set of offloaded nests.
+pub fn generate(prog: &Program, offloaded: &[usize]) -> OpenClPair {
+    let params = array_params(prog);
+    let mut kernel_src = String::new();
+    let mut kernel_names = Vec::new();
+    kernel_src.push_str(&format!(
+        "// Auto-generated OpenCL for app `{}` — offload pattern {:?}\n",
+        prog.name, offloaded
+    ));
+    for (pi, &ni) in offloaded.iter().enumerate() {
+        let nest = &prog.nests[ni];
+        let kname = format!(
+            "{}_{}_k{}",
+            prog.name,
+            nest.stage.clone().unwrap_or_else(|| format!("nest{ni}")),
+            pi
+        );
+        kernel_src.push_str(&format!(
+            "__kernel void {kname}({params}) {{\n"
+        ));
+        // Single-work-item kernel: the FPGA pipeline style (not NDRange) —
+        // Intel's recommended idiom for loop pipelining.
+        let mut body = String::new();
+        loop_c(&nest.root, 1, &mut body);
+        kernel_src.push_str(&body);
+        kernel_src.push_str("}\n\n");
+        kernel_names.push(kname);
+    }
+
+    let mut host_src = String::new();
+    host_src.push_str(&format!(
+        "// Auto-generated host program for app `{}`.\n",
+        prog.name
+    ));
+    host_src.push_str("// CPU-resident loop statements:\n");
+    for (ni, nest) in prog.nests.iter().enumerate() {
+        if offloaded.contains(&ni) {
+            host_src.push_str(&format!(
+                "// nest {ni}: enqueued as kernel `{}`\n",
+                kernel_names[offloaded.iter().position(|&x| x == ni).unwrap()]
+            ));
+            host_src.push_str(&format!(
+                "clEnqueueTask(queue, {}_kernel, 0, NULL, NULL);\n",
+                nest.stage.clone().unwrap_or_else(|| format!("nest{ni}"))
+            ));
+        } else {
+            loop_c(&nest.root, 0, &mut host_src);
+        }
+    }
+    OpenClPair {
+        kernel_src,
+        host_src,
+        kernel_names,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::loopir::parse;
+
+    fn demo() -> Program {
+        parse(
+            r#"
+            app demo;
+            param N = 8;
+            array x[N]: f32 in;
+            array y[N]: f32 out;
+            loop i in 0..N { y[i] = 0.0; }
+            stage heavy loop i in 0..N {
+                acc = 0.0;
+                loop j in 0..N { acc += x[j] * cos(1.0 * j); }
+                y[i] = acc / sqrt(1.0 * N);
+            }
+        "#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn kernel_contains_offloaded_nest_only() {
+        let prog = demo();
+        let pair = generate(&prog, &[1]);
+        assert_eq!(pair.kernel_names, vec!["demo_heavy_k0"]);
+        assert!(pair.kernel_src.contains("__kernel void demo_heavy_k0"));
+        assert!(pair.kernel_src.contains("native_cos"));
+        assert!(pair.kernel_src.contains("native_sqrt"));
+        // The init nest stays on the host.
+        assert!(!pair.kernel_src.contains("= 0.0f;\n}\n\n__kernel"));
+        assert!(pair.host_src.contains("for (int i = 0; i < N; i++)"));
+        assert!(pair.host_src.contains("clEnqueueTask"));
+    }
+
+    #[test]
+    fn scalar_locals_declared_once() {
+        let prog = demo();
+        let pair = generate(&prog, &[1]);
+        assert_eq!(pair.kernel_src.matches("float acc = 0.0f;").count(), 1);
+    }
+
+    #[test]
+    fn multi_nest_pattern_emits_multiple_kernels() {
+        let prog = parse(
+            r#"
+            app t;
+            param N = 4;
+            array y[N]: f32 out;
+            stage a loop i in 0..N { y[i] = 1.0; }
+            stage b loop i in 0..N { y[i] = y[i] * 2.0; }
+        "#,
+        )
+        .unwrap();
+        let pair = generate(&prog, &[0, 1]);
+        assert_eq!(pair.kernel_names.len(), 2);
+        assert!(pair.kernel_src.contains("t_a_k0"));
+        assert!(pair.kernel_src.contains("t_b_k1"));
+    }
+
+    #[test]
+    fn generated_kernel_mentions_all_array_params() {
+        let prog = demo();
+        let pair = generate(&prog, &[1]);
+        assert!(pair.kernel_src.contains("__global const float* restrict x"));
+        assert!(pair.kernel_src.contains("__global float* restrict y"));
+    }
+}

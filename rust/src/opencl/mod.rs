@@ -1,0 +1,13 @@
+//! OpenCL-ization (paper step 2-2 front half).
+//!
+//! The paper converts candidate loop statements to OpenCL by splitting the
+//! C program into a kernel (FPGA) and a host (CPU) part. We reproduce that
+//! split textually from the loop IR: [`generate`] emits an OpenCL-style
+//! kernel source for the offloaded nests and a host source for the rest.
+//! The generated text is what the resource estimator "precompiles" and
+//! what a human would inspect; the *runnable* form of the same pattern is
+//! the corresponding AOT HLO artifact (see `runtime`).
+
+pub mod codegen;
+
+pub use codegen::{generate, OpenClPair};

@@ -1,0 +1,170 @@
+//! Artifact manifest (written by `python/compile/aot.py`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One input tensor spec.
+#[derive(Clone, Debug, PartialEq)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+/// One artifact's metadata.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub app: String,
+    pub size: String,
+    pub variant: String,
+    /// Offloaded stage indices.
+    pub stages: Vec<usize>,
+    pub path: String,
+    pub inputs: Vec<InputSpec>,
+    pub num_outputs: usize,
+    pub sha256: String,
+}
+
+impl ArtifactMeta {
+    /// Manifest key: `<app>__<size>__<variant>`.
+    pub fn key(&self) -> String {
+        format!("{}__{}__{}", self.app, self.size, self.variant)
+    }
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    by_key: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(path.as_ref()).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.as_ref().display()
+            )
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let mut by_key = BTreeMap::new();
+        for a in j.arr_at("artifacts")? {
+            let inputs = a
+                .arr_at("inputs")?
+                .iter()
+                .map(|i| {
+                    Ok(InputSpec {
+                        name: i.str_at("name")?.to_string(),
+                        shape: i
+                            .arr_at("shape")?
+                            .iter()
+                            .map(|d| {
+                                d.as_usize()
+                                    .ok_or_else(|| anyhow::anyhow!("bad shape dim"))
+                            })
+                            .collect::<anyhow::Result<Vec<usize>>>()?,
+                    })
+                })
+                .collect::<anyhow::Result<Vec<InputSpec>>>()?;
+            let stages = a
+                .arr_at("stages")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            let meta = ArtifactMeta {
+                app: a.str_at("app")?.to_string(),
+                size: a.str_at("size")?.to_string(),
+                variant: a.str_at("variant")?.to_string(),
+                stages,
+                path: a.str_at("path")?.to_string(),
+                inputs,
+                num_outputs: a.usize_at("num_outputs")?,
+                sha256: a.str_at("sha256")?.to_string(),
+            };
+            by_key.insert(meta.key(), meta);
+        }
+        Ok(Manifest { by_key })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&ArtifactMeta> {
+        self.by_key.get(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_key.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_key.is_empty()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.by_key.keys()
+    }
+
+    /// All variants lowered for an (app, size).
+    pub fn variants_of(&self, app: &str, size: &str) -> Vec<&ArtifactMeta> {
+        self.by_key
+            .values()
+            .filter(|m| m.app == app && m.size == size)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "dtype": "f32",
+      "artifacts": [
+        {"app": "dft", "size": "sample", "variant": "cpu", "stages": [],
+         "stage_names": ["window","transform","magnitude","normalize"],
+         "dims": {"n": 256},
+         "path": "dft__sample__cpu.hlo.txt",
+         "inputs": [{"name": "xr", "shape": [256], "dtype": "f32"},
+                    {"name": "xi", "shape": [256], "dtype": "f32"}],
+         "num_outputs": 3, "sha256": "abc"},
+        {"app": "dft", "size": "sample", "variant": "o1", "stages": [1],
+         "stage_names": ["window","transform","magnitude","normalize"],
+         "dims": {"n": 256},
+         "path": "dft__sample__o1.hlo.txt",
+         "inputs": [{"name": "xr", "shape": [256], "dtype": "f32"},
+                    {"name": "xi", "shape": [256], "dtype": "f32"}],
+         "num_outputs": 3, "sha256": "def"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 2);
+        let a = m.get("dft__sample__o1").unwrap();
+        assert_eq!(a.stages, vec![1]);
+        assert_eq!(a.inputs[0].name, "xr");
+        assert_eq!(a.inputs[0].shape, vec![256]);
+        assert_eq!(a.num_outputs, 3);
+        assert_eq!(m.variants_of("dft", "sample").len(), 2);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse(r#"{"artifacts": [{"app": "x"}]}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn real_manifest_loads_if_present() {
+        if let Ok(m) = Manifest::load("artifacts/manifest.json") {
+            assert!(m.len() >= 99, "expected full artifact set, got {}", m.len());
+            assert!(m.get("tdfir__large__o1").is_some());
+            assert!(m.get("mriq__xlarge__o13").is_some());
+        }
+    }
+}

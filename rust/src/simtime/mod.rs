@@ -1,0 +1,157 @@
+//! Virtual time: clock and event queue for the discrete-event simulation.
+//!
+//! The paper's evaluation runs one hour of wall-clock production traffic
+//! (316 req/h) plus six-hour FPGA compiles; the simulation reproduces the
+//! same schedule in milliseconds of real time by keeping all durations in
+//! virtual seconds. Real PJRT executions (numeric validation) happen
+//! outside the clock.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Virtual clock (seconds since simulation start).
+#[derive(Clone, Debug, Default)]
+pub struct Clock {
+    now: f64,
+}
+
+impl Clock {
+    pub fn new() -> Self {
+        Clock { now: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance to an absolute time (monotone).
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(
+            t >= self.now - 1e-9,
+            "clock moved backwards: {} -> {t}",
+            self.now
+        );
+        self.now = self.now.max(t);
+    }
+
+    /// Advance by a duration.
+    pub fn advance_by(&mut self, dt: f64) {
+        assert!(dt >= 0.0);
+        self.now += dt;
+    }
+}
+
+struct Entry<T> {
+    time: f64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<T> Eq for Entry<T> {}
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap: earlier time first; FIFO within identical times.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Time-ordered event queue (min-heap, FIFO-stable for equal timestamps).
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Entry<T>>,
+    seq: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        EventQueue {
+            heap: BinaryHeap::new(),
+            seq: 0,
+        }
+    }
+
+    pub fn push(&mut self, time: f64, item: T) {
+        self.heap.push(Entry {
+            time,
+            seq: self.seq,
+            item,
+        });
+        self.seq += 1;
+    }
+
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        self.heap.pop().map(|e| (e.time, e.item))
+    }
+
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.time)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_monotone() {
+        let mut c = Clock::new();
+        c.advance_to(5.0);
+        c.advance_by(1.5);
+        assert_eq!(c.now(), 6.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "clock moved backwards")]
+    fn clock_rejects_backwards() {
+        let mut c = Clock::new();
+        c.advance_to(5.0);
+        c.advance_to(1.0);
+    }
+
+    #[test]
+    fn queue_orders_by_time() {
+        let mut q = EventQueue::new();
+        q.push(3.0, "c");
+        q.push(1.0, "a");
+        q.push(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, x)| x)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn queue_fifo_for_equal_times() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.push(1.0, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, x)| x)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+}

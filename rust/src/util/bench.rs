@@ -1,0 +1,145 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Cargo bench targets use `harness = false` and drive this: warmup, then
+//! timed iterations until a wall budget or iteration cap is reached, with
+//! mean/p50/p95 reporting. Deliberately simple — the benches in this repo
+//! measure milliseconds-scale end-to-end paths, not nanosecond kernels.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Measurement {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>8} iters  mean {:>12}  p50 {:>12}  p95 {:>12}",
+            self.name,
+            self.iters,
+            super::table::fmt_secs(self.mean_s),
+            super::table::fmt_secs(self.p50_s),
+            super::table::fmt_secs(self.p95_s),
+        )
+    }
+}
+
+/// Benchmark runner with a wall-time budget per benchmark.
+pub struct Bench {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub max_iters: u64,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_budget(mut self, budget: Duration) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    /// Time `f` repeatedly; returns and records the measurement.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> Measurement {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Timed phase.
+        let mut s = Summary::new();
+        let t0 = Instant::now();
+        let mut iters = 0u64;
+        while t0.elapsed() < self.budget && iters < self.max_iters {
+            let it0 = Instant::now();
+            f();
+            s.add(it0.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            iters,
+            mean_s: s.mean(),
+            p50_s: s.median(),
+            p95_s: s.percentile(95.0),
+            min_s: s.min(),
+            max_s: s.max(),
+        };
+        println!("{}", m.report());
+        self.results.push(m.clone());
+        m
+    }
+
+    /// Record an externally measured scalar (e.g. simulated seconds).
+    pub fn record(&mut self, name: &str, seconds: f64) -> Measurement {
+        let m = Measurement {
+            name: name.to_string(),
+            iters: 1,
+            mean_s: seconds,
+            p50_s: seconds,
+            p95_s: seconds,
+            min_s: seconds,
+            max_s: seconds,
+        };
+        println!("{}", m.report());
+        self.results.push(m.clone());
+        m
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(30),
+            max_iters: 1000,
+            results: Vec::new(),
+        };
+        let m = b.run("spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(m.iters > 0);
+        assert!(m.mean_s >= 0.0);
+        assert!(m.p95_s >= m.p50_s || m.iters < 3);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn record_passthrough() {
+        let mut b = Bench::new();
+        let m = b.record("sim", 1.25);
+        assert_eq!(m.mean_s, 1.25);
+    }
+}

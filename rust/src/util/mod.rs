@@ -1,0 +1,16 @@
+//! Small self-contained substrates the rest of the stack builds on.
+//!
+//! The offline build environment ships no `serde`, `clap`, `rand`,
+//! `criterion` or `proptest`, so this module provides the pieces of those
+//! we actually need: a JSON parser/writer ([`json`]), a splittable PRNG
+//! ([`prng`]), summary statistics ([`stats`]), report tables ([`table`]),
+//! a CLI argument parser ([`cli`]), a micro-benchmark harness ([`bench`])
+//! and a property-testing harness ([`check`]).
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,204 @@
+//! Summary statistics and frequency distributions.
+//!
+//! `FreqDist` implements the paper's step 1-4/1-5: sort request data sizes
+//! into fixed-width bins and pick the representative datum from the modal
+//! bin (the paper explicitly uses the Mode, not the mean, because mean data
+//! size can be far from any real request).
+
+/// Running summary of a sample (Welford online moments + extremes).
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+    values: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary {
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            ..Default::default()
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.values.push(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.mean * self.n as f64
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Percentile over all recorded values (nearest-rank).
+    pub fn percentile(&self, p: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&p));
+        if self.values.is_empty() {
+            return f64::NAN;
+        }
+        let mut v = self.values.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+        v[rank.min(v.len() - 1)]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+}
+
+/// Fixed-bin-width frequency distribution over data sizes (bytes).
+///
+/// Paper step 1-4: "sort request data sizes into fixed-size bins and build
+/// a frequency distribution"; step 1-5 picks one real request out of the
+/// modal bin as the representative datum.
+#[derive(Clone, Debug)]
+pub struct FreqDist {
+    bin_width: f64,
+    counts: std::collections::BTreeMap<i64, u64>,
+}
+
+impl FreqDist {
+    pub fn new(bin_width: f64) -> Self {
+        assert!(bin_width > 0.0);
+        FreqDist {
+            bin_width,
+            counts: Default::default(),
+        }
+    }
+
+    pub fn bin_of(&self, x: f64) -> i64 {
+        (x / self.bin_width).floor() as i64
+    }
+
+    pub fn add(&mut self, x: f64) {
+        *self.counts.entry(self.bin_of(x)).or_insert(0) += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.values().sum()
+    }
+
+    /// The modal bin (ties broken toward the smaller bin, deterministic).
+    pub fn mode_bin(&self) -> Option<i64> {
+        self.counts
+            .iter()
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(a.0)))
+            .map(|(bin, _)| *bin)
+    }
+
+    /// Inclusive byte range covered by the modal bin.
+    pub fn mode_range(&self) -> Option<(f64, f64)> {
+        self.mode_bin()
+            .map(|b| (b as f64 * self.bin_width, (b + 1) as f64 * self.bin_width))
+    }
+
+    /// True if `x` falls inside the modal bin.
+    pub fn in_mode(&self, x: f64) -> bool {
+        self.mode_bin() == Some(self.bin_of(x))
+    }
+
+    pub fn bins(&self) -> impl Iterator<Item = (i64, u64)> + '_ {
+        self.counts.iter().map(|(b, c)| (*b, *c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 4);
+        assert!((s.mean() - 2.5).abs() < 1e-12);
+        assert!((s.sum() - 10.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let mut s = Summary::new();
+        for x in 0..101 {
+            s.add(x as f64);
+        }
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.median(), 50.0);
+        assert_eq!(s.percentile(100.0), 100.0);
+    }
+
+    #[test]
+    fn mode_of_325_mix() {
+        // The paper's 3:5:2 size mix must make the middle size the mode.
+        let mut d = FreqDist::new(1024.0);
+        for _ in 0..30 {
+            d.add(512.0);
+        }
+        for _ in 0..50 {
+            d.add(2048.0);
+        }
+        for _ in 0..20 {
+            d.add(4096.0);
+        }
+        assert_eq!(d.total(), 100);
+        assert_eq!(d.mode_bin(), Some(2)); // bin [2048, 3072)
+        assert!(d.in_mode(2048.0));
+        assert!(!d.in_mode(512.0));
+    }
+
+    #[test]
+    fn mode_tie_is_deterministic() {
+        let mut d = FreqDist::new(1.0);
+        d.add(0.5);
+        d.add(5.5);
+        assert_eq!(d.mode_bin(), Some(0));
+    }
+
+    #[test]
+    fn empty_dist_has_no_mode() {
+        let d = FreqDist::new(1.0);
+        assert_eq!(d.mode_bin(), None);
+    }
+}

@@ -1,0 +1,129 @@
+//! Plain-text report tables (the figures/tables the bench harness prints).
+
+/// A simple left-aligned text table with a header row.
+#[derive(Clone, Debug)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity must match header"
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let sep = |out: &mut String| {
+            for w in &widths {
+                out.push('+');
+                out.push_str(&"-".repeat(w + 2));
+            }
+            out.push_str("+\n");
+        };
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str("| ");
+                out.push_str(c);
+                out.push_str(&" ".repeat(widths[i] - c.len() + 1));
+            }
+            out.push_str("|\n");
+        };
+        sep(&mut out);
+        line(&mut out, &self.header);
+        sep(&mut out);
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        let _ = ncol;
+        sep(&mut out);
+        out
+    }
+}
+
+/// Format seconds with sensible precision for reports.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 3600.0 {
+        format!("{:.1} h", s / 3600.0)
+    } else if s >= 60.0 {
+        format!("{:.1} min", s / 60.0)
+    } else if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+/// Format a byte count.
+pub fn fmt_bytes(b: f64) -> String {
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.1} KB", b / 1e3)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["app", "time"]);
+        t.row(vec!["tdfir", "0.266 s"]);
+        t.row(vec!["mriq", "27.4 s"]);
+        let s = t.render();
+        assert!(s.contains("| app   | time    |"), "{s}");
+        // sep, header, sep, 2 rows, sep
+        assert_eq!(s.lines().count(), 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn rejects_wrong_arity() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_secs(7200.0), "2.0 h");
+        assert_eq!(fmt_secs(90.0), "1.5 min");
+        assert_eq!(fmt_secs(1.5), "1.50 s");
+        assert_eq!(fmt_secs(0.0123), "12.30 ms");
+        assert_eq!(fmt_secs(12e-6), "12.0 us");
+        assert_eq!(fmt_bytes(2.16e6), "2.16 MB");
+        assert_eq!(fmt_bytes(512.0), "512 B");
+    }
+}

@@ -1,0 +1,388 @@
+//! Cross-module integration tests: the paper's evaluation scenario from
+//! workload generation through history, analysis, search, and
+//! reconfiguration — everything except the PJRT layer (covered by
+//! runtime_roundtrip.rs).
+
+use repro::analysis::select_candidates;
+use repro::apps::{find, registry};
+use repro::coordinator::recon::analyze_load;
+use repro::coordinator::{
+    run_reconfiguration, Approval, ProductionEnv, ReconConfig, ServedBy, ThresholdPolicy,
+};
+use repro::fpga::device::ReconfigKind;
+use repro::fpga::part::D5005;
+use repro::fpga::perf::PerfModel;
+use repro::loopir::walk::Bindings;
+use repro::offload::{search, OffloadConfig};
+use repro::workload::generate;
+
+fn paper_env(seed: u64) -> ProductionEnv {
+    let mut env = ProductionEnv::new(registry(), D5005);
+    let reg = registry();
+    let td = find(&reg, "tdfir").unwrap();
+    let pre = search(td, "large", &OffloadConfig::default()).unwrap();
+    env.deploy(ReconfigKind::Static, "tdfir", &pre.best.variant, pre.improvement);
+    let trace = generate(&env.registry, 3600.0, seed);
+    env.run_window(&trace).unwrap();
+    env
+}
+
+#[test]
+fn paper_scenario_headline_numbers() {
+    // FIG4 + TXT-RATIO across several production hours: on average the
+    // effect ratio lands near the paper's 6.1 and always clears 2.0 when
+    // MRI-Q traffic shows up at its nominal rate.
+    let mut ratios = Vec::new();
+    for seed in 0..6 {
+        let mut env = paper_env(seed);
+        let mut approval = Approval::auto_yes();
+        let out =
+            run_reconfiguration(&mut env, &ReconConfig::default(), &mut approval).unwrap();
+        let p = out.proposal.unwrap();
+        assert_eq!(p.current.app, "tdfir");
+        ratios.push(p.ratio);
+    }
+    let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    assert!(
+        (3.0..10.0).contains(&mean),
+        "mean effect ratio {mean} (paper: 6.1), ratios {ratios:?}"
+    );
+}
+
+#[test]
+fn corrected_totals_track_paper_fig4_magnitudes() {
+    let mut env = paper_env(42);
+    let (rankings, _) = analyze_load(&mut env, &ReconConfig::default()).unwrap();
+    let td = rankings.iter().find(|r| r.app == "tdfir").unwrap();
+    let mq = rankings.iter().find(|r| r.app == "mriq").unwrap();
+    // Paper: tdFIR corrected 79.7 s from 300 req; MRI-Q 274 s from 10 req.
+    assert!((200.0..400.0).contains(&(td.usage_count as f64)), "{}", td.usage_count);
+    assert!((50.0..120.0).contains(&td.corrected_total_secs), "{}", td.corrected_total_secs);
+    assert!((100.0..500.0).contains(&mq.corrected_total_secs), "{}", mq.corrected_total_secs);
+    // The correction matters: without it tdFIR's actual time is ~half.
+    assert!(td.corrected_total_secs / td.actual_total_secs > 1.5);
+}
+
+#[test]
+fn mode_selection_prefers_large_not_mean() {
+    // The paper's argument for the mode: with a 3:5:2 mix the mean size
+    // sits between bins; the mode picks a real size class — and for the
+    // high-rate app (tdFIR, ~300 req/h) that is reliably `large`. For
+    // low-rate apps the mode tracks whatever actually arrived, so check
+    // it against the empirical argmax instead of the nominal mix.
+    let mut env = paper_env(3);
+    let (_, reps) = analyze_load(&mut env, &ReconConfig::default()).unwrap();
+    for rep in &reps {
+        if rep.app == "tdfir" {
+            assert_eq!(rep.size, "large", "{rep:?}");
+        }
+        // Empirical argmax of the app's arrived sizes.
+        let mut counts = std::collections::BTreeMap::new();
+        for r in env.history.all().iter().filter(|r| r.app == rep.app) {
+            *counts.entry(r.size.clone()).or_insert(0u64) += 1;
+        }
+        let max = counts.values().max().copied().unwrap();
+        assert_eq!(
+            counts.get(&rep.size).copied(),
+            Some(max),
+            "representative {rep:?} is not the modal class: {counts:?}"
+        );
+    }
+}
+
+#[test]
+fn after_reconfiguration_mriq_is_served_by_fpga_and_faster() {
+    let mut env = paper_env(42);
+    let mut approval = Approval::auto_yes();
+    let out =
+        run_reconfiguration(&mut env, &ReconConfig::default(), &mut approval).unwrap();
+    assert!(out.reconfig.is_some());
+
+    // Second hour (offset strictly past the first hour's last arrival).
+    let t0 = env.clock.now() + 1.0;
+    let mut trace = generate(&env.registry, 3600.0, 43);
+    for r in &mut trace {
+        r.arrival += t0;
+    }
+    env.run_window(&trace).unwrap();
+
+    let before: Vec<f64> = env
+        .history
+        .all()
+        .iter()
+        .filter(|r| r.arrival < t0 && r.app == "mriq")
+        .map(|r| r.service_secs)
+        .collect();
+    let after: Vec<f64> = env
+        .history
+        .all()
+        .iter()
+        .filter(|r| r.arrival >= t0 && r.app == "mriq")
+        .map(|r| r.service_secs)
+        .collect();
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    assert!(
+        mean(&after) < 0.3 * mean(&before),
+        "mriq mean before {} after {}",
+        mean(&before),
+        mean(&after)
+    );
+    assert!(env
+        .history
+        .all()
+        .iter()
+        .filter(|r| r.arrival >= t0 && r.app == "mriq")
+        .all(|r| r.served_by == ServedBy::Fpga));
+    // And tdFIR reverted to CPU.
+    assert!(env
+        .history
+        .all()
+        .iter()
+        .filter(|r| r.arrival >= t0 && r.app == "tdfir")
+        .all(|r| r.served_by == ServedBy::Cpu));
+}
+
+#[test]
+fn no_mriq_traffic_means_no_proposal() {
+    // If the usage characteristics never change, nothing is proposed —
+    // the §3.2 churn-limiting behaviour.
+    let mut env = ProductionEnv::new(registry(), D5005);
+    let reg = registry();
+    let td = find(&reg, "tdfir").unwrap();
+    let pre = search(td, "large", &OffloadConfig::default()).unwrap();
+    env.deploy(ReconfigKind::Static, "tdfir", &pre.best.variant, pre.improvement);
+    // tdFIR-only trace.
+    let trace: Vec<_> = generate(&env.registry, 3600.0, 5)
+        .into_iter()
+        .filter(|r| r.app == "tdfir")
+        .collect();
+    env.run_window(&trace).unwrap();
+    let mut approval = Approval::auto_yes();
+    let out =
+        run_reconfiguration(&mut env, &ReconConfig::default(), &mut approval).unwrap();
+    let p = out.proposal.unwrap();
+    assert!(!p.proposed, "ratio {}", p.ratio);
+    assert!(env.device.serves("tdfir"));
+}
+
+#[test]
+fn threshold_controls_proposal() {
+    for (threshold, expect) in [(2.0, true), (50.0, false)] {
+        let mut env = paper_env(42);
+        let cfg = ReconConfig {
+            policy: ThresholdPolicy {
+                min_effect_ratio: threshold,
+            },
+            ..Default::default()
+        };
+        let mut approval = Approval::auto_yes();
+        let out = run_reconfiguration(&mut env, &cfg, &mut approval).unwrap();
+        assert_eq!(out.proposal.unwrap().proposed, expect, "threshold {threshold}");
+    }
+}
+
+#[test]
+fn candidate_selection_matches_paper_stage_sets() {
+    // Step 2-1 on every app must pick stage loops only, with the headline
+    // stage ranked first.
+    let reg = registry();
+    let headline = [
+        ("tdfir", "conv"),
+        ("mriq", "q"),
+        ("himeno", "stencil"),
+        ("symm", "matmul"),
+        ("dft", "transform"),
+    ];
+    for (name, stage) in headline {
+        let app = find(&reg, name).unwrap();
+        let c = select_candidates(app.program(), &app.bindings("large"), 4).unwrap();
+        assert!(!c.is_empty());
+        assert_eq!(c[0].stage.as_deref(), Some(stage), "{name}");
+        assert!(c.iter().all(|x| x.stage.is_some()), "{name}: init loop leaked in");
+    }
+}
+
+#[test]
+fn improvement_coefficient_roundtrip() {
+    // The coefficient stored at deployment equals cpu/offloaded from the
+    // perf model, and analyze_load applies exactly it.
+    let reg = registry();
+    let td = find(&reg, "tdfir").unwrap();
+    let model = PerfModel::new(td.program(), &td.bindings("large"), D5005).unwrap();
+    let nests = td.nests_for_variant("o1");
+    let coef = model.cpu_request_time() / model.request_time(&nests);
+
+    let mut env = ProductionEnv::new(registry(), D5005);
+    env.deploy(ReconfigKind::Static, "tdfir", "o1", coef);
+    let trace: Vec<_> = generate(&env.registry, 1800.0, 8)
+        .into_iter()
+        .filter(|r| r.app == "tdfir" && r.size == "large")
+        .collect();
+    env.run_window(&trace).unwrap();
+    let (rankings, _) = analyze_load(
+        &mut env,
+        &ReconConfig {
+            top_apps: 1,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let td_rank = &rankings[0];
+    // corrected = actual * coef, and actual = n * offloaded_time.
+    let expect_actual = td_rank.usage_count as f64 * model.request_time(&nests);
+    assert!((td_rank.actual_total_secs - expect_actual).abs() < 1e-6);
+    assert!(
+        (td_rank.corrected_total_secs - expect_actual * coef).abs() < 1e-6
+    );
+}
+
+#[test]
+fn offload_search_results_are_artifact_backed() {
+    // Every variant the search can select exists in the manifest naming
+    // scheme (cpu + singles + pairs).
+    let reg = registry();
+    for app in &reg {
+        for sz in &app.sizes {
+            let r = search(app, sz.name, &OffloadConfig::default()).unwrap();
+            for trial in &r.trials {
+                let stages: Vec<char> = trial.variant.chars().skip(1).collect();
+                assert!(
+                    trial.variant == "cpu" || (1..=2).contains(&stages.len()),
+                    "variant {} not lowered by aot.py",
+                    trial.variant
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn analysis_bindings_change_results() {
+    let reg = registry();
+    let app = find(&reg, "mriq").unwrap();
+    let small = PerfModel::new(app.program(), &app.bindings("small"), D5005)
+        .unwrap()
+        .cpu_request_time();
+    let xlarge = PerfModel::new(app.program(), &app.bindings("xlarge"), D5005)
+        .unwrap()
+        .cpu_request_time();
+    assert!(
+        (3.0..5.0).contains(&(xlarge / small)),
+        "4x voxels => ~4x time, got {}",
+        xlarge / small
+    );
+    let _ = Bindings::new();
+}
+
+// ---------------------------------------------------------------------------
+// Failure injection & edge cases
+// ---------------------------------------------------------------------------
+
+#[test]
+fn empty_history_fails_analysis_cleanly() {
+    let mut env = ProductionEnv::new(registry(), D5005);
+    env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.0);
+    let mut approval = Approval::auto_yes();
+    let r = run_reconfiguration(&mut env, &ReconConfig::default(), &mut approval);
+    assert!(r.is_err(), "no history must be a clean error, not a panic");
+    assert!(env.device.serves("tdfir"), "production untouched on failure");
+}
+
+#[test]
+fn unknown_app_requests_are_rejected_not_panicking() {
+    let mut env = ProductionEnv::new(registry(), D5005);
+    let bogus = repro::workload::Request {
+        id: 0,
+        app: "ghost".into(),
+        size: "large".into(),
+        arrival: 1.0,
+        bytes: 1.0,
+    };
+    assert!(env.serve(&bogus).is_err());
+    assert!(env.history.is_empty());
+}
+
+#[test]
+fn zero_duration_trace_is_empty_and_run_window_rejects_it() {
+    let reg = registry();
+    let trace = generate(&reg, 0.0, 1);
+    assert!(trace.is_empty());
+    let mut env = ProductionEnv::new(registry(), D5005);
+    assert!(env.run_window(&trace).is_err());
+}
+
+#[test]
+fn zero_rate_app_never_appears() {
+    let mut reg = registry();
+    let cfg = repro::coordinator::config::RunConfig::parse(
+        r#"{"rates_per_hour": {"tdfir": 0}}"#,
+    )
+    .unwrap();
+    cfg.apply_rates(&mut reg);
+    let trace = generate(&reg, 4.0 * 3600.0, 11);
+    assert!(trace.iter().all(|r| r.app != "tdfir"));
+    assert!(trace.iter().any(|r| r.app == "mriq"));
+}
+
+#[test]
+fn runtime_missing_artifact_is_a_clean_error() {
+    if let Ok(mut rt) = repro::runtime::Runtime::new("artifacts") {
+        assert!(rt.load("no_such_artifact").is_err());
+        assert!(rt.execute_seeded("tdfir__large__o99", 0).is_err());
+    }
+}
+
+#[test]
+fn manifest_rejects_corruption() {
+    use repro::runtime::Manifest;
+    assert!(Manifest::parse("{}").is_err());
+    assert!(Manifest::parse(r#"{"artifacts": "not-a-list"}"#).is_err());
+    assert!(Manifest::parse(r#"{"artifacts": [{"app": 3}]}"#).is_err());
+}
+
+#[test]
+fn config_file_end_to_end() {
+    // A config that shrinks the farm and relaxes the threshold still runs
+    // the full cycle.
+    let cfg = repro::coordinator::config::RunConfig::parse(
+        r#"{"threshold": 1.5, "farm_slots": 4, "compile_hours": 0.5, "seed": 42}"#,
+    )
+    .unwrap();
+    let mut env = paper_env(cfg.seed);
+    let mut approval = Approval::auto_yes();
+    let out = run_reconfiguration(&mut env, &cfg.recon, &mut approval).unwrap();
+    assert!(out.reconfig.is_some());
+    // 4 slots x 0.5 h compiles => the effect calculation is far below a day.
+    assert!(out.steps.search_virtual_secs <= 2.0 * 3600.0);
+}
+
+#[test]
+fn dynamic_reconfig_outage_is_ms_order_end_to_end() {
+    let mut env = paper_env(42);
+    let cfg = ReconConfig {
+        kind: repro::fpga::device::ReconfigKind::Dynamic,
+        ..Default::default()
+    };
+    let mut approval = Approval::auto_yes();
+    let out = run_reconfiguration(&mut env, &cfg, &mut approval).unwrap();
+    let rc = out.reconfig.unwrap();
+    assert!(rc.downtime_secs < 0.01, "{}", rc.downtime_secs);
+}
+
+#[test]
+fn requests_arriving_during_outage_complete_after_it() {
+    let mut env = ProductionEnv::new(registry(), D5005);
+    env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.0);
+    // A request arriving at t=0.5 (inside the 1 s deploy outage).
+    let req = repro::workload::Request {
+        id: 0,
+        app: "tdfir".into(),
+        size: "large".into(),
+        arrival: 0.5,
+        bytes: 2.2e6,
+    };
+    let rec = env.serve(&req).unwrap();
+    assert!(rec.start >= 1.0, "must wait out the outage, started {}", rec.start);
+    assert!(rec.finish > rec.start);
+    assert_eq!(rec.served_by, ServedBy::Fpga);
+}

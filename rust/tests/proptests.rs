@@ -1,0 +1,343 @@
+//! Property-based tests over the coordinator and substrate invariants,
+//! using the in-repo harness (util::check) — proptest is unavailable
+//! offline.
+
+use repro::apps::registry;
+use repro::coordinator::ProductionEnv;
+use repro::fpga::device::{FpgaDevice, ReconfigKind};
+use repro::fpga::part::D5005;
+use repro::loopir::interp::Interp;
+use repro::loopir::walk::{analyze, Bindings};
+use repro::util::check::{ensure, forall};
+use repro::util::json::Json;
+use repro::util::prng::Rng;
+use repro::util::stats::FreqDist;
+use repro::workload::{generate, trace_from_json, trace_to_json};
+
+/// JSON: arbitrary value trees round-trip through render + parse.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f64() < 0.5),
+            2 => {
+                // Mix integers and fractions.
+                if rng.next_f64() < 0.5 {
+                    Json::Num(rng.range_i64(-1_000_000, 1_000_000) as f64)
+                } else {
+                    Json::Num((rng.next_f64() - 0.5) * 1e6)
+                }
+            }
+            3 => {
+                let n = rng.next_below(8);
+                Json::Str((0..n).map(|_| "aあ\"\\\n€x"
+                    .chars()
+                    .nth(rng.next_below(7) as usize)
+                    .unwrap()).collect())
+            }
+            4 => Json::Arr(
+                (0..rng.next_below(4))
+                    .map(|_| gen_value(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => {
+                let mut o = Json::obj();
+                for i in 0..rng.next_below(4) {
+                    o = o.set(&format!("k{i}"), gen_value(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    forall(
+        200,
+        0xA11CE,
+        |rng| gen_value(rng, 3),
+        |v| {
+            let compact = Json::parse(&v.to_string())
+                .map_err(|e| format!("compact reparse: {e}"))?;
+            ensure(&compact == v, "compact mismatch")?;
+            let pretty = Json::parse(&v.to_pretty())
+                .map_err(|e| format!("pretty reparse: {e}"))?;
+            ensure(&pretty == v, "pretty mismatch")
+        },
+    );
+}
+
+/// FreqDist: the mode bin always holds the max count, and in_mode agrees.
+#[test]
+fn prop_freqdist_mode_is_argmax() {
+    forall(
+        100,
+        0xB0B,
+        |rng| {
+            let n = 1 + rng.next_below(200) as usize;
+            (0..n)
+                .map(|_| rng.next_f64() * 1e7)
+                .collect::<Vec<f64>>()
+        },
+        |xs| {
+            let mut d = FreqDist::new(1e6);
+            for &x in xs {
+                d.add(x);
+            }
+            let mode = d.mode_bin().ok_or("no mode")?;
+            let mode_count = d.bins().find(|(b, _)| *b == mode).map(|(_, c)| c).unwrap();
+            for (b, c) in d.bins() {
+                ensure(c <= mode_count, format!("bin {b} beats mode"))?;
+            }
+            ensure(d.total() as usize == xs.len(), "total mismatch")
+        },
+    );
+}
+
+/// gcov equivalence: for random loop programs, the interpreter's dynamic
+/// statement counts equal the analytic innermost-trip counts.
+#[test]
+fn prop_analytic_trips_equal_measured() {
+    forall(
+        60,
+        0xC0DE,
+        |rng| {
+            // Random perfect nest depth 1-3 with random bounds 1..6 and a
+            // couple of statements.
+            let depth = 1 + rng.next_below(3);
+            let bounds: Vec<u64> = (0..depth).map(|_| 1 + rng.next_below(5)).collect();
+            bounds
+        },
+        |bounds| {
+            let vars = ["i", "j", "k"];
+            let mut src = String::from("app t;\nparam N = 8;\narray y[N]: f32 out;\n");
+            src.push_str("stage s ");
+            for (d, b) in bounds.iter().enumerate() {
+                src.push_str(&format!("loop {} in 0..{} ", vars[d], b));
+            }
+            src.push_str("{ y[0] += 1.0; }\n");
+            let prog = repro::loopir::parse(&src).map_err(|e| e.to_string())?;
+            let counts =
+                analyze(&prog, &Bindings::new()).map_err(|e| e.to_string())?;
+            let mut it = Interp::new(&prog, &Bindings::new()).map_err(|e| e.to_string())?;
+            it.run().map_err(|e| e.to_string())?;
+            let expect: u64 = bounds.iter().product();
+            ensure(
+                counts[0].inner_trips == expect as f64,
+                format!("analytic {} != {}", counts[0].inner_trips, expect),
+            )?;
+            ensure(
+                it.nest_counts[0] == expect,
+                format!("measured {} != {}", it.nest_counts[0], expect),
+            )
+        },
+    );
+}
+
+/// FPGA device: scheduled requests never overlap and never start inside
+/// an outage window.
+#[test]
+fn prop_device_fifo_no_overlap() {
+    forall(
+        100,
+        0xD17E,
+        |rng| {
+            let n = 2 + rng.next_below(30) as usize;
+            let arrivals: Vec<f64> = {
+                let mut t = 0.0;
+                (0..n)
+                    .map(|_| {
+                        t += rng.next_f64() * 2.0;
+                        t
+                    })
+                    .collect()
+            };
+            let services: Vec<f64> =
+                (0..n).map(|_| 0.01 + rng.next_f64()).collect();
+            let reconfig_at = rng.next_f64() * 10.0;
+            (arrivals, services, reconfig_at)
+        },
+        |(arrivals, services, reconfig_at)| {
+            let mut dev = FpgaDevice::new(D5005);
+            dev.reconfigure(*reconfig_at, ReconfigKind::Static, "a", "o1");
+            let outage_end = reconfig_at + 1.0;
+            let mut prev_finish = 0.0f64;
+            for (&a, &s) in arrivals.iter().zip(services) {
+                let (start, finish) = dev.schedule(a, s);
+                ensure(start + 1e-12 >= a, "started before arrival")?;
+                ensure(
+                    start + 1e-12 >= prev_finish,
+                    format!("overlap: start {start} < prev finish {prev_finish}"),
+                )?;
+                ensure(
+                    start + 1e-9 >= outage_end || finish <= *reconfig_at + 1e-9,
+                    format!("request ran inside outage: start {start}"),
+                )?;
+                prev_finish = finish;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Workload traces: JSON round-trip preserves every request, arrivals
+/// stay sorted, and per-app counts are seed-stable.
+#[test]
+fn prop_trace_roundtrip_any_duration() {
+    let reg = registry();
+    forall(
+        25,
+        0xF00D,
+        |rng| (60.0 + rng.next_f64() * 7200.0, rng.next_u64()),
+        |(dur, seed)| {
+            let a = generate(&reg, *dur, *seed);
+            let j = trace_to_json(&a);
+            let b = trace_from_json(&Json::parse(&j.to_string()).unwrap())
+                .map_err(|e| e.to_string())?;
+            ensure(a.len() == b.len(), "length changed")?;
+            for (x, y) in a.iter().zip(&b) {
+                ensure(x.app == y.app && x.size == y.size, "record changed")?;
+                ensure((x.arrival - y.arrival).abs() < 1e-9, "arrival drift")?;
+            }
+            for w in b.windows(2) {
+                ensure(w[0].arrival <= w[1].arrival, "unsorted")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// History accounting: served totals equal the sum over the records, and
+/// corrected totals scale exactly by the deployment coefficient.
+#[test]
+fn prop_history_accounting() {
+    let reg = registry();
+    forall(
+        15,
+        0xACC7,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let mut env = ProductionEnv::new(registry(), D5005);
+            env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.0);
+            let trace = generate(&reg, 900.0, seed);
+            if trace.is_empty() {
+                return Ok(());
+            }
+            env.run_window(&trace).map_err(|e| e.to_string())?;
+            ensure(env.history.len() == trace.len(), "dropped requests")?;
+            let manual: f64 = env
+                .history
+                .all()
+                .iter()
+                .filter(|r| r.app == "tdfir")
+                .map(|r| r.service_secs)
+                .sum();
+            let (sum, _) = env.history.totals_in_window("tdfir", 0.0, f64::INFINITY);
+            ensure((manual - sum).abs() < 1e-9, "window total mismatch")
+        },
+    );
+}
+
+/// Lexer/parser fuzz: random byte soup must error cleanly, never panic.
+#[test]
+fn prop_parser_never_panics() {
+    forall(
+        300,
+        0x5EED,
+        |rng| {
+            let n = rng.next_below(120) as usize;
+            let alphabet: Vec<char> =
+                "abzN09 _;:{}[]()=+-*/.,\n\t\"loop stage param array in out f32 cos .."
+                    .chars()
+                    .collect();
+            (0..n)
+                .map(|_| alphabet[rng.next_below(alphabet.len() as u64) as usize])
+                .collect::<String>()
+        },
+        |src| {
+            // Any outcome but a panic is fine.
+            let _ = repro::loopir::parse(src);
+            Ok(())
+        },
+    );
+}
+
+/// Pretty-printer: parse(print(p)) == p for every embedded app under
+/// random size overrides (bindings don't affect the AST, but analysis of
+/// the reparsed program must agree too).
+#[test]
+fn prop_pretty_roundtrip_preserves_analysis() {
+    let reg = registry();
+    forall(
+        20,
+        0x9E77,
+        |rng| rng.next_below(5) as usize,
+        |&i| {
+            let app = &reg[i];
+            let p1 = app.program().clone();
+            let printed = repro::loopir::pretty::print_program(&p1);
+            let p2 = repro::loopir::parse(&printed).map_err(|e| e.to_string())?;
+            ensure(p1 == p2, "AST changed through pretty-print")?;
+            let a1 = analyze(&p1, &Bindings::new()).map_err(|e| e.to_string())?;
+            let a2 = analyze(&p2, &Bindings::new()).map_err(|e| e.to_string())?;
+            for (x, y) in a1.iter().zip(&a2) {
+                ensure(x.inner_trips == y.inner_trips, "trips changed")?;
+                ensure(x.ops == y.ops, "ops changed")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// OpenCL codegen structural invariants: balanced braces, one __kernel per
+/// offloaded nest, every offloaded stage absent from the host source.
+#[test]
+fn prop_opencl_structure() {
+    let reg = registry();
+    forall(
+        60,
+        0x0C10,
+        |rng| {
+            let app = rng.next_below(5) as usize;
+            let nstages = 1 + rng.next_below(2) as usize;
+            (app, nstages, rng.next_u64())
+        },
+        |&(app_i, nstages, seed)| {
+            let app = &reg[app_i];
+            let prog = app.program();
+            let stages: Vec<usize> = prog
+                .nests
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| n.stage.is_some())
+                .map(|(i, _)| i)
+                .collect();
+            let mut rng = Rng::new(seed);
+            let mut chosen: Vec<usize> = Vec::new();
+            while chosen.len() < nstages {
+                let c = stages[rng.next_below(stages.len() as u64) as usize];
+                if !chosen.contains(&c) {
+                    chosen.push(c);
+                }
+            }
+            let pair = repro::opencl::generate(prog, &chosen);
+            let opens = pair.kernel_src.matches('{').count();
+            let closes = pair.kernel_src.matches('}').count();
+            ensure(opens == closes, format!("unbalanced braces {opens}/{closes}"))?;
+            ensure(
+                pair.kernel_src.matches("__kernel").count() == chosen.len(),
+                "kernel count mismatch",
+            )?;
+            ensure(
+                pair.kernel_names.len() == chosen.len(),
+                "kernel names mismatch",
+            )?;
+            for &ni in &chosen {
+                let stage = prog.nests[ni].stage.clone().unwrap();
+                ensure(
+                    pair.host_src.contains(&format!("{stage}_kernel")),
+                    format!("host missing enqueue for {stage}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}

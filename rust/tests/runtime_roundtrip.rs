@@ -1,0 +1,146 @@
+//! End-to-end runtime tests: load real AOT artifacts through PJRT, execute
+//! them, and check cross-variant equivalence — the property that makes a
+//! production reconfiguration invisible to users.
+//!
+//! Requires `make artifacts` (skipped gracefully otherwise).
+
+use repro::runtime::Runtime;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::new("artifacts") {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping runtime tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_has_full_artifact_set() {
+    let Some(rt) = runtime_or_skip() else { return };
+    // 5 apps x (cpu + 4 singles + 6 pairs) x sizes {3,3,1,1,1} = 99.
+    assert_eq!(rt.manifest.len(), 99, "artifact count");
+    for key in [
+        "tdfir__small__cpu",
+        "tdfir__large__o1",
+        "tdfir__xlarge__o12",
+        "mriq__large__o13",
+        "himeno__sample__o1",
+        "symm__sample__o01",
+        "dft__sample__o23",
+    ] {
+        assert!(rt.manifest.get(key).is_some(), "missing {key}");
+    }
+}
+
+#[test]
+fn executes_cpu_artifacts_of_every_app() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    for (key, outputs) in [
+        ("tdfir__small__cpu", 3),
+        ("mriq__small__cpu", 3),
+        ("himeno__sample__cpu", 2),
+        ("symm__sample__cpu", 2),
+        ("dft__sample__cpu", 3),
+    ] {
+        let out = rt.execute_seeded(key, 1).expect(key);
+        assert_eq!(out.outputs.len(), outputs, "{key}");
+        // Outputs must be finite (no NaN/Inf from the lowering).
+        for (i, o) in out.outputs.iter().enumerate() {
+            let v = o.to_vec::<f32>().expect("f32 outputs");
+            assert!(!v.is_empty());
+            assert!(
+                v.iter().all(|x| x.is_finite()),
+                "{key} output {i} has non-finite values"
+            );
+        }
+    }
+}
+
+#[test]
+fn offloaded_variants_match_cpu_variant() {
+    // The reconfiguration-safety invariant: every offload pattern computes
+    // the same function as the CPU build, on identical request payloads.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let cases = [
+        ("tdfir__small__cpu", "tdfir__small__o1"),
+        ("tdfir__small__cpu", "tdfir__small__o12"),
+        ("mriq__small__cpu", "mriq__small__o1"),
+        ("mriq__small__cpu", "mriq__small__o13"),
+        ("himeno__sample__cpu", "himeno__sample__o1"),
+        ("himeno__sample__cpu", "himeno__sample__o12"),
+        ("symm__sample__cpu", "symm__sample__o1"),
+        ("dft__sample__cpu", "dft__sample__o1"),
+    ];
+    for (cpu, var) in cases {
+        let diff = rt.compare_variants(cpu, var, 7).expect(var);
+        assert!(diff < 2e-2, "{cpu} vs {var}: max abs diff {diff}");
+    }
+}
+
+#[test]
+fn swap_measures_wall_clock_downtime() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    // Warm path: serve tdfir, then statically "reconfigure" to mriq.
+    rt.load("tdfir__large__o1").unwrap();
+    let report = rt
+        .swap(Some("tdfir__large__o1"), "mriq__small__o1")
+        .unwrap();
+    assert!(report.total_secs() > 0.0);
+    // The paper's static reconfiguration is ~1 s; the PJRT swap must be
+    // at most the same order (it is a compile + warm-up).
+    assert!(
+        report.total_secs() < 30.0,
+        "swap took {}s",
+        report.total_secs()
+    );
+    assert!(!rt.is_loaded("tdfir__large__o1"));
+    assert!(rt.is_loaded("mriq__small__o1"));
+}
+
+#[test]
+fn deterministic_inputs_for_seed() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let a = rt.execute_seeded("dft__sample__cpu", 5).unwrap();
+    let b = rt.execute_seeded("dft__sample__cpu", 5).unwrap();
+    let va = a.outputs[0].to_vec::<f32>().unwrap();
+    let vb = b.outputs[0].to_vec::<f32>().unwrap();
+    assert_eq!(va, vb);
+    let c = rt.execute_seeded("dft__sample__cpu", 6).unwrap();
+    let vc = c.outputs[0].to_vec::<f32>().unwrap();
+    assert_ne!(va, vc);
+}
+
+#[test]
+fn rust_oracle_spot_check_dft() {
+    // Independent numeric check: the dft cpu artifact's transform output
+    // must match a naive rust DFT on the same generated inputs.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let meta = rt.manifest.get("dft__sample__cpu").unwrap().clone();
+    let inputs = Runtime::gen_inputs(&meta, 3).unwrap();
+    let xr = inputs[0].to_vec::<f32>().unwrap();
+    let xi = inputs[1].to_vec::<f32>().unwrap();
+    let out = rt.execute("dft__sample__cpu", &inputs).unwrap();
+    let got_r = out.outputs[0].to_vec::<f32>().unwrap();
+
+    // Naive oracle: window then DFT (matches kernels/ref.py).
+    let n = xr.len();
+    let hann: Vec<f32> = (0..n)
+        .map(|i| 0.5 - 0.5 * (2.0 * std::f32::consts::PI * i as f32 / n as f32).cos())
+        .collect();
+    let wr: Vec<f32> = xr.iter().zip(&hann).map(|(x, w)| x * w).collect();
+    let wi: Vec<f32> = xi.iter().zip(&hann).map(|(x, w)| x * w).collect();
+    for k in [0usize, 1, n / 2, n - 1] {
+        let mut acc = 0.0f64;
+        for j in 0..n {
+            let ang = 2.0 * std::f64::consts::PI * (k as f64) * (j as f64) / n as f64;
+            acc += wr[j] as f64 * ang.cos() + wi[j] as f64 * ang.sin();
+        }
+        assert!(
+            (acc - got_r[k] as f64).abs() < 1e-2 * (1.0 + acc.abs()),
+            "bin {k}: oracle {acc} vs artifact {}",
+            got_r[k]
+        );
+    }
+}
