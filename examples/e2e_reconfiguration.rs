@@ -51,38 +51,42 @@ fn main() -> anyhow::Result<()> {
     env.deploy(ReconfigKind::Static, "tdfir", &pre.best.variant, pre.improvement);
 
     // ---- 2. one production hour, with sampled REAL executions -------------
+    let td_id = repro::apps::app_id(&env.registry, "tdfir").unwrap();
     let trace = generate(&env.registry, 3600.0, seed);
     println!(
         "[2] production hour: {} requests ({} tdfir)",
         trace.len(),
-        trace.iter().filter(|r| r.app == "tdfir").count()
+        trace.iter().filter(|r| r.app == td_id).count()
     );
-    let mut validated: BTreeSet<(String, String)> = BTreeSet::new();
+    let mut validated: BTreeSet<(repro::apps::AppId, repro::apps::SizeId)> =
+        BTreeSet::new();
     let mut real_execs = Table::new(vec![
         "request", "artifact", "exec wall", "vs cpu-variant |diff|",
     ]);
     for req in &trace {
         let rec = env.serve(req)?;
-        let class = (req.app.clone(), req.size.clone());
+        let class = (req.app, req.size);
         if !validated.contains(&class) {
             validated.insert(class);
             // Execute this request's real artifact: the variant the card
             // serves for the deployed app, cpu build otherwise.
-            let app = find(&reg, &req.app).unwrap();
+            let app_name = env.app_name(req.app).to_string();
+            let size_name = env.size_name(req.app, req.size).to_string();
+            let app = find(&reg, &app_name).unwrap();
             let variant = if rec.served_by == ServedBy::Fpga {
-                env.deployment.as_ref().unwrap().variant.clone()
+                env.deployment.as_ref().unwrap().variant.name()
             } else {
                 "cpu".to_string()
             };
-            let key = app.artifact_key(&req.size, &variant);
+            let key = app.artifact_key(&size_name, &variant);
             let out = rt.execute_seeded(&key, req.id)?;
             let diff = rt.compare_variants(
-                &app.artifact_key(&req.size, "cpu"),
+                &app.artifact_key(&size_name, "cpu"),
                 &key,
                 req.id,
             )?;
             real_execs.row(vec![
-                format!("{}@{}", req.app, req.size),
+                format!("{app_name}@{size_name}"),
                 key,
                 fmt_secs(out.exec_secs),
                 format!("{diff:.2e}"),
@@ -133,6 +137,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // ---- 4. the hour after: MRI-Q rides the FPGA --------------------------
+    let mq_id = repro::apps::app_id(&env.registry, "mriq").unwrap();
     let t0 = env.clock.now() + 1.0;
     let mut after = generate(&env.registry, 3600.0, seed + 1);
     for r in &mut after {
@@ -143,20 +148,20 @@ fn main() -> anyhow::Result<()> {
         .history
         .all()
         .iter()
-        .filter(|r| r.arrival >= t0 && r.app == "mriq" && r.served_by == ServedBy::Fpga)
+        .filter(|r| r.arrival >= t0 && r.app == mq_id && r.served_by == ServedBy::Fpga)
         .count();
     let mriq_total = env
         .history
         .all()
         .iter()
-        .filter(|r| r.arrival >= t0 && r.app == "mriq")
+        .filter(|r| r.arrival >= t0 && r.app == mq_id)
         .count();
     let mean_after: f64 = {
         let recs: Vec<_> = env
             .history
             .all()
             .iter()
-            .filter(|r| r.arrival >= t0 && r.app == "mriq")
+            .filter(|r| r.arrival >= t0 && r.app == mq_id)
             .collect();
         recs.iter().map(|r| r.service_secs).sum::<f64>() / recs.len().max(1) as f64
     };

@@ -36,7 +36,8 @@ fn main() -> anyhow::Result<()> {
     );
     let trace = generate(&env.registry, 600.0, 1);
     env.run_window(&trace)?;
-    let (sum, n) = env.history.totals_in_window("tdfir", 0.0, f64::INFINITY);
+    let td = repro::apps::app_id(&env.registry, "tdfir").unwrap();
+    let (sum, n) = env.history.totals_in_window(td, 0.0, f64::INFINITY);
     println!(
         "served {} requests ({} tdfir on FPGA, mean {})",
         trace.len(),

@@ -37,12 +37,14 @@ fn ablation_mode_vs_mean() {
     );
     let reg = registry();
     let app = find(&reg, "tdfir").unwrap();
+    let td = repro::apps::app_id(&reg, "tdfir").unwrap();
+    let large = app.size_id("large").unwrap();
 
     // One production hour of tdfir requests — drifted to a bimodal mix
     // (the `large` assumption from pre-launch no longer holds at all).
     let trace: Vec<_> = generate(&reg, 3600.0, 42)
         .into_iter()
-        .filter(|r| r.app == "tdfir" && r.size != "large")
+        .filter(|r| r.app == td && r.size != large)
         .collect();
     let n = trace.len() as f64;
     let mean_bytes: f64 = trace.iter().map(|r| r.bytes).sum::<f64>() / n;
@@ -50,12 +52,12 @@ fn ablation_mode_vs_mean() {
     // Mode pick: the real modal class (what step 1-5 does).
     let mut counts = std::collections::BTreeMap::new();
     for r in &trace {
-        *counts.entry(r.size.clone()).or_insert(0u64) += 1;
+        *counts.entry(r.size).or_insert(0u64) += 1;
     }
     let mode_size = counts
         .iter()
         .max_by_key(|(_, c)| **c)
-        .map(|(s, _)| s.clone())
+        .map(|(s, _)| app.size_name(*s).unwrap().to_string())
         .unwrap();
 
     // Mean pick: the class whose byte size is nearest the mean — note the
@@ -78,7 +80,7 @@ fn ablation_mode_vs_mean() {
     let true_effect: f64 = trace
         .iter()
         .map(|r| {
-            let m = model(&r.size);
+            let m = model(app.size_name(r.size).unwrap());
             m.cpu_request_time() - m.request_time(&best.best.nests)
         })
         .sum();
@@ -104,7 +106,9 @@ fn ablation_mode_vs_mean() {
         "0%".to_string(),
     ]);
     print!("{}", t.render());
-    let mean_occurs = trace.iter().any(|r| r.size == mean_size);
+    let mean_occurs = trace
+        .iter()
+        .any(|r| app.size_name(r.size) == Some(mean_size));
     println!(
         "\nmean-nearest class `{mean_size}` occurs in the window: {mean_occurs}.\n\
          The paper's point is realizability, not estimator accuracy: step 2\n\

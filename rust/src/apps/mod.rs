@@ -8,11 +8,111 @@
 //!  * the mapping to validation-scale AOT artifacts (`artifacts/*.hlo.txt`)
 //!    executed by the runtime;
 //!  * the production request rates of §4.1.2.
+//!
+//! # Interned handles
+//!
+//! The production hot path never touches strings: [`AppId`] is the app's
+//! position in the registry, [`SizeId`] the size's position in
+//! `AppSpec::sizes`, and [`VariantId`] a bitmask over the app's
+//! offloadable stage indices (`VariantId(0)` is the pure-CPU build,
+//! bit *d* set means stage *d* is offloaded — so `"o13"` is `0b1010`).
+//! All three are `Copy`, comparable, and resolvable back to names, which
+//! is what lets `workload::Request`, `coordinator::history::RequestRecord`
+//! and the precomputed `fpga::perf::ServiceTimeTable` stay allocation-free.
 
-use once_cell::sync::OnceCell;
+use std::sync::OnceLock;
 
 use crate::loopir::walk::{io_bytes, Bindings};
 use crate::loopir::{parse, Program};
+
+/// Interned application handle: index into the registry slice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct AppId(pub u16);
+
+/// Interned size-class handle: index into `AppSpec::sizes`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SizeId(pub u16);
+
+/// Offloadable stages per app (every paper app marks exactly 4).
+pub const MAX_STAGES: usize = 4;
+
+/// Size of the dense variant axis: every subset of the 4 stages.
+pub const NUM_VARIANTS: usize = 1 << MAX_STAGES;
+
+/// Interned offload-variant handle: bitmask over stage indices.
+///
+/// `VariantId(0)` is `"cpu"`; bit `d` set offloads stage `d`, so the
+/// artifact naming convention maps bijectively: `"o1"` ⇔ `0b0010`,
+/// `"o13"` ⇔ `0b1010`, `"o0123"` ⇔ `0b1111`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct VariantId(pub u8);
+
+impl VariantId {
+    /// The pure-CPU (nothing offloaded) variant.
+    pub const CPU: VariantId = VariantId(0);
+
+    /// Dense index into a `NUM_VARIANTS`-wide table row.
+    pub fn index(self) -> usize {
+        self.0 as usize & (NUM_VARIANTS - 1)
+    }
+
+    pub fn is_cpu(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Parse an artifact variant name ("cpu", "o1", "o13", ...). Returns
+    /// `None` for names outside the canonical 4-stage naming scheme.
+    pub fn from_name(name: &str) -> Option<VariantId> {
+        if name == "cpu" {
+            return Some(VariantId::CPU);
+        }
+        let digits = name.strip_prefix('o')?;
+        if digits.is_empty() {
+            return None;
+        }
+        let mut mask = 0u8;
+        for c in digits.chars() {
+            let d = c.to_digit(10)? as usize;
+            if d >= MAX_STAGES {
+                return None;
+            }
+            mask |= 1 << d;
+        }
+        Some(VariantId(mask))
+    }
+
+    /// Canonical artifact variant name (sorted stage digits).
+    pub fn name(self) -> String {
+        if self.is_cpu() {
+            return "cpu".to_string();
+        }
+        let mut s = String::from("o");
+        for d in 0..MAX_STAGES {
+            if self.0 & (1 << d) != 0 {
+                s.push((b'0' + d as u8) as char);
+            }
+        }
+        s
+    }
+
+    /// Offloaded stage indices, ascending.
+    pub fn stages(self) -> impl Iterator<Item = usize> {
+        (0..MAX_STAGES).filter(move |d| self.0 & (1 << d) != 0)
+    }
+}
+
+/// Resolve an app name to its interned handle.
+pub fn app_id(registry: &[AppSpec], name: &str) -> Option<AppId> {
+    registry
+        .iter()
+        .position(|a| a.name == name)
+        .map(|i| AppId(i as u16))
+}
+
+/// Resolve an interned handle back to its spec.
+pub fn app_by_id(registry: &[AppSpec], id: AppId) -> Option<&AppSpec> {
+    registry.get(id.0 as usize)
+}
 
 /// One request size class.
 #[derive(Clone, Debug)]
@@ -33,7 +133,9 @@ pub struct AppSpec {
     pub sizes: Vec<SizeSpec>,
     /// Production request rate (requests per hour, §4.1.2).
     pub rate_per_hour: f64,
-    program: OnceCell<Program>,
+    program: OnceLock<Program>,
+    /// Per-size request input bytes, computed once (hot-path cache).
+    size_bytes: OnceLock<Vec<f64>>,
 }
 
 impl AppSpec {
@@ -45,6 +147,47 @@ impl AppSpec {
 
     pub fn size(&self, name: &str) -> Option<&SizeSpec> {
         self.sizes.iter().find(|s| s.name == name)
+    }
+
+    /// Interned handle for a size-class name.
+    pub fn size_id(&self, name: &str) -> Option<SizeId> {
+        self.sizes
+            .iter()
+            .position(|s| s.name == name)
+            .map(|i| SizeId(i as u16))
+    }
+
+    /// Size-class name for an interned handle.
+    pub fn size_name(&self, id: SizeId) -> Option<&'static str> {
+        self.sizes.get(id.0 as usize).map(|s| s.name)
+    }
+
+    /// Request input bytes for an interned size handle — table-backed, no
+    /// re-analysis after the first call per app.
+    pub fn request_bytes_id(&self, id: SizeId) -> Option<f64> {
+        let table = self.size_bytes.get_or_init(|| {
+            self.sizes
+                .iter()
+                .map(|s| self.request_bytes(s.name))
+                .collect()
+        });
+        table.get(id.0 as usize).copied()
+    }
+
+    /// Bitmask over *nest* indices for an interned variant (the shape
+    /// `fpga::perf::PerfModel::request_time_mask` consumes).
+    pub fn nest_mask_for_variant(&self, v: VariantId) -> u64 {
+        let names = self.stage_names();
+        let mut mask = 0u64;
+        for stage in v.stages() {
+            if let Some(nest) = names
+                .get(stage)
+                .and_then(|s| self.program().stage_nest_index(s))
+            {
+                mask |= 1 << nest;
+            }
+        }
+        mask
     }
 
     /// Parameter bindings for a size class.
@@ -154,7 +297,8 @@ pub fn registry() -> Vec<AppSpec> {
                 },
             ],
             rate_per_hour: 300.0,
-            program: OnceCell::new(),
+            program: OnceLock::new(),
+            size_bytes: OnceLock::new(),
         },
         AppSpec {
             name: "mriq",
@@ -180,7 +324,8 @@ pub fn registry() -> Vec<AppSpec> {
                 },
             ],
             rate_per_hour: 10.0,
-            program: OnceCell::new(),
+            program: OnceLock::new(),
+            size_bytes: OnceLock::new(),
         },
         AppSpec {
             name: "himeno",
@@ -192,7 +337,8 @@ pub fn registry() -> Vec<AppSpec> {
                 weight: 1.0,
             }],
             rate_per_hour: 3.0,
-            program: OnceCell::new(),
+            program: OnceLock::new(),
+            size_bytes: OnceLock::new(),
         },
         AppSpec {
             name: "symm",
@@ -204,7 +350,8 @@ pub fn registry() -> Vec<AppSpec> {
                 weight: 1.0,
             }],
             rate_per_hour: 2.0,
-            program: OnceCell::new(),
+            program: OnceLock::new(),
+            size_bytes: OnceLock::new(),
         },
         AppSpec {
             name: "dft",
@@ -216,7 +363,8 @@ pub fn registry() -> Vec<AppSpec> {
                 weight: 1.0,
             }],
             rate_per_hour: 1.0,
-            program: OnceCell::new(),
+            program: OnceLock::new(),
+            size_bytes: OnceLock::new(),
         },
     ]
 }

@@ -94,7 +94,7 @@ where
                 window: w,
                 requests: n,
                 outcome: None,
-                serving: env.deployment.as_ref().map(|d| d.app.clone()),
+                serving: env.deployment.map(|d| env.app_name(d.app).to_string()),
                 reconfigured: false,
             });
             continue;
@@ -139,7 +139,7 @@ where
         reports.push(WindowReport {
             window: w,
             requests: n,
-            serving: env.deployment.as_ref().map(|d| d.app.clone()),
+            serving: env.deployment.map(|d| env.app_name(d.app).to_string()),
             reconfigured,
             outcome: Some(outcome),
         });

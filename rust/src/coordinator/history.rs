@@ -1,4 +1,12 @@
 //! Commercial request history (the input of §3.3 step 1).
+//!
+//! Records carry interned [`AppId`]/[`SizeId`] handles, making
+//! [`RequestRecord`] `Copy`: appending to the store is a plain `Vec` push
+//! (amortized O(1), and allocation-free once [`HistoryStore::reserve`] has
+//! sized the buffer), and window queries compare 16-bit handles instead of
+//! strings.
+
+use crate::apps::{AppId, SizeId};
 
 /// Where a request was served.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -7,12 +15,12 @@ pub enum ServedBy {
     Fpga,
 }
 
-/// One served request.
-#[derive(Clone, Debug)]
+/// One served request. `Copy` — fixed 64-byte record, no heap.
+#[derive(Clone, Copy, Debug)]
 pub struct RequestRecord {
     pub id: u64,
-    pub app: String,
-    pub size: String,
+    pub app: AppId,
+    pub size: SizeId,
     pub bytes: f64,
     pub arrival: f64,
     pub start: f64,
@@ -43,6 +51,18 @@ impl HistoryStore {
         self.records.push(r);
     }
 
+    /// Pre-size the record buffer so a serving loop of `additional` more
+    /// requests never reallocates (the allocation-free serve invariant).
+    pub fn reserve(&mut self, additional: usize) {
+        self.records.reserve(additional);
+    }
+
+    /// Current record-buffer capacity (observability for the
+    /// allocation-free invariant).
+    pub fn capacity(&self) -> usize {
+        self.records.capacity()
+    }
+
     pub fn len(&self) -> usize {
         self.records.len()
     }
@@ -62,19 +82,19 @@ impl HistoryStore {
             .filter(move |r| r.arrival >= from && r.arrival < to)
     }
 
-    /// Distinct app names seen in a window.
-    pub fn apps_in_window(&self, from: f64, to: f64) -> Vec<String> {
-        let mut out: Vec<String> = Vec::new();
+    /// Distinct apps seen in a window.
+    pub fn apps_in_window(&self, from: f64, to: f64) -> Vec<AppId> {
+        let mut out: Vec<AppId> = Vec::new();
         for r in self.window(from, to) {
             if !out.contains(&r.app) {
-                out.push(r.app.clone());
+                out.push(r.app);
             }
         }
         out
     }
 
     /// (total service seconds, request count) per app in a window.
-    pub fn totals_in_window(&self, app: &str, from: f64, to: f64) -> (f64, u64) {
+    pub fn totals_in_window(&self, app: AppId, from: f64, to: f64) -> (f64, u64) {
         let mut sum = 0.0;
         let mut n = 0;
         for r in self.window(from, to) {
@@ -91,11 +111,11 @@ impl HistoryStore {
 mod tests {
     use super::*;
 
-    fn rec(app: &str, arrival: f64, service: f64) -> RequestRecord {
+    fn rec(app: u16, arrival: f64, service: f64) -> RequestRecord {
         RequestRecord {
             id: 0,
-            app: app.into(),
-            size: "large".into(),
+            app: AppId(app),
+            size: SizeId(1),
             bytes: 1e6,
             arrival,
             start: arrival,
@@ -108,23 +128,43 @@ mod tests {
     #[test]
     fn window_queries() {
         let mut h = HistoryStore::new();
-        h.push(rec("a", 0.0, 1.0));
-        h.push(rec("a", 10.0, 2.0));
-        h.push(rec("b", 20.0, 3.0));
+        h.push(rec(0, 0.0, 1.0));
+        h.push(rec(0, 10.0, 2.0));
+        h.push(rec(1, 20.0, 3.0));
         assert_eq!(h.window(0.0, 15.0).count(), 2);
-        assert_eq!(h.apps_in_window(0.0, 30.0), vec!["a", "b"]);
-        let (sum, n) = h.totals_in_window("a", 0.0, 30.0);
+        assert_eq!(h.apps_in_window(0.0, 30.0), vec![AppId(0), AppId(1)]);
+        let (sum, n) = h.totals_in_window(AppId(0), 0.0, 30.0);
         assert_eq!(sum, 3.0);
         assert_eq!(n, 2);
-        let (sum_b, n_b) = h.totals_in_window("b", 0.0, 15.0);
+        let (sum_b, n_b) = h.totals_in_window(AppId(1), 0.0, 15.0);
         assert_eq!(sum_b, 0.0);
         assert_eq!(n_b, 0);
     }
 
     #[test]
     fn wait_time() {
-        let mut r = rec("a", 5.0, 1.0);
+        let mut r = rec(0, 5.0, 1.0);
         r.start = 7.5;
         assert_eq!(r.wait_secs(), 2.5);
+    }
+
+    #[test]
+    fn record_is_copy() {
+        fn assert_copy<T: Copy>() {}
+        assert_copy::<RequestRecord>();
+        assert!(std::mem::size_of::<RequestRecord>() <= 64);
+    }
+
+    #[test]
+    fn reserve_prevents_regrowth() {
+        let mut h = HistoryStore::new();
+        h.reserve(100);
+        let cap_before = h.capacity();
+        assert!(cap_before >= 100);
+        for i in 0..100 {
+            h.push(rec(0, i as f64, 1.0));
+        }
+        assert_eq!(h.len(), 100);
+        assert_eq!(h.capacity(), cap_before, "reserve must pre-size the buffer");
     }
 }

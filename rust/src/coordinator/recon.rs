@@ -18,6 +18,7 @@
 
 use std::time::Instant;
 
+use crate::apps::AppId;
 use crate::fpga::device::{ReconfigKind, ReconfigReport};
 use crate::offload::{self, OffloadConfig, OffloadResult};
 use crate::util::stats::FreqDist;
@@ -58,7 +59,9 @@ impl Default for ReconConfig {
 /// Step 1-1..1-3: one app's corrected load.
 #[derive(Clone, Debug)]
 pub struct LoadRanking {
+    /// App name (for reports); [`LoadRanking::app_id`] is the interned form.
     pub app: String,
+    pub app_id: AppId,
     /// Measured service-time sum in the window.
     pub actual_total_secs: f64,
     /// Corrected by the improvement coefficient (CPU-equivalent).
@@ -149,10 +152,9 @@ pub fn analyze_load(
     // 1-1/1-2: corrected totals per app.
     let mut rankings: Vec<LoadRanking> = Vec::new();
     for app in env.history.apps_in_window(from, now) {
-        let (actual, count) = env.history.totals_in_window(&app, from, now);
+        let (actual, count) = env.history.totals_in_window(app, from, now);
         let coef = env
             .deployment
-            .as_ref()
             .filter(|d| d.app == app)
             .map(|d| d.improvement_coef)
             .unwrap_or(1.0);
@@ -161,7 +163,8 @@ pub fn analyze_load(
             actual_total_secs: actual,
             usage_count: count,
             coef,
-            app,
+            app: env.app_name(app).to_string(),
+            app_id: app,
         });
     }
     // 1-3: sort by corrected totals, descending.
@@ -177,7 +180,7 @@ pub fn analyze_load(
     for r in rankings.iter().take(cfg.top_apps) {
         let mut dist = FreqDist::new(cfg.bin_width_bytes);
         for rec in env.history.window(short_from, now) {
-            if rec.app == r.app {
+            if rec.app == r.app_id {
                 dist.add(rec.bytes);
             }
         }
@@ -188,7 +191,7 @@ pub fn analyze_load(
         let chosen = env
             .history
             .window(short_from, now)
-            .find(|rec| rec.app == r.app && dist.in_mode(rec.bytes))
+            .find(|rec| rec.app == r.app_id && dist.in_mode(rec.bytes))
             .expect("modal bin must contain a request");
         let mode_count = dist
             .bins()
@@ -197,7 +200,7 @@ pub fn analyze_load(
             .unwrap_or(0);
         reps.push(Representative {
             app: r.app.clone(),
-            size: chosen.size.clone(),
+            size: env.size_name(r.app_id, chosen.size).to_string(),
             bytes: chosen.bytes,
             mode_lo: lo,
             mode_hi: hi,
@@ -240,29 +243,31 @@ pub fn run_reconfiguration(
     };
 
     // 3-1: current pattern's effect on ITS representative data.
-    let current = if let Some(dep) = env.deployment.clone() {
+    let current = if let Some(dep) = env.deployment {
+        let dep_app = env.app_name(dep.app).to_string();
+        let dep_variant = dep.variant.name();
         // Representative for the current app: from the top list if present,
         // else its own modal size over the short window.
         let rep_size = representatives
             .iter()
-            .find(|r| r.app == dep.app)
+            .find(|r| r.app == dep_app)
             .map(|r| r.size.clone())
             .unwrap_or_else(|| {
-                // Fall back to the app's most common size in history.
+                // Fall back to the app's most recent size in history.
                 env.history
                     .all()
                     .iter()
                     .rev()
                     .find(|r| r.app == dep.app)
-                    .map(|r| r.size.clone())
+                    .map(|r| env.size_name(dep.app, r.size).to_string())
                     .unwrap_or_else(|| "large".to_string())
             });
-        let cpu = env.cpu_time(&dep.app, &rep_size)?;
-        let cur = env.offloaded_time(&dep.app, &rep_size, &dep.variant)?;
-        let usage = usage_of(&rankings, &dep.app);
+        let cpu = env.cpu_time(&dep_app, &rep_size)?;
+        let cur = env.offloaded_time(&dep_app, &rep_size, &dep_variant)?;
+        let usage = usage_of(&rankings, &dep_app);
         EffectEstimate {
-            app: dep.app.clone(),
-            variant: dep.variant.clone(),
+            app: dep_app,
+            variant: dep_variant,
             cpu_secs: cpu,
             pattern_secs: cur,
             reduction_per_req: cpu - cur,

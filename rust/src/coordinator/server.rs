@@ -6,23 +6,35 @@
 //! its requests through the FPGA (serialized FIFO on the single kernel
 //! pipeline), everything else runs on the CPU pool (the Xeon's cores are
 //! never saturated at 316 req/h, so CPU requests start on arrival).
+//!
+//! # The allocation-free request path
+//!
+//! [`ProductionEnv::new`] precomputes a [`ServiceTimeTable`] — the service
+//! time of every (app, size, variant) triple, derived from the same
+//! [`PerfModel`] math the offload search uses. [`ProductionEnv::serve`]
+//! then routes a request with two array indexes and a `Copy` record
+//! append: no hashing, no string keys, no per-request re-analysis, and no
+//! heap allocation on the steady-state path (verified by the
+//! allocation-counting probe in `tests/serve_alloc.rs`).
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 
-use crate::apps::AppSpec;
+use crate::apps::{app_id, AppId, AppSpec, SizeId, VariantId};
 use crate::fpga::device::{FpgaDevice, ReconfigKind, ReconfigReport};
 use crate::fpga::part::Part;
-use crate::fpga::perf::PerfModel;
+use crate::fpga::perf::{PerfModel, ServiceTimeTable};
 use crate::simtime::Clock;
 use crate::workload::Request;
 
 use super::history::{HistoryStore, RequestRecord, ServedBy};
 
 /// The currently deployed FPGA logic and its pre-launch calibration.
-#[derive(Clone, Debug)]
+/// Interned handles only — `Copy`, compared per request without allocation.
+#[derive(Clone, Copy, Debug)]
 pub struct Deployment {
-    pub app: String,
-    pub variant: String,
+    pub app: AppId,
+    pub variant: VariantId,
     /// 改善度係数: (CPU-only time) / (offloaded time), measured on the
     /// assumed data before launch (step 1-1 uses it to correct totals).
     pub improvement_coef: f64,
@@ -36,54 +48,113 @@ pub struct ProductionEnv {
     pub clock: Clock,
     pub history: HistoryStore,
     pub part: Part,
-    /// Perf models cached per (app, size).
+    /// Dense (app × size × variant) service times, built at construction.
+    pub table: ServiceTimeTable,
+    /// Perf models cached per (app, size) — compat shim for callers that
+    /// need the full model (effect estimation, calibration tests).
     models: HashMap<(String, String), PerfModel>,
 }
 
 impl ProductionEnv {
+    /// Build the environment and precompute the full service-time table.
+    ///
+    /// Panics if an embedded `.lc` source fails analysis — the registry is
+    /// static, so that is a build defect, not an operational error.
     pub fn new(registry: Vec<AppSpec>, part: Part) -> Self {
+        let table = ServiceTimeTable::build(&registry, part)
+            .expect("service-time table for the static registry");
         ProductionEnv {
-            registry,
             device: FpgaDevice::new(part),
             deployment: None,
             clock: Clock::new(),
             history: HistoryStore::new(),
             part,
+            table,
             models: HashMap::new(),
+            registry,
         }
+    }
+
+    /// Reset the operational state (clock, card, history, deployment) while
+    /// keeping the precomputed table and model cache — used by benches to
+    /// replay traces on a warm environment.
+    pub fn reset(&mut self) {
+        self.device = FpgaDevice::new(self.part);
+        self.deployment = None;
+        self.clock = Clock::new();
+        self.history = HistoryStore::new();
     }
 
     pub fn app(&self, name: &str) -> Option<&AppSpec> {
         self.registry.iter().find(|a| a.name == name)
     }
 
-    /// Perf model for (app, size), cached.
-    pub fn model(&mut self, app: &str, size: &str) -> anyhow::Result<&PerfModel> {
-        let key = (app.to_string(), size.to_string());
-        if !self.models.contains_key(&key) {
-            let spec = self
-                .registry
-                .iter()
-                .find(|a| a.name == app)
-                .ok_or_else(|| anyhow::anyhow!("unknown app `{app}`"))?;
-            let m = PerfModel::new(spec.program(), &spec.bindings(size), self.part)?;
-            self.models.insert(key.clone(), m);
-        }
-        Ok(&self.models[&key])
+    /// App name for an interned handle ("?" for out-of-range handles).
+    pub fn app_name(&self, id: AppId) -> &str {
+        self.registry
+            .get(id.0 as usize)
+            .map(|a| a.name)
+            .unwrap_or("?")
     }
 
-    /// CPU-only service time for (app, size).
-    pub fn cpu_time(&mut self, app: &str, size: &str) -> anyhow::Result<f64> {
-        Ok(self.model(app, size)?.cpu_request_time())
+    /// Size name for an interned (app, size) pair.
+    pub fn size_name(&self, app: AppId, size: SizeId) -> &str {
+        self.registry
+            .get(app.0 as usize)
+            .and_then(|a| a.size_name(size))
+            .unwrap_or("?")
+    }
+
+    /// Resolve (app, size) names to interned handles.
+    pub fn resolve(&self, app: &str, size: &str) -> anyhow::Result<(AppId, SizeId)> {
+        let a = app_id(&self.registry, app)
+            .ok_or_else(|| anyhow::anyhow!("unknown app `{app}`"))?;
+        let s = self.registry[a.0 as usize]
+            .size_id(size)
+            .ok_or_else(|| anyhow::anyhow!("unknown size `{size}` for app `{app}`"))?;
+        Ok((a, s))
+    }
+
+    /// Perf model for (app, size), cached (single-lookup entry API).
+    pub fn model(&mut self, app: &str, size: &str) -> anyhow::Result<&PerfModel> {
+        match self.models.entry((app.to_string(), size.to_string())) {
+            Entry::Occupied(e) => Ok(e.into_mut()),
+            Entry::Vacant(v) => {
+                let spec = self
+                    .registry
+                    .iter()
+                    .find(|a| a.name == app)
+                    .ok_or_else(|| anyhow::anyhow!("unknown app `{app}`"))?;
+                let m = PerfModel::new(spec.program(), &spec.bindings(size), self.part)?;
+                Ok(v.insert(m))
+            }
+        }
+    }
+
+    /// CPU-only service time for (app, size) — table lookup.
+    pub fn cpu_time(&self, app: &str, size: &str) -> anyhow::Result<f64> {
+        let (a, s) = self.resolve(app, size)?;
+        self.table
+            .service_time(a, s, VariantId::CPU)
+            .ok_or_else(|| anyhow::anyhow!("no table row for `{app}`/`{size}`"))
     }
 
     /// Service time for (app, size) under a variant's offload pattern.
+    ///
+    /// Canonical variants ("cpu", "o1", "o13", ...) hit the precomputed
+    /// table; anything else falls back to the cached perf model.
     pub fn offloaded_time(
         &mut self,
         app: &str,
         size: &str,
         variant: &str,
     ) -> anyhow::Result<f64> {
+        if let Some(v) = VariantId::from_name(variant) {
+            let (a, s) = self.resolve(app, size)?;
+            if let Some(t) = self.table.service_time(a, s, v) {
+                return Ok(t);
+            }
+        }
         let nests = self
             .app(app)
             .ok_or_else(|| anyhow::anyhow!("unknown app `{app}`"))?
@@ -92,6 +163,9 @@ impl ProductionEnv {
     }
 
     /// Program logic into the card (initial deployment or reconfiguration).
+    ///
+    /// Panics on an unknown app or a non-canonical variant name — both are
+    /// controller bugs, never request-path conditions.
     pub fn deploy(
         &mut self,
         kind: ReconfigKind,
@@ -99,30 +173,42 @@ impl ProductionEnv {
         variant: &str,
         improvement_coef: f64,
     ) -> ReconfigReport {
+        let id = app_id(&self.registry, app)
+            .unwrap_or_else(|| panic!("deploy: unknown app `{app}`"));
+        let vid = VariantId::from_name(variant)
+            .unwrap_or_else(|| panic!("deploy: non-canonical variant `{variant}`"));
         let now = self.clock.now();
         let report = self.device.reconfigure(now, kind, app, variant);
         self.deployment = Some(Deployment {
-            app: app.to_string(),
-            variant: variant.to_string(),
+            app: id,
+            variant: vid,
             improvement_coef,
         });
         report
     }
 
     /// Serve one request; returns the record (also appended to history).
+    ///
+    /// Steady-state cost: two table indexes + one `Copy` push. The only
+    /// fallible step is the bounds check on the interned handles.
     pub fn serve(&mut self, req: &Request) -> anyhow::Result<RequestRecord> {
         self.clock.advance_to(req.arrival.max(self.clock.now()));
-        let fpga_deployment = self
-            .deployment
-            .clone()
-            .filter(|d| d.app == req.app);
-        let record = if let Some(dep) = fpga_deployment {
-            let service = self.offloaded_time(&req.app, &req.size, &dep.variant)?;
+        let fpga = match self.deployment {
+            Some(dep) if dep.app == req.app => Some(dep.variant),
+            _ => None,
+        };
+        let record = if let Some(variant) = fpga {
+            let service = self
+                .table
+                .service_time(req.app, req.size, variant)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("request {} has out-of-range app/size handles", req.id)
+                })?;
             let (start, finish) = self.device.schedule(req.arrival, service);
             RequestRecord {
                 id: req.id,
-                app: req.app.clone(),
-                size: req.size.clone(),
+                app: req.app,
+                size: req.size,
                 bytes: req.bytes,
                 arrival: req.arrival,
                 start,
@@ -131,11 +217,16 @@ impl ProductionEnv {
                 served_by: ServedBy::Fpga,
             }
         } else {
-            let service = self.cpu_time(&req.app, &req.size)?;
+            let service = self
+                .table
+                .service_time(req.app, req.size, VariantId::CPU)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("request {} has out-of-range app/size handles", req.id)
+                })?;
             RequestRecord {
                 id: req.id,
-                app: req.app.clone(),
-                size: req.size.clone(),
+                app: req.app,
+                size: req.size,
                 bytes: req.bytes,
                 arrival: req.arrival,
                 start: req.arrival,
@@ -144,13 +235,14 @@ impl ProductionEnv {
                 served_by: ServedBy::Cpu,
             }
         };
-        self.history.push(record.clone());
+        self.history.push(record);
         Ok(record)
     }
 
     /// Serve a whole trace (arrival-ordered); returns (first, last) time.
     pub fn run_window(&mut self, trace: &[Request]) -> anyhow::Result<(f64, f64)> {
         anyhow::ensure!(!trace.is_empty(), "empty trace");
+        self.history.reserve(trace.len());
         let from = self.clock.now();
         for req in trace {
             self.serve(req)?;
@@ -179,8 +271,9 @@ mod tests {
         let mut env = env_with_tdfir();
         let reqs = generate(&env.registry, 1800.0, 1);
         env.run_window(&reqs).unwrap();
+        let td = app_id(&env.registry, "tdfir").unwrap();
         for r in env.history.all() {
-            if r.app == "tdfir" {
+            if r.app == td {
                 assert_eq!(r.served_by, ServedBy::Fpga, "{r:?}");
             } else {
                 assert_eq!(r.served_by, ServedBy::Cpu, "{r:?}");
@@ -199,14 +292,31 @@ mod tests {
     }
 
     #[test]
+    fn table_times_match_model_bitwise() {
+        let mut env = env_with_tdfir();
+        for (app, size) in [("tdfir", "large"), ("mriq", "small"), ("dft", "sample")] {
+            for variant in ["cpu", "o1", "o13", "o0123"] {
+                let table_t = env.offloaded_time(app, size, variant).unwrap();
+                let spec = env.app(app).unwrap();
+                let nests = spec.nests_for_variant(variant);
+                let model =
+                    PerfModel::new(spec.program(), &spec.bindings(size), D5005).unwrap();
+                let model_t = model.request_time(&nests);
+                assert_eq!(table_t, model_t, "{app}/{size}/{variant}");
+            }
+        }
+    }
+
+    #[test]
     fn fpga_is_fifo_under_burst() {
         let mut env = env_with_tdfir();
+        let (td, large) = env.resolve("tdfir", "large").unwrap();
         // Three simultaneous arrivals.
         let reqs: Vec<Request> = (0..3)
             .map(|i| Request {
                 id: i,
-                app: "tdfir".into(),
-                size: "large".into(),
+                app: td,
+                size: large,
                 arrival: 1.0,
                 bytes: 2.2e6,
             })
@@ -221,11 +331,48 @@ mod tests {
 
     #[test]
     fn service_times_scale_with_size() {
-        let mut env = env_with_tdfir();
+        let env = env_with_tdfir();
         let s = env.cpu_time("tdfir", "small").unwrap();
         let l = env.cpu_time("tdfir", "large").unwrap();
         let x = env.cpu_time("tdfir", "xlarge").unwrap();
         assert!(s < l && l < x);
         assert!((x / l - 2.0).abs() < 0.2, "xlarge/large = {}", x / l);
+    }
+
+    #[test]
+    fn out_of_range_handles_are_rejected() {
+        let mut env = env_with_tdfir();
+        let bogus = Request {
+            id: 0,
+            app: AppId(99),
+            size: SizeId(0),
+            arrival: 1.0,
+            bytes: 1.0,
+        };
+        assert!(env.serve(&bogus).is_err());
+        let (td, _) = env.resolve("tdfir", "large").unwrap();
+        let bogus_size = Request {
+            id: 1,
+            app: td,
+            size: SizeId(9),
+            arrival: 1.0,
+            bytes: 1.0,
+        };
+        assert!(env.serve(&bogus_size).is_err());
+        assert!(env.history.is_empty());
+    }
+
+    #[test]
+    fn reset_clears_operational_state_only() {
+        let mut env = env_with_tdfir();
+        let reqs = generate(&env.registry, 600.0, 2);
+        env.run_window(&reqs).unwrap();
+        assert!(!env.history.is_empty());
+        env.reset();
+        assert!(env.history.is_empty());
+        assert!(env.deployment.is_none());
+        assert_eq!(env.clock.now(), 0.0);
+        // Table survives the reset.
+        assert!(env.cpu_time("tdfir", "large").is_ok());
     }
 }

@@ -20,5 +20,5 @@ pub mod resource;
 
 pub use device::{FpgaDevice, ReconfigKind, ReconfigReport};
 pub use part::Part;
-pub use perf::{cpu_time, fpga_time, PerfModel};
+pub use perf::{cpu_time, fpga_time, PerfModel, ServiceTimeTable};
 pub use resource::{estimate, ResourceEstimate};

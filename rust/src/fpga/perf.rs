@@ -19,9 +19,16 @@
 //!   same winner). The trig advantage (hard CORDIC pipelines vs ~12-flop
 //!   software sincos) is exactly what makes MRI-Q's offload pay 8-12x
 //!   while tdFIR's pays ~2x — the paper's Fig. 4 contrast.
+//!
+//! [`ServiceTimeTable`] precomputes these times for every interned
+//! (app, size, variant) triple so the production serve path never
+//! re-evaluates the model; entries are bit-identical to calling
+//! [`PerfModel::request_time`] because both run the same fixed-order
+//! summation ([`PerfModel::request_time_mask`]).
 
 use super::part::Part;
 use crate::analysis::intensity::LoopIntensity;
+use crate::apps::{AppId, AppSpec, SizeId, VariantId, NUM_VARIANTS};
 use crate::loopir::walk::{io_bytes, Bindings};
 use crate::loopir::Program;
 
@@ -77,29 +84,105 @@ impl PerfModel {
         (0..self.nests.len()).map(|i| self.nest_cpu_time(i)).sum()
     }
 
-    /// Full-request service time under an offload pattern.
+    /// Full-request service time under an offload pattern given as a
+    /// bitmask over nest indices (bit `i` set = nest `i` offloaded).
     ///
     /// Non-offloaded nests run on the CPU; offloaded nests run as FPGA
     /// pipelines; one DMA round-trip of the request IO is charged when
-    /// anything is offloaded (the OpenCL host moves buffers once).
-    pub fn request_time(&self, offloaded: &[usize]) -> f64 {
+    /// anything is offloaded (the OpenCL host moves buffers once). This is
+    /// the primitive the precomputed [`ServiceTimeTable`] is built from —
+    /// the summation order is fixed (nest 0..n), so table entries are
+    /// bit-identical to on-the-fly evaluation.
+    pub fn request_time_mask(&self, offloaded: u64) -> f64 {
         let mut t = 0.0;
         for i in 0..self.nests.len() {
-            if offloaded.contains(&i) {
+            if offloaded & (1u64 << i) != 0 {
                 t += self.nest_fpga_time(i);
             } else {
                 t += self.nest_cpu_time(i);
             }
         }
-        if !offloaded.is_empty() {
+        if offloaded != 0 {
             t += self.io_bytes / self.part.dma_bw;
         }
         t
     }
 
+    /// Bitmask over nest indices for a slice of offloaded nests.
+    pub fn nest_mask(offloaded: &[usize]) -> u64 {
+        let mut mask = 0u64;
+        for &i in offloaded {
+            debug_assert!(i < 64, "nest index {i} out of mask range");
+            mask |= 1u64 << i;
+        }
+        mask
+    }
+
+    /// Full-request service time under an offload pattern (slice form) —
+    /// a thin wrapper over [`PerfModel::request_time_mask`].
+    pub fn request_time(&self, offloaded: &[usize]) -> f64 {
+        self.request_time_mask(Self::nest_mask(offloaded))
+    }
+
     /// Improvement factor of a pattern vs CPU-only (the paper's 改善度).
     pub fn improvement(&self, offloaded: &[usize]) -> f64 {
         self.cpu_request_time() / self.request_time(offloaded)
+    }
+}
+
+/// Dense precomputed service-time table: app × size × variant → seconds.
+///
+/// Built once at deploy/startup time from the same [`PerfModel`] math the
+/// search path uses, so a lookup is bit-identical to an on-the-fly
+/// `PerfModel::new(..)` + `request_time(..)` evaluation. The production
+/// `serve` path then costs two slice indexes and an array index — no
+/// hashing, no parsing, no allocation.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceTimeTable {
+    /// `times[app][size][variant_mask]` — seconds per request.
+    /// (Request *bytes* per (app, size) are cached separately by
+    /// `AppSpec::request_bytes_id`, which workload generation uses.)
+    times: Vec<Vec<[f64; NUM_VARIANTS]>>,
+}
+
+impl ServiceTimeTable {
+    /// Precompute every (app, size, variant) service time for a registry.
+    pub fn build(registry: &[AppSpec], part: Part) -> anyhow::Result<ServiceTimeTable> {
+        let mut times = Vec::with_capacity(registry.len());
+        for app in registry {
+            let mut app_times = Vec::with_capacity(app.sizes.len());
+            for size in &app.sizes {
+                let model =
+                    PerfModel::new(app.program(), &app.bindings(size.name), part)?;
+                let mut row = [0.0f64; NUM_VARIANTS];
+                for (v, slot) in row.iter_mut().enumerate() {
+                    let mask = app.nest_mask_for_variant(VariantId(v as u8));
+                    *slot = model.request_time_mask(mask);
+                }
+                app_times.push(row);
+            }
+            times.push(app_times);
+        }
+        Ok(ServiceTimeTable { times })
+    }
+
+    /// Service time for an interned (app, size, variant) triple.
+    /// `None` for out-of-range handles (unknown app or size).
+    #[inline]
+    pub fn service_time(&self, app: AppId, size: SizeId, v: VariantId) -> Option<f64> {
+        self.times
+            .get(app.0 as usize)?
+            .get(size.0 as usize)
+            .map(|row| row[v.index()])
+    }
+
+    /// Number of apps covered.
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
     }
 }
 

@@ -8,7 +8,29 @@
 //! simulation, PJRT runtime, workload generation). Layers 2 (JAX app
 //! graphs) and 1 (Pallas kernels) live in `python/compile/` and are AOT
 //! lowered to `artifacts/*.hlo.txt`, which [`runtime`] loads and executes
-//! via the PJRT CPU client. Python never runs on the request path.
+//! via the PJRT CPU client (cargo feature `pjrt`; the default build uses a
+//! stub backend). Python never runs on the request path.
+//!
+//! # The allocation-free request path
+//!
+//! Strings exist only at the edges of the system. The [`apps`] registry
+//! interns every application, size class and offload variant into `Copy`
+//! handles (`AppId`, `SizeId`, `VariantId` — the latter a bitmask over the
+//! four offloadable stages), and [`fpga::perf::ServiceTimeTable`]
+//! precomputes the service time of **every** (app × size × variant)
+//! triple at environment construction, using the same `PerfModel`
+//! arithmetic the §3.1 search uses. The contract:
+//!
+//!  * table entries are **bit-identical** to an on-the-fly
+//!    `PerfModel::new(..)` + `request_time(..)` evaluation (the summation
+//!    order is fixed; `tests/serve_alloc.rs` asserts equality via
+//!    `f64::to_bits`);
+//!  * `coordinator::ProductionEnv::serve` is **allocation-free** in steady
+//!    state: two array indexes, a FIFO schedule update, and a `Copy`
+//!    record append into a reserved history buffer (verified by a counting
+//!    `#[global_allocator]` probe);
+//!  * names are resolved back through the registry only on cold paths
+//!    (reports, reconfiguration proposals, JSON trace serialization).
 //!
 //! See DESIGN.md for the system inventory and per-experiment index.
 

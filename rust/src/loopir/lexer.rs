@@ -50,12 +50,19 @@ pub struct Spanned {
 }
 
 /// Lex error.
-#[derive(Debug, thiserror::Error)]
-#[error("lex error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct LexError {
     pub line: u32,
     pub msg: String,
 }
+
+impl fmt::Display for LexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "lex error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for LexError {}
 
 /// Tokenize a source file. `//` comments run to end of line.
 pub fn lex(src: &str) -> Result<Vec<Spanned>, LexError> {

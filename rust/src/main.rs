@@ -224,12 +224,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         let text = std::fs::read_to_string(path)?;
         let j = repro::util::json::Json::parse(&text)
             .map_err(|e| anyhow::anyhow!("trace {path}: {e}"))?;
-        repro::workload::trace_from_json(&j)?
+        repro::workload::trace_from_json(&j, &env.registry)?
     } else {
         generate(&env.registry, hours * 3600.0, seed)
     };
     if let Some(path) = args.get("record") {
-        std::fs::write(path, repro::workload::trace_to_json(&trace).to_pretty())?;
+        std::fs::write(
+            path,
+            repro::workload::trace_to_json(&trace, &env.registry).to_pretty(),
+        )?;
         println!("recorded trace -> {path}");
     }
     println!(
@@ -241,14 +244,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 
     let mut t = Table::new(vec!["app", "requests", "total service", "mean", "served by"]);
     for app in env.history.apps_in_window(0.0, f64::INFINITY) {
-        let (sum, n) = env.history.totals_in_window(&app, 0.0, f64::INFINITY);
+        let (sum, n) = env.history.totals_in_window(app, 0.0, f64::INFINITY);
         let fpga = env
             .history
             .all()
             .iter()
             .any(|r| r.app == app && r.served_by == repro::coordinator::ServedBy::Fpga);
         t.row(vec![
-            app.clone(),
+            env.app_name(app).to_string(),
             n.to_string(),
             fmt_secs(sum),
             fmt_secs(sum / n.max(1) as f64),

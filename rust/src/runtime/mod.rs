@@ -1,242 +1,28 @@
-//! PJRT runtime: load and execute the AOT HLO artifacts from rust.
+//! Artifact runtime: loads the AOT HLO artifacts the python layer lowers.
 //!
-//! Adapts /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
-//! jax ≥ 0.5 serialized protos — 64-bit instruction ids).
+//! Two backends share one API:
+//!  * `pjrt` (cargo feature `pjrt`) — the real thing: `PjRtClient::cpu()` →
+//!    `HloModuleProto::from_text_file` → compile → execute, adapted from
+//!    /opt/xla-example/load_hlo. Requires the vendored `xla` bindings.
+//!  * `stub` (default) — the offline build image ships no xla_extension, so
+//!    the default backend indexes the manifest and reports a clean error
+//!    from [`Runtime::new`]; every runtime-dependent test and example skips
+//!    gracefully, exactly as they do when `make artifacts` has not run.
 //!
-//! [`Runtime`] owns the client and an executable cache keyed by artifact
-//! stem; [`Runtime::swap`] measures the real wall-clock cost of a static
+//! [`Runtime::swap`] (pjrt) measures the real wall-clock cost of a static
 //! reconfiguration (compile + warm-up of the incoming variant), which the
 //! TXT-DOWNTIME experiment compares against the paper's ~1 s figure.
 
 pub mod manifest;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::time::Instant;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{ExecOutcome, LoadedArtifact, Runtime, SwapReport};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{ExecOutcome, Literal, LoadedArtifact, Runtime, SwapReport};
 
 pub use manifest::{ArtifactMeta, Manifest};
-
-use crate::util::prng::Rng;
-
-/// Loaded-executable cache entry.
-pub struct LoadedArtifact {
-    pub meta: ArtifactMeta,
-    pub exe: xla::PjRtLoadedExecutable,
-    /// Wall seconds spent compiling this artifact.
-    pub compile_secs: f64,
-}
-
-/// The request-path runtime: PJRT client + executable cache.
-pub struct Runtime {
-    pub client: xla::PjRtClient,
-    pub manifest: Manifest,
-    dir: PathBuf,
-    cache: HashMap<String, LoadedArtifact>,
-}
-
-/// Result of executing one artifact.
-pub struct ExecOutcome {
-    /// Flattened output literals (the jax function's tuple, in order).
-    pub outputs: Vec<xla::Literal>,
-    /// Wall seconds of the execute call.
-    pub exec_secs: f64,
-}
-
-/// Report of a measured (wall-clock) executable swap — the real-runtime
-/// analogue of the FPGA static reconfiguration.
-#[derive(Clone, Debug)]
-pub struct SwapReport {
-    pub from: Option<String>,
-    pub to: String,
-    /// Compile (bitstream-load analogue) seconds.
-    pub compile_secs: f64,
-    /// Warm-up execution seconds.
-    pub warmup_secs: f64,
-}
-
-impl SwapReport {
-    pub fn total_secs(&self) -> f64 {
-        self.compile_secs + self.warmup_secs
-    }
-}
-
-impl Runtime {
-    /// Open the artifact directory (must contain manifest.json).
-    pub fn new(dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(dir.join("manifest.json"))?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime {
-            client,
-            manifest,
-            dir,
-            cache: HashMap::new(),
-        })
-    }
-
-    /// Default artifact directory relative to the repo root.
-    pub fn default_dir() -> &'static str {
-        "artifacts"
-    }
-
-    /// Compile (or fetch from cache) an artifact by stem, e.g.
-    /// `tdfir__large__o1`.
-    pub fn load(&mut self, key: &str) -> anyhow::Result<&LoadedArtifact> {
-        if !self.cache.contains_key(key) {
-            let meta = self
-                .manifest
-                .get(key)
-                .ok_or_else(|| anyhow::anyhow!("artifact `{key}` not in manifest"))?
-                .clone();
-            let path = self.dir.join(&meta.path);
-            let t0 = Instant::now();
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str()
-                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            let compile_secs = t0.elapsed().as_secs_f64();
-            self.cache.insert(
-                key.to_string(),
-                LoadedArtifact {
-                    meta,
-                    exe,
-                    compile_secs,
-                },
-            );
-        }
-        Ok(&self.cache[key])
-    }
-
-    /// Drop an executable from the cache (the "stop current logic" step).
-    pub fn unload(&mut self, key: &str) {
-        self.cache.remove(key);
-    }
-
-    pub fn is_loaded(&self, key: &str) -> bool {
-        self.cache.contains_key(key)
-    }
-
-    /// Deterministic request inputs for an artifact (shape-driven).
-    ///
-    /// Same seed → same payload, so the cpu and offloaded variants of an
-    /// app can be cross-checked on identical data.
-    pub fn gen_inputs(meta: &ArtifactMeta, seed: u64) -> anyhow::Result<Vec<xla::Literal>> {
-        let mut rng = Rng::new(seed);
-        let mut out = Vec::with_capacity(meta.inputs.len());
-        for spec in &meta.inputs {
-            let n: usize = spec.shape.iter().product::<usize>().max(1);
-            let mut buf = vec![0.0f32; n];
-            match spec.name.as_str() {
-                // Semantic inputs: the boundary mask is 0/1, coefficients
-                // follow the Himeno constants (see python/tests/conftest).
-                "bnd" => buf.iter_mut().for_each(|v| *v = 1.0),
-                "coef" => {
-                    let base = [1.0, 1.0, 1.0, 1.0 / 6.0, 0.05, 0.05, 0.05, 1.0, 1.0, 1.0];
-                    for (i, v) in buf.iter_mut().enumerate() {
-                        *v = base[i % base.len()] as f32
-                            + 0.01 * rng.next_normal() as f32;
-                    }
-                }
-                _ => rng.fill_normal_f32(&mut buf),
-            }
-            let lit = xla::Literal::vec1(&buf);
-            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
-            out.push(lit.reshape(&dims)?);
-        }
-        Ok(out)
-    }
-
-    /// Execute an artifact on the given inputs; unpacks the output tuple.
-    pub fn execute(
-        &mut self,
-        key: &str,
-        inputs: &[xla::Literal],
-    ) -> anyhow::Result<ExecOutcome> {
-        let art = self.load(key)?;
-        let t0 = Instant::now();
-        let result = art.exe.execute::<xla::Literal>(inputs)?;
-        let first = result
-            .first()
-            .and_then(|d| d.first())
-            .ok_or_else(|| anyhow::anyhow!("empty execution result"))?;
-        let lit = first.to_literal_sync()?;
-        let exec_secs = t0.elapsed().as_secs_f64();
-        // aot.py lowers with return_tuple=True: always a tuple.
-        let outputs = lit.to_tuple()?;
-        anyhow::ensure!(
-            outputs.len() == art.meta.num_outputs,
-            "artifact `{key}` returned {} outputs, manifest says {}",
-            outputs.len(),
-            art.meta.num_outputs
-        );
-        Ok(ExecOutcome {
-            outputs,
-            exec_secs,
-        })
-    }
-
-    /// Execute with deterministic generated inputs.
-    pub fn execute_seeded(&mut self, key: &str, seed: u64) -> anyhow::Result<ExecOutcome> {
-        let meta = self
-            .manifest
-            .get(key)
-            .ok_or_else(|| anyhow::anyhow!("artifact `{key}` not in manifest"))?
-            .clone();
-        let inputs = Self::gen_inputs(&meta, seed)?;
-        self.execute(key, &inputs)
-    }
-
-    /// Measured static reconfiguration: unload `from`, compile `to`, run a
-    /// warm-up request. Returns the wall-clock swap report.
-    pub fn swap(&mut self, from: Option<&str>, to: &str) -> anyhow::Result<SwapReport> {
-        if let Some(f) = from {
-            self.unload(f);
-        }
-        self.unload(to); // force a cold compile: this is the reprogram cost
-        let t0 = Instant::now();
-        self.load(to)?;
-        let compile_secs = t0.elapsed().as_secs_f64();
-        let t1 = Instant::now();
-        let _ = self.execute_seeded(to, 0)?;
-        let warmup_secs = t1.elapsed().as_secs_f64();
-        Ok(SwapReport {
-            from: from.map(String::from),
-            to: to.to_string(),
-            compile_secs,
-            warmup_secs,
-        })
-    }
-
-    /// Compare two variants of the same app/size on identical inputs.
-    /// Returns the max |a-b| across all outputs (cross-variant check).
-    pub fn compare_variants(
-        &mut self,
-        key_a: &str,
-        key_b: &str,
-        seed: u64,
-    ) -> anyhow::Result<f64> {
-        let meta = self
-            .manifest
-            .get(key_a)
-            .ok_or_else(|| anyhow::anyhow!("artifact `{key_a}` not in manifest"))?
-            .clone();
-        let inputs = Self::gen_inputs(&meta, seed)?;
-        let a = self.execute(key_a, &inputs)?;
-        let b = self.execute(key_b, &inputs)?;
-        anyhow::ensure!(a.outputs.len() == b.outputs.len(), "output arity mismatch");
-        let mut max_abs = 0.0f64;
-        for (x, y) in a.outputs.iter().zip(&b.outputs) {
-            let xv = x.to_vec::<f32>()?;
-            let yv = y.to_vec::<f32>()?;
-            anyhow::ensure!(xv.len() == yv.len(), "output length mismatch");
-            for (p, q) in xv.iter().zip(&yv) {
-                max_abs = max_abs.max((p - q).abs() as f64);
-            }
-        }
-        Ok(max_abs)
-    }
-}

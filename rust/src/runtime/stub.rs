@@ -1,0 +1,158 @@
+//! Offline runtime backend: same API as the `pjrt` module, no xla.
+//!
+//! [`Runtime::new`] always returns a clean error (after checking the
+//! manifest, so a missing-artifact message stays actionable); callers that
+//! probe with `if let Ok(rt) = Runtime::new(..)` skip runtime-dependent
+//! work, the same path taken when `make artifacts` has not been run.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use super::manifest::{ArtifactMeta, Manifest};
+use crate::util::prng::Rng;
+
+/// Host-side tensor stand-in (the pjrt backend uses `xla::Literal`).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl Literal {
+    pub fn to_vec<T: From<f32>>(&self) -> anyhow::Result<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from(x)).collect())
+    }
+}
+
+/// Loaded-executable cache entry (metadata only in the stub).
+pub struct LoadedArtifact {
+    pub meta: ArtifactMeta,
+    pub compile_secs: f64,
+}
+
+/// Result of executing one artifact.
+pub struct ExecOutcome {
+    pub outputs: Vec<Literal>,
+    pub exec_secs: f64,
+}
+
+/// Report of a measured executable swap.
+#[derive(Clone, Debug)]
+pub struct SwapReport {
+    pub from: Option<String>,
+    pub to: String,
+    pub compile_secs: f64,
+    pub warmup_secs: f64,
+}
+
+impl SwapReport {
+    pub fn total_secs(&self) -> f64 {
+        self.compile_secs + self.warmup_secs
+    }
+}
+
+/// The request-path runtime (stub backend).
+pub struct Runtime {
+    pub manifest: Manifest,
+    cache: HashMap<String, LoadedArtifact>,
+}
+
+impl Runtime {
+    /// Always errors in the stub backend: either the manifest is missing
+    /// (run `make artifacts`) or the crate was built without `pjrt`.
+    pub fn new(dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        anyhow::bail!(
+            "PJRT runtime unavailable: crate built without the `pjrt` feature \
+             ({} artifacts indexed under {})",
+            manifest.len(),
+            dir.display()
+        )
+    }
+
+    /// Default artifact directory relative to the repo root.
+    pub fn default_dir() -> &'static str {
+        "artifacts"
+    }
+
+    pub fn load(&mut self, key: &str) -> anyhow::Result<&LoadedArtifact> {
+        anyhow::ensure!(
+            self.manifest.get(key).is_some(),
+            "artifact `{key}` not in manifest"
+        );
+        anyhow::bail!("cannot compile `{key}`: built without the `pjrt` feature")
+    }
+
+    pub fn unload(&mut self, key: &str) {
+        self.cache.remove(key);
+    }
+
+    pub fn is_loaded(&self, key: &str) -> bool {
+        self.cache.contains_key(key)
+    }
+
+    /// Deterministic request inputs for an artifact (shape-driven); the
+    /// payload synthesis matches the pjrt backend bit for bit.
+    pub fn gen_inputs(meta: &ArtifactMeta, seed: u64) -> anyhow::Result<Vec<Literal>> {
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity(meta.inputs.len());
+        for spec in &meta.inputs {
+            let n: usize = spec.shape.iter().product::<usize>().max(1);
+            let mut buf = vec![0.0f32; n];
+            match spec.name.as_str() {
+                "bnd" => buf.iter_mut().for_each(|v| *v = 1.0),
+                "coef" => {
+                    let base = [1.0, 1.0, 1.0, 1.0 / 6.0, 0.05, 0.05, 0.05, 1.0, 1.0, 1.0];
+                    for (i, v) in buf.iter_mut().enumerate() {
+                        *v = base[i % base.len()] as f32 + 0.01 * rng.next_normal() as f32;
+                    }
+                }
+                _ => rng.fill_normal_f32(&mut buf),
+            }
+            out.push(Literal {
+                data: buf,
+                shape: spec.shape.clone(),
+            });
+        }
+        Ok(out)
+    }
+
+    pub fn execute(
+        &mut self,
+        key: &str,
+        _inputs: &[Literal],
+    ) -> anyhow::Result<ExecOutcome> {
+        let _ = self.load(key)?;
+        unreachable!("stub load() always errors")
+    }
+
+    pub fn execute_seeded(&mut self, key: &str, seed: u64) -> anyhow::Result<ExecOutcome> {
+        let meta = self
+            .manifest
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("artifact `{key}` not in manifest"))?
+            .clone();
+        let inputs = Self::gen_inputs(&meta, seed)?;
+        self.execute(key, &inputs)
+    }
+
+    pub fn swap(&mut self, from: Option<&str>, to: &str) -> anyhow::Result<SwapReport> {
+        if let Some(f) = from {
+            self.unload(f);
+        }
+        self.unload(to);
+        let _ = self.load(to)?;
+        unreachable!("stub load() always errors")
+    }
+
+    pub fn compare_variants(
+        &mut self,
+        key_a: &str,
+        _key_b: &str,
+        _seed: u64,
+    ) -> anyhow::Result<f64> {
+        let _ = self.load(key_a)?;
+        unreachable!("stub load() always errors")
+    }
+}

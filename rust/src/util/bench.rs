@@ -7,6 +7,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// One benchmark measurement.
@@ -31,6 +32,27 @@ impl Measurement {
             super::table::fmt_secs(self.p50_s),
             super::table::fmt_secs(self.p95_s),
         )
+    }
+
+    /// Machine-readable form. `units_per_iter` is how many work items one
+    /// iteration processed (requests served, records generated, ...), from
+    /// which the `rps` (units per second) field is derived.
+    pub fn to_json(&self, units_per_iter: f64) -> Json {
+        let rps = if self.mean_s > 0.0 {
+            units_per_iter / self.mean_s
+        } else {
+            0.0
+        };
+        Json::obj()
+            .set("name", self.name.as_str())
+            .set("iterations", self.iters as i64)
+            .set("mean_s", self.mean_s)
+            .set("p50_s", self.p50_s)
+            .set("p95_s", self.p95_s)
+            .set("min_s", self.min_s)
+            .set("max_s", self.max_s)
+            .set("units_per_iter", units_per_iter)
+            .set("rps", rps)
     }
 }
 
@@ -112,6 +134,34 @@ impl Bench {
 
     pub fn results(&self) -> &[Measurement] {
         &self.results
+    }
+
+    /// Write every recorded measurement (plus caller-supplied per-section
+    /// work-unit counts and top-level extras) as a JSON report, so bench
+    /// numbers accumulate as machine-readable artifacts across PRs.
+    ///
+    /// `units` maps section name → work items per iteration; sections not
+    /// listed default to 1 unit per iteration.
+    pub fn write_json(
+        &self,
+        path: &str,
+        units: &[(&str, f64)],
+        extras: &[(&str, f64)],
+    ) -> std::io::Result<()> {
+        let mut sections = Vec::with_capacity(self.results.len());
+        for m in &self.results {
+            let u = units
+                .iter()
+                .find(|(n, _)| *n == m.name)
+                .map(|(_, u)| *u)
+                .unwrap_or(1.0);
+            sections.push(m.to_json(u));
+        }
+        let mut root = Json::obj().set("sections", Json::Arr(sections));
+        for (k, v) in extras {
+            root = root.set(k, *v);
+        }
+        std::fs::write(path, root.to_pretty())
     }
 }
 

@@ -5,67 +5,114 @@
 //! for a configurable duration; tdFIR and MRI-Q draw sizes from the 3:5:2
 //! small:large:xlarge mix. Traces serialize to JSON so a production hour
 //! can be replayed bit-identically.
+//!
+//! Requests carry interned [`AppId`]/[`SizeId`] handles (no strings), so a
+//! [`Request`] is `Copy` and the serve path never allocates. Generation is
+//! a k-way merge of the per-app Poisson streams — each stream is ordered
+//! by construction, so the trace comes out arrival-sorted without the
+//! post-hoc global sort the first implementation used.
 
-use crate::apps::AppSpec;
+use crate::apps::{app_id, AppId, AppSpec, SizeId};
 use crate::util::json::Json;
 use crate::util::prng::Rng;
 
-/// One production request.
-#[derive(Clone, Debug, PartialEq)]
+/// One production request. `Copy` — 32 bytes, no heap.
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Request {
     pub id: u64,
-    pub app: String,
-    pub size: String,
+    pub app: AppId,
+    pub size: SizeId,
     /// Arrival time (virtual seconds since window start).
     pub arrival: f64,
     /// Request data size in bytes (frequency-distribution axis).
     pub bytes: f64,
 }
 
+/// One per-app Poisson arrival stream, consumed lazily by the merge.
+struct Stream {
+    app: AppId,
+    rate_per_sec: f64,
+    next_arrival: f64,
+    rng: Rng,
+    weights: Vec<f64>,
+    /// Request bytes per size class (precomputed, no re-analysis per draw).
+    bytes: Vec<f64>,
+}
+
 /// Generate the request trace for one observation window.
-pub fn generate(
-    apps: &[AppSpec],
-    duration_secs: f64,
-    seed: u64,
-) -> Vec<Request> {
+///
+/// Per-app streams are independent (each gets a split of the master PRNG,
+/// in registry order, exactly as before); the merge pops the earliest
+/// stream head each step, breaking ties toward the lower app index — the
+/// same order the old generate-then-stable-sort produced.
+pub fn generate(apps: &[AppSpec], duration_secs: f64, seed: u64) -> Vec<Request> {
     let mut master = Rng::new(seed);
-    let mut out = Vec::new();
-    for app in apps {
+    let mut streams: Vec<Stream> = Vec::new();
+    let mut expected = 0.0f64;
+    for (i, app) in apps.iter().enumerate() {
         let mut rng = master.split();
         let rate_per_sec = app.rate_per_hour / 3600.0;
         if rate_per_sec <= 0.0 {
             continue;
         }
+        expected += rate_per_sec * duration_secs;
         let weights: Vec<f64> = app.sizes.iter().map(|s| s.weight).collect();
-        let mut t = rng.next_exp(rate_per_sec);
-        while t < duration_secs {
-            let size = &app.sizes[rng.pick_weighted(&weights)];
-            out.push(Request {
-                id: 0, // assigned after the merge sort below
-                app: app.name.to_string(),
-                size: size.name.to_string(),
-                arrival: t,
-                bytes: app.request_bytes(size.name),
-            });
-            t += rng.next_exp(rate_per_sec);
-        }
+        let bytes: Vec<f64> = (0..app.sizes.len())
+            .map(|s| app.request_bytes_id(SizeId(s as u16)).unwrap_or(0.0))
+            .collect();
+        let next_arrival = rng.next_exp(rate_per_sec);
+        streams.push(Stream {
+            app: AppId(i as u16),
+            rate_per_sec,
+            next_arrival,
+            rng,
+            weights,
+            bytes,
+        });
     }
-    out.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
-    for (i, r) in out.iter_mut().enumerate() {
-        r.id = i as u64;
+
+    let mut out = Vec::with_capacity((expected * 1.1) as usize + 16);
+    loop {
+        // K-way merge over the (few) app streams: linear-scan min beats a
+        // heap at k = 5, and the strict `<` keeps ties FIFO by app index.
+        let mut best: Option<usize> = None;
+        for (i, s) in streams.iter().enumerate() {
+            if s.next_arrival >= duration_secs {
+                continue;
+            }
+            let earlier = match best {
+                None => true,
+                Some(b) => s.next_arrival < streams[b].next_arrival,
+            };
+            if earlier {
+                best = Some(i);
+            }
+        }
+        let Some(i) = best else { break };
+        let s = &mut streams[i];
+        let size = s.rng.pick_weighted(&s.weights);
+        out.push(Request {
+            id: out.len() as u64,
+            app: s.app,
+            size: SizeId(size as u16),
+            arrival: s.next_arrival,
+            bytes: s.bytes[size],
+        });
+        s.next_arrival += s.rng.next_exp(s.rate_per_sec);
     }
     out
 }
 
-/// Serialize a trace to JSON.
-pub fn trace_to_json(reqs: &[Request]) -> Json {
+/// Serialize a trace to JSON (names resolved through the registry).
+pub fn trace_to_json(reqs: &[Request], apps: &[AppSpec]) -> Json {
     Json::Arr(
         reqs.iter()
             .map(|r| {
+                let spec = &apps[r.app.0 as usize];
                 Json::obj()
                     .set("id", r.id as i64)
-                    .set("app", r.app.as_str())
-                    .set("size", r.size.as_str())
+                    .set("app", spec.name)
+                    .set("size", spec.size_name(r.size).unwrap_or("?"))
                     .set("arrival", r.arrival)
                     .set("bytes", r.bytes)
             })
@@ -73,17 +120,24 @@ pub fn trace_to_json(reqs: &[Request]) -> Json {
     )
 }
 
-/// Parse a trace back from JSON.
-pub fn trace_from_json(j: &Json) -> anyhow::Result<Vec<Request>> {
+/// Parse a trace back from JSON, re-interning names against the registry.
+pub fn trace_from_json(j: &Json, apps: &[AppSpec]) -> anyhow::Result<Vec<Request>> {
     let arr = j
         .as_arr()
         .ok_or_else(|| anyhow::anyhow!("trace must be a JSON array"))?;
     arr.iter()
         .map(|o| {
+            let app_name = o.str_at("app")?;
+            let app = app_id(apps, app_name)
+                .ok_or_else(|| anyhow::anyhow!("unknown app `{app_name}` in trace"))?;
+            let size_name = o.str_at("size")?;
+            let size = apps[app.0 as usize]
+                .size_id(size_name)
+                .ok_or_else(|| anyhow::anyhow!("unknown size `{size_name}` in trace"))?;
             Ok(Request {
                 id: o.usize_at("id")? as u64,
-                app: o.str_at("app")?.to_string(),
-                size: o.str_at("size")?.to_string(),
+                app,
+                size,
                 arrival: o
                     .get("arrival")
                     .and_then(Json::as_f64)
@@ -106,7 +160,10 @@ mod tests {
     fn rates_are_respected_over_an_hour() {
         let reg = registry();
         let reqs = generate(&reg, 3600.0, 42);
-        let count = |app: &str| reqs.iter().filter(|r| r.app == app).count() as f64;
+        let count = |app: &str| {
+            let id = app_id(&reg, app).unwrap();
+            reqs.iter().filter(|r| r.app == id).count() as f64
+        };
         // Poisson(300) over 1h: ~300 ± 4 sigma (sqrt(300)*4 ≈ 69).
         assert!((count("tdfir") - 300.0).abs() < 70.0, "{}", count("tdfir"));
         assert!((count("mriq") - 10.0).abs() < 13.0);
@@ -129,15 +186,16 @@ mod tests {
     #[test]
     fn size_mix_approximates_352() {
         let reg = registry();
+        let td = app_id(&reg, "tdfir").unwrap();
         // Long window for statistics.
         let reqs = generate(&reg, 20.0 * 3600.0, 11);
-        let td: Vec<_> = reqs.iter().filter(|r| r.app == "tdfir").collect();
-        let frac = |s: &str| {
-            td.iter().filter(|r| r.size == s).count() as f64 / td.len() as f64
+        let tds: Vec<_> = reqs.iter().filter(|r| r.app == td).collect();
+        let frac = |s: u16| {
+            tds.iter().filter(|r| r.size == SizeId(s)).count() as f64 / tds.len() as f64
         };
-        assert!((frac("small") - 0.3).abs() < 0.05);
-        assert!((frac("large") - 0.5).abs() < 0.05);
-        assert!((frac("xlarge") - 0.2).abs() < 0.05);
+        assert!((frac(0) - 0.3).abs() < 0.05, "small {}", frac(0));
+        assert!((frac(1) - 0.5).abs() < 0.05, "large {}", frac(1));
+        assert!((frac(2) - 0.2).abs() < 0.05, "xlarge {}", frac(2));
     }
 
     #[test]
@@ -154,13 +212,20 @@ mod tests {
     fn trace_json_roundtrip() {
         let reg = registry();
         let a = generate(&reg, 120.0, 3);
-        let j = trace_to_json(&a);
-        let b = trace_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        let j = trace_to_json(&a, &reg);
+        let b = trace_from_json(&Json::parse(&j.to_string()).unwrap(), &reg).unwrap();
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.app, y.app);
             assert_eq!(x.size, y.size);
             assert!((x.arrival - y.arrival).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn request_is_copy_and_small() {
+        fn assert_copy<T: Copy>() {}
+        assert_copy::<Request>();
+        assert!(std::mem::size_of::<Request>() <= 32);
     }
 }

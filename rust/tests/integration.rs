@@ -4,7 +4,7 @@
 //! runtime_roundtrip.rs).
 
 use repro::analysis::select_candidates;
-use repro::apps::{find, registry};
+use repro::apps::{app_id, find, registry, AppId, SizeId};
 use repro::coordinator::recon::analyze_load;
 use repro::coordinator::{
     run_reconfiguration, Approval, ProductionEnv, ReconConfig, ServedBy, ThresholdPolicy,
@@ -77,13 +77,15 @@ fn mode_selection_prefers_large_not_mean() {
             assert_eq!(rep.size, "large", "{rep:?}");
         }
         // Empirical argmax of the app's arrived sizes.
+        let rid = app_id(&env.registry, &rep.app).unwrap();
+        let rep_size = env.app(&rep.app).unwrap().size_id(&rep.size).unwrap();
         let mut counts = std::collections::BTreeMap::new();
-        for r in env.history.all().iter().filter(|r| r.app == rep.app) {
-            *counts.entry(r.size.clone()).or_insert(0u64) += 1;
+        for r in env.history.all().iter().filter(|r| r.app == rid) {
+            *counts.entry(r.size).or_insert(0u64) += 1;
         }
         let max = counts.values().max().copied().unwrap();
         assert_eq!(
-            counts.get(&rep.size).copied(),
+            counts.get(&rep_size).copied(),
             Some(max),
             "representative {rep:?} is not the modal class: {counts:?}"
         );
@@ -106,18 +108,20 @@ fn after_reconfiguration_mriq_is_served_by_fpga_and_faster() {
     }
     env.run_window(&trace).unwrap();
 
+    let mq = app_id(&env.registry, "mriq").unwrap();
+    let td = app_id(&env.registry, "tdfir").unwrap();
     let before: Vec<f64> = env
         .history
         .all()
         .iter()
-        .filter(|r| r.arrival < t0 && r.app == "mriq")
+        .filter(|r| r.arrival < t0 && r.app == mq)
         .map(|r| r.service_secs)
         .collect();
     let after: Vec<f64> = env
         .history
         .all()
         .iter()
-        .filter(|r| r.arrival >= t0 && r.app == "mriq")
+        .filter(|r| r.arrival >= t0 && r.app == mq)
         .map(|r| r.service_secs)
         .collect();
     let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
@@ -131,14 +135,14 @@ fn after_reconfiguration_mriq_is_served_by_fpga_and_faster() {
         .history
         .all()
         .iter()
-        .filter(|r| r.arrival >= t0 && r.app == "mriq")
+        .filter(|r| r.arrival >= t0 && r.app == mq)
         .all(|r| r.served_by == ServedBy::Fpga));
     // And tdFIR reverted to CPU.
     assert!(env
         .history
         .all()
         .iter()
-        .filter(|r| r.arrival >= t0 && r.app == "tdfir")
+        .filter(|r| r.arrival >= t0 && r.app == td)
         .all(|r| r.served_by == ServedBy::Cpu));
 }
 
@@ -152,9 +156,10 @@ fn no_mriq_traffic_means_no_proposal() {
     let pre = search(td, "large", &OffloadConfig::default()).unwrap();
     env.deploy(ReconfigKind::Static, "tdfir", &pre.best.variant, pre.improvement);
     // tdFIR-only trace.
+    let td = app_id(&env.registry, "tdfir").unwrap();
     let trace: Vec<_> = generate(&env.registry, 3600.0, 5)
         .into_iter()
-        .filter(|r| r.app == "tdfir")
+        .filter(|r| r.app == td)
         .collect();
     env.run_window(&trace).unwrap();
     let mut approval = Approval::auto_yes();
@@ -214,9 +219,10 @@ fn improvement_coefficient_roundtrip() {
 
     let mut env = ProductionEnv::new(registry(), D5005);
     env.deploy(ReconfigKind::Static, "tdfir", "o1", coef);
+    let (td_id, large) = env.resolve("tdfir", "large").unwrap();
     let trace: Vec<_> = generate(&env.registry, 1800.0, 8)
         .into_iter()
-        .filter(|r| r.app == "tdfir" && r.size == "large")
+        .filter(|r| r.app == td_id && r.size == large)
         .collect();
     env.run_window(&trace).unwrap();
     let (rankings, _) = analyze_load(
@@ -291,10 +297,12 @@ fn empty_history_fails_analysis_cleanly() {
 #[test]
 fn unknown_app_requests_are_rejected_not_panicking() {
     let mut env = ProductionEnv::new(registry(), D5005);
+    // Handles outside the registry (a "ghost" app / size) must be a clean
+    // error, not a panic or a bogus table hit.
     let bogus = repro::workload::Request {
         id: 0,
-        app: "ghost".into(),
-        size: "large".into(),
+        app: AppId(u16::MAX),
+        size: SizeId(0),
         arrival: 1.0,
         bytes: 1.0,
     };
@@ -319,9 +327,11 @@ fn zero_rate_app_never_appears() {
     )
     .unwrap();
     cfg.apply_rates(&mut reg);
+    let td = app_id(&reg, "tdfir").unwrap();
+    let mq = app_id(&reg, "mriq").unwrap();
     let trace = generate(&reg, 4.0 * 3600.0, 11);
-    assert!(trace.iter().all(|r| r.app != "tdfir"));
-    assert!(trace.iter().any(|r| r.app == "mriq"));
+    assert!(trace.iter().all(|r| r.app != td));
+    assert!(trace.iter().any(|r| r.app == mq));
 }
 
 #[test]
@@ -373,11 +383,12 @@ fn dynamic_reconfig_outage_is_ms_order_end_to_end() {
 fn requests_arriving_during_outage_complete_after_it() {
     let mut env = ProductionEnv::new(registry(), D5005);
     env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.0);
+    let (td, large) = env.resolve("tdfir", "large").unwrap();
     // A request arriving at t=0.5 (inside the 1 s deploy outage).
     let req = repro::workload::Request {
         id: 0,
-        app: "tdfir".into(),
-        size: "large".into(),
+        app: td,
+        size: large,
         arrival: 0.5,
         bytes: 2.2e6,
     };

@@ -189,8 +189,8 @@ fn prop_trace_roundtrip_any_duration() {
         |rng| (60.0 + rng.next_f64() * 7200.0, rng.next_u64()),
         |(dur, seed)| {
             let a = generate(&reg, *dur, *seed);
-            let j = trace_to_json(&a);
-            let b = trace_from_json(&Json::parse(&j.to_string()).unwrap())
+            let j = trace_to_json(&a, &reg);
+            let b = trace_from_json(&Json::parse(&j.to_string()).unwrap(), &reg)
                 .map_err(|e| e.to_string())?;
             ensure(a.len() == b.len(), "length changed")?;
             for (x, y) in a.iter().zip(&b) {
@@ -217,6 +217,7 @@ fn prop_history_accounting() {
         |&seed| {
             let mut env = ProductionEnv::new(registry(), D5005);
             env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.0);
+            let td = repro::apps::app_id(&env.registry, "tdfir").unwrap();
             let trace = generate(&reg, 900.0, seed);
             if trace.is_empty() {
                 return Ok(());
@@ -227,10 +228,10 @@ fn prop_history_accounting() {
                 .history
                 .all()
                 .iter()
-                .filter(|r| r.app == "tdfir")
+                .filter(|r| r.app == td)
                 .map(|r| r.service_secs)
                 .sum();
-            let (sum, _) = env.history.totals_in_window("tdfir", 0.0, f64::INFINITY);
+            let (sum, _) = env.history.totals_in_window(td, 0.0, f64::INFINITY);
             ensure((manual - sum).abs() < 1e-9, "window total mismatch")
         },
     );
@@ -283,6 +284,66 @@ fn prop_pretty_roundtrip_preserves_analysis() {
                 ensure(x.ops == y.ops, "ops changed")?;
             }
             Ok(())
+        },
+    );
+}
+
+/// Interned handles: every (app, size, variant) round-trips IDs ↔ names,
+/// and the precomputed service-time table agrees bit-for-bit with an
+/// on-the-fly perf-model evaluation of the same triple.
+#[test]
+fn prop_interned_ids_roundtrip() {
+    use repro::apps::{app_by_id, app_id, VariantId, NUM_VARIANTS};
+    use repro::fpga::perf::{PerfModel, ServiceTimeTable};
+
+    let reg = registry();
+    let table = ServiceTimeTable::build(&reg, D5005).unwrap();
+    forall(
+        200,
+        0x1D5,
+        |rng| {
+            (
+                rng.next_below(reg.len() as u64) as usize,
+                rng.next_u64(),
+                rng.next_below(NUM_VARIANTS as u64) as u8,
+            )
+        },
+        |&(app_i, size_seed, vmask)| {
+            let app = &reg[app_i];
+            // App ID ↔ name.
+            let aid = app_id(&reg, app.name).ok_or("app not interned")?;
+            ensure(aid.0 as usize == app_i, "app id mismatch")?;
+            ensure(
+                app_by_id(&reg, aid).map(|a| a.name) == Some(app.name),
+                "app name mismatch",
+            )?;
+            // Size ID ↔ name.
+            let size_i = (size_seed % app.sizes.len() as u64) as usize;
+            let size = &app.sizes[size_i];
+            let sid = app.size_id(size.name).ok_or("size not interned")?;
+            ensure(sid.0 as usize == size_i, "size id mismatch")?;
+            ensure(app.size_name(sid) == Some(size.name), "size name mismatch")?;
+            // Variant ID ↔ name (bijective over the canonical space).
+            let vid = VariantId(vmask);
+            let name = vid.name();
+            ensure(
+                VariantId::from_name(&name) == Some(vid),
+                format!("variant `{name}` does not round-trip"),
+            )?;
+            // Table entry == direct model evaluation, bit for bit.
+            let t = table
+                .service_time(aid, sid, vid)
+                .ok_or("missing table entry")?;
+            let model = PerfModel::new(app.program(), &app.bindings(size.name), D5005)
+                .map_err(|e| e.to_string())?;
+            let direct = model.request_time_mask(app.nest_mask_for_variant(vid));
+            ensure(
+                t.to_bits() == direct.to_bits(),
+                format!("table {t} != model {direct}"),
+            )?;
+            // Request bytes cached by ID match the analyzed value.
+            let by_id = app.request_bytes_id(sid).ok_or("missing bytes")?;
+            ensure(by_id == app.request_bytes(size.name), "bytes mismatch")
         },
     );
 }

@@ -1,0 +1,109 @@
+//! The two hot-path guarantees of the table-driven serve path, verified in
+//! one binary with a counting `#[global_allocator]`:
+//!
+//!  1. **Equivalence** — table-driven `serve` produces bit-identical
+//!     service times to the seed model path (`PerfModel::new` +
+//!     `request_time(nests_for_variant(..))`) on a full production hour.
+//!  2. **Zero allocation** — once the history buffer is reserved, serving
+//!     the entire trace performs no heap allocation at all.
+//!
+//! Kept as a single #[test] so no concurrent test pollutes the global
+//! allocation counter between the before/after reads.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use repro::apps::{app_id, registry};
+use repro::coordinator::ProductionEnv;
+use repro::fpga::device::ReconfigKind;
+use repro::fpga::part::D5005;
+use repro::fpga::perf::PerfModel;
+use repro::workload::generate;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+#[test]
+fn serve_is_bit_identical_to_seed_model_and_allocation_free() {
+    const VARIANT: &str = "o13";
+    let reg = registry();
+    let mut env = ProductionEnv::new(registry(), D5005);
+    env.deploy(ReconfigKind::Static, "tdfir", VARIANT, 2.0);
+    let td = app_id(&env.registry, "tdfir").unwrap();
+
+    // ---- 1. equivalence on a 1 h production trace -------------------------
+    let trace = generate(&env.registry, 3600.0, 42);
+    assert!(trace.len() > 200, "trace too small to be meaningful");
+
+    // Expected times via the seed path: a fresh PerfModel per (app, size)
+    // plus `request_time(&nests_for_variant(..))` — exactly what `serve`
+    // recomputed per request before the table existed.
+    let mut expected: Vec<Vec<(f64, f64)>> = Vec::new(); // [app][size] -> (cpu, deployed)
+    for app in &reg {
+        let mut per_size = Vec::new();
+        for size in &app.sizes {
+            let model = PerfModel::new(app.program(), &app.bindings(size.name), D5005)
+                .unwrap();
+            let cpu = model.cpu_request_time();
+            let off = model.request_time(&app.nests_for_variant(VARIANT));
+            per_size.push((cpu, off));
+        }
+        expected.push(per_size);
+    }
+
+    env.run_window(&trace).unwrap();
+    assert_eq!(env.history.len(), trace.len());
+    for rec in env.history.all() {
+        let (cpu, off) = expected[rec.app.0 as usize][rec.size.0 as usize];
+        let want = if rec.app == td { off } else { cpu };
+        assert_eq!(
+            rec.service_secs.to_bits(),
+            want.to_bits(),
+            "service time diverged from the seed model for record {rec:?}"
+        );
+    }
+
+    // ---- 2. allocation-free steady state ----------------------------------
+    env.reset();
+    env.deploy(ReconfigKind::Static, "tdfir", VARIANT, 2.0);
+    env.history.reserve(trace.len() + 1);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for r in &trace {
+        let rec = env.serve(r).unwrap();
+        std::hint::black_box(rec);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state serve allocated {} time(s) over {} requests",
+        after - before,
+        trace.len()
+    );
+    assert_eq!(env.history.len(), trace.len());
+}

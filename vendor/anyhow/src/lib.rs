@@ -1,0 +1,102 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build image ships no crates.io registry, so this vendored mini-crate
+//! provides exactly the surface the repo uses: [`Error`], [`Result`], and
+//! the `anyhow!` / `bail!` / `ensure!` macros. Any `std::error::Error` value
+//! converts into [`Error`] via `?`, same as the real crate.
+
+use std::fmt;
+
+/// A dynamically typed error: a message plus an optional source chain,
+/// flattened to text at construction time (no downcasting support).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (the `anyhow!` macro).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`; that keeps this blanket conversion coherent with the
+// reflexive `From<Error> for Error`.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(&e)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/here/ever")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!e.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros() {
+        let e: Error = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag must be set");
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(f(false).unwrap_err().to_string(), "flag must be set");
+    }
+}
