@@ -1,0 +1,208 @@
+//! Step-1 analysis bench: the columnar history index vs the retained
+//! naive-scan reference, on a month-scale (400 simulated hours) trace.
+//!
+//! The paper's §3.3 step 1 re-analyzes the commercial request history
+//! every adaptive window. The seed implementation scanned the full
+//! history once per query — O(total history × apps) per cycle — which is
+//! exactly what stops the adaptive loop from scaling to long traces. The
+//! columnar index answers the same queries in O(log n + in-window
+//! records), and this bench quantifies the gap while asserting the
+//! results stay **bit-identical** (totals compared by f64 bit pattern,
+//! orderings element-for-element).
+//!
+//! Writes `BENCH_recon_analysis.json` with an explicit `speedup_x` field;
+//! the acceptance gate is >= 10x on the 1 h analysis window over 400 h of
+//! history (in practice the index lands far above that).
+
+use repro::apps::{registry, AppId};
+use repro::coordinator::history::scan;
+use repro::coordinator::recon::{analyze_load, LoadRanking, Representative};
+use repro::coordinator::{ProductionEnv, ReconConfig};
+use repro::fpga::device::ReconfigKind;
+use repro::fpga::part::D5005;
+use repro::util::bench::Bench;
+use repro::workload::generate;
+
+/// The seed's step-1 analysis, rebuilt verbatim on the `history::scan`
+/// reference — the honest baseline (same output types, same ordering,
+/// same tie-breaks, just linear scans underneath).
+fn analyze_load_scan(
+    env: &ProductionEnv,
+    cfg: &ReconConfig,
+) -> (Vec<LoadRanking>, Vec<Representative>) {
+    let now = env.clock.now();
+    let from = (now - cfg.long_window_secs).max(0.0);
+    let records = env.history.all();
+
+    let mut rankings: Vec<LoadRanking> = Vec::new();
+    for app in scan::apps_in_window(records, from, now) {
+        let (actual, count) = scan::totals_in_window(records, app, from, now);
+        let coef = env
+            .deployment
+            .filter(|d| d.app == app)
+            .map(|d| d.improvement_coef)
+            .unwrap_or(1.0);
+        rankings.push(LoadRanking {
+            corrected_total_secs: actual * coef,
+            actual_total_secs: actual,
+            usage_count: count,
+            coef,
+            app: env.app_name(app).to_string(),
+            app_id: app,
+        });
+    }
+    rankings.sort_by(|a, b| {
+        b.corrected_total_secs
+            .partial_cmp(&a.corrected_total_secs)
+            .unwrap()
+    });
+
+    let short_from = (now - cfg.short_window_secs).max(0.0);
+    let mut reps = Vec::new();
+    for r in rankings.iter().take(cfg.top_apps) {
+        let dist =
+            scan::size_dist_in_window(records, r.app_id, short_from, now, cfg.bin_width_bytes);
+        let (lo, hi) = dist.mode_range().expect("no requests in short window");
+        let chosen = scan::representative_in_window(records, r.app_id, short_from, now, &dist)
+            .expect("modal bin must contain a request");
+        reps.push(Representative {
+            app: r.app.clone(),
+            size: env.size_name(r.app_id, chosen.size).to_string(),
+            bytes: chosen.bytes,
+            mode_lo: lo,
+            mode_hi: hi,
+            mode_count: dist.mode_count().unwrap_or(0),
+        });
+    }
+    (rankings, reps)
+}
+
+fn assert_bit_identical(
+    indexed: &(Vec<LoadRanking>, Vec<Representative>),
+    scanned: &(Vec<LoadRanking>, Vec<Representative>),
+) {
+    assert_eq!(indexed.0.len(), scanned.0.len(), "ranking count");
+    for (x, y) in indexed.0.iter().zip(&scanned.0) {
+        assert_eq!(x.app, y.app, "ranking order");
+        assert_eq!(x.app_id, y.app_id);
+        assert_eq!(x.usage_count, y.usage_count);
+        assert_eq!(
+            x.actual_total_secs.to_bits(),
+            y.actual_total_secs.to_bits(),
+            "actual total for {}",
+            x.app
+        );
+        assert_eq!(
+            x.corrected_total_secs.to_bits(),
+            y.corrected_total_secs.to_bits(),
+            "corrected total for {}",
+            x.app
+        );
+        assert_eq!(x.coef.to_bits(), y.coef.to_bits());
+    }
+    assert_eq!(indexed.1.len(), scanned.1.len(), "representative count");
+    for (x, y) in indexed.1.iter().zip(&scanned.1) {
+        assert_eq!(x.app, y.app);
+        assert_eq!(x.size, y.size, "representative size for {}", x.app);
+        assert_eq!(x.bytes.to_bits(), y.bytes.to_bits());
+        assert_eq!(x.mode_lo.to_bits(), y.mode_lo.to_bits());
+        assert_eq!(x.mode_hi.to_bits(), y.mode_hi.to_bits());
+        assert_eq!(x.mode_count, y.mode_count);
+    }
+}
+
+fn main() {
+    println!("== step-1 analysis: columnar index vs naive scan ==\n");
+
+    const HOURS: f64 = 400.0;
+    let mut env = ProductionEnv::new(registry(), D5005);
+    env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+    let trace = generate(&env.registry, HOURS * 3600.0, 9);
+    println!(
+        "history: {} requests over {HOURS} simulated hours",
+        trace.len()
+    );
+    env.run_window(&trace).unwrap();
+    let cfg = ReconConfig::default(); // 1 h analysis windows (§4.1.2)
+
+    // ---- correctness gate: indexed == scan, bit for bit -------------------
+    let indexed = analyze_load(&mut env, &cfg).unwrap();
+    let scanned = analyze_load_scan(&env, &cfg);
+    assert!(!indexed.0.is_empty(), "no apps in the final window");
+    assert_bit_identical(&indexed, &scanned);
+    // Raw window queries across the whole trace, not just the last hour.
+    let now = env.clock.now();
+    for h in [1.0, 37.0, 123.0, 399.0] {
+        let (from, to) = (now - h * 3600.0, now - (h - 1.0) * 3600.0);
+        let ids: Vec<u64> = env.history.window(from, to).map(|r| r.id).collect();
+        let scan_ids: Vec<u64> = scan::window(env.history.all(), from, to)
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(ids, scan_ids, "window mismatch {h} h back");
+        assert_eq!(
+            env.history.apps_in_window(from, to),
+            scan::apps_in_window(env.history.all(), from, to)
+        );
+        for a in 0..env.registry.len() as u16 {
+            let (si, ni) = env.history.totals_in_window(AppId(a), from, to);
+            let (ss, ns) = scan::totals_in_window(env.history.all(), AppId(a), from, to);
+            assert_eq!(si.to_bits(), ss.to_bits(), "totals app {a}, {h} h back");
+            assert_eq!(ni, ns);
+        }
+    }
+    println!("correctness: indexed results bit-identical to the scan reference\n");
+
+    // ---- timings ----------------------------------------------------------
+    let mut b = Bench::from_env();
+    let m_idx = b.run("analyze_load_indexed_1h_of_400h", || {
+        let _ = std::hint::black_box(analyze_load(&mut env, &cfg).unwrap());
+    });
+    let m_scan = b.run("analyze_load_scan_1h_of_400h", || {
+        let _ = std::hint::black_box(analyze_load_scan(&env, &cfg));
+    });
+
+    let from = now - cfg.long_window_secs;
+    let apps: Vec<AppId> = (0..env.registry.len() as u16).map(AppId).collect();
+    let m_q_idx = b.run("totals_in_window_indexed_5apps", || {
+        for &a in &apps {
+            let _ = std::hint::black_box(env.history.totals_in_window(a, from, now));
+        }
+    });
+    let m_q_scan = b.run("totals_in_window_scan_5apps", || {
+        for &a in &apps {
+            let _ = std::hint::black_box(scan::totals_in_window(
+                env.history.all(),
+                a,
+                from,
+                now,
+            ));
+        }
+    });
+
+    let speedup = m_scan.mean_s / m_idx.mean_s;
+    let query_speedup = m_q_scan.mean_s / m_q_idx.mean_s;
+    println!(
+        "\nstep-1 analysis speedup: {speedup:.1}x (window queries alone: {query_speedup:.1}x)"
+    );
+
+    b.write_json(
+        "BENCH_recon_analysis.json",
+        &[
+            ("totals_in_window_indexed_5apps", apps.len() as f64),
+            ("totals_in_window_scan_5apps", apps.len() as f64),
+        ],
+        &[
+            ("speedup_x", speedup),
+            ("query_speedup_x", query_speedup),
+            ("history_records", env.history.len() as f64),
+            ("trace_hours", HOURS),
+        ],
+    )
+    .expect("write BENCH_recon_analysis.json");
+    println!("wrote BENCH_recon_analysis.json");
+
+    assert!(
+        speedup >= 10.0,
+        "indexed step-1 analysis must be >= 10x the scan baseline, got {speedup:.1}x"
+    );
+}

@@ -25,7 +25,7 @@ fn main() {
     let trace: Vec<Request> = generate(&reg, 400.0 * 3600.0, 9); // ~126k reqs
     println!("trace: {} requests (400 simulated hours)", trace.len());
 
-    let mut b = Bench::new();
+    let mut b = Bench::from_env(); // bounded iterations under BENCH_SMOKE
 
     // Table precompute cost (paid once per environment, off the hot path).
     b.run("table_build_env_new", || {
@@ -38,7 +38,7 @@ fn main() {
     let m = b.run("serve_400h_trace", || {
         env.reset();
         env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
-        env.history.reserve(trace.len());
+        env.history.reserve_trace(&trace); // exact per-app column sizing
         for r in &trace {
             let _ = std::hint::black_box(env.serve(r).unwrap());
         }

@@ -260,6 +260,19 @@ impl AppSpec {
             .collect()
     }
 
+    /// Clone this spec under a new request rate, with fresh lazy caches —
+    /// the building block for synthetic scale-out registries.
+    pub fn replicate(&self, rate_per_hour: f64) -> AppSpec {
+        AppSpec {
+            name: self.name,
+            source: self.source,
+            sizes: self.sizes.clone(),
+            rate_per_hour,
+            program: OnceLock::new(),
+            size_bytes: OnceLock::new(),
+        }
+    }
+
     /// Artifact key (file-name stem) for a size + variant.
     pub fn artifact_key(&self, size: &str, variant: &str) -> String {
         let art_size = self
@@ -374,6 +387,27 @@ pub fn find<'a>(registry: &'a [AppSpec], name: &str) -> Option<&'a AppSpec> {
     registry.iter().find(|a| a.name == name)
 }
 
+/// Synthetic `n`-app registry: the five paper apps replicated round-robin,
+/// each clone's rate scaled down by its copy count so that for `n >= 5`
+/// the aggregate traffic stays at the paper's ~316 req/h (for `n < 5` the
+/// registry is just the first `n` paper apps at their full rates) — the
+/// ROADMAP "100+ app registries" scale-out lever for workload and index
+/// stress tests.
+///
+/// Names repeat across clones (interned [`AppId`] handles stay unique), so
+/// name-based lookups resolve to the first copy; use handles with these
+/// registries.
+pub fn synthetic_registry(n: usize) -> Vec<AppSpec> {
+    let base = registry();
+    (0..n)
+        .map(|i| {
+            let j = i % base.len();
+            let copies = (n - j).div_ceil(base.len());
+            base[j].replicate(base[j].rate_per_hour / copies as f64)
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -457,5 +491,36 @@ mod tests {
         let reg = registry();
         let rates: Vec<f64> = reg.iter().map(|a| a.rate_per_hour).collect();
         assert_eq!(rates, vec![300.0, 10.0, 3.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn replicate_preserves_analysis_identity() {
+        let reg = registry();
+        let td = find(&reg, "tdfir").unwrap();
+        let clone = td.replicate(42.0);
+        assert_eq!(clone.rate_per_hour, 42.0);
+        assert_eq!(clone.name, td.name);
+        assert_eq!(clone.program(), td.program());
+        assert_eq!(
+            clone.request_bytes_id(SizeId(1)),
+            td.request_bytes_id(SizeId(1))
+        );
+    }
+
+    #[test]
+    fn synthetic_registry_round_robins_the_paper_apps() {
+        let reg = synthetic_registry(12);
+        assert_eq!(reg.len(), 12);
+        let names: Vec<&str> = reg.iter().map(|a| a.name).collect();
+        assert_eq!(&names[..5], &["tdfir", "mriq", "himeno", "symm", "dft"]);
+        assert_eq!(names[5], "tdfir");
+        assert_eq!(names[10], "tdfir");
+        // tdfir has 3 copies at 100 req/h each.
+        let td_rates: Vec<f64> = reg
+            .iter()
+            .filter(|a| a.name == "tdfir")
+            .map(|a| a.rate_per_hour)
+            .collect();
+        assert_eq!(td_rates, vec![100.0, 100.0, 100.0]);
     }
 }

@@ -14,6 +14,7 @@
 //! just replaced cannot be re-proposed in the immediately following
 //! window unless its effect ratio clears `flap_ratio` (> threshold).
 
+use crate::apps::{app_id, AppId};
 use crate::fpga::device::ReconfigKind;
 use crate::workload::generate;
 
@@ -61,6 +62,11 @@ pub struct WindowReport {
 
 /// Run the continuous adaptation loop. `rates` may change per window via
 /// the `drift` callback, modelling usage-characteristic drift.
+///
+/// Expects a registry with unique app names (the paper registry): the
+/// proposal/deploy plumbing is name-keyed, so duplicate-name clones from
+/// [`crate::apps::synthetic_registry`] would alias to their first copy
+/// here — those registries are for workload/index stress, not this loop.
 pub fn run_adaptive<F>(
     env: &mut ProductionEnv,
     cfg: &AdaptiveConfig,
@@ -72,7 +78,10 @@ where
 {
     let mut reports = Vec::new();
     let mut cooldown = 0usize;
-    let mut last_evicted: Option<(String, String)> = None;
+    // Interned app of the most recently evicted logic — a `Copy` handle,
+    // so the per-window flap check never clones strings. (The variant is
+    // irrelevant: flapping is about the app's logic coming back at all.)
+    let mut last_evicted: Option<AppId> = None;
 
     for w in 0..cfg.windows {
         drift(w, env);
@@ -108,11 +117,11 @@ where
         // Flap suppression: if the proposal re-installs the most recently
         // evicted logic, require `flap_ratio`.
         let mut reconfigured = outcome.reconfig.is_some();
-        if let (Some(p), Some(evicted)) =
-            (outcome.proposal.as_ref(), last_evicted.as_ref())
+        if let (Some(p), Some(evicted_app)) =
+            (outcome.proposal.as_ref(), last_evicted)
         {
             if reconfigured
-                && p.best.app == evicted.0
+                && app_id(&env.registry, &p.best.app) == Some(evicted_app)
                 && p.ratio < cfg.flap_ratio
             {
                 // Roll back: re-deploy what we had (the flap guard fires
@@ -132,7 +141,9 @@ where
 
         if reconfigured {
             if let Some(p) = outcome.proposal.as_ref() {
-                last_evicted = Some((p.current.app.clone(), p.current.variant.clone()));
+                // A fresh install (no previous deployment) has an empty
+                // current app, which interns to None — nothing to flap to.
+                last_evicted = app_id(&env.registry, &p.current.app);
             }
             cooldown = cfg.cooldown_windows;
         }

@@ -21,8 +21,8 @@ use std::time::Instant;
 use crate::apps::AppId;
 use crate::fpga::device::{ReconfigKind, ReconfigReport};
 use crate::offload::{self, OffloadConfig, OffloadResult};
-use crate::util::stats::FreqDist;
 
+use super::history::DEFAULT_BIN_WIDTH_BYTES;
 use super::policy::{Approval, ApprovalDecision, ThresholdPolicy};
 use super::server::ProductionEnv;
 
@@ -48,7 +48,7 @@ impl Default for ReconConfig {
             long_window_secs: 3600.0,
             short_window_secs: 3600.0,
             top_apps: 2,
-            bin_width_bytes: 1024.0 * 1024.0,
+            bin_width_bytes: DEFAULT_BIN_WIDTH_BYTES,
             policy: ThresholdPolicy::default(),
             offload: OffloadConfig::default(),
             kind: ReconfigKind::Static,
@@ -135,13 +135,24 @@ pub struct ReconOutcome {
     pub steps: StepDurations,
 }
 
-/// Step 1: load ranking + representative selection.
+/// Step 1: load ranking + representative selection, on the columnar
+/// history index.
 ///
-/// Perf note (§Perf it-3, evaluated and REVERTED): a single-pass
-/// BTreeMap accumulation over the window was tried in place of the
-/// per-app `totals_in_window` scans; with five apps the per-record
-/// string clone + map lookup made it 1.4-1.7x *slower* (8.8 -> 14.7 µs
-/// at 1 h of history), so the allocation-free linear scans stay.
+/// Every sub-step consumes `HistoryStore`'s per-app columns instead of
+/// rescanning the full history: app discovery and corrected totals are
+/// binary-search window queries (the totals bit-identical to the retained
+/// `history::scan` reference), and the step 1-4 size distribution plus the
+/// step 1-5 representative datum come from the app's bytes column — the
+/// push-time histogram directly when the short window spans the whole
+/// history. Cost per cycle is O(A log n + k) for k in-window records,
+/// versus the seed's O(n · A) full scans.
+///
+/// Perf note (§Perf it-3, evaluated and REVERTED before the index
+/// existed): a single-pass BTreeMap accumulation over the window was
+/// tried in place of the per-app `totals_in_window` scans; with five apps
+/// the per-record string clone + map lookup made it 1.4-1.7x *slower*
+/// (8.8 -> 14.7 µs at 1 h of history). The columnar index removes the
+/// per-record work entirely instead of reshuffling it.
 pub fn analyze_load(
     env: &mut ProductionEnv,
     cfg: &ReconConfig,
@@ -149,7 +160,7 @@ pub fn analyze_load(
     let now = env.clock.now();
     let from = (now - cfg.long_window_secs).max(0.0);
 
-    // 1-1/1-2: corrected totals per app.
+    // 1-1/1-2: corrected totals per app (two binary searches each).
     let mut rankings: Vec<LoadRanking> = Vec::new();
     for app in env.history.apps_in_window(from, now) {
         let (actual, count) = env.history.totals_in_window(app, from, now);
@@ -167,37 +178,31 @@ pub fn analyze_load(
             app_id: app,
         });
     }
-    // 1-3: sort by corrected totals, descending.
+    // 1-3: sort by corrected totals, descending (stable, so ties keep
+    // first-seen order exactly like the scan path).
     rankings.sort_by(|a, b| {
         b.corrected_total_secs
             .partial_cmp(&a.corrected_total_secs)
             .unwrap()
     });
 
-    // 1-4/1-5: representative data for the top apps.
+    // 1-4/1-5: representative data for the top apps, from the per-app
+    // bytes columns.
     let short_from = (now - cfg.short_window_secs).max(0.0);
     let mut reps = Vec::new();
     for r in rankings.iter().take(cfg.top_apps) {
-        let mut dist = FreqDist::new(cfg.bin_width_bytes);
-        for rec in env.history.window(short_from, now) {
-            if rec.app == r.app_id {
-                dist.add(rec.bytes);
-            }
-        }
+        let dist =
+            env.history
+                .size_dist_in_window(r.app_id, short_from, now, cfg.bin_width_bytes);
         let (lo, hi) = dist
             .mode_range()
             .ok_or_else(|| anyhow::anyhow!("no requests for `{}` in short window", r.app))?;
         // 1-5: pick one real request out of the modal bin.
-        let chosen = env
+        let chosen = *env
             .history
-            .window(short_from, now)
-            .find(|rec| rec.app == r.app_id && dist.in_mode(rec.bytes))
+            .representative_in_window(r.app_id, short_from, now, &dist)
             .expect("modal bin must contain a request");
-        let mode_count = dist
-            .bins()
-            .find(|(b, _)| *b == dist.mode_bin().unwrap())
-            .map(|(_, c)| c)
-            .unwrap_or(0);
+        let mode_count = dist.mode_count().unwrap_or(0);
         reps.push(Representative {
             app: r.app.clone(),
             size: env.size_name(r.app_id, chosen.size).to_string(),
@@ -253,12 +258,10 @@ pub fn run_reconfiguration(
             .find(|r| r.app == dep_app)
             .map(|r| r.size.clone())
             .unwrap_or_else(|| {
-                // Fall back to the app's most recent size in history.
+                // Fall back to the app's most recent size in history
+                // (O(1) off the app's column tail).
                 env.history
-                    .all()
-                    .iter()
-                    .rev()
-                    .find(|r| r.app == dep.app)
+                    .last_of_app(dep.app)
                     .map(|r| env.size_name(dep.app, r.size).to_string())
                     .unwrap_or_else(|| "large".to_string())
             });

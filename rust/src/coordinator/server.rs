@@ -50,9 +50,10 @@ pub struct ProductionEnv {
     pub part: Part,
     /// Dense (app × size × variant) service times, built at construction.
     pub table: ServiceTimeTable,
-    /// Perf models cached per (app, size) — compat shim for callers that
-    /// need the full model (effect estimation, calibration tests).
-    models: HashMap<(String, String), PerfModel>,
+    /// Perf models cached per interned (app, size) — compat shim for
+    /// callers that need the full model (effect estimation, calibration
+    /// tests). Keyed by `Copy` handles, so a cache hit never allocates.
+    models: HashMap<(AppId, SizeId), PerfModel>,
 }
 
 impl ProductionEnv {
@@ -67,7 +68,7 @@ impl ProductionEnv {
             device: FpgaDevice::new(part),
             deployment: None,
             clock: Clock::new(),
-            history: HistoryStore::new(),
+            history: HistoryStore::with_apps(registry.len()),
             part,
             table,
             models: HashMap::new(),
@@ -82,7 +83,7 @@ impl ProductionEnv {
         self.device = FpgaDevice::new(self.part);
         self.deployment = None;
         self.clock = Clock::new();
-        self.history = HistoryStore::new();
+        self.history = HistoryStore::with_apps(self.registry.len());
     }
 
     pub fn app(&self, name: &str) -> Option<&AppSpec> {
@@ -115,17 +116,29 @@ impl ProductionEnv {
         Ok((a, s))
     }
 
-    /// Perf model for (app, size), cached (single-lookup entry API).
+    /// Perf model for (app, size) names — resolves to interned handles
+    /// once, then hits the `Copy`-keyed cache (no per-call `to_string`).
     pub fn model(&mut self, app: &str, size: &str) -> anyhow::Result<&PerfModel> {
-        match self.models.entry((app.to_string(), size.to_string())) {
+        let (a, s) = self.resolve(app, size)?;
+        self.model_by_id(a, s)
+    }
+
+    /// Perf model for an interned (app, size) pair, cached
+    /// (single-lookup entry API; a hit is one hash of two u16 handles).
+    pub fn model_by_id(&mut self, app: AppId, size: SizeId) -> anyhow::Result<&PerfModel> {
+        match self.models.entry((app, size)) {
             Entry::Occupied(e) => Ok(e.into_mut()),
             Entry::Vacant(v) => {
                 let spec = self
                     .registry
-                    .iter()
-                    .find(|a| a.name == app)
-                    .ok_or_else(|| anyhow::anyhow!("unknown app `{app}`"))?;
-                let m = PerfModel::new(spec.program(), &spec.bindings(size), self.part)?;
+                    .get(app.0 as usize)
+                    .ok_or_else(|| anyhow::anyhow!("out-of-range app handle {app:?}"))?;
+                let size_name = spec
+                    .size_name(size)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("out-of-range size handle {size:?} for `{}`", spec.name)
+                    })?;
+                let m = PerfModel::new(spec.program(), &spec.bindings(size_name), self.part)?;
                 Ok(v.insert(m))
             }
         }
@@ -190,7 +203,12 @@ impl ProductionEnv {
     /// Serve one request; returns the record (also appended to history).
     ///
     /// Steady-state cost: two table indexes + one `Copy` push. The only
-    /// fallible step is the bounds check on the interned handles.
+    /// *fallible* step is the bounds check on the interned handles.
+    /// Arrivals must be non-decreasing across calls (the virtual clock is
+    /// monotone and the columnar history index binary-searches on arrival
+    /// order): an out-of-order arrival is a caller contract violation and
+    /// panics in `HistoryStore::push`. `run_window` traces and
+    /// `workload::trace_from_json` replays are validated/ordered upstream.
     pub fn serve(&mut self, req: &Request) -> anyhow::Result<RequestRecord> {
         self.clock.advance_to(req.arrival.max(self.clock.now()));
         let fpga = match self.deployment {
@@ -242,7 +260,7 @@ impl ProductionEnv {
     /// Serve a whole trace (arrival-ordered); returns (first, last) time.
     pub fn run_window(&mut self, trace: &[Request]) -> anyhow::Result<(f64, f64)> {
         anyhow::ensure!(!trace.is_empty(), "empty trace");
-        self.history.reserve(trace.len());
+        self.history.reserve_trace(trace);
         let from = self.clock.now();
         for req in trace {
             self.serve(req)?;
@@ -337,6 +355,17 @@ mod tests {
         let x = env.cpu_time("tdfir", "xlarge").unwrap();
         assert!(s < l && l < x);
         assert!((x / l - 2.0).abs() < 0.2, "xlarge/large = {}", x / l);
+    }
+
+    #[test]
+    fn model_cache_is_keyed_by_interned_ids() {
+        let mut env = env_with_tdfir();
+        let (a, s) = env.resolve("tdfir", "large").unwrap();
+        let by_name = env.model("tdfir", "large").unwrap().cpu_request_time();
+        let by_id = env.model_by_id(a, s).unwrap().cpu_request_time();
+        assert_eq!(by_name.to_bits(), by_id.to_bits());
+        assert!(env.model_by_id(AppId(99), SizeId(0)).is_err());
+        assert!(env.model("tdfir", "nonexistent-size").is_err());
     }
 
     #[test]

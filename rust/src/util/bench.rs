@@ -75,9 +75,31 @@ impl Default for Bench {
     }
 }
 
+/// True when the `BENCH_SMOKE` env var is set: CI runs every bench in a
+/// bounded smoke mode that still produces the `BENCH_*.json` artifacts.
+pub fn smoke_mode() -> bool {
+    std::env::var_os("BENCH_SMOKE").is_some()
+}
+
 impl Bench {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Default harness, or a tightly bounded one when `BENCH_SMOKE` is set
+    /// (the CI smoke job: enough iterations for a stable mean, small
+    /// enough to keep bench wall time in seconds).
+    pub fn from_env() -> Self {
+        if smoke_mode() {
+            Bench {
+                warmup: Duration::from_millis(20),
+                budget: Duration::from_millis(150),
+                max_iters: 60,
+                results: Vec::new(),
+            }
+        } else {
+            Self::default()
+        }
     }
 
     pub fn with_budget(mut self, budget: Duration) -> Self {

@@ -89,10 +89,22 @@ impl Summary {
 /// Paper step 1-4: "sort request data sizes into fixed-size bins and build
 /// a frequency distribution"; step 1-5 picks one real request out of the
 /// modal bin as the representative datum.
-#[derive(Clone, Debug)]
+///
+/// The distribution is fully incremental: bins live in a sorted `Vec`
+/// (amortization-friendly, and `reserve_bins` makes `add` allocation-free
+/// once the bin set is capped), the total is a running counter, and the
+/// mode is maintained on every `add` — so `mode_bin`/`in_mode`/`total` are
+/// O(1) instead of a scan over the bins. This is what lets the per-app
+/// history index fold a `FreqDist` in at push time and answer step 1-4
+/// queries without re-binning the window.
+#[derive(Clone, Debug, PartialEq)]
 pub struct FreqDist {
     bin_width: f64,
-    counts: std::collections::BTreeMap<i64, u64>,
+    /// (bin, count), sorted by bin — ascending, like the old BTreeMap.
+    counts: Vec<(i64, u64)>,
+    total: u64,
+    /// Current (bin, count) argmax; ties resolve toward the smaller bin.
+    mode: Option<(i64, u64)>,
 }
 
 impl FreqDist {
@@ -100,8 +112,21 @@ impl FreqDist {
         assert!(bin_width > 0.0);
         FreqDist {
             bin_width,
-            counts: Default::default(),
+            counts: Vec::new(),
+            total: 0,
+            mode: None,
         }
+    }
+
+    pub fn bin_width(&self) -> f64 {
+        self.bin_width
+    }
+
+    /// Pre-size the bin vector so `add` never reallocates while the number
+    /// of distinct bins stays within `bins` (the allocation-free push-path
+    /// invariant of the history index).
+    pub fn reserve_bins(&mut self, bins: usize) {
+        self.counts.reserve(bins);
     }
 
     pub fn bin_of(&self, x: f64) -> i64 {
@@ -109,19 +134,39 @@ impl FreqDist {
     }
 
     pub fn add(&mut self, x: f64) {
-        *self.counts.entry(self.bin_of(x)).or_insert(0) += 1;
+        let bin = self.bin_of(x);
+        let count = match self.counts.binary_search_by_key(&bin, |&(b, _)| b) {
+            Ok(i) => {
+                self.counts[i].1 += 1;
+                self.counts[i].1
+            }
+            Err(i) => {
+                self.counts.insert(i, (bin, 1));
+                1
+            }
+        };
+        self.total += 1;
+        // Incremental mode: a bin whose count just grew displaces the mode
+        // iff it now strictly exceeds it, or equals it with a smaller bin
+        // index (the deterministic tie-break of the scan-based mode).
+        match self.mode {
+            Some((mb, mc)) if count < mc || (count == mc && bin >= mb) => {}
+            _ => self.mode = Some((bin, count)),
+        }
     }
 
     pub fn total(&self) -> u64 {
-        self.counts.values().sum()
+        self.total
     }
 
     /// The modal bin (ties broken toward the smaller bin, deterministic).
     pub fn mode_bin(&self) -> Option<i64> {
-        self.counts
-            .iter()
-            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(a.0)))
-            .map(|(bin, _)| *bin)
+        self.mode.map(|(b, _)| b)
+    }
+
+    /// Requests in the modal bin.
+    pub fn mode_count(&self) -> Option<u64> {
+        self.mode.map(|(_, c)| c)
     }
 
     /// Inclusive byte range covered by the modal bin.
@@ -136,7 +181,7 @@ impl FreqDist {
     }
 
     pub fn bins(&self) -> impl Iterator<Item = (i64, u64)> + '_ {
-        self.counts.iter().map(|(b, c)| (*b, *c))
+        self.counts.iter().copied()
     }
 }
 
@@ -200,5 +245,51 @@ mod tests {
     fn empty_dist_has_no_mode() {
         let d = FreqDist::new(1.0);
         assert_eq!(d.mode_bin(), None);
+        assert_eq!(d.mode_count(), None);
+    }
+
+    #[test]
+    fn incremental_mode_matches_scan_argmax() {
+        // The O(1) maintained mode must equal a full argmax over the bins
+        // (highest count, ties toward the smaller bin) after every add.
+        let mut d = FreqDist::new(2.0);
+        let xs = [9.0, 1.0, 9.5, 3.0, 2.0, 8.0, 3.9, 0.0, 9.9, 2.1];
+        for &x in &xs {
+            d.add(x);
+            let scan = d
+                .bins()
+                .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
+                .map(|(b, _)| b);
+            assert_eq!(d.mode_bin(), scan, "after adding {x}");
+        }
+        // Bins [2,4) and [8,10) both hold 4 values; the tie resolves to
+        // the smaller bin.
+        assert_eq!(d.mode_bin(), Some(1));
+        assert_eq!(d.mode_count(), Some(4));
+        assert_eq!(d.total(), xs.len() as u64);
+    }
+
+    #[test]
+    fn reserve_bins_prevents_regrowth() {
+        let mut d = FreqDist::new(1.0);
+        d.reserve_bins(8);
+        for i in 0..8 {
+            for _ in 0..=i {
+                d.add(i as f64);
+            }
+        }
+        assert_eq!(d.bins().count(), 8);
+        assert_eq!(d.mode_bin(), Some(7));
+        assert_eq!(d.mode_count(), Some(8));
+    }
+
+    #[test]
+    fn bins_iterate_ascending() {
+        let mut d = FreqDist::new(1.0);
+        for x in [5.0, 1.0, 3.0, 1.5, 5.5] {
+            d.add(x);
+        }
+        let bins: Vec<i64> = d.bins().map(|(b, _)| b).collect();
+        assert_eq!(bins, vec![1, 3, 5]);
     }
 }

@@ -10,11 +10,23 @@
 //! [`Request`] is `Copy` and the serve path never allocates. Generation is
 //! a k-way merge of the per-app Poisson streams — each stream is ordered
 //! by construction, so the trace comes out arrival-sorted without the
-//! post-hoc global sort the first implementation used.
+//! post-hoc global sort the first implementation used. Small registries
+//! (the paper's five apps) merge with a linear-scan min; past
+//! [`HEAP_MERGE_MIN_STREAMS`] streams a binary heap takes over with the
+//! same FIFO tie-break, keeping the merge O(n log k) for the 100-app
+//! synthetic registries.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
 
 use crate::apps::{app_id, AppId, AppSpec, SizeId};
 use crate::util::json::Json;
 use crate::util::prng::Rng;
+
+/// Stream count at which the k-way merge switches from a linear-scan min
+/// to a binary heap. The linear scan beats the heap's bookkeeping for the
+/// paper's five apps; the heap wins once the scan dominates.
+pub const HEAP_MERGE_MIN_STREAMS: usize = 9;
 
 /// One production request. `Copy` — 32 bytes, no heap.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -44,8 +56,25 @@ struct Stream {
 /// Per-app streams are independent (each gets a split of the master PRNG,
 /// in registry order, exactly as before); the merge pops the earliest
 /// stream head each step, breaking ties toward the lower app index — the
-/// same order the old generate-then-stable-sort produced.
+/// same order the old generate-then-stable-sort produced, regardless of
+/// which merge strategy runs.
 pub fn generate(apps: &[AppSpec], duration_secs: f64, seed: u64) -> Vec<Request> {
+    generate_with(apps, duration_secs, seed, None)
+}
+
+/// Merge strategy override for equivalence tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Merge {
+    Linear,
+    Heap,
+}
+
+fn generate_with(
+    apps: &[AppSpec],
+    duration_secs: f64,
+    seed: u64,
+    merge: Option<Merge>,
+) -> Vec<Request> {
     let mut master = Rng::new(seed);
     let mut streams: Vec<Stream> = Vec::new();
     let mut expected = 0.0f64;
@@ -72,9 +101,37 @@ pub fn generate(apps: &[AppSpec], duration_secs: f64, seed: u64) -> Vec<Request>
     }
 
     let mut out = Vec::with_capacity((expected * 1.1) as usize + 16);
+    let use_heap = match merge {
+        Some(Merge::Heap) => true,
+        Some(Merge::Linear) => false,
+        None => streams.len() >= HEAP_MERGE_MIN_STREAMS,
+    };
+    if use_heap {
+        merge_heap(&mut streams, duration_secs, &mut out);
+    } else {
+        merge_linear(&mut streams, duration_secs, &mut out);
+    }
+    out
+}
+
+/// Emit the head request of stream `i` and advance it.
+fn emit(streams: &mut [Stream], i: usize, out: &mut Vec<Request>) {
+    let s = &mut streams[i];
+    let size = s.rng.pick_weighted(&s.weights);
+    out.push(Request {
+        id: out.len() as u64,
+        app: s.app,
+        size: SizeId(size as u16),
+        arrival: s.next_arrival,
+        bytes: s.bytes[size],
+    });
+    s.next_arrival += s.rng.next_exp(s.rate_per_sec);
+}
+
+/// K-way merge, linear-scan min: beats a heap for a handful of streams,
+/// and the strict `<` keeps ties FIFO by app index.
+fn merge_linear(streams: &mut [Stream], duration_secs: f64, out: &mut Vec<Request>) {
     loop {
-        // K-way merge over the (few) app streams: linear-scan min beats a
-        // heap at k = 5, and the strict `<` keeps ties FIFO by app index.
         let mut best: Option<usize> = None;
         for (i, s) in streams.iter().enumerate() {
             if s.next_arrival >= duration_secs {
@@ -89,18 +146,64 @@ pub fn generate(apps: &[AppSpec], duration_secs: f64, seed: u64) -> Vec<Request>
             }
         }
         let Some(i) = best else { break };
-        let s = &mut streams[i];
-        let size = s.rng.pick_weighted(&s.weights);
-        out.push(Request {
-            id: out.len() as u64,
-            app: s.app,
-            size: SizeId(size as u16),
-            arrival: s.next_arrival,
-            bytes: s.bytes[size],
-        });
-        s.next_arrival += s.rng.next_exp(s.rate_per_sec);
+        emit(streams, i, out);
     }
-    out
+}
+
+/// One stream's head in the merge heap. The `Ord` impl is *reversed*
+/// (earliest arrival compares greatest, ties toward the lower stream
+/// index) so `BinaryHeap::pop` yields exactly the stream the linear scan
+/// would pick — the traces are identical, element for element.
+struct Head {
+    arrival: f64,
+    stream: usize,
+}
+
+impl PartialEq for Head {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Head {}
+
+impl PartialOrd for Head {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Head {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .arrival
+            .total_cmp(&self.arrival)
+            .then_with(|| other.stream.cmp(&self.stream))
+    }
+}
+
+/// K-way merge on a binary heap: O(n log k) for k streams, same output as
+/// [`merge_linear`].
+fn merge_heap(streams: &mut [Stream], duration_secs: f64, out: &mut Vec<Request>) {
+    let mut heap: BinaryHeap<Head> = BinaryHeap::with_capacity(streams.len());
+    for (i, s) in streams.iter().enumerate() {
+        if s.next_arrival < duration_secs {
+            heap.push(Head {
+                arrival: s.next_arrival,
+                stream: i,
+            });
+        }
+    }
+    while let Some(Head { stream, .. }) = heap.pop() {
+        emit(streams, stream, out);
+        let next = streams[stream].next_arrival;
+        if next < duration_secs {
+            heap.push(Head {
+                arrival: next,
+                stream,
+            });
+        }
+    }
 }
 
 /// Serialize a trace to JSON (names resolved through the registry).
@@ -121,11 +224,17 @@ pub fn trace_to_json(reqs: &[Request], apps: &[AppSpec]) -> Json {
 }
 
 /// Parse a trace back from JSON, re-interning names against the registry.
+///
+/// Rejects traces whose arrivals are not non-decreasing: the serving loop
+/// and the columnar history index both rely on arrival order, and an
+/// externally produced replay file is the one place unsorted input can
+/// enter, so it is validated here as a clean error (not a panic later).
 pub fn trace_from_json(j: &Json, apps: &[AppSpec]) -> anyhow::Result<Vec<Request>> {
     let arr = j
         .as_arr()
         .ok_or_else(|| anyhow::anyhow!("trace must be a JSON array"))?;
-    arr.iter()
+    let reqs: Vec<Request> = arr
+        .iter()
         .map(|o| {
             let app_name = o.str_at("app")?;
             let app = app_id(apps, app_name)
@@ -148,7 +257,18 @@ pub fn trace_from_json(j: &Json, apps: &[AppSpec]) -> anyhow::Result<Vec<Request
                     .ok_or_else(|| anyhow::anyhow!("missing bytes"))?,
             })
         })
-        .collect()
+        .collect::<anyhow::Result<_>>()?;
+    for w in reqs.windows(2) {
+        anyhow::ensure!(
+            w[0].arrival <= w[1].arrival,
+            "trace arrivals must be non-decreasing: request {} at {} follows {} at {}",
+            w[1].id,
+            w[1].arrival,
+            w[0].id,
+            w[0].arrival
+        );
+    }
+    Ok(reqs)
 }
 
 #[cfg(test)]
@@ -227,5 +347,65 @@ mod tests {
         fn assert_copy<T: Copy>() {}
         assert_copy::<Request>();
         assert!(std::mem::size_of::<Request>() <= 32);
+    }
+
+    #[test]
+    fn unsorted_replay_trace_is_a_clean_error() {
+        let reg = registry();
+        let json = r#"[
+            {"id": 0, "app": "tdfir", "size": "large", "arrival": 5.0, "bytes": 1.0},
+            {"id": 1, "app": "tdfir", "size": "large", "arrival": 2.0, "bytes": 1.0}
+        ]"#;
+        let err = trace_from_json(&Json::parse(json).unwrap(), &reg).unwrap_err();
+        assert!(
+            err.to_string().contains("non-decreasing"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn heap_merge_is_bit_identical_to_linear_scan() {
+        // Same streams, same seed: the heap path must reproduce the
+        // linear-scan trace exactly — ids, handles, arrivals, bytes.
+        for (n, dur, seed) in [(5usize, 3600.0, 42u64), (12, 1800.0, 7), (40, 600.0, 3)] {
+            let reg = repro_registry(n);
+            let a = generate_with(&reg, dur, seed, Some(Merge::Linear));
+            let b = generate_with(&reg, dur, seed, Some(Merge::Heap));
+            assert_eq!(a, b, "merge strategies diverged for {n} streams");
+        }
+    }
+
+    #[test]
+    fn auto_merge_picks_heap_past_threshold_transparently() {
+        // The public API must not change output when the stream count
+        // crosses HEAP_MERGE_MIN_STREAMS.
+        let reg = repro_registry(HEAP_MERGE_MIN_STREAMS + 2);
+        let auto = generate(&reg, 1200.0, 11);
+        let linear = generate_with(&reg, 1200.0, 11, Some(Merge::Linear));
+        assert_eq!(auto, linear);
+        for w in auto.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+    }
+
+    #[test]
+    fn synthetic_registry_conserves_aggregate_rate() {
+        for n in [5usize, 12, 100] {
+            let reg = repro_registry(n);
+            let total: f64 = reg.iter().map(|a| a.rate_per_hour).sum();
+            assert!((total - 316.0).abs() < 1e-9, "n={n} total={total}");
+        }
+        // 100 apps generate a sane hour of traffic through the heap merge.
+        let reqs = generate(&repro_registry(100), 3600.0, 1);
+        assert!((reqs.len() as f64 - 316.0).abs() < 80.0, "{}", reqs.len());
+        let distinct: std::collections::BTreeSet<u16> =
+            reqs.iter().map(|r| r.app.0).collect();
+        // ~33 distinct apps expected (all 20 tdfir clones plus a Poisson
+        // draw of the low-rate clones); 22 is >3 sigma below that.
+        assert!(distinct.len() > 22, "only {} apps arrived", distinct.len());
+    }
+
+    fn repro_registry(n: usize) -> Vec<AppSpec> {
+        crate::apps::synthetic_registry(n)
     }
 }

@@ -2,7 +2,8 @@
 //! using the in-repo harness (util::check) — proptest is unavailable
 //! offline.
 
-use repro::apps::registry;
+use repro::apps::{registry, AppId, SizeId};
+use repro::coordinator::history::{scan, HistoryStore, RequestRecord, ServedBy};
 use repro::coordinator::ProductionEnv;
 use repro::fpga::device::{FpgaDevice, ReconfigKind};
 use repro::fpga::part::D5005;
@@ -233,6 +234,117 @@ fn prop_history_accounting() {
                 .sum();
             let (sum, _) = env.history.totals_in_window(td, 0.0, f64::INFINITY);
             ensure((manual - sum).abs() < 1e-9, "window total mismatch")
+        },
+    );
+}
+
+/// Columnar history index: every window query is bit-identical to the
+/// retained naive-scan reference (`history::scan`) on random traces —
+/// totals compared by f64 bit pattern, orderings element for element,
+/// including tied arrivals, empty/inverted windows, and windows anchored
+/// exactly on arrival values (where the prefix-sum fast path engages).
+#[test]
+fn prop_indexed_history_matches_scan_reference() {
+    forall(
+        60,
+        0x1DEE7,
+        |rng| {
+            let n = rng.next_below(250) as usize;
+            let apps = 1 + rng.next_below(7) as u16;
+            let mut t = 0.0f64;
+            let records: Vec<RequestRecord> = (0..n)
+                .map(|i| {
+                    // ~20% tied arrivals to exercise the FIFO boundaries.
+                    if rng.next_f64() < 0.8 {
+                        t += rng.next_f64() * 5.0;
+                    }
+                    // Mixed magnitudes so summation order matters.
+                    let service = match rng.next_below(3) {
+                        0 => rng.next_f64() * 1e-6,
+                        1 => rng.next_f64(),
+                        _ => rng.next_f64() * 1e5,
+                    };
+                    RequestRecord {
+                        id: i as u64,
+                        app: AppId(rng.next_below(apps as u64) as u16),
+                        size: SizeId(rng.next_below(3) as u16),
+                        bytes: rng.next_below(8) as f64 * 0.7e6,
+                        arrival: t,
+                        start: t,
+                        finish: t + service,
+                        service_secs: service,
+                        served_by: ServedBy::Cpu,
+                    }
+                })
+                .collect();
+            // Window endpoints: random values plus exact arrivals, and a
+            // few degenerate pairs (empty, inverted, everything).
+            let span = t + 1.0;
+            let mut windows: Vec<(f64, f64)> = vec![
+                (0.0, f64::INFINITY),
+                (span, 0.0),
+                (span * 0.5, span * 0.5),
+            ];
+            for _ in 0..6 {
+                let a = if rng.next_f64() < 0.5 && !records.is_empty() {
+                    records[rng.next_below(records.len() as u64) as usize].arrival
+                } else {
+                    rng.next_f64() * span
+                };
+                let b = rng.next_f64() * span;
+                windows.push((a, b));
+            }
+            (records, apps, windows)
+        },
+        |(records, apps, windows)| {
+            let mut h = HistoryStore::new();
+            for r in records {
+                h.push(*r);
+            }
+            ensure(h.len() == records.len(), "store dropped records")?;
+            for &(from, to) in windows {
+                let got: Vec<u64> = h.window(from, to).map(|r| r.id).collect();
+                let want: Vec<u64> = scan::window(records, from, to).map(|r| r.id).collect();
+                ensure(got == want, format!("window [{from},{to}) records"))?;
+                ensure(
+                    h.apps_in_window(from, to) == scan::apps_in_window(records, from, to),
+                    format!("apps_in_window [{from},{to}) order"),
+                )?;
+                for a in 0..*apps {
+                    let app = AppId(a);
+                    let (is, ic) = h.totals_in_window(app, from, to);
+                    let (ss, sc) = scan::totals_in_window(records, app, from, to);
+                    ensure(
+                        is.to_bits() == ss.to_bits(),
+                        format!("totals bits app {a} [{from},{to}): {is} vs {ss}"),
+                    )?;
+                    ensure(ic == sc, format!("count app {a}"))?;
+                    let id = h.size_dist_in_window(app, from, to, 1e6);
+                    let sd = scan::size_dist_in_window(records, app, from, to, 1e6);
+                    ensure(
+                        id.bins().eq(sd.bins()),
+                        format!("size dist bins app {a} [{from},{to})"),
+                    )?;
+                    ensure(id.mode_bin() == sd.mode_bin(), "mode bin")?;
+                    ensure(id.total() == sd.total(), "dist total")?;
+                    let irep = h
+                        .representative_in_window(app, from, to, &sd)
+                        .map(|r| r.id);
+                    let srep = scan::representative_in_window(records, app, from, to, &sd)
+                        .map(|r| r.id);
+                    ensure(irep == srep, format!("representative app {a}"))?;
+                }
+                // The store's native bin width engages the push-time
+                // histogram fast path on full-history windows; it must
+                // agree with a scan at the same width.
+                let app = AppId(0);
+                let fast = h.size_dist_in_window(app, from, to, h.bin_width());
+                let slow =
+                    scan::size_dist_in_window(records, app, from, to, h.bin_width());
+                ensure(fast.bins().eq(slow.bins()), "native-width dist")?;
+                ensure(fast.mode_bin() == slow.mode_bin(), "native-width mode")?;
+            }
+            Ok(())
         },
     );
 }

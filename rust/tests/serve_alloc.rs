@@ -1,11 +1,16 @@
-//! The two hot-path guarantees of the table-driven serve path, verified in
+//! The hot-path guarantees of the table-driven serve path, verified in
 //! one binary with a counting `#[global_allocator]`:
 //!
 //!  1. **Equivalence** — table-driven `serve` produces bit-identical
 //!     service times to the seed model path (`PerfModel::new` +
 //!     `request_time(nests_for_variant(..))`) on a full production hour.
-//!  2. **Zero allocation** — once the history buffer is reserved, serving
-//!     the entire trace performs no heap allocation at all.
+//!  2. **Zero allocation** — once the history buffers are reserved
+//!     (row store *and* the per-app columnar index, including each app's
+//!     push-time byte histogram), serving the entire trace performs no
+//!     heap allocation at all.
+//!  3. **Zero-allocation queries** — the indexed window reads the §3.3
+//!     step-1 analysis leans on (`window`, `totals_in_window`,
+//!     `last_of_app`) don't allocate either.
 //!
 //! Kept as a single #[test] so no concurrent test pollutes the global
 //! allocation counter between the before/after reads.
@@ -106,4 +111,29 @@ fn serve_is_bit_identical_to_seed_model_and_allocation_free() {
         trace.len()
     );
     assert_eq!(env.history.len(), trace.len());
+
+    // ---- 3. indexed window queries are allocation-free too ----------------
+    let now = env.clock.now();
+    let from = now - 1800.0;
+    let before_q = ALLOCS.load(Ordering::SeqCst);
+    let mut acc = 0.0f64;
+    let mut cnt = 0u64;
+    for _ in 0..64 {
+        let (sum, n) = env.history.totals_in_window(td, from, now);
+        acc += sum;
+        cnt += n;
+        cnt += env.history.window(from, now).count() as u64;
+        if let Some(last) = env.history.last_of_app(td) {
+            acc += last.service_secs;
+        }
+    }
+    std::hint::black_box((acc, cnt));
+    let after_q = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after_q - before_q,
+        0,
+        "indexed window queries allocated {} time(s)",
+        after_q - before_q
+    );
+    assert!(cnt > 0, "queries must have observed the served history");
 }
