@@ -1,14 +1,23 @@
-//! Continuous operation (Fig. 1 Step 7 run as a loop): 12 simulated hours
-//! with a usage-characteristic drift halfway through, driven by a JSON
-//! config — the deployment shape a provider would actually run.
+//! Continuous operation (Fig. 1 Step 7 run as a loop) on a **4-card
+//! fleet**: 12 simulated hours with a usage-characteristic drift halfway
+//! through, driven by a JSON config — the deployment shape a provider
+//! would actually run at scale.
+//!
+//! The adaptive controller is the same code that drives the paper's
+//! single-card environment (it is generic over
+//! `coordinator::Environment`); what changes is step 6: each approved
+//! reconfiguration *rolls* across the fleet — drain one card, reprogram,
+//! rejoin, repeat — so served requests never stall on an outage window
+//! while per-card downtime stays the paper's ~1 s.
 //!
 //!     cargo run --release --example adaptive_operation
 
 use repro::apps::registry;
 use repro::coordinator::adaptive::{run_adaptive, AdaptiveConfig};
 use repro::coordinator::config::RunConfig;
-use repro::coordinator::{Approval, ProductionEnv};
-use repro::fpga::device::ReconfigKind;
+use repro::coordinator::Approval;
+use repro::fleet::FleetEnv;
+use repro::fpga::device::{CardId, ReconfigKind};
 use repro::fpga::part::D5005;
 use repro::offload::{search, OffloadConfig};
 use repro::util::table::Table;
@@ -25,11 +34,16 @@ fn main() -> anyhow::Result<()> {
     let run_cfg = RunConfig::parse(cfg_json)?;
     println!("config:\n{cfg_json}\n");
 
-    let mut env = ProductionEnv::new(registry(), D5005);
+    const CARDS: usize = 4;
+    let mut env = FleetEnv::new(registry(), D5005, CARDS);
     let reg = registry();
     let td = repro::apps::find(&reg, "tdfir").unwrap();
     let pre = search(td, "large", &OffloadConfig::default())?;
+    // Pre-launch: the fresh fleet programs all cards simultaneously, and
+    // the service launches only after the initial outage has passed.
     env.deploy(ReconfigKind::Static, "tdfir", &pre.best.variant, pre.improvement);
+    env.advance_to(2.0);
+    println!("fleet: {CARDS} cards, all serving tdfir:{}\n", pre.best.variant);
 
     let cfg = AdaptiveConfig {
         recon: run_cfg.recon.clone(),
@@ -41,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     let mut approval = Approval::auto_yes();
 
     // Drift: from hour 6, MRI-Q traffic disappears and DFT spikes.
-    let reports = run_adaptive(&mut env, &cfg, &mut approval, |w, env| {
+    let reports = run_adaptive(&mut env, &cfg, &mut approval, |w, env: &mut FleetEnv| {
         if w == 6 {
             for app in env.registry.iter_mut() {
                 match app.name {
@@ -60,7 +74,7 @@ fn main() -> anyhow::Result<()> {
             r.window.to_string(),
             r.requests.to_string(),
             r.serving.clone().unwrap_or_default(),
-            if r.reconfigured { "YES" } else { "" }.to_string(),
+            if r.reconfigured { "YES (rolling)" } else { "" }.to_string(),
             r.outcome
                 .as_ref()
                 .and_then(|o| o.proposal.as_ref())
@@ -75,7 +89,25 @@ fn main() -> anyhow::Result<()> {
         .filter(|r| r.reconfigured)
         .map(|r| (r.window, r.serving.clone().unwrap_or_default()))
         .collect();
-    println!("\nlogic changes: {switches:?}");
-    println!("total card outage: {:.2} s over 12 h", env.device.total_downtime());
+    println!("\nlogic changes (each rolled card-by-card): {switches:?}");
+
+    let mut cards = Table::new(vec!["card", "logic", "reconfigs", "card outage"]);
+    for i in 0..CARDS {
+        let card = env.pool.card(CardId(i as u16));
+        cards.row(vec![
+            format!("{i}"),
+            card.logic()
+                .map(|l| format!("{}:{}", l.app, l.variant))
+                .unwrap_or_default(),
+            card.reconfig_log.len().to_string(),
+            format!("{:.2} s", card.total_downtime()),
+        ]);
+    }
+    print!("{}", cards.render());
+    println!(
+        "\ntotal per-card outage: {:.2} s over 12 h — fleet-level serve stalls: {}",
+        env.pool.total_downtime(),
+        env.serve_stalls(),
+    );
     Ok(())
 }

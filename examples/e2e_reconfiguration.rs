@@ -21,7 +21,7 @@ use std::collections::BTreeSet;
 
 use repro::apps::{find, registry};
 use repro::coordinator::{
-    run_reconfiguration, Approval, ProductionEnv, ReconConfig, ServedBy,
+    run_reconfiguration, Approval, ProductionEnv, ReconConfig,
 };
 use repro::fpga::device::ReconfigKind;
 use repro::fpga::part::D5005;
@@ -73,7 +73,7 @@ fn main() -> anyhow::Result<()> {
             let app_name = env.app_name(req.app).to_string();
             let size_name = env.size_name(req.app, req.size).to_string();
             let app = find(&reg, &app_name).unwrap();
-            let variant = if rec.served_by == ServedBy::Fpga {
+            let variant = if rec.served_by.is_fpga() {
                 env.deployment.as_ref().unwrap().variant.name()
             } else {
                 "cpu".to_string()
@@ -148,7 +148,7 @@ fn main() -> anyhow::Result<()> {
         .history
         .all()
         .iter()
-        .filter(|r| r.arrival >= t0 && r.app == mq_id && r.served_by == ServedBy::Fpga)
+        .filter(|r| r.arrival >= t0 && r.app == mq_id && r.served_by.is_fpga())
         .count();
     let mriq_total = env
         .history

@@ -1,16 +1,23 @@
-//! TXT-DOWNTIME bench: reconfiguration outage, three ways.
+//! TXT-DOWNTIME bench: reconfiguration outage, four ways.
 //!
 //!  * virtual static outage  — the paper's ~1 s Acceleration Stack figure;
 //!  * virtual dynamic outage — the paper's "ms order" partial reconfig;
 //!  * measured PJRT swap     — real wall clock of compiling + warming the
-//!    incoming executable (requires `make artifacts`; skipped otherwise).
+//!    incoming executable (requires `make artifacts`; skipped otherwise);
+//!  * fleet rolling vs cutover — a 4-card fleet rolls its logic one card
+//!    at a time with **zero** fleet-level serve stalls (per-card outage
+//!    unchanged at 1 s), while a fleet-wide cutover stalls any deployed-app
+//!    request arriving inside the outage window.
 
+use repro::apps::registry;
+use repro::fleet::{FleetEnv, ReconfigStrategy};
 use repro::fpga::device::{FpgaDevice, ReconfigKind};
 use repro::fpga::part::D5005;
 use repro::runtime::Runtime;
 use repro::util::bench::Bench;
 use repro::util::stats::Summary;
 use repro::util::table::{fmt_secs, Table};
+use repro::workload::{boost_rate, generate, Request};
 
 fn main() {
     println!("== TXT-DOWNTIME: reconfiguration outage ==\n");
@@ -71,6 +78,89 @@ fn main() {
         Err(e) => {
             print!("{}", t.render());
             println!("\n(measured swap skipped: {e})");
+        }
+    }
+
+    println!("\n== fleet: rolling reconfiguration vs fleet-wide cutover ==");
+    // Offload-heavy but provisioned mix: enough traffic that the roll
+    // happens under real load, little enough that each card's FIFO
+    // backlog drains in seconds. (`AppSpec` is not `Clone`, so each env
+    // gets a freshly built registry.)
+    let heavy_registry = || {
+        let mut reg = registry();
+        boost_rate(&mut reg, "tdfir", 3600.0);
+        boost_rate(&mut reg, "mriq", 1800.0);
+        reg
+    };
+    let reg = heavy_registry();
+    let window = 120.0;
+    let trace = generate(&reg, window, 7);
+
+    // Rolling (the default): drain -> reprogram -> rejoin, card by card.
+    let mut fleet = FleetEnv::new(heavy_registry(), D5005, 4);
+    fleet.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+    fleet.run_window(&trace).unwrap();
+    let stalls_before = fleet.serve_stalls();
+    fleet.deploy(ReconfigKind::Static, "mriq", "o1", 2.0); // rolls
+    let t0 = fleet.clock.now() + 1e-6;
+    let mut after = generate(&reg, window, 8);
+    for r in &mut after {
+        r.arrival += t0;
+    }
+    fleet.run_window(&after).unwrap();
+    assert!(
+        !fleet.roll_in_progress(),
+        "roll must complete within the follow-up window"
+    );
+    let roll_stalls = fleet.serve_stalls() - stalls_before;
+
+    // Cutover baseline: the paper's in-place swap applied fleet-wide,
+    // probed deterministically inside the outage window.
+    let mut cut =
+        FleetEnv::new(heavy_registry(), D5005, 4).with_strategy(ReconfigStrategy::Cutover);
+    cut.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+    cut.run_window(&trace).unwrap();
+    let cut_before = cut.serve_stalls();
+    cut.deploy(ReconfigKind::Static, "mriq", "o1", 2.0);
+    let (mq, large) = cut.resolve("mriq", "large").unwrap();
+    let probe = Request {
+        id: u64::MAX,
+        app: mq,
+        size: large,
+        arrival: cut.clock.now() + 0.5,
+        bytes: 1.0,
+    };
+    cut.serve(&probe).unwrap();
+    let cut_stalls = cut.serve_stalls() - cut_before;
+
+    let mut ft = Table::new(vec![
+        "strategy",
+        "fleet serve stalls",
+        "per-card outage",
+        "total card outage",
+    ]);
+    ft.row(vec![
+        "rolling (drain/reprogram/rejoin)".to_string(),
+        roll_stalls.to_string(),
+        "1 s".to_string(),
+        fmt_secs(fleet.pool.total_downtime()),
+    ]);
+    ft.row(vec![
+        "cutover (all cards at once)".to_string(),
+        format!("{cut_stalls} (probe inside outage)"),
+        "1 s".to_string(),
+        fmt_secs(cut.pool.total_downtime()),
+    ]);
+    print!("{}", ft.render());
+    assert_eq!(
+        roll_stalls, 0,
+        "rolling reconfiguration must add zero fleet-level serve stalls"
+    );
+    assert!(cut_stalls >= 1, "the cutover probe must stall");
+    for (i, card) in fleet.pool.cards().iter().enumerate() {
+        assert!(card.serves("mriq"), "card {i} finished the roll");
+        for rep in &card.reconfig_log {
+            assert_eq!(rep.downtime_secs, 1.0, "card {i}: per-card outage unchanged");
         }
     }
 

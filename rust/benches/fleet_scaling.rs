@@ -1,0 +1,192 @@
+//! Fleet scaling bench: served-request throughput at N = 1, 2, 4, 8
+//! cards on an offload-heavy trace, plus the rolling-reconfiguration
+//! zero-stall gate. Writes `BENCH_fleet_scaling.json`.
+//!
+//! The load is sized from the measured service times: tdFIR's arrival
+//! rate is set to ~6x one card's service capacity (weighted over the
+//! 3:5:2 size mix), so a single card is queue-bound, four cards are
+//! still queue-bound (≈4x the served throughput — the ≥3x acceptance
+//! gate), and eight cards become arrival-bound (the curve flattens at
+//! ≈6x, showing where provisioning meets demand).
+//!
+//! Throughput here is **simulated** req/s — trace length over the fleet
+//! makespan (last finish − first arrival) on the virtual clock; the
+//! wall-clock cost of the serve loop itself is also measured per N so
+//! the router's O(cards) scan stays visibly negligible.
+//!
+//! Gates (asserted):
+//!  * 4-card simulated req/s ≥ 3x 1-card on the offload-heavy trace;
+//!  * a rolling reconfiguration at N = 4 under load adds **zero**
+//!    fleet-level serve stalls, with per-card downtime unchanged (1 s).
+
+use repro::apps::registry;
+use repro::fleet::FleetEnv;
+use repro::fpga::device::ReconfigKind;
+use repro::fpga::part::D5005;
+use repro::util::bench::{smoke_mode, Bench};
+use repro::workload::{boost_rate, generate};
+
+/// Weighted mean tdFIR service time under the deployed variant, over the
+/// paper's 3:5:2 size mix — the per-card capacity unit the load is sized
+/// against.
+fn mean_tdfir_service(env: &mut FleetEnv) -> f64 {
+    let spec = env.app("tdfir").expect("registry has tdfir");
+    let classes: Vec<(String, f64)> = spec
+        .sizes
+        .iter()
+        .map(|s| (s.name.to_string(), s.weight))
+        .collect();
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (size, w) in &classes {
+        num += w * env.offloaded_time("tdfir", size, "o1").unwrap();
+        den += w;
+    }
+    num / den
+}
+
+fn main() {
+    println!("== fleet scaling: served req/s at N cards (offload-heavy trace) ==\n");
+
+    let mut probe = FleetEnv::new(registry(), D5005, 1);
+    let mean_serv = mean_tdfir_service(&mut probe);
+    let per_card_rps = 1.0 / mean_serv;
+    // ~6x one card's capacity: queue-bound at 1 and 4 cards,
+    // arrival-bound at 8.
+    let rate_per_hour = 6.0 * per_card_rps * 3600.0;
+    println!(
+        "tdfir mean service {mean_serv:.4} s -> {per_card_rps:.1} req/s/card; \
+         load {rate_per_hour:.0} req/h"
+    );
+    let heavy_registry = || {
+        let mut reg = registry();
+        boost_rate(&mut reg, "tdfir", rate_per_hour);
+        reg
+    };
+    let duration = if smoke_mode() { 60.0 } else { 240.0 };
+    let reg = heavy_registry();
+    let trace = generate(&reg, duration, 9);
+    println!(
+        "trace: {} requests over {duration} simulated seconds\n",
+        trace.len()
+    );
+
+    let mut b = Bench::from_env();
+    let fleet_sizes = [1usize, 2, 4, 8];
+    let mut sim_rps = Vec::new();
+    for &n in &fleet_sizes {
+        let mut env = FleetEnv::new(heavy_registry(), D5005, n);
+        b.run(&format!("fleet_serve_{n}_cards"), || {
+            env.reset();
+            env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+            env.history.reserve_trace(&trace);
+            for r in &trace {
+                let _ = std::hint::black_box(env.serve(r).unwrap());
+            }
+        });
+        let last_finish = env
+            .history
+            .all()
+            .iter()
+            .map(|r| r.finish)
+            .fold(0.0f64, f64::max);
+        let makespan = (last_finish - trace[0].arrival).max(1e-9);
+        let rps = trace.len() as f64 / makespan;
+        println!(
+            "  N={n}: simulated {rps:.1} req/s (makespan {makespan:.1} s)\n"
+        );
+        sim_rps.push((n, rps));
+    }
+
+    let rps_of = |n: usize| {
+        sim_rps
+            .iter()
+            .find(|(m, _)| *m == n)
+            .map(|(_, r)| *r)
+            .unwrap()
+    };
+    let scaling_4v1 = rps_of(4) / rps_of(1);
+    let scaling_8v1 = rps_of(8) / rps_of(1);
+    println!(
+        "scaling: 4 cards {scaling_4v1:.2}x over 1 card; 8 cards {scaling_8v1:.2}x \
+         (arrival-bound past ~6 cards at this load)"
+    );
+
+    // ---- rolling reconfiguration under load: zero fleet-level stalls ------
+    // Provisioned load (half a card per card of capacity) so FIFO
+    // backlogs drain in seconds and the roll completes mid-window.
+    let light_registry = || {
+        let mut reg = registry();
+        boost_rate(&mut reg, "tdfir", 2.0 * per_card_rps * 3600.0);
+        boost_rate(&mut reg, "mriq", 1800.0);
+        reg
+    };
+    let light_reg = light_registry();
+    let mut env = FleetEnv::new(light_registry(), D5005, 4);
+    env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+    let roll_window = if smoke_mode() { 60.0 } else { 120.0 };
+    let pre = generate(&light_reg, roll_window, 11);
+    env.run_window(&pre).unwrap();
+    let stalls_before = env.serve_stalls();
+    env.deploy(ReconfigKind::Static, "mriq", "o1", 2.0); // rolls
+    let t0 = env.clock.now() + 1e-6;
+    let mut post = generate(&light_reg, roll_window, 12);
+    for r in &mut post {
+        r.arrival += t0;
+    }
+    env.run_window(&post).unwrap();
+    assert!(!env.roll_in_progress(), "roll must complete within the window");
+    let roll_stalls = env.serve_stalls() - stalls_before;
+    let mut per_card_downtime: f64 = 0.0;
+    for (i, card) in env.pool.cards().iter().enumerate() {
+        assert!(card.serves("mriq"), "card {i} finished the roll");
+        for rep in &card.reconfig_log {
+            per_card_downtime = per_card_downtime.max(rep.downtime_secs);
+        }
+    }
+    println!(
+        "\nrolling reconfiguration at N=4: {roll_stalls} fleet-level stalls, \
+         per-card outage {per_card_downtime} s"
+    );
+
+    let unit_names: Vec<(String, f64)> = fleet_sizes
+        .iter()
+        .map(|&n| (format!("fleet_serve_{n}_cards"), trace.len() as f64))
+        .collect();
+    let units: Vec<(&str, f64)> = unit_names
+        .iter()
+        .map(|(n, u)| (n.as_str(), *u))
+        .collect();
+    b.write_json(
+        "BENCH_fleet_scaling.json",
+        &units,
+        &[
+            ("sim_rps_1_card", rps_of(1)),
+            ("sim_rps_2_cards", rps_of(2)),
+            ("sim_rps_4_cards", rps_of(4)),
+            ("sim_rps_8_cards", rps_of(8)),
+            ("scaling_4v1_x", scaling_4v1),
+            ("scaling_8v1_x", scaling_8v1),
+            ("roll_stalls", roll_stalls as f64),
+            ("per_card_downtime_s", per_card_downtime),
+            ("trace_requests", trace.len() as f64),
+            ("trace_secs", duration),
+        ],
+    )
+    .expect("write BENCH_fleet_scaling.json");
+    println!("wrote BENCH_fleet_scaling.json");
+
+    assert!(
+        scaling_4v1 >= 3.0,
+        "4-card fleet must serve >= 3x the 1-card req/s on an offload-heavy \
+         trace, got {scaling_4v1:.2}x"
+    );
+    assert_eq!(
+        roll_stalls, 0,
+        "rolling reconfiguration must add zero fleet-level serve stalls"
+    );
+    assert_eq!(
+        per_card_downtime, 1.0,
+        "per-card downtime must stay the paper's static-reconfig value"
+    );
+}

@@ -18,9 +18,9 @@ use crate::apps::{app_id, AppId};
 use crate::fpga::device::ReconfigKind;
 use crate::workload::generate;
 
+use super::env::Environment;
 use super::policy::Approval;
 use super::recon::{run_reconfiguration, ReconConfig, ReconOutcome};
-use super::server::ProductionEnv;
 
 /// Configuration of the continuous loop.
 #[derive(Clone, Debug)]
@@ -48,6 +48,34 @@ impl Default for AdaptiveConfig {
     }
 }
 
+impl AdaptiveConfig {
+    /// Reject configurations that would silently no-op (`windows == 0`
+    /// runs nothing, a non-positive `window_secs` serves nothing) or
+    /// disable a control (`flap_ratio <= min_effect_ratio` makes the flap
+    /// guard vacuous: every proposal already clears it) with a clear
+    /// error instead of an empty loop.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.recon.validate()?;
+        anyhow::ensure!(
+            self.windows >= 1,
+            "adaptive config: windows must be >= 1 (0 runs nothing)"
+        );
+        anyhow::ensure!(
+            self.window_secs > 0.0 && self.window_secs.is_finite(),
+            "adaptive config: window_secs must be positive and finite, got {}",
+            self.window_secs
+        );
+        anyhow::ensure!(
+            self.flap_ratio > self.recon.policy.min_effect_ratio,
+            "adaptive config: flap_ratio ({}) must exceed the proposal \
+             threshold min_effect_ratio ({}) or the flap guard never fires",
+            self.flap_ratio,
+            self.recon.policy.min_effect_ratio
+        );
+        Ok(())
+    }
+}
+
 /// What happened in one window.
 #[derive(Debug)]
 pub struct WindowReport {
@@ -67,15 +95,17 @@ pub struct WindowReport {
 /// proposal/deploy plumbing is name-keyed, so duplicate-name clones from
 /// [`crate::apps::synthetic_registry`] would alias to their first copy
 /// here — those registries are for workload/index stress, not this loop.
-pub fn run_adaptive<F>(
-    env: &mut ProductionEnv,
+pub fn run_adaptive<E, F>(
+    env: &mut E,
     cfg: &AdaptiveConfig,
     approval: &mut Approval,
     mut drift: F,
 ) -> anyhow::Result<Vec<WindowReport>>
 where
-    F: FnMut(usize, &mut ProductionEnv),
+    E: Environment,
+    F: FnMut(usize, &mut E),
 {
+    cfg.validate()?;
     let mut reports = Vec::new();
     let mut cooldown = 0usize;
     // Interned app of the most recently evicted logic — a `Copy` handle,
@@ -86,8 +116,8 @@ where
     for w in 0..cfg.windows {
         drift(w, env);
         // Serve one window of traffic.
-        let t0 = env.clock.now() + 1e-6;
-        let mut trace = generate(&env.registry, cfg.window_secs, 1000 + w as u64);
+        let t0 = env.now() + 1e-6;
+        let mut trace = generate(env.registry(), cfg.window_secs, 1000 + w as u64);
         for r in &mut trace {
             r.arrival += t0;
         }
@@ -103,7 +133,7 @@ where
                 window: w,
                 requests: n,
                 outcome: None,
-                serving: env.deployment.map(|d| env.app_name(d.app).to_string()),
+                serving: env.deployment().map(|d| env.app_name(d.app).to_string()),
                 reconfigured: false,
             });
             continue;
@@ -121,7 +151,7 @@ where
             (outcome.proposal.as_ref(), last_evicted)
         {
             if reconfigured
-                && app_id(&env.registry, &p.best.app) == Some(evicted_app)
+                && app_id(env.registry(), &p.best.app) == Some(evicted_app)
                 && p.ratio < cfg.flap_ratio
             {
                 // Roll back: re-deploy what we had (the flap guard fires
@@ -143,14 +173,14 @@ where
             if let Some(p) = outcome.proposal.as_ref() {
                 // A fresh install (no previous deployment) has an empty
                 // current app, which interns to None — nothing to flap to.
-                last_evicted = app_id(&env.registry, &p.current.app);
+                last_evicted = app_id(env.registry(), &p.current.app);
             }
             cooldown = cfg.cooldown_windows;
         }
         reports.push(WindowReport {
             window: w,
             requests: n,
-            serving: env.deployment.map(|d| env.app_name(d.app).to_string()),
+            serving: env.deployment().map(|d| env.app_name(d.app).to_string()),
             reconfigured,
             outcome: Some(outcome),
         });
@@ -162,6 +192,7 @@ where
 mod tests {
     use super::*;
     use crate::apps::registry;
+    use crate::coordinator::server::ProductionEnv;
     use crate::fpga::part::D5005;
     use crate::offload::{search, OffloadConfig};
 
@@ -234,6 +265,54 @@ mod tests {
         let reports = run_adaptive(&mut env, &cfg, &mut approval, |_, _| {}).unwrap();
         assert!(reports.iter().all(|r| !r.reconfigured));
         assert!(env.device.serves("tdfir"));
+    }
+
+    #[test]
+    fn invalid_loop_configs_are_rejected() {
+        let mut env = base_env();
+        let mut approval = Approval::auto_yes();
+        for (cfg, needle) in [
+            (
+                AdaptiveConfig {
+                    windows: 0,
+                    ..Default::default()
+                },
+                "windows",
+            ),
+            (
+                AdaptiveConfig {
+                    window_secs: 0.0,
+                    ..Default::default()
+                },
+                "window_secs",
+            ),
+            (
+                AdaptiveConfig {
+                    // Equal to the 2.0 proposal threshold: vacuous guard.
+                    flap_ratio: 2.0,
+                    ..Default::default()
+                },
+                "flap_ratio",
+            ),
+        ] {
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains(needle), "`{err}` should mention {needle}");
+            let err = run_adaptive(&mut env, &cfg, &mut approval, |_, _| {})
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(needle), "`{err}` should mention {needle}");
+        }
+        // A broken nested recon config is surfaced through the same path.
+        let cfg = AdaptiveConfig {
+            recon: ReconConfig {
+                top_apps: 0,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+        assert!(AdaptiveConfig::default().validate().is_ok());
+        assert!(env.device.serves("tdfir"), "rejected configs ran nothing");
     }
 
     #[test]

@@ -1,0 +1,188 @@
+//! The common environment abstraction the coordinator layers drive.
+//!
+//! The paper's controller (§3.3 steps 1-6 in [`super::recon`], the Step-7
+//! loop in [`super::adaptive`]) only needs a narrow view of production:
+//! the request history, the virtual clock, name/handle resolution, the
+//! service-time oracles, and a deploy hook. [`Environment`] captures
+//! exactly that view, so the same controller code drives
+//!
+//!  * [`super::server::ProductionEnv`] — the paper's single-card server,
+//!    retained verbatim as the bit-identical N=1 oracle; and
+//!  * [`crate::fleet::FleetEnv`] — the multi-card pool with load-balanced
+//!    routing and rolling reconfiguration.
+//!
+//! The controller functions are generic (`fn run_reconfiguration<E:
+//! Environment>`), so existing call sites monomorphize to the concrete
+//! type they already pass — no call-site changes, no dynamic dispatch on
+//! the hot path (the trait is never object-safe-consumed; `serve` stays a
+//! static call).
+
+use crate::apps::{AppId, AppSpec, SizeId};
+use crate::fpga::device::{ReconfigKind, ReconfigReport};
+use crate::workload::Request;
+
+use super::history::{HistoryStore, RequestRecord};
+use super::server::{Deployment, ProductionEnv};
+
+/// What the §3.3 controller and the Step-7 loop need from a production
+/// environment. See the module docs for the two implementors.
+pub trait Environment {
+    /// The static application registry.
+    fn registry(&self) -> &[AppSpec];
+
+    /// Mutable registry access — the adaptive loop's drift callbacks
+    /// change per-app arrival rates between windows.
+    fn registry_mut(&mut self) -> &mut [AppSpec];
+
+    /// Current virtual time.
+    fn now(&self) -> f64;
+
+    /// The commercial request history (step-1 input).
+    fn history(&self) -> &HistoryStore;
+
+    /// The environment's current logical deployment — for a fleet, the
+    /// logic it is converging on (a rolling reconfiguration flips cards
+    /// one at a time, but the *intent* changes at deploy time).
+    fn deployment(&self) -> Option<Deployment>;
+
+    /// Step 1-1 correction coefficient for `app`: the pre-launch
+    /// (CPU time)/(offloaded time) ratio if any card currently serves the
+    /// app's logic, else 1.0 (no correction for CPU-served apps).
+    fn improvement_coef(&self, app: AppId) -> f64;
+
+    /// App name for an interned handle ("?" for out-of-range handles).
+    fn app_name(&self, id: AppId) -> &str;
+
+    /// Size name for an interned (app, size) pair.
+    fn size_name(&self, app: AppId, size: SizeId) -> &str;
+
+    /// Spec lookup by name.
+    fn app_spec(&self, name: &str) -> Option<&AppSpec>;
+
+    /// CPU-only service time for (app, size).
+    fn cpu_time(&self, app: &str, size: &str) -> anyhow::Result<f64>;
+
+    /// Service time for (app, size) under a variant's offload pattern.
+    fn offloaded_time(
+        &mut self,
+        app: &str,
+        size: &str,
+        variant: &str,
+    ) -> anyhow::Result<f64>;
+
+    /// Program logic (initial deployment or reconfiguration). Panics on
+    /// an unknown app or non-canonical variant — controller bugs, never
+    /// request-path conditions (same contract as `ProductionEnv::deploy`).
+    /// The returned report carries the *per-card* outage of the step-6
+    /// flavor; a fleet rolls cards one at a time behind it.
+    fn deploy(
+        &mut self,
+        kind: ReconfigKind,
+        app: &str,
+        variant: &str,
+        improvement_coef: f64,
+    ) -> ReconfigReport;
+
+    /// Serve one request; returns the record (also appended to history).
+    fn serve(&mut self, req: &Request) -> anyhow::Result<RequestRecord>;
+
+    /// Serve a whole arrival-ordered trace; returns (first, last) time.
+    fn run_window(&mut self, trace: &[Request]) -> anyhow::Result<(f64, f64)>;
+}
+
+impl Environment for ProductionEnv {
+    fn registry(&self) -> &[AppSpec] {
+        &self.registry
+    }
+
+    fn registry_mut(&mut self) -> &mut [AppSpec] {
+        &mut self.registry
+    }
+
+    fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    fn history(&self) -> &HistoryStore {
+        &self.history
+    }
+
+    fn deployment(&self) -> Option<Deployment> {
+        self.deployment
+    }
+
+    fn improvement_coef(&self, app: AppId) -> f64 {
+        self.deployment
+            .filter(|d| d.app == app)
+            .map(|d| d.improvement_coef)
+            .unwrap_or(1.0)
+    }
+
+    fn app_name(&self, id: AppId) -> &str {
+        ProductionEnv::app_name(self, id)
+    }
+
+    fn size_name(&self, app: AppId, size: SizeId) -> &str {
+        ProductionEnv::size_name(self, app, size)
+    }
+
+    fn app_spec(&self, name: &str) -> Option<&AppSpec> {
+        ProductionEnv::app(self, name)
+    }
+
+    fn cpu_time(&self, app: &str, size: &str) -> anyhow::Result<f64> {
+        ProductionEnv::cpu_time(self, app, size)
+    }
+
+    fn offloaded_time(
+        &mut self,
+        app: &str,
+        size: &str,
+        variant: &str,
+    ) -> anyhow::Result<f64> {
+        ProductionEnv::offloaded_time(self, app, size, variant)
+    }
+
+    fn deploy(
+        &mut self,
+        kind: ReconfigKind,
+        app: &str,
+        variant: &str,
+        improvement_coef: f64,
+    ) -> ReconfigReport {
+        ProductionEnv::deploy(self, kind, app, variant, improvement_coef)
+    }
+
+    fn serve(&mut self, req: &Request) -> anyhow::Result<RequestRecord> {
+        ProductionEnv::serve(self, req)
+    }
+
+    fn run_window(&mut self, trace: &[Request]) -> anyhow::Result<(f64, f64)> {
+        ProductionEnv::run_window(self, trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{app_id, registry};
+    use crate::fpga::part::D5005;
+
+    #[test]
+    fn production_env_exposes_the_trait_view() {
+        let mut env = ProductionEnv::new(registry(), D5005);
+        env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+        let td = app_id(Environment::registry(&env), "tdfir").unwrap();
+        assert_eq!(Environment::improvement_coef(&env, td), 2.07);
+        let other = app_id(Environment::registry(&env), "mriq").unwrap();
+        assert_eq!(Environment::improvement_coef(&env, other), 1.0);
+        let dep = Environment::deployment(&env).unwrap();
+        assert_eq!(dep.app, td);
+        assert_eq!(Environment::now(&env), 0.0);
+        assert!(Environment::history(&env).is_empty());
+        assert_eq!(Environment::app_name(&env, td), "tdfir");
+        assert!(Environment::app_spec(&env, "tdfir").is_some());
+        assert!(Environment::cpu_time(&env, "tdfir", "large").is_ok());
+        assert!(Environment::offloaded_time(&mut env, "tdfir", "large", "o1").is_ok());
+    }
+}

@@ -56,6 +56,7 @@
 //! trace.
 
 use crate::apps::{AppId, SizeId};
+use crate::fpga::device::CardId;
 use crate::util::stats::FreqDist;
 
 /// Default byte-size histogram bin width (1 MiB, §4.1.2) used by the
@@ -67,11 +68,29 @@ pub const DEFAULT_BIN_WIDTH_BYTES: f64 = 1024.0 * 1024.0;
 /// push path allocation-free with headroom for drifted mixes.
 const RESERVED_BINS_PER_APP: usize = 16;
 
-/// Where a request was served.
+/// Where a request was served. FPGA records carry the serving card —
+/// `CardId(0)` is the paper's single card, so single-card histories are
+/// unchanged modulo the payload, and fleet routing stays auditable
+/// per record.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ServedBy {
     Cpu,
-    Fpga,
+    Fpga(CardId),
+}
+
+impl ServedBy {
+    /// Served on any FPGA card (the pre-fleet `== ServedBy::Fpga` check).
+    pub fn is_fpga(self) -> bool {
+        matches!(self, ServedBy::Fpga(_))
+    }
+
+    /// The serving card, if any.
+    pub fn card(self) -> Option<CardId> {
+        match self {
+            ServedBy::Fpga(c) => Some(c),
+            ServedBy::Cpu => None,
+        }
+    }
 }
 
 /// One served request. `Copy` — fixed 64-byte record, no heap.
@@ -521,6 +540,16 @@ mod tests {
         fn assert_copy<T: Copy>() {}
         assert_copy::<RequestRecord>();
         assert!(std::mem::size_of::<RequestRecord>() <= 64);
+    }
+
+    #[test]
+    fn served_by_carries_the_card() {
+        let on_card = ServedBy::Fpga(CardId(3));
+        assert!(on_card.is_fpga());
+        assert_eq!(on_card.card(), Some(CardId(3)));
+        assert!(!ServedBy::Cpu.is_fpga());
+        assert_eq!(ServedBy::Cpu.card(), None);
+        assert_ne!(on_card, ServedBy::Fpga(CardId(0)));
     }
 
     #[test]

@@ -5,16 +5,21 @@
 //!  * [`server`]  — the production environment: request routing between
 //!    the CPU pool and the FPGA card, service accounting on the virtual
 //!    clock;
+//!  * [`env`]     — the [`Environment`] trait the controller layers are
+//!    generic over, implemented by the single-card [`ProductionEnv`]
+//!    and the multi-card [`crate::fleet::FleetEnv`];
 //!  * [`recon`]   — the six-step reconfiguration controller;
 //!  * [`policy`]  — threshold decision and user approval (step 4/5).
 
 pub mod adaptive;
 pub mod config;
+pub mod env;
 pub mod history;
 pub mod policy;
 pub mod recon;
 pub mod server;
 
+pub use env::Environment;
 pub use history::{HistoryStore, RequestRecord, ServedBy};
 pub use policy::{Approval, ApprovalDecision, ThresholdPolicy};
 pub use recon::{run_reconfiguration, ReconConfig, ReconOutcome, ReconProposal};

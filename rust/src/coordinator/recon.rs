@@ -22,9 +22,9 @@ use crate::apps::AppId;
 use crate::fpga::device::{ReconfigKind, ReconfigReport};
 use crate::offload::{self, OffloadConfig, OffloadResult};
 
+use super::env::Environment;
 use super::history::DEFAULT_BIN_WIDTH_BYTES;
 use super::policy::{Approval, ApprovalDecision, ThresholdPolicy};
-use super::server::ProductionEnv;
 
 /// Configuration (§4.1.2 defaults).
 #[derive(Clone, Debug)]
@@ -53,6 +53,41 @@ impl Default for ReconConfig {
             offload: OffloadConfig::default(),
             kind: ReconfigKind::Static,
         }
+    }
+}
+
+impl ReconConfig {
+    /// Reject configurations that would silently no-op or corrupt step 1
+    /// (zero-length windows scan nothing, `top_apps == 0` proposes
+    /// nothing, a non-positive bin width breaks the histogram) with a
+    /// clear error instead of an empty-looking cycle.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.long_window_secs > 0.0 && self.long_window_secs.is_finite(),
+            "recon config: long_window_secs must be positive and finite, got {}",
+            self.long_window_secs
+        );
+        anyhow::ensure!(
+            self.short_window_secs > 0.0 && self.short_window_secs.is_finite(),
+            "recon config: short_window_secs must be positive and finite, got {}",
+            self.short_window_secs
+        );
+        anyhow::ensure!(
+            self.top_apps >= 1,
+            "recon config: top_apps must be >= 1 (0 analyzes nothing)"
+        );
+        anyhow::ensure!(
+            self.bin_width_bytes > 0.0 && self.bin_width_bytes.is_finite(),
+            "recon config: bin_width_bytes must be positive and finite, got {}",
+            self.bin_width_bytes
+        );
+        anyhow::ensure!(
+            self.policy.min_effect_ratio >= 1.0,
+            "recon config: min_effect_ratio must be >= 1.0 (below that every \
+             cycle proposes), got {}",
+            self.policy.min_effect_ratio
+        );
+        Ok(())
     }
 }
 
@@ -153,22 +188,19 @@ pub struct ReconOutcome {
 /// the per-record string clone + map lookup made it 1.4-1.7x *slower*
 /// (8.8 -> 14.7 µs at 1 h of history). The columnar index removes the
 /// per-record work entirely instead of reshuffling it.
-pub fn analyze_load(
-    env: &mut ProductionEnv,
+pub fn analyze_load<E: Environment>(
+    env: &mut E,
     cfg: &ReconConfig,
 ) -> anyhow::Result<(Vec<LoadRanking>, Vec<Representative>)> {
-    let now = env.clock.now();
+    cfg.validate()?;
+    let now = env.now();
     let from = (now - cfg.long_window_secs).max(0.0);
 
     // 1-1/1-2: corrected totals per app (two binary searches each).
     let mut rankings: Vec<LoadRanking> = Vec::new();
-    for app in env.history.apps_in_window(from, now) {
-        let (actual, count) = env.history.totals_in_window(app, from, now);
-        let coef = env
-            .deployment
-            .filter(|d| d.app == app)
-            .map(|d| d.improvement_coef)
-            .unwrap_or(1.0);
+    for app in env.history().apps_in_window(from, now) {
+        let (actual, count) = env.history().totals_in_window(app, from, now);
+        let coef = env.improvement_coef(app);
         rankings.push(LoadRanking {
             corrected_total_secs: actual * coef,
             actual_total_secs: actual,
@@ -192,14 +224,14 @@ pub fn analyze_load(
     let mut reps = Vec::new();
     for r in rankings.iter().take(cfg.top_apps) {
         let dist =
-            env.history
+            env.history()
                 .size_dist_in_window(r.app_id, short_from, now, cfg.bin_width_bytes);
         let (lo, hi) = dist
             .mode_range()
             .ok_or_else(|| anyhow::anyhow!("no requests for `{}` in short window", r.app))?;
         // 1-5: pick one real request out of the modal bin.
         let chosen = *env
-            .history
+            .history()
             .representative_in_window(r.app_id, short_from, now, &dist)
             .expect("modal bin must contain a request");
         let mode_count = dist.mode_count().unwrap_or(0);
@@ -215,12 +247,16 @@ pub fn analyze_load(
     Ok((rankings, reps))
 }
 
-/// Steps 2-6: full reconfiguration cycle against a production env.
-pub fn run_reconfiguration(
-    env: &mut ProductionEnv,
+/// Steps 2-6: full reconfiguration cycle against any [`Environment`] —
+/// the paper's single-card [`ProductionEnv`](super::server::ProductionEnv)
+/// or a multi-card [`crate::fleet::FleetEnv`] (whose step 6 is a rolling
+/// per-card reconfiguration behind the same deploy call).
+pub fn run_reconfiguration<E: Environment>(
+    env: &mut E,
     cfg: &ReconConfig,
     approval: &mut Approval,
 ) -> anyhow::Result<ReconOutcome> {
+    cfg.validate()?;
     // ---- Step 1 ----------------------------------------------------------
     let t0 = Instant::now();
     let (rankings, representatives) = analyze_load(env, cfg)?;
@@ -231,7 +267,7 @@ pub fn run_reconfiguration(
     let mut search_virtual_secs: f64 = 0.0;
     for rep in &representatives {
         let spec = env
-            .app(&rep.app)
+            .app_spec(&rep.app)
             .ok_or_else(|| anyhow::anyhow!("unknown app `{}`", rep.app))?;
         let result = offload::search(spec, &rep.size, &cfg.offload)?;
         search_virtual_secs = search_virtual_secs.max(result.compile_virtual_secs);
@@ -248,7 +284,7 @@ pub fn run_reconfiguration(
     };
 
     // 3-1: current pattern's effect on ITS representative data.
-    let current = if let Some(dep) = env.deployment {
+    let current = if let Some(dep) = env.deployment() {
         let dep_app = env.app_name(dep.app).to_string();
         let dep_variant = dep.variant.name();
         // Representative for the current app: from the top list if present,
@@ -260,7 +296,7 @@ pub fn run_reconfiguration(
             .unwrap_or_else(|| {
                 // Fall back to the app's most recent size in history
                 // (O(1) off the app's column tail).
-                env.history
+                env.history()
                     .last_of_app(dep.app)
                     .map(|r| env.size_name(dep.app, r.size).to_string())
                     .unwrap_or_else(|| "large".to_string())
@@ -396,6 +432,7 @@ pub fn run_reconfiguration(
 mod tests {
     use super::*;
     use crate::apps::registry;
+    use crate::coordinator::server::ProductionEnv;
     use crate::fpga::part::D5005;
     use crate::workload::generate;
 
@@ -481,6 +518,62 @@ mod tests {
         assert!(!out.proposal.as_ref().unwrap().proposed);
         assert!(out.reconfig.is_none());
         assert!(env.device.serves("tdfir"));
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected_up_front() {
+        let mut env = paper_env(42);
+        let mut approval = Approval::auto_yes();
+        for (cfg, needle) in [
+            (
+                ReconConfig {
+                    long_window_secs: 0.0,
+                    ..Default::default()
+                },
+                "long_window_secs",
+            ),
+            (
+                ReconConfig {
+                    short_window_secs: -3600.0,
+                    ..Default::default()
+                },
+                "short_window_secs",
+            ),
+            (
+                ReconConfig {
+                    top_apps: 0,
+                    ..Default::default()
+                },
+                "top_apps",
+            ),
+            (
+                ReconConfig {
+                    bin_width_bytes: 0.0,
+                    ..Default::default()
+                },
+                "bin_width_bytes",
+            ),
+            (
+                ReconConfig {
+                    policy: ThresholdPolicy {
+                        min_effect_ratio: 0.5,
+                    },
+                    ..Default::default()
+                },
+                "min_effect_ratio",
+            ),
+        ] {
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains(needle), "`{err}` should mention {needle}");
+            assert!(analyze_load(&mut env, &cfg).is_err());
+            let err = run_reconfiguration(&mut env, &cfg, &mut approval)
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(needle), "`{err}` should mention {needle}");
+        }
+        // Nothing above may have touched production.
+        assert!(env.device.serves("tdfir"));
+        assert!(ReconConfig::default().validate().is_ok());
     }
 
     #[test]

@@ -21,7 +21,7 @@ use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 
 use crate::apps::{app_id, AppId, AppSpec, SizeId, VariantId};
-use crate::fpga::device::{FpgaDevice, ReconfigKind, ReconfigReport};
+use crate::fpga::device::{CardId, FpgaDevice, ReconfigKind, ReconfigReport};
 use crate::fpga::part::Part;
 use crate::fpga::perf::{PerfModel, ServiceTimeTable};
 use crate::simtime::Clock;
@@ -232,7 +232,7 @@ impl ProductionEnv {
                 start,
                 finish,
                 service_secs: service,
-                served_by: ServedBy::Fpga,
+                served_by: ServedBy::Fpga(CardId(0)),
             }
         } else {
             let service = self
@@ -292,7 +292,7 @@ mod tests {
         let td = app_id(&env.registry, "tdfir").unwrap();
         for r in env.history.all() {
             if r.app == td {
-                assert_eq!(r.served_by, ServedBy::Fpga, "{r:?}");
+                assert_eq!(r.served_by, ServedBy::Fpga(CardId(0)), "{r:?}");
             } else {
                 assert_eq!(r.served_by, ServedBy::Cpu, "{r:?}");
             }

@@ -1,0 +1,822 @@
+//! The fleet environment: `ProductionEnv` generalized to a card pool,
+//! with rolling zero-downtime reconfiguration.
+//!
+//! # Serving
+//!
+//! [`FleetEnv::serve`] preserves the single-card allocation-free hot
+//! path: interned handles in, [`FleetRouter`] picks the best card holding
+//! the app's logic (O(cards) scan, no allocation), the shared
+//! [`ServiceTimeTable`] supplies the service time (two array indexes),
+//! and the record lands in the columnar [`HistoryStore`] with the serving
+//! [`CardId`] in `ServedBy::Fpga`. Requests whose app no routable card
+//! holds fall back to the CPU pool exactly as `ProductionEnv::serve`
+//! does (service starts on arrival).
+//!
+//! # Rolling reconfiguration (step 6, fleet edition)
+//!
+//! The paper reconfigures its one card in place and eats the ~1 s outage
+//! (§3.3 step 6, §4.2). A fleet can do better: [`FleetEnv::deploy`] with
+//! [`ReconfigStrategy::Rolling`] moves the fleet one card at a time —
+//!
+//!  1. **drain**: the next card leaves the routing rotation; its queued
+//!     FIFO work finishes;
+//!  2. **reprogram**: `FpgaDevice::reconfigure` runs once the backlog
+//!     clears, charging the paper's per-card outage on that card alone;
+//!  3. **rejoin**: when virtual time passes the outage end, the card
+//!     re-enters the rotation holding the new logic, and the roll moves
+//!     to the next card.
+//!
+//! While a card is out, the remaining cards keep serving the old logic
+//! and requests for the incoming logic fall back to the CPU pool (their
+//! pre-deploy status quo), so **no request ever starts inside an outage
+//! window**: fleet-level serve stalls are zero while per-card downtime
+//! stays the paper's measured value. The roll advances lazily on the
+//! virtual clock as requests are served ([`FleetEnv::advance_to`] forces
+//! completion at a window boundary).
+//!
+//! Degenerate cases are deliberate:
+//!
+//!  * **one card** — there is no spare capacity to hide behind, so the
+//!    roll is the paper's in-place cutover (reprogram at `now`, requests
+//!    queue behind the outage). This is exactly what makes the 1-card
+//!    fleet **bit-identical** to `ProductionEnv` — records and recon
+//!    outcomes — which `tests/proptests.rs` asserts on random traces;
+//!  * **fresh fleet** — nothing is serving yet, so the initial deployment
+//!    programs every card simultaneously (the pre-launch step);
+//!  * [`ReconfigStrategy::Cutover`] — reprogram every card at `now`, the
+//!    multi-card analogue of the paper's method, kept as the comparison
+//!    baseline (its deployed-app requests stall during the outage;
+//!    `benches/downtime.rs` shows the contrast).
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+
+use crate::apps::{app_id, AppId, AppSpec, SizeId, VariantId};
+use crate::coordinator::env::Environment;
+use crate::coordinator::history::{HistoryStore, RequestRecord, ServedBy};
+use crate::coordinator::server::Deployment;
+use crate::fpga::device::{CardId, ReconfigKind, ReconfigReport};
+use crate::fpga::part::Part;
+use crate::fpga::perf::{PerfModel, ServiceTimeTable};
+use crate::simtime::Clock;
+use crate::workload::Request;
+
+use super::pool::CardPool;
+use super::router::FleetRouter;
+
+/// How [`FleetEnv::deploy`] moves the fleet to a new logic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReconfigStrategy {
+    /// Reprogram every card at once — the paper's single-card step 6
+    /// applied fleet-wide. Deployed-app requests arriving during the
+    /// outage queue behind it (counted as serve stalls).
+    Cutover,
+    /// Drain, reprogram, and rejoin one card at a time: zero fleet-level
+    /// serve stalls, per-card downtime unchanged. The default.
+    Rolling,
+}
+
+/// An in-flight rolling reconfiguration (one card out at a time).
+#[derive(Clone, Debug)]
+struct Roll {
+    kind: ReconfigKind,
+    target: Deployment,
+    /// Names for `FpgaDevice::reconfigure` (cold path, cloned once).
+    app: String,
+    variant: String,
+    /// Next card index to drain.
+    next: usize,
+    /// Card currently out for reprogramming and its rejoin time.
+    reprogramming: Option<(CardId, f64)>,
+}
+
+/// The simulated multi-card production environment.
+pub struct FleetEnv {
+    pub registry: Vec<AppSpec>,
+    pub pool: CardPool,
+    pub router: FleetRouter,
+    pub clock: Clock,
+    pub history: HistoryStore,
+    pub part: Part,
+    /// Dense (app × size × variant) service times, shared by every card
+    /// (the fleet is homogeneous — same part, same table).
+    pub table: ServiceTimeTable,
+    strategy: ReconfigStrategy,
+    /// The fleet's logical deployment: the logic it is converging on.
+    /// Set at deploy time (a roll flips cards afterwards).
+    active: Option<Deployment>,
+    roll: Option<Roll>,
+    /// Perf-model cache for non-canonical variants (cold paths), keyed by
+    /// `Copy` handles like `ProductionEnv`'s.
+    models: HashMap<(AppId, SizeId), PerfModel>,
+}
+
+impl FleetEnv {
+    /// Build a fleet of `cards` identical parts and precompute the
+    /// service-time table. Panics on zero cards or a registry whose
+    /// embedded sources fail analysis (build defects, not operational
+    /// errors — same contract as `ProductionEnv::new`).
+    pub fn new(registry: Vec<AppSpec>, part: Part, cards: usize) -> Self {
+        let table = ServiceTimeTable::build(&registry, part)
+            .expect("service-time table for the static registry");
+        FleetEnv {
+            pool: CardPool::new(part, cards),
+            router: FleetRouter::new(cards),
+            clock: Clock::new(),
+            history: HistoryStore::with_apps(registry.len()),
+            part,
+            table,
+            strategy: ReconfigStrategy::Rolling,
+            active: None,
+            roll: None,
+            models: HashMap::new(),
+            registry,
+        }
+    }
+
+    /// Override the reconfiguration strategy (default: `Rolling`).
+    pub fn with_strategy(mut self, strategy: ReconfigStrategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    pub fn strategy(&self) -> ReconfigStrategy {
+        self.strategy
+    }
+
+    /// Reset operational state (clock, cards, history, deployments) while
+    /// keeping the precomputed table and model cache — used by benches to
+    /// replay traces on a warm environment.
+    pub fn reset(&mut self) {
+        let cards = self.pool.len();
+        self.pool = CardPool::new(self.part, cards);
+        self.router = FleetRouter::new(cards);
+        self.clock = Clock::new();
+        self.history = HistoryStore::with_apps(self.registry.len());
+        self.active = None;
+        self.roll = None;
+    }
+
+    /// Number of cards in the pool.
+    pub fn cards(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// The fleet's logical deployment (what it is converging on).
+    pub fn active(&self) -> Option<Deployment> {
+        self.active
+    }
+
+    /// Is a rolling reconfiguration still flipping cards?
+    pub fn roll_in_progress(&self) -> bool {
+        self.roll.is_some()
+    }
+
+    /// Requests routed into a card's outage window (see
+    /// [`FleetRouter::stalls`]). Zero across a rolling reconfiguration.
+    pub fn serve_stalls(&self) -> u64 {
+        self.router.stalls()
+    }
+
+    pub fn app(&self, name: &str) -> Option<&AppSpec> {
+        self.registry.iter().find(|a| a.name == name)
+    }
+
+    /// App name for an interned handle ("?" for out-of-range handles).
+    pub fn app_name(&self, id: AppId) -> &str {
+        self.registry
+            .get(id.0 as usize)
+            .map(|a| a.name)
+            .unwrap_or("?")
+    }
+
+    /// Size name for an interned (app, size) pair.
+    pub fn size_name(&self, app: AppId, size: SizeId) -> &str {
+        self.registry
+            .get(app.0 as usize)
+            .and_then(|a| a.size_name(size))
+            .unwrap_or("?")
+    }
+
+    /// Resolve (app, size) names to interned handles.
+    pub fn resolve(&self, app: &str, size: &str) -> anyhow::Result<(AppId, SizeId)> {
+        let a = app_id(&self.registry, app)
+            .ok_or_else(|| anyhow::anyhow!("unknown app `{app}`"))?;
+        let s = self.registry[a.0 as usize]
+            .size_id(size)
+            .ok_or_else(|| anyhow::anyhow!("unknown size `{size}` for app `{app}`"))?;
+        Ok((a, s))
+    }
+
+    /// Perf model for an interned (app, size) pair, cached (same shape as
+    /// `ProductionEnv::model_by_id`).
+    pub fn model_by_id(&mut self, app: AppId, size: SizeId) -> anyhow::Result<&PerfModel> {
+        match self.models.entry((app, size)) {
+            Entry::Occupied(e) => Ok(e.into_mut()),
+            Entry::Vacant(v) => {
+                let spec = self
+                    .registry
+                    .get(app.0 as usize)
+                    .ok_or_else(|| anyhow::anyhow!("out-of-range app handle {app:?}"))?;
+                let size_name = spec.size_name(size).ok_or_else(|| {
+                    anyhow::anyhow!("out-of-range size handle {size:?} for `{}`", spec.name)
+                })?;
+                let m = PerfModel::new(spec.program(), &spec.bindings(size_name), self.part)?;
+                Ok(v.insert(m))
+            }
+        }
+    }
+
+    /// CPU-only service time for (app, size) — table lookup.
+    pub fn cpu_time(&self, app: &str, size: &str) -> anyhow::Result<f64> {
+        let (a, s) = self.resolve(app, size)?;
+        self.table
+            .service_time(a, s, VariantId::CPU)
+            .ok_or_else(|| anyhow::anyhow!("no table row for `{app}`/`{size}`"))
+    }
+
+    /// Service time for (app, size) under a variant's offload pattern.
+    /// Canonical variants hit the precomputed table; anything else falls
+    /// back to the cached perf model.
+    pub fn offloaded_time(
+        &mut self,
+        app: &str,
+        size: &str,
+        variant: &str,
+    ) -> anyhow::Result<f64> {
+        if let Some(v) = VariantId::from_name(variant) {
+            let (a, s) = self.resolve(app, size)?;
+            if let Some(t) = self.table.service_time(a, s, v) {
+                return Ok(t);
+            }
+        }
+        let (a, s) = self.resolve(app, size)?;
+        let nests = self
+            .registry
+            .get(a.0 as usize)
+            .ok_or_else(|| anyhow::anyhow!("unknown app `{app}`"))?
+            .nests_for_variant(variant);
+        Ok(self.model_by_id(a, s)?.request_time(&nests))
+    }
+
+    /// Program the fleet (initial deployment or reconfiguration). Panics
+    /// on an unknown app or non-canonical variant — controller bugs.
+    ///
+    /// Strategy selection (see the module docs): a fresh fleet or a
+    /// single card programs in place at `now`; otherwise the configured
+    /// [`ReconfigStrategy`] applies. The returned report is the first
+    /// card's — its `downtime_secs` is the paper's per-card outage.
+    pub fn deploy(
+        &mut self,
+        kind: ReconfigKind,
+        app: &str,
+        variant: &str,
+        improvement_coef: f64,
+    ) -> ReconfigReport {
+        let id = app_id(&self.registry, app)
+            .unwrap_or_else(|| panic!("deploy: unknown app `{app}`"));
+        let vid = VariantId::from_name(variant)
+            .unwrap_or_else(|| panic!("deploy: non-canonical variant `{variant}`"));
+        let dep = Deployment {
+            app: id,
+            variant: vid,
+            improvement_coef,
+        };
+        self.active = Some(dep);
+        let fresh = self.pool.deployments().iter().all(Option::is_none);
+        if self.strategy == ReconfigStrategy::Cutover || self.pool.len() == 1 || fresh {
+            self.cutover(kind, app, variant, dep)
+        } else {
+            self.begin_roll(kind, app, variant, dep)
+        }
+    }
+
+    /// Reprogram every card at `now` simultaneously (initial deployment,
+    /// single card, or the explicit `Cutover` strategy).
+    fn cutover(
+        &mut self,
+        kind: ReconfigKind,
+        app: &str,
+        variant: &str,
+        dep: Deployment,
+    ) -> ReconfigReport {
+        // A cutover supersedes any unfinished roll: every card is
+        // reprogrammed and returned to the rotation right here.
+        self.roll = None;
+        let now = self.clock.now();
+        let mut first = None;
+        for i in 0..self.pool.len() {
+            let card = CardId(i as u16);
+            let report = self
+                .pool
+                .reconfigure_card(card, now, kind, app, variant, dep);
+            self.router.set_routable(card, true);
+            if first.is_none() {
+                first = Some(report);
+            }
+        }
+        first.expect("pool has at least one card")
+    }
+
+    /// Start a rolling reconfiguration and immediately drain the first
+    /// card. Any unfinished previous roll is superseded: the new roll
+    /// re-visits every card, and a card still mid-outage stays out of
+    /// the rotation until the roll reaches and rejoins it (its FIFO
+    /// horizon already covers the old outage).
+    fn begin_roll(
+        &mut self,
+        kind: ReconfigKind,
+        app: &str,
+        variant: &str,
+        dep: Deployment,
+    ) -> ReconfigReport {
+        self.roll = Some(Roll {
+            kind,
+            target: dep,
+            app: app.to_string(),
+            variant: variant.to_string(),
+            next: 0,
+            reprogramming: None,
+        });
+        self.advance_roll();
+        self.pool
+            .card(CardId(0))
+            .reconfig_log
+            .last()
+            .cloned()
+            .expect("begin_roll reprograms card 0 immediately")
+    }
+
+    /// Advance an in-flight roll to the current virtual time: rejoin the
+    /// card whose outage has passed, then drain the next one. Called on
+    /// every serve (no-op without a roll) and at window boundaries.
+    fn advance_roll(&mut self) {
+        let Some(mut roll) = self.roll.take() else {
+            return;
+        };
+        let now = self.clock.now();
+        loop {
+            if let Some((card, rejoin_at)) = roll.reprogramming {
+                if now < rejoin_at {
+                    break;
+                }
+                // Outage over: the card rejoins holding the new logic.
+                self.router.set_routable(card, true);
+                roll.reprogramming = None;
+            }
+            if roll.next >= self.pool.len() {
+                // Every card reprogrammed and rejoined: roll complete.
+                return;
+            }
+            let card = CardId(roll.next as u16);
+            roll.next += 1;
+            // Drain: stop feeding the card now; reprogram once its FIFO
+            // backlog clears (future-dated on the card's own timeline).
+            self.router.set_routable(card, false);
+            let start = now.max(self.pool.card(card).busy_until());
+            let report = self.pool.reconfigure_card(
+                card,
+                start,
+                roll.kind,
+                &roll.app,
+                &roll.variant,
+                roll.target,
+            );
+            roll.reprogramming = Some((card, start + report.downtime_secs));
+        }
+        self.roll = Some(roll);
+    }
+
+    /// Advance the virtual clock (e.g. to a window boundary), letting an
+    /// in-flight roll rejoin any card whose outage has passed.
+    pub fn advance_to(&mut self, t: f64) {
+        self.clock.advance_to(t);
+        self.advance_roll();
+    }
+
+    /// Serve one request; returns the record (also appended to history).
+    ///
+    /// Same contract as `ProductionEnv::serve`: steady-state cost is the
+    /// O(cards) route scan, two table indexes and a `Copy` push — no
+    /// allocation (verified by `tests/serve_alloc.rs`); arrivals must be
+    /// non-decreasing across calls.
+    pub fn serve(&mut self, req: &Request) -> anyhow::Result<RequestRecord> {
+        self.clock.advance_to(req.arrival.max(self.clock.now()));
+        self.advance_roll();
+        let record = if let Some(card) = self.router.route(&self.pool, req.app, req.arrival)
+        {
+            let dep = self
+                .pool
+                .deployment(card)
+                .expect("routed card holds logic");
+            let service = self
+                .table
+                .service_time(req.app, req.size, dep.variant)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("request {} has out-of-range app/size handles", req.id)
+                })?;
+            let (start, finish, stalled) = self.pool.schedule(card, req.arrival, service);
+            if stalled {
+                self.router.record_stall();
+            }
+            RequestRecord {
+                id: req.id,
+                app: req.app,
+                size: req.size,
+                bytes: req.bytes,
+                arrival: req.arrival,
+                start,
+                finish,
+                service_secs: service,
+                served_by: ServedBy::Fpga(card),
+            }
+        } else {
+            let service = self
+                .table
+                .service_time(req.app, req.size, VariantId::CPU)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("request {} has out-of-range app/size handles", req.id)
+                })?;
+            RequestRecord {
+                id: req.id,
+                app: req.app,
+                size: req.size,
+                bytes: req.bytes,
+                arrival: req.arrival,
+                start: req.arrival,
+                finish: req.arrival + service,
+                service_secs: service,
+                served_by: ServedBy::Cpu,
+            }
+        };
+        self.history.push(record);
+        Ok(record)
+    }
+
+    /// Serve a whole trace (arrival-ordered); returns (first, last) time.
+    pub fn run_window(&mut self, trace: &[Request]) -> anyhow::Result<(f64, f64)> {
+        anyhow::ensure!(!trace.is_empty(), "empty trace");
+        self.history.reserve_trace(trace);
+        let from = self.clock.now();
+        for req in trace {
+            self.serve(req)?;
+        }
+        let to = trace.last().unwrap().arrival.max(self.clock.now());
+        self.advance_to(to);
+        Ok((from, to))
+    }
+}
+
+impl Environment for FleetEnv {
+    fn registry(&self) -> &[AppSpec] {
+        &self.registry
+    }
+
+    fn registry_mut(&mut self) -> &mut [AppSpec] {
+        &mut self.registry
+    }
+
+    fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    fn history(&self) -> &HistoryStore {
+        &self.history
+    }
+
+    fn deployment(&self) -> Option<Deployment> {
+        self.active
+    }
+
+    fn improvement_coef(&self, app: AppId) -> f64 {
+        // Per-card first (mid-roll the fleet is heterogeneous), then the
+        // logical deployment, else uncorrected.
+        self.pool
+            .deployments()
+            .iter()
+            .flatten()
+            .find(|d| d.app == app)
+            .map(|d| d.improvement_coef)
+            .or_else(|| {
+                self.active
+                    .filter(|d| d.app == app)
+                    .map(|d| d.improvement_coef)
+            })
+            .unwrap_or(1.0)
+    }
+
+    fn app_name(&self, id: AppId) -> &str {
+        FleetEnv::app_name(self, id)
+    }
+
+    fn size_name(&self, app: AppId, size: SizeId) -> &str {
+        FleetEnv::size_name(self, app, size)
+    }
+
+    fn app_spec(&self, name: &str) -> Option<&AppSpec> {
+        FleetEnv::app(self, name)
+    }
+
+    fn cpu_time(&self, app: &str, size: &str) -> anyhow::Result<f64> {
+        FleetEnv::cpu_time(self, app, size)
+    }
+
+    fn offloaded_time(
+        &mut self,
+        app: &str,
+        size: &str,
+        variant: &str,
+    ) -> anyhow::Result<f64> {
+        FleetEnv::offloaded_time(self, app, size, variant)
+    }
+
+    fn deploy(
+        &mut self,
+        kind: ReconfigKind,
+        app: &str,
+        variant: &str,
+        improvement_coef: f64,
+    ) -> ReconfigReport {
+        FleetEnv::deploy(self, kind, app, variant, improvement_coef)
+    }
+
+    fn serve(&mut self, req: &Request) -> anyhow::Result<RequestRecord> {
+        FleetEnv::serve(self, req)
+    }
+
+    fn run_window(&mut self, trace: &[Request]) -> anyhow::Result<(f64, f64)> {
+        FleetEnv::run_window(self, trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::registry;
+    use crate::coordinator::server::ProductionEnv;
+    use crate::fpga::part::D5005;
+    use crate::workload::generate;
+
+    fn fleet_with_tdfir(cards: usize) -> FleetEnv {
+        let mut env = FleetEnv::new(registry(), D5005, cards);
+        env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+        env
+    }
+
+    fn tdfir_burst(env: &FleetEnv, n: usize, at: f64) -> Vec<Request> {
+        let (td, large) = env.resolve("tdfir", "large").unwrap();
+        (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                app: td,
+                size: large,
+                arrival: at,
+                bytes: 2.2e6,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn one_card_fleet_matches_production_env_on_a_paper_hour() {
+        let mut fleet = fleet_with_tdfir(1);
+        let mut prod = ProductionEnv::new(registry(), D5005);
+        prod.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+        let trace = generate(&prod.registry, 1800.0, 17);
+        prod.run_window(&trace).unwrap();
+        fleet.run_window(&trace).unwrap();
+        assert_eq!(fleet.history.len(), prod.history.len());
+        for (f, p) in fleet.history.all().iter().zip(prod.history.all()) {
+            assert_eq!(f.id, p.id);
+            assert_eq!(f.served_by, p.served_by);
+            assert_eq!(f.start.to_bits(), p.start.to_bits());
+            assert_eq!(f.finish.to_bits(), p.finish.to_bits());
+            assert_eq!(f.service_secs.to_bits(), p.service_secs.to_bits());
+        }
+    }
+
+    #[test]
+    fn initial_deploy_on_a_fresh_fleet_programs_all_cards_at_once() {
+        let env = fleet_with_tdfir(4);
+        assert!(!env.roll_in_progress(), "fresh fleet programs in place");
+        for i in 0..4 {
+            let card = env.pool.card(CardId(i));
+            assert!(card.serves("tdfir"));
+            assert_eq!(card.reconfig_log.len(), 1);
+            assert_eq!(card.reconfig_log[0].started_at, 0.0);
+            assert!(env.router.is_routable(CardId(i)));
+        }
+    }
+
+    #[test]
+    fn router_spreads_a_burst_across_all_cards() {
+        let mut env = fleet_with_tdfir(4);
+        // Past the t=0 deploy outage, four simultaneous arrivals land on
+        // four distinct cards and all start immediately.
+        let burst = tdfir_burst(&env, 5, 2.0);
+        env.run_window(&burst).unwrap();
+        let recs = env.history.all();
+        let cards: std::collections::BTreeSet<u16> = recs[..4]
+            .iter()
+            .map(|r| r.served_by.card().unwrap().0)
+            .collect();
+        assert_eq!(cards.len(), 4, "{recs:?}");
+        for r in &recs[..4] {
+            assert_eq!(r.start, 2.0, "parallel start across cards");
+        }
+        // The fifth queues behind the earliest finisher (card 0, FIFO).
+        assert_eq!(recs[4].served_by.card(), Some(CardId(0)));
+        assert_eq!(recs[4].start, recs[0].finish);
+    }
+
+    #[test]
+    fn rolling_reconfiguration_never_stalls_and_keeps_per_card_downtime() {
+        let mut env = fleet_with_tdfir(4);
+        let (td, td_large) = env.resolve("tdfir", "large").unwrap();
+        let (mq, mq_large) = env.resolve("mriq", "large").unwrap();
+        let req = |id: u64, app, size, at: f64| Request {
+            id,
+            app,
+            size,
+            arrival: at,
+            bytes: 2.2e6,
+        };
+        // A first window of real traffic past the deploy outage.
+        let reg = registry();
+        let mut trace = generate(&reg, 600.0, 5);
+        for r in &mut trace {
+            r.arrival += 2.0;
+        }
+        env.run_window(&trace).unwrap();
+        let stalls_before = env.serve_stalls();
+
+        // Roll to MRI-Q while traffic continues.
+        env.deploy(ReconfigKind::Static, "mriq", "o1", 2.0);
+        assert!(env.roll_in_progress());
+        assert_eq!(
+            env.active().map(|d| d.app),
+            Some(mq),
+            "the logical deployment flips at deploy time"
+        );
+        let t0 = env.clock.now();
+
+        // During the roll: the old logic keeps FPGA service on the cards
+        // not yet flipped...
+        let r = env.serve(&req(1_000_000, td, td_large, t0 + 0.1)).unwrap();
+        assert!(r.served_by.is_fpga(), "{r:?}");
+        assert_ne!(r.served_by.card(), Some(CardId(0)), "card 0 is drained");
+        // ...and the incoming logic falls back to the CPU pool (its
+        // pre-roll status quo) instead of stalling on an outage.
+        let r = env.serve(&req(1_000_001, mq, mq_large, t0 + 0.2)).unwrap();
+        assert_eq!(r.served_by, ServedBy::Cpu);
+
+        // March virtual time forward; the roll completes card by card.
+        let mut t = t0 + 0.2;
+        let mut id = 1_000_002u64;
+        let mut guard = 0;
+        while env.roll_in_progress() {
+            t += 0.5;
+            env.serve(&req(id, td, td_large, t)).unwrap();
+            id += 1;
+            guard += 1;
+            assert!(guard < 100, "roll did not complete");
+        }
+        // After the roll: MRI-Q rides the fleet, tdFIR is back on CPU.
+        let r = env.serve(&req(id, mq, mq_large, t + 0.1)).unwrap();
+        assert!(r.served_by.is_fpga(), "{r:?}");
+        let r = env.serve(&req(id + 1, td, td_large, t + 0.2)).unwrap();
+        assert_eq!(r.served_by, ServedBy::Cpu);
+
+        assert_eq!(
+            env.serve_stalls(),
+            stalls_before,
+            "rolling reconfiguration must add zero fleet-level stalls"
+        );
+        // Every card now serves MRI-Q, and each reconfiguration charged
+        // the paper's per-card outage.
+        for i in 0..4 {
+            let card = env.pool.card(CardId(i));
+            assert!(card.serves("mriq"), "card {i}");
+            for rep in &card.reconfig_log {
+                assert_eq!(rep.downtime_secs, 1.0, "card {i}");
+            }
+            assert!(env.router.is_routable(CardId(i)), "card {i} rejoined");
+        }
+    }
+
+    #[test]
+    fn cutover_strategy_stalls_requests_during_the_outage() {
+        let mut env = FleetEnv::new(registry(), D5005, 2)
+            .with_strategy(ReconfigStrategy::Cutover);
+        env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+        // Serve something to move the clock past the initial outage.
+        let warm = tdfir_burst(&env, 1, 5.0);
+        env.run_window(&warm).unwrap();
+        let stalls_before = env.serve_stalls();
+        // Cutover at now: both cards are in outage for 1 s.
+        env.deploy(ReconfigKind::Static, "mriq", "o1", 2.0);
+        let (mq, large) = env.resolve("mriq", "large").unwrap();
+        let now = env.clock.now();
+        let probe = Request {
+            id: 99,
+            app: mq,
+            size: large,
+            arrival: now + 0.5,
+            bytes: 1.0,
+        };
+        let rec = env.serve(&probe).unwrap();
+        assert!(rec.served_by.is_fpga());
+        assert!(rec.start >= now + 1.0, "queued behind the outage");
+        assert_eq!(env.serve_stalls(), stalls_before + 1);
+    }
+
+    #[test]
+    fn one_card_roll_is_the_paper_cutover() {
+        let mut fleet = fleet_with_tdfir(1);
+        let mut prod = ProductionEnv::new(registry(), D5005);
+        prod.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+        let trace = tdfir_burst(&fleet, 3, 2.0);
+        fleet.run_window(&trace).unwrap();
+        prod.run_window(&trace).unwrap();
+        // Reconfigure mid-stream on both; the single card queues the
+        // deployed app's requests behind the outage identically.
+        fleet.deploy(ReconfigKind::Static, "mriq", "o1", 2.0);
+        prod.deploy(ReconfigKind::Static, "mriq", "o1", 2.0);
+        assert!(!fleet.roll_in_progress(), "one card cannot roll");
+        let dev_f = fleet.pool.card(CardId(0));
+        assert_eq!(dev_f.reconfig_log.len(), prod.device.reconfig_log.len());
+        for (f, p) in dev_f.reconfig_log.iter().zip(&prod.device.reconfig_log) {
+            assert_eq!(f.started_at.to_bits(), p.started_at.to_bits());
+            assert_eq!(f.downtime_secs, p.downtime_secs);
+            assert_eq!(f.to, p.to);
+        }
+    }
+
+    #[test]
+    fn cpu_fallback_and_errors_match_production_env() {
+        let mut env = fleet_with_tdfir(2);
+        // An app no card holds falls back to CPU.
+        let (mq, large) = env.resolve("mriq", "large").unwrap();
+        let req = Request {
+            id: 0,
+            app: mq,
+            size: large,
+            arrival: 2.0,
+            bytes: 1.0,
+        };
+        let rec = env.serve(&req).unwrap();
+        assert_eq!(rec.served_by, ServedBy::Cpu);
+        assert_eq!(rec.start, rec.arrival);
+        // Out-of-range handles are clean errors, history untouched after.
+        let len = env.history.len();
+        let bogus = Request {
+            id: 1,
+            app: AppId(99),
+            size: SizeId(0),
+            arrival: 3.0,
+            bytes: 1.0,
+        };
+        assert!(env.serve(&bogus).is_err());
+        let (td, _) = env.resolve("tdfir", "large").unwrap();
+        let bogus_size = Request {
+            id: 2,
+            app: td,
+            size: SizeId(9),
+            arrival: 3.0,
+            bytes: 1.0,
+        };
+        assert!(env.serve(&bogus_size).is_err());
+        assert_eq!(env.history.len(), len);
+    }
+
+    #[test]
+    fn reset_clears_operational_state_only() {
+        let mut env = fleet_with_tdfir(3);
+        let trace = tdfir_burst(&env, 4, 2.0);
+        env.run_window(&trace).unwrap();
+        env.deploy(ReconfigKind::Static, "mriq", "o1", 2.0);
+        env.reset();
+        assert!(env.history.is_empty());
+        assert!(env.active().is_none());
+        assert!(!env.roll_in_progress());
+        assert_eq!(env.serve_stalls(), 0);
+        assert_eq!(env.cards(), 3);
+        assert_eq!(env.clock.now(), 0.0);
+        assert!(env.cpu_time("tdfir", "large").is_ok(), "table survives");
+    }
+
+    #[test]
+    fn improvement_coef_tracks_cards_and_intent() {
+        let mut env = fleet_with_tdfir(2);
+        let td = app_id(&env.registry, "tdfir").unwrap();
+        let mq = app_id(&env.registry, "mriq").unwrap();
+        assert_eq!(Environment::improvement_coef(&env, td), 2.07);
+        assert_eq!(Environment::improvement_coef(&env, mq), 1.0);
+        // Mid-roll both logics are live on some card.
+        let warm = tdfir_burst(&env, 1, 5.0);
+        env.run_window(&warm).unwrap();
+        env.deploy(ReconfigKind::Static, "mriq", "o1", 3.0);
+        assert!(env.roll_in_progress());
+        assert_eq!(Environment::improvement_coef(&env, td), 2.07);
+        assert_eq!(Environment::improvement_coef(&env, mq), 3.0);
+    }
+}

@@ -1,0 +1,40 @@
+//! The fleet layer: a multi-card FPGA pool with load-balanced routing
+//! and rolling zero-downtime reconfiguration.
+//!
+//! The paper operates **one** Intel PAC D5005 and accepts the measured
+//! ~1 s outage while §3.3 step 6 swaps its logic. At production scale a
+//! provider racks several cards; this layer is what changes:
+//!
+//!  * [`CardPool`] — N simulated cards, each with its own logic slot,
+//!    FIFO kernel pipeline, and reconfiguration (outage) state;
+//!  * [`FleetRouter`] — dispatches each request to the best card holding
+//!    the app's logic (minimal earliest start, ties to the lowest card
+//!    index), falling back to the CPU pool exactly as the single-card
+//!    `ProductionEnv` does. The hot path stays allocation-free on
+//!    interned `AppId`/`SizeId`/`VariantId` handles;
+//!  * [`FleetEnv`] — `ProductionEnv` generalized to the pool. It
+//!    implements [`crate::coordinator::Environment`], so the §3.3
+//!    controller (`recon::run_reconfiguration`) and the Step-7 loop
+//!    (`adaptive::run_adaptive`) drive a fleet unchanged.
+//!
+//! Reconfiguration rolls by default ([`ReconfigStrategy::Rolling`]):
+//! drain one card, reprogram it via `FpgaDevice::reconfigure` while the
+//! remaining cards keep serving, rejoin it, repeat. Fleet-level
+//! served-request downtime drops to **zero** (no request ever starts
+//! inside an outage window) while per-card downtime stays the paper's
+//! measured value. With a single card the roll degenerates to the
+//! paper's in-place cutover, which keeps the 1-card fleet **bit-identical**
+//! to `ProductionEnv` — the proptest-asserted oracle anchoring this
+//! subsystem the same way `history::scan` anchors the columnar index.
+//!
+//! `benches/fleet_scaling.rs` measures served-request throughput at
+//! N = 1, 2, 4, 8 cards and asserts the roll adds zero stalls;
+//! `benches/downtime.rs` contrasts rolling against cutover.
+
+pub mod env;
+pub mod pool;
+pub mod router;
+
+pub use env::{FleetEnv, ReconfigStrategy};
+pub use pool::CardPool;
+pub use router::FleetRouter;

@@ -1,0 +1,160 @@
+//! The card pool: N simulated FPGA cards, each with its own logic slot,
+//! FIFO kernel pipeline, and reconfiguration (outage) state.
+//!
+//! The pool owns the per-card state two layers consume:
+//!
+//!  * [`crate::fleet::FleetRouter`] reads each card's deployment and
+//!    scheduling horizon to pick the best card for a request;
+//!  * [`crate::fleet::FleetEnv`] reprograms cards one at a time during a
+//!    rolling reconfiguration.
+//!
+//! A card's deployment pairs the physical slot ([`FpgaDevice`]) with the
+//! interned [`Deployment`] handles, so the per-request "does this card
+//! hold the app's logic" check is a `Copy` compare — no strings on the
+//! hot path, exactly like `ProductionEnv`.
+
+use crate::coordinator::server::Deployment;
+use crate::fpga::device::{CardId, FpgaDevice, ReconfigKind, ReconfigReport};
+use crate::fpga::part::Part;
+
+/// A pool of identical FPGA cards (the paper's PAC D5005, multiplied).
+#[derive(Clone, Debug)]
+pub struct CardPool {
+    cards: Vec<FpgaDevice>,
+    /// What each card's slot currently holds (interned handles + the
+    /// pre-launch improvement coefficient), `None` before first program.
+    deployments: Vec<Option<Deployment>>,
+}
+
+impl CardPool {
+    /// Pool of `cards` identical parts. Panics on an empty pool — a fleet
+    /// without cards is a construction bug, not an operational state.
+    pub fn new(part: Part, cards: usize) -> Self {
+        assert!(cards >= 1, "a fleet needs at least one card");
+        CardPool {
+            cards: (0..cards).map(|_| FpgaDevice::new(part)).collect(),
+            deployments: vec![None; cards],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cards.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cards.is_empty()
+    }
+
+    pub fn card(&self, id: CardId) -> &FpgaDevice {
+        &self.cards[id.0 as usize]
+    }
+
+    pub fn cards(&self) -> &[FpgaDevice] {
+        &self.cards
+    }
+
+    /// Per-card deployments, indexed by `CardId.0`.
+    pub fn deployments(&self) -> &[Option<Deployment>] {
+        &self.deployments
+    }
+
+    pub fn deployment(&self, id: CardId) -> Option<Deployment> {
+        self.deployments[id.0 as usize]
+    }
+
+    /// Do any cards currently hold `app`'s logic (by name, cold path)?
+    pub fn serves(&self, app: &str) -> bool {
+        self.cards.iter().any(|c| c.serves(app))
+    }
+
+    /// Program one card's slot at virtual time `at` (future-dated when
+    /// the card drains first) and record its new deployment.
+    pub fn reconfigure_card(
+        &mut self,
+        id: CardId,
+        at: f64,
+        kind: ReconfigKind,
+        app: &str,
+        variant: &str,
+        dep: Deployment,
+    ) -> ReconfigReport {
+        let report = self.cards[id.0 as usize].reconfigure(at, kind, app, variant);
+        self.deployments[id.0 as usize] = Some(dep);
+        report
+    }
+
+    /// Schedule one request on a card's FIFO pipeline. Returns (start,
+    /// finish, stalled): `stalled` is true iff the request *arrived
+    /// inside the card's outage window* — it was routed to a card that
+    /// was mid-reconfiguration, which is exactly the fleet-level serve
+    /// stall a rolling reconfiguration avoids by draining cards out of
+    /// the rotation first. (FIFO queueing behind other requests is load,
+    /// not a stall; note `FpgaDevice::reconfigure` folds the outage into
+    /// the busy horizon, so "outage binds the start" cannot be recovered
+    /// from the horizons alone — arrival-inside-outage is the invariant.)
+    pub fn schedule(
+        &mut self,
+        id: CardId,
+        arrival: f64,
+        service_secs: f64,
+    ) -> (f64, f64, bool) {
+        let dev = &mut self.cards[id.0 as usize];
+        let stalled = arrival < dev.outage_until();
+        let (start, finish) = dev.schedule(arrival, service_secs);
+        (start, finish, stalled)
+    }
+
+    /// Total outage seconds charged across all cards (sum of per-card
+    /// reconfiguration downtimes).
+    pub fn total_downtime(&self) -> f64 {
+        self.cards.iter().map(FpgaDevice::total_downtime).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{AppId, VariantId};
+    use crate::fpga::part::D5005;
+
+    fn dep(app: u16) -> Deployment {
+        Deployment {
+            app: AppId(app),
+            variant: VariantId(1),
+            improvement_coef: 2.0,
+        }
+    }
+
+    #[test]
+    fn pool_tracks_per_card_slots() {
+        let mut p = CardPool::new(D5005, 3);
+        assert_eq!(p.len(), 3);
+        assert!(p.deployments().iter().all(Option::is_none));
+        p.reconfigure_card(CardId(1), 0.0, ReconfigKind::Static, "tdfir", "o1", dep(0));
+        assert!(p.deployment(CardId(0)).is_none());
+        assert_eq!(p.deployment(CardId(1)).unwrap().app, AppId(0));
+        assert!(p.serves("tdfir"));
+        assert!(!p.serves("mriq"));
+        assert_eq!(p.total_downtime(), 1.0);
+    }
+
+    #[test]
+    fn schedule_flags_outage_stalls_not_fifo_queueing() {
+        let mut p = CardPool::new(D5005, 1);
+        p.reconfigure_card(CardId(0), 0.0, ReconfigKind::Static, "tdfir", "o1", dep(0));
+        // Arrives inside the [0, 1) outage: stalled by the reconfig.
+        let (s1, f1, stalled) = p.schedule(CardId(0), 0.5, 2.0);
+        assert_eq!(s1, 1.0);
+        assert!(stalled, "outage-bound start is a stall");
+        // Arrives while busy (but past the outage): plain FIFO queueing.
+        let (s2, _f2, stalled) = p.schedule(CardId(0), 1.5, 2.0);
+        assert_eq!(s2, f1);
+        assert!(!stalled, "FIFO queueing is not a stall");
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one card")]
+    fn empty_pool_is_a_construction_bug() {
+        let _ = CardPool::new(D5005, 0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Load-balanced request dispatch across the card pool.
+//!
+//! Routing rule: among the cards that (a) hold the request's app logic
+//! and (b) are routable (not drained out of rotation by an in-flight
+//! rolling reconfiguration), pick the card with the minimal *earliest
+//! start* — `max(arrival, FIFO backlog, outage end)` — breaking ties
+//! toward the lowest card index. With one card this degenerates to
+//! exactly `ProductionEnv`'s behaviour (the deployed app's requests
+//! queue on the single card, everything else falls back to the CPU
+//! pool), which is what keeps the 1-card fleet bit-identical to the
+//! paper's environment.
+//!
+//! The scan is O(cards) per request with zero allocation — card counts
+//! are single digits here; a per-app card index is the lever if fleets
+//! ever grow past that.
+//!
+//! The router also owns the fleet's **serve-stall counter**: a stall is
+//! a request that arrived inside its serving card's outage window, i.e.
+//! was routed to a card mid-reconfiguration (FIFO queueing behind other
+//! requests is load, not a stall). A rolling reconfiguration must
+//! complete with zero new stalls — drained cards leave the rotation
+//! before their outage begins — while a cutover fleet stalls every
+//! deployed-app request that arrives during the outage.
+
+use crate::apps::AppId;
+use crate::fpga::device::CardId;
+
+use super::pool::CardPool;
+
+/// Per-fleet routing state: rotation membership + stall accounting.
+#[derive(Clone, Debug)]
+pub struct FleetRouter {
+    /// Cards eligible for new work; `false` while a card is drained /
+    /// reprogramming during a rolling reconfiguration.
+    routable: Vec<bool>,
+    /// Requests whose start was delayed by an outage window on the card
+    /// they were routed to.
+    stalls: u64,
+}
+
+impl FleetRouter {
+    pub fn new(cards: usize) -> Self {
+        FleetRouter {
+            routable: vec![true; cards],
+            stalls: 0,
+        }
+    }
+
+    /// Take a card out of (or return it to) the routing rotation.
+    pub fn set_routable(&mut self, card: CardId, on: bool) {
+        self.routable[card.0 as usize] = on;
+    }
+
+    pub fn is_routable(&self, card: CardId) -> bool {
+        self.routable[card.0 as usize]
+    }
+
+    /// Count one request routed into an outage window.
+    pub fn record_stall(&mut self) {
+        self.stalls += 1;
+    }
+
+    /// Total requests routed into outage windows since construction.
+    pub fn stalls(&self) -> u64 {
+        self.stalls
+    }
+
+    /// The best card holding `app`'s logic for a request arriving at
+    /// `arrival`, or `None` when no routable card holds it (the caller
+    /// falls back to the CPU pool). Allocation-free O(cards) scan.
+    pub fn route(&self, pool: &CardPool, app: AppId, arrival: f64) -> Option<CardId> {
+        let mut best: Option<(f64, usize)> = None;
+        for (i, dep) in pool.deployments().iter().enumerate() {
+            if !self.routable[i] {
+                continue;
+            }
+            let Some(dep) = dep else { continue };
+            if dep.app != app {
+                continue;
+            }
+            let start = pool.cards()[i].earliest_start(arrival);
+            // Strict `<` keeps ties on the lowest card index (the same
+            // FIFO tie-break idiom as `workload::merge_linear`).
+            let better = match best {
+                None => true,
+                Some((b, _)) => start < b,
+            };
+            if better {
+                best = Some((start, i));
+            }
+        }
+        best.map(|(_, i)| CardId(i as u16))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::VariantId;
+    use crate::coordinator::server::Deployment;
+    use crate::fpga::device::ReconfigKind;
+    use crate::fpga::part::D5005;
+
+    fn dep(app: u16) -> Deployment {
+        Deployment {
+            app: AppId(app),
+            variant: VariantId(1),
+            improvement_coef: 2.0,
+        }
+    }
+
+    fn pool_of(n: usize, app: u16) -> CardPool {
+        let mut p = CardPool::new(D5005, n);
+        for i in 0..n {
+            p.reconfigure_card(
+                CardId(i as u16),
+                0.0,
+                ReconfigKind::Static,
+                "a",
+                "o1",
+                dep(app),
+            );
+        }
+        p
+    }
+
+    #[test]
+    fn routes_to_least_loaded_card_ties_to_lowest_index() {
+        let mut pool = pool_of(3, 0);
+        let r = FleetRouter::new(3);
+        // All idle (past the t=1 deploy outage): tie -> card 0.
+        assert_eq!(r.route(&pool, AppId(0), 2.0), Some(CardId(0)));
+        // Load card 0 and 1; card 2 becomes the best.
+        pool.schedule(CardId(0), 2.0, 5.0);
+        pool.schedule(CardId(1), 2.0, 5.0);
+        assert_eq!(r.route(&pool, AppId(0), 2.1), Some(CardId(2)));
+        // Wrong app: no card.
+        assert_eq!(r.route(&pool, AppId(9), 2.0), None);
+    }
+
+    #[test]
+    fn drained_cards_leave_the_rotation() {
+        let pool = pool_of(2, 0);
+        let mut r = FleetRouter::new(2);
+        r.set_routable(CardId(0), false);
+        assert!(!r.is_routable(CardId(0)));
+        assert_eq!(r.route(&pool, AppId(0), 2.0), Some(CardId(1)));
+        r.set_routable(CardId(1), false);
+        assert_eq!(r.route(&pool, AppId(0), 2.0), None, "CPU fallback");
+        r.set_routable(CardId(0), true);
+        assert_eq!(r.route(&pool, AppId(0), 2.0), Some(CardId(0)));
+    }
+
+    #[test]
+    fn outage_pushes_routing_to_the_free_card() {
+        let mut pool = pool_of(2, 0);
+        let r = FleetRouter::new(2);
+        // Card 0 re-enters an outage at t=10..11; card 1 stays live.
+        pool.reconfigure_card(CardId(0), 10.0, ReconfigKind::Static, "a", "o1", dep(0));
+        assert_eq!(r.route(&pool, AppId(0), 10.2), Some(CardId(1)));
+    }
+}

@@ -13,6 +13,12 @@
 
 use super::part::Part;
 
+/// Physical card handle within a fleet. `CardId(0)` is the paper's single
+/// PAC D5005; `coordinator::history::ServedBy::Fpga` records which card
+/// served each request so multi-card routing stays auditable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct CardId(pub u16);
+
 /// Reconfiguration flavor (§3.2).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ReconfigKind {
@@ -127,6 +133,24 @@ impl FpgaDevice {
         t >= self.outage_until
     }
 
+    /// Virtual time until which the kernel pipeline is busy with queued
+    /// requests (the FIFO horizon a fleet router balances on).
+    pub fn busy_until(&self) -> f64 {
+        self.busy_until
+    }
+
+    /// Virtual time until which the card is unavailable (reconfiguring).
+    pub fn outage_until(&self) -> f64 {
+        self.outage_until
+    }
+
+    /// Earliest virtual time a request arriving at `arrival` could start
+    /// on this card (arrival vs FIFO backlog vs outage window) — what
+    /// `fleet::FleetRouter` minimizes when picking a card.
+    pub fn earliest_start(&self, arrival: f64) -> f64 {
+        arrival.max(self.busy_until).max(self.outage_until)
+    }
+
     /// Total outage charged so far (sum of reconfig downtimes).
     pub fn total_downtime(&self) -> f64 {
         self.reconfig_log.iter().map(|r| r.downtime_secs).sum()
@@ -162,6 +186,18 @@ mod tests {
         assert_eq!(s1, 1.0, "must wait for the outage to end");
         let (s2, _f2) = d.schedule(0.3, 2.0);
         assert_eq!(s2, f1, "FIFO behind the first request");
+    }
+
+    #[test]
+    fn earliest_start_tracks_backlog_and_outage() {
+        let mut d = FpgaDevice::new(D5005);
+        assert_eq!(d.earliest_start(3.0), 3.0, "idle card starts on arrival");
+        d.reconfigure(0.0, ReconfigKind::Static, "tdfir", "o1");
+        assert_eq!(d.outage_until(), 1.0);
+        assert_eq!(d.earliest_start(0.2), 1.0, "outage binds");
+        let (_, f1) = d.schedule(0.2, 2.0);
+        assert_eq!(d.busy_until(), f1);
+        assert_eq!(d.earliest_start(0.3), f1, "FIFO backlog binds");
     }
 
     #[test]

@@ -32,11 +32,20 @@
 //!  * names are resolved back through the registry only on cold paths
 //!    (reports, reconfiguration proposals, JSON trace serialization).
 //!
+//! # The fleet layer
+//!
+//! [`fleet`] generalizes the single-card environment to a [`fleet::CardPool`]
+//! with load-balanced routing and rolling zero-downtime reconfiguration;
+//! the coordinator layers drive either environment through the
+//! [`coordinator::Environment`] trait, and the 1-card fleet is
+//! proptest-asserted bit-identical to [`coordinator::ProductionEnv`].
+//!
 //! See DESIGN.md for the system inventory and per-experiment index.
 
 pub mod analysis;
 pub mod apps;
 pub mod coordinator;
+pub mod fleet;
 pub mod fpga;
 pub mod loopir;
 pub mod offload;

@@ -249,7 +249,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .history
             .all()
             .iter()
-            .any(|r| r.app == app && r.served_by == repro::coordinator::ServedBy::Fpga);
+            .any(|r| r.app == app && r.served_by.is_fpga());
         t.row(vec![
             env.app_name(app).to_string(),
             n.to_string(),

@@ -206,6 +206,16 @@ fn merge_heap(streams: &mut [Stream], duration_secs: f64, out: &mut Vec<Request>
     }
 }
 
+/// Override one app's arrival rate (requests/hour) in place — the knob
+/// the fleet benches use to build offload-heavy traces (e.g. a tdFIR
+/// rate sized to saturate N cards). A no-op for unknown names, so drifted
+/// synthetic registries can share call sites with the paper registry.
+pub fn boost_rate(apps: &mut [AppSpec], name: &str, rate_per_hour: f64) {
+    if let Some(spec) = apps.iter_mut().find(|a| a.name == name) {
+        spec.rate_per_hour = rate_per_hour;
+    }
+}
+
 /// Serialize a trace to JSON (names resolved through the registry).
 pub fn trace_to_json(reqs: &[Request], apps: &[AppSpec]) -> Json {
     Json::Arr(
@@ -316,6 +326,19 @@ mod tests {
         assert!((frac(0) - 0.3).abs() < 0.05, "small {}", frac(0));
         assert!((frac(1) - 0.5).abs() < 0.05, "large {}", frac(1));
         assert!((frac(2) - 0.2).abs() < 0.05, "xlarge {}", frac(2));
+    }
+
+    #[test]
+    fn boost_rate_overrides_one_app_in_place() {
+        let mut reg = registry();
+        boost_rate(&mut reg, "tdfir", 7200.0);
+        boost_rate(&mut reg, "no-such-app", 1.0); // silent no-op
+        assert_eq!(app_id(&reg, "tdfir").map(|a| reg[a.0 as usize].rate_per_hour), Some(7200.0));
+        let reqs = generate(&reg, 600.0, 4);
+        // 7200/h over 600 s => ~1200 tdfir arrivals (±4 sigma).
+        let td = app_id(&reg, "tdfir").unwrap();
+        let n = reqs.iter().filter(|r| r.app == td).count() as f64;
+        assert!((n - 1200.0).abs() < 140.0, "{n}");
     }
 
     #[test]

@@ -136,7 +136,7 @@ fn after_reconfiguration_mriq_is_served_by_fpga_and_faster() {
         .all()
         .iter()
         .filter(|r| r.arrival >= t0 && r.app == mq)
-        .all(|r| r.served_by == ServedBy::Fpga));
+        .all(|r| r.served_by.is_fpga()));
     // And tdFIR reverted to CPU.
     assert!(env
         .history
@@ -395,5 +395,5 @@ fn requests_arriving_during_outage_complete_after_it() {
     let rec = env.serve(&req).unwrap();
     assert!(rec.start >= 1.0, "must wait out the outage, started {}", rec.start);
     assert!(rec.finish > rec.start);
-    assert_eq!(rec.served_by, ServedBy::Fpga);
+    assert_eq!(rec.served_by, ServedBy::Fpga(repro::fpga::device::CardId(0)));
 }

@@ -4,7 +4,8 @@
 
 use repro::apps::{registry, AppId, SizeId};
 use repro::coordinator::history::{scan, HistoryStore, RequestRecord, ServedBy};
-use repro::coordinator::ProductionEnv;
+use repro::coordinator::{run_reconfiguration, Approval, ProductionEnv, ReconConfig};
+use repro::fleet::FleetEnv;
 use repro::fpga::device::{FpgaDevice, ReconfigKind};
 use repro::fpga::part::D5005;
 use repro::loopir::interp::Interp;
@@ -343,6 +344,151 @@ fn prop_indexed_history_matches_scan_reference() {
                     scan::size_dist_in_window(records, app, from, to, h.bin_width());
                 ensure(fast.bins().eq(slow.bins()), "native-width dist")?;
                 ensure(fast.mode_bin() == slow.mode_bin(), "native-width mode")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Fleet oracle: a 1-card `FleetEnv` produces bit-identical
+/// `RequestRecord`s (including the serving card) and recon outcomes to
+/// `ProductionEnv` on random traces — with a full mid-trace §3.3 cycle,
+/// since the 1-card roll degenerates to the paper's in-place cutover.
+/// This anchors the fleet subsystem the same way `history::scan` anchors
+/// the columnar index.
+#[test]
+fn prop_fleet_one_card_matches_production_env() {
+    let reg = registry();
+    forall(
+        8,
+        0xF1EE7,
+        |rng| (900.0 + rng.next_f64() * 2700.0, rng.next_u64()),
+        |&(dur, seed)| {
+            let mut prod = ProductionEnv::new(registry(), D5005);
+            let mut fleet = FleetEnv::new(registry(), D5005, 1);
+            prod.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+            fleet.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+            let trace = generate(&reg, dur, seed);
+            if trace.is_empty() {
+                return Ok(());
+            }
+            prod.run_window(&trace).map_err(|e| e.to_string())?;
+            fleet.run_window(&trace).map_err(|e| e.to_string())?;
+
+            // A full auto-approved reconfiguration cycle on both.
+            let cfg = ReconConfig {
+                long_window_secs: dur,
+                short_window_secs: dur,
+                ..Default::default()
+            };
+            let mut ap = Approval::auto_yes();
+            let op =
+                run_reconfiguration(&mut prod, &cfg, &mut ap).map_err(|e| e.to_string())?;
+            let of =
+                run_reconfiguration(&mut fleet, &cfg, &mut ap).map_err(|e| e.to_string())?;
+            ensure(op.rankings.len() == of.rankings.len(), "ranking count")?;
+            for (a, b) in op.rankings.iter().zip(&of.rankings) {
+                ensure(a.app == b.app && a.app_id == b.app_id, "ranking order")?;
+                ensure(
+                    a.actual_total_secs.to_bits() == b.actual_total_secs.to_bits()
+                        && a.corrected_total_secs.to_bits()
+                            == b.corrected_total_secs.to_bits(),
+                    format!("ranking totals for {}", a.app),
+                )?;
+                ensure(
+                    a.usage_count == b.usage_count && a.coef.to_bits() == b.coef.to_bits(),
+                    "ranking usage/coef",
+                )?;
+            }
+            ensure(
+                op.representatives.len() == of.representatives.len(),
+                "representative count",
+            )?;
+            for (a, b) in op.representatives.iter().zip(&of.representatives) {
+                ensure(a.app == b.app && a.size == b.size, "representative class")?;
+                ensure(
+                    a.bytes.to_bits() == b.bytes.to_bits() && a.mode_count == b.mode_count,
+                    "representative datum",
+                )?;
+            }
+            match (&op.proposal, &of.proposal) {
+                (Some(p), Some(q)) => {
+                    ensure(p.proposed == q.proposed, "proposed flag")?;
+                    ensure(p.ratio.to_bits() == q.ratio.to_bits(), "effect ratio bits")?;
+                    ensure(
+                        p.best.app == q.best.app && p.best.variant == q.best.variant,
+                        "best pattern",
+                    )?;
+                    ensure(
+                        p.best.effect_secs.to_bits() == q.best.effect_secs.to_bits()
+                            && p.current.effect_secs.to_bits()
+                                == q.current.effect_secs.to_bits(),
+                        "effect magnitudes",
+                    )?;
+                    ensure(
+                        p.current.app == q.current.app
+                            && p.current.variant == q.current.variant,
+                        "current pattern",
+                    )?;
+                }
+                (None, None) => {}
+                _ => return Err("proposal presence diverged".into()),
+            }
+            ensure(op.decision == of.decision, "decision")?;
+            match (&op.reconfig, &of.reconfig) {
+                (Some(a), Some(b)) => {
+                    ensure(a.kind == b.kind && a.to == b.to && a.from == b.from, "reconfig logic")?;
+                    ensure(
+                        a.started_at.to_bits() == b.started_at.to_bits()
+                            && a.downtime_secs == b.downtime_secs,
+                        "reconfig timing",
+                    )?;
+                }
+                (None, None) => {}
+                _ => return Err("reconfig presence diverged".into()),
+            }
+            ensure(
+                op.steps.reconfig_downtime_secs == of.steps.reconfig_downtime_secs,
+                "step-6 downtime",
+            )?;
+            match (prod.deployment, fleet.active()) {
+                (Some(a), Some(b)) => {
+                    ensure(a.app == b.app && a.variant == b.variant, "deployment")?;
+                    ensure(
+                        a.improvement_coef.to_bits() == b.improvement_coef.to_bits(),
+                        "deployment coefficient",
+                    )?;
+                }
+                (None, None) => {}
+                _ => return Err("deployment presence diverged".into()),
+            }
+
+            // A second window after the (possible) reconfiguration: the
+            // post-swap routing must also agree.
+            let t0 = prod.clock.now() + 1e-6;
+            let mut more = generate(&reg, 900.0, seed ^ 0x9E37_79B9);
+            for r in &mut more {
+                r.arrival += t0;
+            }
+            if !more.is_empty() {
+                prod.run_window(&more).map_err(|e| e.to_string())?;
+                fleet.run_window(&more).map_err(|e| e.to_string())?;
+            }
+
+            ensure(prod.history.len() == fleet.history.len(), "history length")?;
+            for (a, b) in prod.history.all().iter().zip(fleet.history.all()) {
+                ensure(
+                    a.id == b.id && a.app == b.app && a.size == b.size,
+                    "record identity",
+                )?;
+                ensure(a.served_by == b.served_by, format!("served_by for {}", a.id))?;
+                ensure(
+                    a.arrival.to_bits() == b.arrival.to_bits()
+                        && a.start.to_bits() == b.start.to_bits()
+                        && a.finish.to_bits() == b.finish.to_bits()
+                        && a.service_secs.to_bits() == b.service_secs.to_bits(),
+                    format!("record timing bits for {}", a.id),
+                )?;
             }
             Ok(())
         },

@@ -11,6 +11,10 @@
 //!  3. **Zero-allocation queries** — the indexed window reads the §3.3
 //!     step-1 analysis leans on (`window`, `totals_in_window`,
 //!     `last_of_app`) don't allocate either.
+//!  4. **Zero-allocation fleet routing** — `FleetEnv::serve` through a
+//!     4-card pool (route scan + per-card FIFO schedule + card-tagged
+//!     record) allocates nothing either, and its service times match the
+//!     single-card table bit for bit.
 //!
 //! Kept as a single #[test] so no concurrent test pollutes the global
 //! allocation counter between the before/after reads.
@@ -20,6 +24,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use repro::apps::{app_id, registry};
 use repro::coordinator::ProductionEnv;
+use repro::fleet::FleetEnv;
 use repro::fpga::device::ReconfigKind;
 use repro::fpga::part::D5005;
 use repro::fpga::perf::PerfModel;
@@ -136,4 +141,30 @@ fn serve_is_bit_identical_to_seed_model_and_allocation_free() {
         after_q - before_q
     );
     assert!(cnt > 0, "queries must have observed the served history");
+
+    // ---- 4. fleet routing path is allocation-free too ---------------------
+    let mut fleet = FleetEnv::new(registry(), D5005, 4);
+    fleet.deploy(ReconfigKind::Static, "tdfir", VARIANT, 2.0);
+    fleet.history.reserve(trace.len() + 1);
+    let before_f = ALLOCS.load(Ordering::SeqCst);
+    for r in &trace {
+        let rec = fleet.serve(r).unwrap();
+        std::hint::black_box(rec);
+    }
+    let after_f = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after_f - before_f,
+        0,
+        "fleet serve allocated {} time(s) over {} requests on 4 cards",
+        after_f - before_f,
+        trace.len()
+    );
+    assert_eq!(fleet.history.len(), trace.len());
+    // Same service-time table under the hood: every record's service time
+    // matches the single-card expectation bit for bit.
+    for rec in fleet.history.all() {
+        let (cpu, off) = expected[rec.app.0 as usize][rec.size.0 as usize];
+        let want = if rec.app == td { off } else { cpu };
+        assert_eq!(rec.service_secs.to_bits(), want.to_bits(), "{rec:?}");
+    }
 }

@@ -1,0 +1,70 @@
+#!/usr/bin/env python3
+"""Render BENCH_*.json artifacts as ROADMAP-ready markdown rows.
+
+The CI `bench-smoke` job uploads `BENCH_router_throughput.json`,
+`BENCH_recon_analysis.json`, and `BENCH_fleet_scaling.json` on every
+push; a full (non-smoke) run produces the same files locally via
+`cargo bench --bench <name>`. This script turns either into the
+markdown the ROADMAP Performance section inlines, so refreshing the
+committed numbers is mechanical:
+
+    python3 tools/inline_bench.py BENCH_*.json
+
+Output: one markdown table per artifact (section name, iterations,
+mean, units/s) followed by the artifact's top-level extras
+(speedup_x, scaling_4v1_x, ...), ready to paste.
+"""
+
+import json
+import sys
+
+
+def fmt_secs(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f} s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.2f} ms"
+    if s >= 1e-6:
+        return f"{s * 1e6:.2f} µs"
+    return f"{s * 1e9:.0f} ns"
+
+
+def fmt_rate(r: float) -> str:
+    if r >= 1e6:
+        return f"{r / 1e6:.2f}M/s"
+    if r >= 1e3:
+        return f"{r / 1e3:.1f}k/s"
+    return f"{r:.1f}/s"
+
+
+def render(path: str) -> None:
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    sections = doc.get("sections", [])
+    extras = {k: v for k, v in doc.items() if k != "sections"}
+    print(f"### `{path}`\n")
+    print("| section | iters | mean | throughput |")
+    print("|---------|-------|------|------------|")
+    for s in sections:
+        print(
+            f"| `{s['name']}` | {s['iterations']} "
+            f"| {fmt_secs(s['mean_s'])} | {fmt_rate(s.get('rps', 0.0))} |"
+        )
+    if extras:
+        pairs = ", ".join(f"`{k}` = {v:g}" for k, v in sorted(extras.items()))
+        print(f"\nextras: {pairs}")
+    print()
+
+
+def main() -> int:
+    paths = sys.argv[1:]
+    if not paths:
+        print(__doc__, file=sys.stderr)
+        return 2
+    for p in paths:
+        render(p)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
