@@ -10,6 +10,14 @@
 //! rejoin, repeat — so served requests never stall on an outage window
 //! while per-card downtime stays the paper's ~1 s.
 //!
+//! With `"residency_apps": 2` the controller also proposes
+//! **heterogeneous residency**: instead of giving the single best app
+//! every card, it partitions the pool across the top two ranked apps in
+//! proportion to their measured offloadable load (`plan_residency`), so
+//! both hot apps ride the FPGA at once — watch the per-card table at
+//! the end come out mixed, and cards whose slot already matches the new
+//! plan skip their reprogram entirely.
+//!
 //!     cargo run --release --example adaptive_operation
 
 use repro::apps::registry;
@@ -28,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         "window_hours": 1.0,
         "threshold": 2.0,
         "top_apps": 2,
+        "residency_apps": 2,
         "reconfig": "static",
         "seed": 42
     }"#;
@@ -90,6 +99,16 @@ fn main() -> anyhow::Result<()> {
         .map(|r| (r.window, r.serving.clone().unwrap_or_default()))
         .collect();
     println!("\nlogic changes (each rolled card-by-card): {switches:?}");
+    for r in &reports {
+        if let Some(plan) = r.outcome.as_ref().and_then(|o| o.residency.as_ref()) {
+            let shares: Vec<String> = plan
+                .entries
+                .iter()
+                .map(|e| format!("{} x{}", e.app, e.cards))
+                .collect();
+            println!("hour {}: residency plan [{}]", r.window, shares.join(", "));
+        }
+    }
 
     let mut cards = Table::new(vec!["card", "logic", "reconfigs", "card outage"]);
     for i in 0..CARDS {

@@ -26,30 +26,14 @@ use repro::fpga::part::D5005;
 use repro::util::bench::{smoke_mode, Bench};
 use repro::workload::{boost_rate, generate};
 
-/// Weighted mean tdFIR service time under the deployed variant, over the
-/// paper's 3:5:2 size mix — the per-card capacity unit the load is sized
-/// against.
-fn mean_tdfir_service(env: &mut FleetEnv) -> f64 {
-    let spec = env.app("tdfir").expect("registry has tdfir");
-    let classes: Vec<(String, f64)> = spec
-        .sizes
-        .iter()
-        .map(|s| (s.name.to_string(), s.weight))
-        .collect();
-    let mut num = 0.0;
-    let mut den = 0.0;
-    for (size, w) in &classes {
-        num += w * env.offloaded_time("tdfir", size, "o1").unwrap();
-        den += w;
-    }
-    num / den
-}
-
 fn main() {
     println!("== fleet scaling: served req/s at N cards (offload-heavy trace) ==\n");
 
     let mut probe = FleetEnv::new(registry(), D5005, 1);
-    let mean_serv = mean_tdfir_service(&mut probe);
+    // Weighted mean tdFIR service time under the deployed variant, over
+    // the paper's 3:5:2 size mix — the per-card capacity unit the load
+    // is sized against.
+    let mean_serv = probe.mean_service_time("tdfir", "o1").unwrap();
     let per_card_rps = 1.0 / mean_serv;
     // ~6x one card's capacity: queue-bound at 1 and 4 cards,
     // arrival-bound at 8.

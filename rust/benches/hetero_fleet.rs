@@ -1,0 +1,320 @@
+//! Heterogeneous fleet residency bench: what multi-app card assignment
+//! and the per-app routing index buy. Writes `BENCH_hetero_fleet.json`.
+//!
+//! **Section 1 — residency (two hot apps, 4 cards).** The trace carries
+//! two hot offloadable apps: tdFIR sized to ~1.6 cards of FPGA load and
+//! MRI-Q rate-matched so both apps present the same CPU-equivalent
+//! (corrected) load — the workload the §3.3 controller measures. The
+//! homogeneous plan (today's controller) gives every card to the single
+//! best-effect app and strands the other hot app on the CPU pool; the
+//! heterogeneous plan (`plan_residency`, k = 2) splits the pool. The
+//! gate compares **fleet-served throughput** — requests the FPGA cards
+//! serve per simulated second of makespan. (The simulated CPU pool is
+//! unsaturated by construction — §4.1.2's Xeon never queues — so total
+//! request throughput cannot distinguish the plans; what changes is how
+//! many requests the cards you pay for actually serve, and the service
+//! seconds they save.)
+//!
+//! **Section 2 — routing index (64 cards, 16 apps).** A 64-card pool
+//! with 16 resident apps (4 cards each) routes a mixed trace through
+//! the per-app index (`route`, O(holders)) and through the retained
+//! linear scan (`route_scan`, O(cards)); both must pick bit-identical
+//! cards, and the index must be ≥ 4x faster.
+//!
+//! Gates (asserted):
+//!  * heterogeneous fleet-served req/s ≥ 1.5x homogeneous on the
+//!    two-hot-app 4-card trace;
+//!  * a homogeneous → mixed-residency rolling transition under load
+//!    adds **zero** fleet-level serve stalls, touches only the cards
+//!    whose logic changes, and keeps per-card downtime at 1 s;
+//!  * indexed `route` ≥ 4x the linear scan at 64 cards, decisions
+//!    bit-identical across the probe trace.
+
+use repro::apps::{registry, synthetic_registry};
+use repro::coordinator::recon::{
+    analyze_load, plan_residency, EffectEstimate, ReconConfig, ResidencyPlan,
+};
+use repro::fleet::FleetEnv;
+use repro::fpga::device::ReconfigKind;
+use repro::fpga::part::D5005;
+use repro::util::bench::{smoke_mode, Bench};
+use repro::workload::{boost_rate, generate, Request};
+
+/// (FPGA-served count, makespan, fleet-served req/s) over an env's history.
+fn fleet_served(env: &FleetEnv, first_arrival: f64) -> (u64, f64, f64) {
+    let fpga = env
+        .history
+        .all()
+        .iter()
+        .filter(|r| r.served_by.is_fpga())
+        .count() as u64;
+    let last_finish = env
+        .history
+        .all()
+        .iter()
+        .map(|r| r.finish)
+        .fold(0.0f64, f64::max);
+    let makespan = (last_finish - first_arrival).max(1e-9);
+    (fpga, makespan, fpga as f64 / makespan)
+}
+
+fn main() {
+    println!("== hetero fleet: multi-app residency + per-app routing index ==\n");
+
+    // ---- size the two-hot-app trace from measured service times ----------
+    let mut probe = FleetEnv::new(registry(), D5005, 4);
+    let td_off = probe.mean_service_time("tdfir", "o1").unwrap();
+    let td_cpu = probe.mean_service_time("tdfir", "cpu").unwrap();
+    let mq_off = probe.mean_service_time("mriq", "o1").unwrap();
+    let mq_cpu = probe.mean_service_time("mriq", "cpu").unwrap();
+    // tdFIR at ~1.6 cards of offloaded load; MRI-Q rate-matched to the
+    // same CPU-equivalent load (so the planner splits the pool evenly),
+    // floored at 600/h so short smoke traces still carry both apps.
+    let td_rate = 1.6 / td_off * 3600.0;
+    let mq_rate = (td_rate * td_cpu / mq_cpu).max(600.0);
+    println!(
+        "tdfir off/cpu {td_off:.4}/{td_cpu:.4} s, mriq off/cpu {mq_off:.3}/{mq_cpu:.2} s \
+         -> rates {td_rate:.0} + {mq_rate:.0} req/h"
+    );
+    let hot_registry = || {
+        let mut reg = registry();
+        boost_rate(&mut reg, "tdfir", td_rate);
+        boost_rate(&mut reg, "mriq", mq_rate);
+        reg
+    };
+    let duration = if smoke_mode() { 60.0 } else { 180.0 };
+    let reg = hot_registry();
+    let mut trace = generate(&reg, duration, 21);
+    for r in &mut trace {
+        r.arrival += 2.0; // past the pre-launch deploy outage
+    }
+    println!(
+        "trace: {} requests over {duration} simulated seconds\n",
+        trace.len()
+    );
+
+    // ---- step 1 on the measured history -> residency plan ----------------
+    let mut meter = FleetEnv::new(hot_registry(), D5005, 4);
+    meter.run_window(&trace).unwrap(); // nothing deployed: all CPU
+    let cfg = ReconConfig {
+        long_window_secs: duration + 60.0,
+        short_window_secs: duration + 60.0,
+        residency_apps: 2,
+        ..Default::default()
+    };
+    let (rankings, _) = analyze_load(&mut meter, &cfg).unwrap();
+    let mut candidates: Vec<EffectEstimate> = Vec::new();
+    for r in rankings.iter().take(2) {
+        let cpu = meter.mean_service_time(&r.app, "cpu").unwrap();
+        let off = meter.mean_service_time(&r.app, "o1").unwrap();
+        candidates.push(EffectEstimate {
+            app: r.app.clone(),
+            variant: "o1".into(),
+            cpu_secs: cpu,
+            pattern_secs: off,
+            reduction_per_req: cpu - off,
+            usage_count: r.usage_count,
+            effect_secs: (cpu - off) * r.usage_count as f64,
+        });
+    }
+    let plan = plan_residency(&rankings, &candidates, 4, cfg.residency_apps);
+    assert_eq!(plan.entries.len(), 2, "both hot apps must earn residency");
+    for e in &plan.entries {
+        println!(
+            "plan: {} -> {} card(s) (corrected load {:.1} s, coef {:.2})",
+            e.app, e.cards, e.corrected_load_secs, e.improvement_coef
+        );
+    }
+    let best = candidates
+        .iter()
+        .max_by(|a, b| a.effect_secs.partial_cmp(&b.effect_secs).unwrap())
+        .unwrap()
+        .clone();
+    let best_coef = best.cpu_secs / best.pattern_secs;
+    println!("homogeneous baseline: {} on all 4 cards\n", best.app);
+
+    // ---- homogeneous vs heterogeneous serve ------------------------------
+    let mut b = Bench::from_env();
+    let mut homo = FleetEnv::new(hot_registry(), D5005, 4);
+    b.run("homogeneous_serve_4_cards", || {
+        homo.reset();
+        homo.deploy(ReconfigKind::Static, &best.app, &best.variant, best_coef);
+        homo.history.reserve_trace(&trace);
+        for r in &trace {
+            let _ = std::hint::black_box(homo.serve(r).unwrap());
+        }
+    });
+    let (homo_fpga, homo_makespan, homo_rps) = fleet_served(&homo, trace[0].arrival);
+    println!(
+        "  homogeneous: {homo_fpga} FPGA-served of {} (makespan {homo_makespan:.1} s, \
+         {homo_rps:.2} fleet req/s)\n",
+        trace.len()
+    );
+
+    let mut hetero = FleetEnv::new(hot_registry(), D5005, 4);
+    b.run("heterogeneous_serve_4_cards", || {
+        hetero.reset();
+        hetero.deploy_plan(ReconfigKind::Static, &plan);
+        hetero.history.reserve_trace(&trace);
+        for r in &trace {
+            let _ = std::hint::black_box(hetero.serve(r).unwrap());
+        }
+    });
+    let (het_fpga, het_makespan, het_rps) = fleet_served(&hetero, trace[0].arrival);
+    println!(
+        "  heterogeneous: {het_fpga} FPGA-served of {} (makespan {het_makespan:.1} s, \
+         {het_rps:.2} fleet req/s)\n",
+        trace.len()
+    );
+    let hetero_x = het_rps / homo_rps;
+    println!("heterogeneous over homogeneous: {hetero_x:.2}x fleet-served req/s");
+
+    // ---- homogeneous -> mixed residency rolling transition ---------------
+    let mut env = FleetEnv::new(hot_registry(), D5005, 4);
+    env.deploy(ReconfigKind::Static, &best.app, &best.variant, best_coef);
+    env.run_window(&trace).unwrap();
+    let stalls_before = env.serve_stalls();
+    let reconfigs_before: usize = env
+        .pool
+        .cards()
+        .iter()
+        .map(|c| c.reconfig_log.len())
+        .sum();
+    env.deploy_plan(ReconfigKind::Static, &plan); // rolls the changed cards
+    let t0 = env.clock.now() + 1e-6;
+    let mut post = generate(&reg, duration, 22);
+    for r in &mut post {
+        r.arrival += t0;
+    }
+    env.run_window(&post).unwrap();
+    assert!(
+        !env.roll_in_progress(),
+        "mixed-residency roll must complete within the window"
+    );
+    let roll_stalls = env.serve_stalls() - stalls_before;
+    let reconfigs_after: usize = env
+        .pool
+        .cards()
+        .iter()
+        .map(|c| c.reconfig_log.len())
+        .sum();
+    let flipped = reconfigs_after - reconfigs_before;
+    let kept = plan
+        .entries
+        .iter()
+        .find(|e| e.app == best.app)
+        .map(|e| e.cards)
+        .unwrap_or(0);
+    let mut per_card_downtime: f64 = 0.0;
+    for (i, entry) in plan.entries.iter().enumerate() {
+        let holding = env.pool.cards_holding(entry.app_id).count();
+        assert_eq!(
+            holding, entry.cards,
+            "entry {i} ({}) must hold its card share after the roll",
+            entry.app
+        );
+    }
+    for card in env.pool.cards() {
+        for rep in &card.reconfig_log {
+            per_card_downtime = per_card_downtime.max(rep.downtime_secs);
+        }
+    }
+    println!(
+        "\nmixed-residency transition: {roll_stalls} fleet-level stalls, \
+         {flipped} card(s) reprogrammed ({kept} kept), per-card outage {per_card_downtime} s"
+    );
+
+    // ---- 64-card pool: indexed route vs the retained linear scan ---------
+    println!("\n== routing index at 64 cards / 16 resident apps ==\n");
+    let plan64 = ResidencyPlan::uniform(&synthetic_registry(16), 4, "o1", 2.0);
+    let mut big = FleetEnv::new(synthetic_registry(16), D5005, 64);
+    big.deploy_plan(ReconfigKind::Static, &plan64);
+    let mut t64 = generate(&big.registry, 3600.0, 5);
+    for r in &mut t64 {
+        r.arrival += 2.0;
+    }
+    // Load half the trace through serve so card horizons differ, then
+    // probe routing on the live pool with the other half.
+    let (head, tail) = t64.split_at(t64.len() / 2);
+    big.history.reserve_trace(&t64);
+    for r in head {
+        big.serve(r).unwrap();
+    }
+    let probes: Vec<Request> = tail.to_vec();
+    for r in &probes {
+        assert_eq!(
+            big.router.route(&big.pool, r.app, r.arrival),
+            big.router.route_scan(&big.pool, r.app, r.arrival),
+            "indexed route diverged from the scan oracle"
+        );
+    }
+    let m_idx = b.run("route_indexed_64_cards", || {
+        for r in &probes {
+            std::hint::black_box(big.router.route(&big.pool, r.app, r.arrival));
+        }
+    });
+    let m_scan = b.run("route_scan_64_cards", || {
+        for r in &probes {
+            std::hint::black_box(big.router.route_scan(&big.pool, r.app, r.arrival));
+        }
+    });
+    let route_speedup = m_scan.mean_s / m_idx.mean_s.max(1e-12);
+    println!(
+        "\nindexed route {:.1} ns/req vs scan {:.1} ns/req -> {route_speedup:.1}x",
+        m_idx.mean_s * 1e9 / probes.len() as f64,
+        m_scan.mean_s * 1e9 / probes.len() as f64,
+    );
+
+    // ---- artifact + gates -------------------------------------------------
+    let n = trace.len() as f64;
+    let units: Vec<(&str, f64)> = vec![
+        ("homogeneous_serve_4_cards", n),
+        ("heterogeneous_serve_4_cards", n),
+        ("route_indexed_64_cards", probes.len() as f64),
+        ("route_scan_64_cards", probes.len() as f64),
+    ];
+    b.write_json(
+        "BENCH_hetero_fleet.json",
+        &units,
+        &[
+            ("hetero_over_homo_x", hetero_x),
+            ("homo_fleet_rps", homo_rps),
+            ("hetero_fleet_rps", het_rps),
+            ("homo_fpga_served", homo_fpga as f64),
+            ("hetero_fpga_served", het_fpga as f64),
+            ("route_speedup_x", route_speedup),
+            ("roll_stalls", roll_stalls as f64),
+            ("cards_reprogrammed", flipped as f64),
+            ("per_card_downtime_s", per_card_downtime),
+            ("trace_requests", n),
+            ("trace_secs", duration),
+        ],
+    )
+    .expect("write BENCH_hetero_fleet.json");
+    println!("wrote BENCH_hetero_fleet.json");
+
+    assert!(
+        hetero_x >= 1.5,
+        "heterogeneous residency must serve >= 1.5x the homogeneous plan's \
+         fleet req/s on the two-hot-app trace, got {hetero_x:.2}x"
+    );
+    assert_eq!(
+        roll_stalls, 0,
+        "mixed-residency rolling transition must add zero fleet-level stalls"
+    );
+    assert_eq!(
+        flipped,
+        4 - kept,
+        "the roll must touch exactly the cards whose logic changes \
+         ({flipped} flipped, {kept} kept)"
+    );
+    assert_eq!(
+        per_card_downtime, 1.0,
+        "per-card downtime must stay the paper's static-reconfig value"
+    );
+    assert!(
+        route_speedup >= 4.0,
+        "indexed route must be >= 4x the linear scan at 64 cards, \
+         got {route_speedup:.2}x"
+    );
+}

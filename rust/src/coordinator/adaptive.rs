@@ -20,7 +20,7 @@ use crate::workload::generate;
 
 use super::env::Environment;
 use super::policy::Approval;
-use super::recon::{run_reconfiguration, ReconConfig, ReconOutcome};
+use super::recon::{run_reconfiguration_with, RankCache, ReconConfig, ReconOutcome};
 
 /// Configuration of the continuous loop.
 #[derive(Clone, Debug)]
@@ -112,6 +112,10 @@ where
     // so the per-window flap check never clones strings. (The variant is
     // irrelevant: flapping is about the app's logic coming back at all.)
     let mut last_evicted: Option<AppId> = None;
+    // Step-1 ranking order carried across windows: steady workloads keep
+    // the same corrected-load order, so most cycles skip the 1-3 sort
+    // (bit-identical by construction — see `recon::RankCache`).
+    let mut ranks = RankCache::default();
 
     for w in 0..cfg.windows {
         drift(w, env);
@@ -142,7 +146,17 @@ where
         let mut rcfg = cfg.recon.clone();
         rcfg.long_window_secs = cfg.window_secs;
         rcfg.short_window_secs = cfg.window_secs;
-        let outcome = run_reconfiguration(env, &rcfg, approval)?;
+        // Snapshot the residency intent before the cycle: a flap rollback
+        // then restores the exact prior plan instead of approximating it
+        // from this window's (already drifted) estimates. Only taken when
+        // a rollback could fire at all — it requires a prior eviction —
+        // so steady windows skip the plan clone entirely.
+        let prior = if last_evicted.is_some() {
+            env.residency()
+        } else {
+            None
+        };
+        let outcome = run_reconfiguration_with(env, &rcfg, approval, &mut ranks)?;
 
         // Flap suppression: if the proposal re-installs the most recently
         // evicted logic, require `flap_ratio`.
@@ -154,17 +168,31 @@ where
                 && app_id(env.registry(), &p.best.app) == Some(evicted_app)
                 && p.ratio < cfg.flap_ratio
             {
-                // Roll back: re-deploy what we had (the flap guard fires
+                // Roll back: restore what we had (the flap guard fires
                 // after the fact because run_reconfiguration is atomic;
                 // rolling back re-uses the same static-reconfig machinery
-                // and is itself charged an outage).
-                let improvement = p.current.cpu_secs / p.current.pattern_secs.max(1e-9);
-                env.deploy(
-                    ReconfigKind::Static,
-                    &p.current.app.clone(),
-                    &p.current.variant.clone(),
-                    improvement.max(1.0),
-                );
+                // and is itself charged an outage). The pre-cycle
+                // snapshot carries the exact prior state — secondary
+                // residents and coefficient bits included — so
+                // `deploy_plan`'s skip economy reprograms only the cards
+                // the flapped cycle actually flipped. The estimate-based
+                // fallback is defensive: a fired guard implies a prior
+                // deployment, which implies a snapshot.
+                match &prior {
+                    Some(plan) => {
+                        env.deploy_plan(ReconfigKind::Static, plan);
+                    }
+                    None => {
+                        let improvement =
+                            p.current.cpu_secs / p.current.pattern_secs.max(1e-9);
+                        env.deploy(
+                            ReconfigKind::Static,
+                            &p.current.app.clone(),
+                            &p.current.variant.clone(),
+                            improvement.max(1.0),
+                        );
+                    }
+                }
                 reconfigured = false;
             }
         }

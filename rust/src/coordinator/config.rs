@@ -10,6 +10,7 @@
 //!   "window_hours": 1.0,
 //!   "threshold": 2.0,
 //!   "top_apps": 2,
+//!   "residency_apps": 1,
 //!   "intensity_keep": 4,
 //!   "efficiency_keep": 3,
 //!   "bin_width_mb": 1.0,
@@ -62,6 +63,7 @@ impl RunConfig {
             "window_hours",
             "threshold",
             "top_apps",
+            "residency_apps",
             "intensity_keep",
             "efficiency_keep",
             "bin_width_mb",
@@ -92,6 +94,10 @@ impl RunConfig {
         if let Some(n) = j.get("top_apps").and_then(Json::as_usize) {
             anyhow::ensure!(n >= 1, "top_apps must be >= 1");
             cfg.recon.top_apps = n;
+        }
+        if let Some(n) = j.get("residency_apps").and_then(Json::as_usize) {
+            anyhow::ensure!(n >= 1, "residency_apps must be >= 1");
+            cfg.recon.residency_apps = n;
         }
         let mut off = OffloadConfig::default();
         if let Some(n) = j.get("intensity_keep").and_then(Json::as_usize) {
@@ -164,6 +170,7 @@ mod tests {
         assert_eq!(c.window_secs, 3600.0);
         assert_eq!(c.recon.policy.min_effect_ratio, 2.0);
         assert_eq!(c.recon.top_apps, 2);
+        assert_eq!(c.recon.residency_apps, 1, "paper default: one resident app");
         assert_eq!(c.recon.offload.intensity_keep, 4);
         assert_eq!(c.recon.offload.efficiency_keep, 3);
         assert_eq!(c.seed, 42);
@@ -192,6 +199,20 @@ mod tests {
         assert_eq!(crate::apps::find(&reg, "tdfir").unwrap().rate_per_hour, 100.0);
         assert_eq!(crate::apps::find(&reg, "dft").unwrap().rate_per_hour, 50.0);
         assert_eq!(crate::apps::find(&reg, "mriq").unwrap().rate_per_hour, 10.0);
+    }
+
+    #[test]
+    fn residency_apps_parses_and_validates() {
+        let c = RunConfig::parse(r#"{"residency_apps": 2}"#).unwrap();
+        assert_eq!(c.recon.residency_apps, 2);
+        assert!(c.recon.validate().is_ok(), "2 <= default top_apps");
+        // More residents than searched apps cannot be satisfied: only the
+        // top_apps searches produce candidate patterns.
+        let c = RunConfig::parse(r#"{"residency_apps": 3}"#).unwrap();
+        assert!(c.recon.validate().is_err());
+        let c = RunConfig::parse(r#"{"residency_apps": 3, "top_apps": 3}"#).unwrap();
+        assert!(c.recon.validate().is_ok());
+        assert!(RunConfig::parse(r#"{"residency_apps": 0}"#).is_err());
     }
 
     #[test]

@@ -17,11 +17,12 @@
 //! the hot path (the trait is never object-safe-consumed; `serve` stays a
 //! static call).
 
-use crate::apps::{AppId, AppSpec, SizeId};
+use crate::apps::{AppId, AppSpec, SizeId, VariantId};
 use crate::fpga::device::{ReconfigKind, ReconfigReport};
 use crate::workload::Request;
 
 use super::history::{HistoryStore, RequestRecord};
+use super::recon::ResidencyPlan;
 use super::server::{Deployment, ProductionEnv};
 
 /// What the §3.3 controller and the Step-7 loop need from a production
@@ -70,6 +71,44 @@ pub trait Environment {
         variant: &str,
     ) -> anyhow::Result<f64>;
 
+    /// Number of FPGA cards this environment operates — 1 for the
+    /// paper's single-card production server. The §3.3 controller sizes
+    /// residency plans against it.
+    fn cards(&self) -> usize {
+        1
+    }
+
+    /// Is `app`'s logic under `variant` currently programmed on any
+    /// card? The default answers from the logical deployment (the
+    /// single-card case); a fleet answers per card, so step 4 does not
+    /// keep re-proposing a pattern that is already resident as a
+    /// secondary share of a heterogeneous plan.
+    fn is_resident(&self, app: AppId, variant: VariantId) -> bool {
+        self.deployment()
+            .is_some_and(|d| d.app == app && d.variant == variant)
+    }
+
+    /// The residency plan this environment is converging on — the
+    /// Step-7 flap guard snapshots it before a cycle so a rollback
+    /// restores the exact prior state (apps, variants, and coefficient
+    /// **bits**, which is what lets `deploy_plan`'s skip economy leave
+    /// unchanged cards untouched, and what keeps the 1-card fleet and
+    /// the single-card server bit-identical through a rollback). The
+    /// default derives a homogeneous plan from the current deployment; a
+    /// fleet returns its full multi-app plan. `None` before the first
+    /// deployment.
+    fn residency(&self) -> Option<ResidencyPlan> {
+        self.deployment().map(|d| {
+            ResidencyPlan::homogeneous(
+                self.app_name(d.app),
+                d.app,
+                &d.variant.name(),
+                d.improvement_coef,
+                self.cards(),
+            )
+        })
+    }
+
     /// Program logic (initial deployment or reconfiguration). Panics on
     /// an unknown app or non-canonical variant — controller bugs, never
     /// request-path conditions (same contract as `ProductionEnv::deploy`).
@@ -82,6 +121,19 @@ pub trait Environment {
         variant: &str,
         improvement_coef: f64,
     ) -> ReconfigReport;
+
+    /// Deploy a heterogeneous residency plan (§3.3 step 6, fleet
+    /// edition): each plan entry's logic lands on its share of the
+    /// cards, through whatever transition mechanism the environment
+    /// uses (`FleetEnv` rolls card by card). The default implementation
+    /// is the single-card degenerate case — the plan's primary entry is
+    /// deployed as a homogeneous reconfiguration. Panics on an empty
+    /// plan (controller bug).
+    fn deploy_plan(&mut self, kind: ReconfigKind, plan: &ResidencyPlan) -> ReconfigReport {
+        let e = plan.primary();
+        let (app, variant, coef) = (e.app.clone(), e.variant.clone(), e.improvement_coef);
+        self.deploy(kind, &app, &variant, coef)
+    }
 
     /// Serve one request; returns the record (also appended to history).
     fn serve(&mut self, req: &Request) -> anyhow::Result<RequestRecord>;
@@ -184,5 +236,14 @@ mod tests {
         assert!(Environment::app_spec(&env, "tdfir").is_some());
         assert!(Environment::cpu_time(&env, "tdfir", "large").is_ok());
         assert!(Environment::offloaded_time(&mut env, "tdfir", "large", "o1").is_ok());
+        assert_eq!(Environment::cards(&env), 1);
+        // The default residency view is the homogeneous current
+        // deployment, coefficient bits preserved (the flap-guard
+        // rollback target).
+        let plan = Environment::residency(&env).expect("deployed");
+        assert_eq!(plan.entries.len(), 1);
+        assert_eq!(plan.total_cards(), 1);
+        assert_eq!(plan.primary().app, "tdfir");
+        assert_eq!(plan.primary().improvement_coef.to_bits(), 2.07f64.to_bits());
     }
 }

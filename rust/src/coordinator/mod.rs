@@ -22,5 +22,8 @@ pub mod server;
 pub use env::Environment;
 pub use history::{HistoryStore, RequestRecord, ServedBy};
 pub use policy::{Approval, ApprovalDecision, ThresholdPolicy};
-pub use recon::{run_reconfiguration, ReconConfig, ReconOutcome, ReconProposal};
+pub use recon::{
+    plan_residency, run_reconfiguration, run_reconfiguration_with, RankCache, ReconConfig,
+    ReconOutcome, ReconProposal, ResidencyEntry, ResidencyPlan,
+};
 pub use server::{Deployment, ProductionEnv};

@@ -18,13 +18,14 @@
 
 use std::time::Instant;
 
-use crate::apps::AppId;
+use crate::apps::{app_id, AppId, AppSpec, VariantId};
 use crate::fpga::device::{ReconfigKind, ReconfigReport};
 use crate::offload::{self, OffloadConfig, OffloadResult};
 
 use super::env::Environment;
 use super::history::DEFAULT_BIN_WIDTH_BYTES;
 use super::policy::{Approval, ApprovalDecision, ThresholdPolicy};
+use super::server::Deployment;
 
 /// Configuration (§4.1.2 defaults).
 #[derive(Clone, Debug)]
@@ -35,6 +36,12 @@ pub struct ReconConfig {
     pub short_window_secs: f64,
     /// Number of top-load apps to re-search (paper: 2).
     pub top_apps: usize,
+    /// Maximum apps resident on the fleet at once (step 6). `1` is the
+    /// paper's behaviour — the single best pattern takes every card; `k > 1`
+    /// partitions a multi-card fleet across the top-k ranked apps in
+    /// proportion to their measured offloadable load (see
+    /// [`plan_residency`]). Ignored by single-card environments.
+    pub residency_apps: usize,
     /// Data-size histogram bin width in bytes (step 1-4).
     pub bin_width_bytes: f64,
     pub policy: ThresholdPolicy,
@@ -48,6 +55,7 @@ impl Default for ReconConfig {
             long_window_secs: 3600.0,
             short_window_secs: 3600.0,
             top_apps: 2,
+            residency_apps: 1,
             bin_width_bytes: DEFAULT_BIN_WIDTH_BYTES,
             policy: ThresholdPolicy::default(),
             offload: OffloadConfig::default(),
@@ -75,6 +83,17 @@ impl ReconConfig {
         anyhow::ensure!(
             self.top_apps >= 1,
             "recon config: top_apps must be >= 1 (0 analyzes nothing)"
+        );
+        anyhow::ensure!(
+            self.residency_apps >= 1,
+            "recon config: residency_apps must be >= 1 (0 deploys nothing)"
+        );
+        anyhow::ensure!(
+            self.residency_apps <= self.top_apps,
+            "recon config: residency_apps ({}) cannot exceed top_apps ({}): \
+             only the searched top apps have candidate patterns to reside",
+            self.residency_apps,
+            self.top_apps
         );
         anyhow::ensure!(
             self.bin_width_bytes > 0.0 && self.bin_width_bytes.is_finite(),
@@ -147,6 +166,224 @@ pub struct ReconProposal {
     pub proposed: bool,
 }
 
+/// One app's share of the fleet in a heterogeneous residency plan.
+#[derive(Clone, Debug)]
+pub struct ResidencyEntry {
+    /// App name (reports and device logs).
+    pub app: String,
+    pub app_id: AppId,
+    /// Canonical variant chosen for this app by the pattern search.
+    pub variant: String,
+    pub variant_id: VariantId,
+    /// Pre-launch (CPU time)/(offloaded time) ratio on the app's
+    /// representative data — the step 1-1 correction coefficient.
+    pub improvement_coef: f64,
+    /// Cards assigned to this app.
+    pub cards: usize,
+    /// Corrected (CPU-equivalent) window load the share was sized on.
+    pub corrected_load_secs: f64,
+}
+
+impl ResidencyEntry {
+    /// The interned deployment handle this entry programs into its cards.
+    pub fn deployment(&self) -> Deployment {
+        Deployment {
+            app: self.app_id,
+            variant: self.variant_id,
+            improvement_coef: self.improvement_coef,
+        }
+    }
+}
+
+/// A per-card assignment of the fleet across several apps — §3.3 step 6,
+/// fleet edition. Entries are in load-ranking order; entry 0 holds the
+/// first `entries[0].cards` card indices, entry 1 the next block, and so
+/// on ([`crate::fleet::FleetEnv::deploy_plan`] materializes the blocks).
+/// A single-entry plan is the paper's homogeneous deployment.
+#[derive(Clone, Debug)]
+pub struct ResidencyPlan {
+    pub entries: Vec<ResidencyEntry>,
+}
+
+impl ResidencyPlan {
+    /// Homogeneous (k = 1) plan: one app's logic on every card. Panics on
+    /// a non-canonical variant name — controller bug, same contract as
+    /// `Environment::deploy`.
+    pub fn homogeneous(
+        app: &str,
+        app_id: AppId,
+        variant: &str,
+        improvement_coef: f64,
+        cards: usize,
+    ) -> Self {
+        let variant_id = VariantId::from_name(variant).unwrap_or_else(|| {
+            panic!("residency plan: non-canonical variant `{variant}`")
+        });
+        ResidencyPlan {
+            entries: vec![ResidencyEntry {
+                app: app.to_string(),
+                app_id,
+                variant: variant.to_string(),
+                variant_id,
+                improvement_coef,
+                cards,
+                corrected_load_secs: 0.0,
+            }],
+        }
+    }
+
+    /// Uniform plan: every registry app resident on `cards_per_app`
+    /// cards, in registry order — the synthetic-pool shape the routing
+    /// benches and the allocation probe share. Panics on a non-canonical
+    /// variant name (controller bug).
+    pub fn uniform(
+        registry: &[AppSpec],
+        cards_per_app: usize,
+        variant: &str,
+        improvement_coef: f64,
+    ) -> Self {
+        let variant_id = VariantId::from_name(variant).unwrap_or_else(|| {
+            panic!("residency plan: non-canonical variant `{variant}`")
+        });
+        ResidencyPlan {
+            entries: registry
+                .iter()
+                .enumerate()
+                .map(|(i, a)| ResidencyEntry {
+                    app: a.name.to_string(),
+                    app_id: AppId(i as u16),
+                    variant: variant.to_string(),
+                    variant_id,
+                    improvement_coef,
+                    cards: cards_per_app,
+                    corrected_load_secs: 0.0,
+                })
+                .collect(),
+        }
+    }
+
+    /// Cards covered by the plan (must equal the pool size at deploy).
+    pub fn total_cards(&self) -> usize {
+        self.entries.iter().map(|e| e.cards).sum()
+    }
+
+    /// The primary entry — most cards, ties toward the higher-ranked
+    /// (earlier) entry. This is the logic a fleet reports as its logical
+    /// deployment. Panics on an empty plan (controller bug).
+    pub fn primary(&self) -> &ResidencyEntry {
+        let mut best: Option<&ResidencyEntry> = None;
+        for e in &self.entries {
+            // Strict `>` keeps ties on the earlier (higher-ranked) entry.
+            if best.is_none_or(|b| e.cards > b.cards) {
+                best = Some(e);
+            }
+        }
+        best.expect("empty residency plan")
+    }
+}
+
+/// Step 6 (fleet edition): partition `cards` across the top
+/// `residency_apps` ranked apps in proportion to their measured
+/// offloadable (CPU-equivalent) load.
+///
+/// Inputs are step 1's `rankings` (corrected-load order) and step 3's
+/// `candidates` (one searched pattern per top app). An app is eligible
+/// when its candidate actually pays (`reduction_per_req > 0`); the plan
+/// takes the first `residency_apps` eligible apps in ranking order,
+/// always including the best-effect candidate (the approved proposal is
+/// a switch *to* that pattern, so a plan omitting it would contradict
+/// step 5) by substituting it for the last slot if load ranking alone
+/// would drop it. Each chosen app keeps its own variant and
+/// improvement coefficient from the candidate selection.
+///
+/// Card shares are proportional to corrected load with a one-card floor
+/// per app (an app chosen for residency must actually reside), assigned
+/// by a deterministic largest-deficit rule: start every app at one card,
+/// then hand each remaining card to the app whose quota
+/// (`cards × load/total`) exceeds its current allocation by the most,
+/// ties toward the higher-ranked app. `residency_apps = 1` degenerates
+/// to today's homogeneous plan: the best app takes every card.
+pub fn plan_residency(
+    rankings: &[LoadRanking],
+    candidates: &[EffectEstimate],
+    cards: usize,
+    residency_apps: usize,
+) -> ResidencyPlan {
+    // Eligible apps, in ranking order, paired with their candidate.
+    let mut eligible: Vec<(&LoadRanking, &EffectEstimate)> = Vec::new();
+    for r in rankings {
+        if let Some(c) = candidates
+            .iter()
+            .find(|c| c.app == r.app && c.reduction_per_req > 0.0)
+        {
+            eligible.push((r, c));
+        }
+    }
+    let k = residency_apps.min(cards).min(eligible.len());
+    if k == 0 {
+        return ResidencyPlan {
+            entries: Vec::new(),
+        };
+    }
+    let mut chosen: Vec<(&LoadRanking, &EffectEstimate)> =
+        eligible[..k].to_vec();
+    // Guarantee the best-effect candidate a seat.
+    if let Some(best) = candidates
+        .iter()
+        .filter(|c| c.reduction_per_req > 0.0)
+        .max_by(|a, b| a.effect_secs.partial_cmp(&b.effect_secs).unwrap())
+    {
+        if !chosen.iter().any(|(_, c)| c.app == best.app) {
+            if let Some(pair) = eligible.iter().find(|(_, c)| c.app == best.app) {
+                chosen[k - 1] = *pair;
+            }
+        }
+    }
+
+    // Proportional allocation with a one-card floor per chosen app.
+    let total_load: f64 = chosen.iter().map(|(r, _)| r.corrected_total_secs).sum();
+    let quota = |i: usize| -> f64 {
+        if total_load > 0.0 {
+            cards as f64 * chosen[i].0.corrected_total_secs / total_load
+        } else {
+            cards as f64 / k as f64
+        }
+    };
+    let mut alloc = vec![1usize; k];
+    for _ in 0..cards - k {
+        let mut pick = 0;
+        let mut best_deficit = f64::NEG_INFINITY;
+        for (i, &a) in alloc.iter().enumerate() {
+            let deficit = quota(i) - a as f64;
+            if deficit > best_deficit {
+                best_deficit = deficit;
+                pick = i;
+            }
+        }
+        alloc[pick] += 1;
+    }
+
+    let entries = chosen
+        .iter()
+        .zip(&alloc)
+        .map(|((r, c), &cards)| {
+            let variant_id = VariantId::from_name(&c.variant).unwrap_or_else(|| {
+                panic!("residency plan: non-canonical variant `{}`", c.variant)
+            });
+            ResidencyEntry {
+                app: c.app.clone(),
+                app_id: r.app_id,
+                variant: c.variant.clone(),
+                variant_id,
+                improvement_coef: c.cpu_secs / c.pattern_secs.max(1e-12),
+                cards,
+                corrected_load_secs: r.corrected_total_secs,
+            }
+        })
+        .collect();
+    ResidencyPlan { entries }
+}
+
 /// Step-duration accounting (TXT-STEPS).
 #[derive(Clone, Debug, Default)]
 pub struct StepDurations {
@@ -167,7 +404,31 @@ pub struct ReconOutcome {
     pub proposal: Option<ReconProposal>,
     pub decision: Option<ApprovalDecision>,
     pub reconfig: Option<ReconfigReport>,
+    /// The heterogeneous residency plan step 6 deployed (`None` when the
+    /// cycle deployed homogeneously or did not reconfigure at all).
+    pub residency: Option<ResidencyPlan>,
     pub steps: StepDurations,
+}
+
+/// Cross-cycle step-1 state: the previous cycle's ranking order plus
+/// skip/sort counters (diagnostics).
+///
+/// Steady workloads produce the same corrected-load order cycle after
+/// cycle, so [`analyze_load_with`] first re-evaluates the totals in the
+/// cached order; when the window's app set is unchanged and the totals
+/// come out **strictly** decreasing, that order *is* the sorted order
+/// (a strictly decreasing sequence has exactly one descending
+/// arrangement) and the sort is skipped — bit-identical to the sorting
+/// path by construction, and asserted against it by
+/// `steady_ranking_skips_sort_bit_identically`. Any tie, growth
+/// inversion, or app-set change falls back to the full stable sort.
+#[derive(Clone, Debug, Default)]
+pub struct RankCache {
+    prev: Vec<AppId>,
+    /// Cycles that reused the previous order without sorting.
+    pub sort_skips: u64,
+    /// Cycles that took the full sorting path.
+    pub sorts: u64,
 }
 
 /// Step 1: load ranking + representative selection, on the columnar
@@ -192,31 +453,47 @@ pub fn analyze_load<E: Environment>(
     env: &mut E,
     cfg: &ReconConfig,
 ) -> anyhow::Result<(Vec<LoadRanking>, Vec<Representative>)> {
+    analyze_load_with(env, cfg, &mut RankCache::default())
+}
+
+/// [`analyze_load`] with a caller-owned [`RankCache`]: the Step-7 loop
+/// keeps one across windows so steady-state cycles skip the 1-3 sort.
+pub fn analyze_load_with<E: Environment>(
+    env: &mut E,
+    cfg: &ReconConfig,
+    cache: &mut RankCache,
+) -> anyhow::Result<(Vec<LoadRanking>, Vec<Representative>)> {
     cfg.validate()?;
     let now = env.now();
     let from = (now - cfg.long_window_secs).max(0.0);
 
     // 1-1/1-2: corrected totals per app (two binary searches each).
-    let mut rankings: Vec<LoadRanking> = Vec::new();
-    for app in env.history().apps_in_window(from, now) {
-        let (actual, count) = env.history().totals_in_window(app, from, now);
-        let coef = env.improvement_coef(app);
-        rankings.push(LoadRanking {
-            corrected_total_secs: actual * coef,
-            actual_total_secs: actual,
-            usage_count: count,
-            coef,
-            app: env.app_name(app).to_string(),
-            app_id: app,
+    let apps_now = env.history().apps_in_window(from, now);
+    let mut rankings: Vec<LoadRanking> =
+        incremental_ranking(env, &apps_now, from, now, cache).unwrap_or_default();
+    if rankings.is_empty() && !apps_now.is_empty() {
+        cache.sorts += 1;
+        for app in apps_now {
+            let (actual, count) = env.history().totals_in_window(app, from, now);
+            let coef = env.improvement_coef(app);
+            rankings.push(LoadRanking {
+                corrected_total_secs: actual * coef,
+                actual_total_secs: actual,
+                usage_count: count,
+                coef,
+                app: env.app_name(app).to_string(),
+                app_id: app,
+            });
+        }
+        // 1-3: sort by corrected totals, descending (stable, so ties keep
+        // first-seen order exactly like the scan path).
+        rankings.sort_by(|a, b| {
+            b.corrected_total_secs
+                .partial_cmp(&a.corrected_total_secs)
+                .unwrap()
         });
     }
-    // 1-3: sort by corrected totals, descending (stable, so ties keep
-    // first-seen order exactly like the scan path).
-    rankings.sort_by(|a, b| {
-        b.corrected_total_secs
-            .partial_cmp(&a.corrected_total_secs)
-            .unwrap()
-    });
+    cache.prev = rankings.iter().map(|r| r.app_id).collect();
 
     // 1-4/1-5: representative data for the top apps, from the per-app
     // bytes columns.
@@ -247,6 +524,50 @@ pub fn analyze_load<E: Environment>(
     Ok((rankings, reps))
 }
 
+/// The incremental step 1-3 fast path (see [`RankCache`]): re-evaluate
+/// totals in the previous cycle's order and keep it when it is still
+/// strictly descending over the same app set. Returns `None` when the
+/// cached order cannot be proven current (first cycle, app-set change,
+/// tie, or order inversion) — the caller falls back to the sorting path.
+fn incremental_ranking<E: Environment>(
+    env: &E,
+    apps_now: &[AppId],
+    from: f64,
+    now: f64,
+    cache: &mut RankCache,
+) -> Option<Vec<LoadRanking>> {
+    if cache.prev.is_empty() || apps_now.len() != cache.prev.len() {
+        return None;
+    }
+    let mut rankings = Vec::with_capacity(cache.prev.len());
+    let mut prev_total = f64::INFINITY;
+    for &app in &cache.prev {
+        let (actual, count) = env.history().totals_in_window(app, from, now);
+        if count == 0 {
+            // The app left the window, so the set changed (same length +
+            // every cached app present is set equality; a miss breaks it).
+            return None;
+        }
+        let coef = env.improvement_coef(app);
+        let corrected = actual * coef;
+        if corrected >= prev_total {
+            // Tie or order inversion: only a sort is provably right.
+            return None;
+        }
+        prev_total = corrected;
+        rankings.push(LoadRanking {
+            corrected_total_secs: corrected,
+            actual_total_secs: actual,
+            usage_count: count,
+            coef,
+            app: env.app_name(app).to_string(),
+            app_id: app,
+        });
+    }
+    cache.sort_skips += 1;
+    Some(rankings)
+}
+
 /// Steps 2-6: full reconfiguration cycle against any [`Environment`] —
 /// the paper's single-card [`ProductionEnv`](super::server::ProductionEnv)
 /// or a multi-card [`crate::fleet::FleetEnv`] (whose step 6 is a rolling
@@ -256,10 +577,22 @@ pub fn run_reconfiguration<E: Environment>(
     cfg: &ReconConfig,
     approval: &mut Approval,
 ) -> anyhow::Result<ReconOutcome> {
+    run_reconfiguration_with(env, cfg, approval, &mut RankCache::default())
+}
+
+/// [`run_reconfiguration`] with a caller-owned [`RankCache`] so repeated
+/// cycles (the Step-7 loop) skip the step 1-3 sort on order-stable
+/// workloads.
+pub fn run_reconfiguration_with<E: Environment>(
+    env: &mut E,
+    cfg: &ReconConfig,
+    approval: &mut Approval,
+    ranks: &mut RankCache,
+) -> anyhow::Result<ReconOutcome> {
     cfg.validate()?;
     // ---- Step 1 ----------------------------------------------------------
     let t0 = Instant::now();
-    let (rankings, representatives) = analyze_load(env, cfg)?;
+    let (rankings, representatives) = analyze_load_with(env, cfg, ranks)?;
     let analysis_wall_secs = t0.elapsed().as_secs_f64();
 
     // ---- Step 2: pattern search on representative data -------------------
@@ -348,8 +681,23 @@ pub fn run_reconfiguration<E: Environment>(
         .unwrap();
 
     // ---- Step 4: threshold decision ---------------------------------------
-    // Don't propose re-deploying the exact pattern already running.
+    // Don't propose re-deploying the exact pattern already running — and,
+    // under heterogeneous residency, don't re-propose a pattern that is
+    // already resident on some card as a secondary share (the logical
+    // deployment is only the plan's primary, so without this check a
+    // best-by-effect secondary would be "proposed" every cycle forever:
+    // approval prompts, cooldown resets, and flap-guard rollbacks against
+    // a fleet that already serves it).
     let same_as_current = best.app == current.app && best.variant == current.variant;
+    let already_resident = cfg.residency_apps > 1
+        && env.cards() > 1
+        && match (
+            app_id(env.registry(), &best.app),
+            VariantId::from_name(&best.variant),
+        ) {
+            (Some(a), Some(v)) => env.is_resident(a, v),
+            _ => false,
+        };
     let ratio = if current.effect_secs > 0.0 {
         best.effect_secs / current.effect_secs
     } else if best.effect_secs > 0.0 {
@@ -358,6 +706,7 @@ pub fn run_reconfiguration<E: Environment>(
         0.0
     };
     let proposed = !same_as_current
+        && !already_resident
         && cfg
             .policy
             .should_propose(current.effect_secs, best.effect_secs);
@@ -383,6 +732,7 @@ pub fn run_reconfiguration<E: Environment>(
             proposal: Some(proposal),
             decision: None,
             reconfig: None,
+            residency: None,
             steps,
         });
     }
@@ -407,14 +757,41 @@ pub fn run_reconfiguration<E: Environment>(
             proposal: Some(proposal),
             decision: Some(decision),
             reconfig: None,
+            residency: None,
             steps,
         });
     }
 
     // ---- Step 6: static reconfiguration ------------------------------------
     // 6-1 compile (charged on the farm in step 2), 6-2 stop, 6-3 start.
+    // With `residency_apps > 1` on a multi-card fleet, the step becomes a
+    // residency *plan*: the pool is partitioned across the top-ranked apps
+    // and deployed through the environment's rolling mechanism; otherwise
+    // (and on any single-card environment) it is the paper's homogeneous
+    // deploy of the best pattern, exactly as before.
     let improvement = best.cpu_secs / best.pattern_secs;
-    let report = env.deploy(cfg.kind, &best.app.clone(), &best.variant.clone(), improvement);
+    let mut residency = None;
+    let report = if cfg.residency_apps > 1 && env.cards() > 1 {
+        let plan =
+            plan_residency(&rankings, &proposal.candidates, env.cards(), cfg.residency_apps);
+        if plan.entries.is_empty() {
+            // No candidate pays offloaded (unreachable behind a proposed
+            // step 4, kept as a defensive fallback).
+            env.deploy(cfg.kind, &best.app.clone(), &best.variant.clone(), improvement)
+        } else {
+            // Deploy through the plan path even when only one app earned
+            // residency: `deploy_plan`'s skip economy leaves cards that
+            // already hold the target untouched, where a plain `deploy`
+            // would reprogram (and outage) every card unconditionally.
+            let r = env.deploy_plan(cfg.kind, &plan);
+            if plan.entries.len() > 1 {
+                residency = Some(plan);
+            }
+            r
+        }
+    } else {
+        env.deploy(cfg.kind, &best.app.clone(), &best.variant.clone(), improvement)
+    };
     steps.reconfig_downtime_secs = report.downtime_secs;
 
     Ok(ReconOutcome {
@@ -424,6 +801,7 @@ pub fn run_reconfiguration<E: Environment>(
         proposal: Some(proposal),
         decision: Some(decision),
         reconfig: Some(report),
+        residency,
         steps,
     })
 }
@@ -555,6 +933,15 @@ mod tests {
             ),
             (
                 ReconConfig {
+                    // Exceeds the default top_apps = 2: no candidates to
+                    // seat a third resident.
+                    residency_apps: 3,
+                    ..Default::default()
+                },
+                "residency_apps",
+            ),
+            (
+                ReconConfig {
                     policy: ThresholdPolicy {
                         min_effect_ratio: 0.5,
                     },
@@ -574,6 +961,203 @@ mod tests {
         // Nothing above may have touched production.
         assert!(env.device.serves("tdfir"));
         assert!(ReconConfig::default().validate().is_ok());
+    }
+
+    fn rank(app: &str, id: u16, load: f64) -> LoadRanking {
+        LoadRanking {
+            app: app.to_string(),
+            app_id: AppId(id),
+            actual_total_secs: load,
+            corrected_total_secs: load,
+            usage_count: 10,
+            coef: 1.0,
+        }
+    }
+
+    fn cand(app: &str, cpu: f64, pat: f64) -> EffectEstimate {
+        EffectEstimate {
+            app: app.to_string(),
+            variant: "o1".into(),
+            cpu_secs: cpu,
+            pattern_secs: pat,
+            reduction_per_req: cpu - pat,
+            usage_count: 10,
+            effect_secs: (cpu - pat) * 10.0,
+        }
+    }
+
+    #[test]
+    fn plan_residency_partitions_cards_by_load_with_a_floor() {
+        let rankings = vec![rank("a", 0, 300.0), rank("b", 1, 100.0)];
+        let cands = vec![cand("a", 2.0, 1.0), cand("b", 30.0, 3.0)];
+        let plan = plan_residency(&rankings, &cands, 4, 2);
+        assert_eq!(plan.entries.len(), 2);
+        assert_eq!(plan.entries[0].app, "a");
+        assert_eq!(plan.entries[0].cards, 3, "4 x 300/400");
+        assert_eq!(plan.entries[1].app, "b");
+        assert_eq!(plan.entries[1].cards, 1);
+        assert_eq!(plan.total_cards(), 4);
+        assert_eq!(plan.primary().app, "a");
+        assert_eq!(plan.entries[1].improvement_coef, 10.0);
+        assert_eq!(plan.entries[1].variant_id, VariantId::from_name("o1").unwrap());
+
+        // Extreme skew still leaves every resident app one card.
+        let rankings = vec![rank("a", 0, 10_000.0), rank("b", 1, 1.0)];
+        let plan = plan_residency(&rankings, &cands, 8, 2);
+        assert_eq!(plan.entries[0].cards, 7);
+        assert_eq!(plan.entries[1].cards, 1);
+    }
+
+    #[test]
+    fn plan_residency_keeps_the_best_effect_app_and_degenerates() {
+        // "b" dominates by effect (270 vs 10 sec/window) but ranks second
+        // by load: at k = 1 the plan must still be b on every card — the
+        // same app a homogeneous deploy of the proposal's best would pick.
+        let rankings = vec![rank("a", 0, 300.0), rank("b", 1, 100.0)];
+        let cands = vec![cand("a", 2.0, 1.0), cand("b", 30.0, 3.0)];
+        let plan = plan_residency(&rankings, &cands, 4, 1);
+        assert_eq!(plan.entries.len(), 1);
+        assert_eq!(plan.entries[0].app, "b");
+        assert_eq!(plan.entries[0].cards, 4);
+
+        // A single-card pool can hold one app no matter what k says.
+        let plan = plan_residency(&rankings, &cands, 1, 3);
+        assert_eq!(plan.entries.len(), 1);
+        assert_eq!(plan.total_cards(), 1);
+
+        // Patterns that do not pay are never given residency.
+        let dead = vec![cand("a", 1.0, 1.0), cand("b", 1.0, 2.0)];
+        let plan = plan_residency(&rankings, &dead, 4, 2);
+        assert!(plan.entries.is_empty());
+    }
+
+    #[test]
+    fn resident_secondary_reaches_quiescence() {
+        // A 4-card fleet where the best-by-effect pattern (mriq) already
+        // rides one card as the secondary share of a heterogeneous plan:
+        // under residency_apps = 2 the cycle must reach quiescence — no
+        // re-proposal (hence no approval prompts, cooldown churn, or
+        // flap-guard rollbacks) for a pattern the fleet already serves —
+        // while the paper's k = 1 controller, which only sees the primary
+        // deployment, still proposes the switch.
+        let reg = registry();
+        let td = offload::search(
+            crate::apps::find(&reg, "tdfir").unwrap(),
+            "large",
+            &OffloadConfig::default(),
+        )
+        .unwrap();
+        let mq = offload::search(
+            crate::apps::find(&reg, "mriq").unwrap(),
+            "large",
+            &OffloadConfig::default(),
+        )
+        .unwrap();
+        let entry = |app: &str, variant: &str, coef: f64, cards: usize| ResidencyEntry {
+            app: app.to_string(),
+            app_id: app_id(&reg, app).unwrap(),
+            variant: variant.to_string(),
+            variant_id: VariantId::from_name(variant).unwrap(),
+            improvement_coef: coef,
+            cards,
+            corrected_load_secs: 0.0,
+        };
+        let mut env = crate::fleet::FleetEnv::new(registry(), D5005, 4);
+        env.deploy_plan(
+            ReconfigKind::Static,
+            &ResidencyPlan {
+                entries: vec![
+                    entry("tdfir", &td.best.variant, td.improvement, 3),
+                    entry("mriq", &mq.best.variant, mq.improvement, 1),
+                ],
+            },
+        );
+        let mut trace = generate(&env.registry, 3600.0, 42);
+        for r in &mut trace {
+            r.arrival += 2.0;
+        }
+        env.run_window(&trace).unwrap();
+
+        let cfg = ReconConfig {
+            residency_apps: 2,
+            ..Default::default()
+        };
+        let mut ap = Approval::auto_yes();
+        let out = run_reconfiguration(&mut env, &cfg, &mut ap).unwrap();
+        let p = out.proposal.as_ref().unwrap();
+        assert_eq!(p.best.app, "mriq");
+        assert!(!p.proposed, "resident secondary must not be re-proposed");
+        assert!(out.reconfig.is_none() && out.residency.is_none());
+
+        // Same history, paper controller: the primary-only view proposes.
+        let out = run_reconfiguration(&mut env, &ReconConfig::default(), &mut ap).unwrap();
+        assert!(
+            out.proposal.unwrap().proposed,
+            "k = 1 keeps the paper's re-proposal behaviour"
+        );
+    }
+
+    #[test]
+    fn steady_ranking_skips_sort_bit_identically() {
+        use crate::workload::Request;
+        let mut env = ProductionEnv::new(registry(), D5005);
+        env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+        let (td, td_l) = env.resolve("tdfir", "large").unwrap();
+        let (mq, mq_l) = env.resolve("mriq", "large").unwrap();
+        let (hm, hm_s) = env.resolve("himeno", "sample").unwrap();
+        let cfg = ReconConfig::default();
+        let mut cache = RankCache::default();
+        let mut id = 0u64;
+        for w in 0..3 {
+            // The same deterministic mix every window: the corrected-load
+            // order is strictly separated and order-stable, the fast
+            // path's home turf.
+            let t0 = w as f64 * 3600.0 + 2.0;
+            let mut trace = Vec::new();
+            let mut push = |app, size, at: f64, id: &mut u64| {
+                trace.push(Request {
+                    id: *id,
+                    app,
+                    size,
+                    arrival: at,
+                    bytes: 2.0e6,
+                });
+                *id += 1;
+            };
+            for i in 0..4 {
+                push(mq, mq_l, t0 + i as f64, &mut id);
+            }
+            for i in 4..10 {
+                push(td, td_l, t0 + i as f64, &mut id);
+            }
+            push(hm, hm_s, t0 + 10.0, &mut id);
+            env.run_window(&trace).unwrap();
+
+            let (fast, _) = analyze_load_with(&mut env, &cfg, &mut cache).unwrap();
+            let (sorted, _) = analyze_load(&mut env, &cfg).unwrap();
+            assert_eq!(fast.len(), sorted.len(), "window {w}");
+            for (a, b) in fast.iter().zip(&sorted) {
+                assert_eq!(a.app_id, b.app_id, "window {w} order");
+                assert_eq!(
+                    a.corrected_total_secs.to_bits(),
+                    b.corrected_total_secs.to_bits(),
+                    "window {w} corrected totals for {}",
+                    a.app
+                );
+                assert_eq!(
+                    a.actual_total_secs.to_bits(),
+                    b.actual_total_secs.to_bits(),
+                    "window {w} actual totals"
+                );
+                assert_eq!(a.usage_count, b.usage_count, "window {w} counts");
+                assert_eq!(a.coef.to_bits(), b.coef.to_bits(), "window {w} coef");
+            }
+        }
+        assert!(cache.sorts >= 1, "the first cycle must sort: {cache:?}");
+        assert!(
+            cache.sort_skips >= 1,
+            "steady windows must reuse the cached order: {cache:?}"
+        );
     }
 
     #[test]

@@ -5,7 +5,8 @@
 //!
 //! [`FleetEnv::serve`] preserves the single-card allocation-free hot
 //! path: interned handles in, [`FleetRouter`] picks the best card holding
-//! the app's logic (O(cards) scan, no allocation), the shared
+//! the app's logic (O(holders) walk of the per-app index, no
+//! allocation), the shared
 //! [`ServiceTimeTable`] supplies the service time (two array indexes),
 //! and the record lands in the columnar [`HistoryStore`] with the serving
 //! [`CardId`] in `ServedBy::Fpga`. Requests whose app no routable card
@@ -47,6 +48,23 @@
 //!    multi-card analogue of the paper's method, kept as the comparison
 //!    baseline (its deployed-app requests stall during the outage;
 //!    `benches/downtime.rs` shows the contrast).
+//!
+//! # Heterogeneous residency (step 6, plan edition)
+//!
+//! [`FleetEnv::deploy_plan`] generalizes the transition target from one
+//! logic to a [`ResidencyPlan`]: each plan entry's app takes a block of
+//! cards (entry 0 the lowest indices, and so on), so several hot apps
+//! ride the FPGA pool at once while the rest keep the CPU pool. The
+//! same drain → reprogram → rejoin roll moves the fleet between plans —
+//! with one economy `deploy` deliberately does not have: a card already
+//! holding exactly its plan slot (same app, variant, and coefficient,
+//! in rotation, past any outage) is **skipped**, so steady-state
+//! replans are free and a homogeneous → mixed transition only pays
+//! outages on the cards that actually change logic. The fleet's logical
+//! deployment becomes the plan's primary (most-card) entry;
+//! `improvement_coef` already answers per-card, so step-1 correction
+//! sees every resident app. `benches/hetero_fleet.rs` gates the
+//! fleet-served throughput win and the zero-stall mixed transition.
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
@@ -54,8 +72,9 @@ use std::collections::HashMap;
 use crate::apps::{app_id, AppId, AppSpec, SizeId, VariantId};
 use crate::coordinator::env::Environment;
 use crate::coordinator::history::{HistoryStore, RequestRecord, ServedBy};
+use crate::coordinator::recon::ResidencyPlan;
 use crate::coordinator::server::Deployment;
-use crate::fpga::device::{CardId, ReconfigKind, ReconfigReport};
+use crate::fpga::device::{CardId, LoadedLogic, ReconfigKind, ReconfigReport};
 use crate::fpga::part::Part;
 use crate::fpga::perf::{PerfModel, ServiceTimeTable};
 use crate::simtime::Clock;
@@ -76,18 +95,33 @@ pub enum ReconfigStrategy {
     Rolling,
 }
 
+/// The distinct logics a transition programs: interned deployment plus
+/// the name strings `FpgaDevice::reconfigure` logs (cold path, cloned
+/// once per transition).
+type TargetLogic = (Deployment, String, String);
+
 /// An in-flight rolling reconfiguration (one card out at a time).
 #[derive(Clone, Debug)]
 struct Roll {
     kind: ReconfigKind,
-    target: Deployment,
-    /// Names for `FpgaDevice::reconfigure` (cold path, cloned once).
-    app: String,
-    variant: String,
+    /// The distinct target logics of this transition.
+    entries: Vec<TargetLogic>,
+    /// Per-card target: an index into `entries`, or `None` to keep the
+    /// card's current logic untouched (it already matches its plan slot).
+    targets: Vec<Option<usize>>,
     /// Next card index to drain.
     next: usize,
     /// Card currently out for reprogramming and its rejoin time.
     reprogramming: Option<(CardId, f64)>,
+}
+
+/// Exact deployment equality — coefficient compared by bit pattern, the
+/// plan-skip test (`Deployment` is `Copy` and deliberately not
+/// `PartialEq`: coefficient comparison semantics belong here).
+fn same_deployment(a: Deployment, b: Deployment) -> bool {
+    a.app == b.app
+        && a.variant == b.variant
+        && a.improvement_coef.to_bits() == b.improvement_coef.to_bits()
 }
 
 /// The simulated multi-card production environment.
@@ -105,6 +139,11 @@ pub struct FleetEnv {
     /// The fleet's logical deployment: the logic it is converging on.
     /// Set at deploy time (a roll flips cards afterwards).
     active: Option<Deployment>,
+    /// The residency intent behind `active`: the full plan the fleet is
+    /// converging on (a homogeneous single-entry plan for `deploy`).
+    /// The Step-7 flap guard snapshots it so a rollback restores the
+    /// exact prior plan, coefficient bits included.
+    active_plan: Option<ResidencyPlan>,
     roll: Option<Roll>,
     /// Perf-model cache for non-canonical variants (cold paths), keyed by
     /// `Copy` handles like `ProductionEnv`'s.
@@ -119,15 +158,18 @@ impl FleetEnv {
     pub fn new(registry: Vec<AppSpec>, part: Part, cards: usize) -> Self {
         let table = ServiceTimeTable::build(&registry, part)
             .expect("service-time table for the static registry");
+        let pool = CardPool::new(part, cards);
+        let router = FleetRouter::new(&pool, registry.len());
         FleetEnv {
-            pool: CardPool::new(part, cards),
-            router: FleetRouter::new(cards),
+            pool,
+            router,
             clock: Clock::new(),
             history: HistoryStore::with_apps(registry.len()),
             part,
             table,
             strategy: ReconfigStrategy::Rolling,
             active: None,
+            active_plan: None,
             roll: None,
             models: HashMap::new(),
             registry,
@@ -150,10 +192,11 @@ impl FleetEnv {
     pub fn reset(&mut self) {
         let cards = self.pool.len();
         self.pool = CardPool::new(self.part, cards);
-        self.router = FleetRouter::new(cards);
+        self.router = FleetRouter::new(&self.pool, self.registry.len());
         self.clock = Clock::new();
         self.history = HistoryStore::with_apps(self.registry.len());
         self.active = None;
+        self.active_plan = None;
         self.roll = None;
     }
 
@@ -165,6 +208,12 @@ impl FleetEnv {
     /// The fleet's logical deployment (what it is converging on).
     pub fn active(&self) -> Option<Deployment> {
         self.active
+    }
+
+    /// The residency plan the fleet is converging on (`None` before the
+    /// first deployment; a homogeneous single-entry plan after `deploy`).
+    pub fn residency(&self) -> Option<ResidencyPlan> {
+        self.active_plan.clone()
     }
 
     /// Is a rolling reconfiguration still flipping cards?
@@ -227,6 +276,27 @@ impl FleetEnv {
         }
     }
 
+    /// Size-mix-weighted mean service time of `app` under `variant` —
+    /// the per-card capacity unit the fleet benches size their loads
+    /// against (weights are the app's size-class weights, e.g. the
+    /// paper's 3:5:2 small:large:xlarge mix).
+    pub fn mean_service_time(&mut self, app: &str, variant: &str) -> anyhow::Result<f64> {
+        let classes: Vec<(String, f64)> = self
+            .app(app)
+            .ok_or_else(|| anyhow::anyhow!("unknown app `{app}`"))?
+            .sizes
+            .iter()
+            .map(|s| (s.name.to_string(), s.weight))
+            .collect();
+        let mut num = 0.0;
+        let mut den = 0.0;
+        for (size, w) in &classes {
+            num += w * self.offloaded_time(app, size, variant)?;
+            den += w;
+        }
+        Ok(num / den)
+    }
+
     /// CPU-only service time for (app, size) — table lookup.
     pub fn cpu_time(&self, app: &str, size: &str) -> anyhow::Result<f64> {
         let (a, s) = self.resolve(app, size)?;
@@ -283,73 +353,182 @@ impl FleetEnv {
             improvement_coef,
         };
         self.active = Some(dep);
+        self.active_plan = Some(ResidencyPlan::homogeneous(
+            app,
+            id,
+            variant,
+            improvement_coef,
+            self.pool.len(),
+        ));
+        // Every card is (re)programmed unconditionally — the paper's
+        // semantics; only the plan path below skips matching slots.
+        let entries = vec![(dep, app.to_string(), variant.to_string())];
+        let targets = vec![Some(0); self.pool.len()];
+        self.transition(kind, entries, targets)
+    }
+
+    /// Deploy a heterogeneous residency plan: entry 0's logic takes the
+    /// lowest `entries[0].cards` card indices, entry 1 the next block,
+    /// and so on. Cards that already hold their plan slot exactly (same
+    /// app, variant, and coefficient bits; in rotation and past any
+    /// outage) are skipped — replaying the current plan costs nothing,
+    /// and a transition only pays outages on the cards that change.
+    ///
+    /// Panics on an empty plan or a plan whose card total differs from
+    /// the pool's — controller bugs, same contract as `deploy`.
+    pub fn deploy_plan(&mut self, kind: ReconfigKind, plan: &ResidencyPlan) -> ReconfigReport {
+        assert!(!plan.entries.is_empty(), "deploy_plan: empty residency plan");
+        assert_eq!(
+            plan.total_cards(),
+            self.pool.len(),
+            "deploy_plan: plan must cover every card exactly once"
+        );
+        let entries: Vec<TargetLogic> = plan
+            .entries
+            .iter()
+            .map(|e| (e.deployment(), e.app.clone(), e.variant.clone()))
+            .collect();
+        let mut targets: Vec<Option<usize>> = Vec::with_capacity(self.pool.len());
+        for (ei, e) in plan.entries.iter().enumerate() {
+            for _ in 0..e.cards {
+                targets.push(Some(ei));
+            }
+        }
+        // Skip cards already holding their exact plan slot.
+        let now = self.clock.now();
+        for (i, t) in targets.iter_mut().enumerate() {
+            let Some(ei) = *t else { continue };
+            let card = CardId(i as u16);
+            let matches = self
+                .pool
+                .deployment(card)
+                .is_some_and(|d| same_deployment(d, entries[ei].0));
+            if matches
+                && self.router.is_routable(card)
+                && now >= self.pool.card(card).outage_until()
+            {
+                *t = None;
+            }
+        }
+        self.active = Some(plan.primary().deployment());
+        self.active_plan = Some(plan.clone());
+        self.transition(kind, entries, targets)
+    }
+
+    /// Shared step-6 machinery behind `deploy` and `deploy_plan`: pick
+    /// cutover or roll exactly as before (fresh fleets and single cards
+    /// program in place), then move every targeted card to its logic.
+    fn transition(
+        &mut self,
+        kind: ReconfigKind,
+        entries: Vec<TargetLogic>,
+        targets: Vec<Option<usize>>,
+    ) -> ReconfigReport {
         let fresh = self.pool.deployments().iter().all(Option::is_none);
         if self.strategy == ReconfigStrategy::Cutover || self.pool.len() == 1 || fresh {
-            self.cutover(kind, app, variant, dep)
+            self.cutover(kind, &entries, &targets)
         } else {
-            self.begin_roll(kind, app, variant, dep)
+            self.begin_roll(kind, entries, targets)
         }
     }
 
-    /// Reprogram every card at `now` simultaneously (initial deployment,
-    /// single card, or the explicit `Cutover` strategy).
+    /// Program one card and keep the router's per-app index in sync —
+    /// the only place pool deployments may change.
+    fn reprogram(
+        &mut self,
+        card: CardId,
+        at: f64,
+        kind: ReconfigKind,
+        app: &str,
+        variant: &str,
+        dep: Deployment,
+    ) -> ReconfigReport {
+        let report = self.pool.reconfigure_card(card, at, kind, app, variant, dep);
+        self.router.note_deploy(card, dep.app);
+        report
+    }
+
+    /// The report for a transition that touched no card: the fleet
+    /// already matches the plan, so the "reconfiguration" is free.
+    fn noop_report(&self, kind: ReconfigKind, entries: &[TargetLogic]) -> ReconfigReport {
+        let (_, app, variant) = &entries[0];
+        ReconfigReport {
+            kind,
+            from: self.pool.card(CardId(0)).logic().cloned(),
+            to: LoadedLogic {
+                app: app.clone(),
+                variant: variant.clone(),
+            },
+            started_at: self.clock.now(),
+            downtime_secs: 0.0,
+        }
+    }
+
+    /// Reprogram every targeted card at `now` simultaneously (initial
+    /// deployment, single card, or the explicit `Cutover` strategy).
     fn cutover(
         &mut self,
         kind: ReconfigKind,
-        app: &str,
-        variant: &str,
-        dep: Deployment,
+        entries: &[TargetLogic],
+        targets: &[Option<usize>],
     ) -> ReconfigReport {
-        // A cutover supersedes any unfinished roll: every card is
-        // reprogrammed and returned to the rotation right here.
+        // A cutover supersedes any unfinished roll: every targeted card
+        // is reprogrammed and returned to the rotation right here
+        // (skipped cards are only ever skipped while already in
+        // rotation and past their outage).
         self.roll = None;
         let now = self.clock.now();
         let mut first = None;
-        for i in 0..self.pool.len() {
+        for (i, t) in targets.iter().enumerate() {
             let card = CardId(i as u16);
-            let report = self
-                .pool
-                .reconfigure_card(card, now, kind, app, variant, dep);
-            self.router.set_routable(card, true);
-            if first.is_none() {
-                first = Some(report);
+            if let Some(ei) = t {
+                let (dep, app, variant) = &entries[*ei];
+                let report = self.reprogram(card, now, kind, app, variant, *dep);
+                if first.is_none() {
+                    first = Some(report);
+                }
             }
+            self.router.set_routable(card, true);
         }
-        first.expect("pool has at least one card")
+        first.unwrap_or_else(|| self.noop_report(kind, entries))
     }
 
     /// Start a rolling reconfiguration and immediately drain the first
-    /// card. Any unfinished previous roll is superseded: the new roll
-    /// re-visits every card, and a card still mid-outage stays out of
-    /// the rotation until the roll reaches and rejoins it (its FIFO
-    /// horizon already covers the old outage).
+    /// targeted card. Any unfinished previous roll is superseded: the
+    /// new roll re-visits every targeted card, and a card still
+    /// mid-outage stays out of the rotation until the roll reaches and
+    /// rejoins it (its FIFO horizon already covers the old outage).
     fn begin_roll(
         &mut self,
         kind: ReconfigKind,
-        app: &str,
-        variant: &str,
-        dep: Deployment,
+        entries: Vec<TargetLogic>,
+        targets: Vec<Option<usize>>,
     ) -> ReconfigReport {
+        let Some(first_changed) = targets.iter().position(Option::is_some) else {
+            // Every card already holds its plan slot: nothing to flip.
+            self.roll = None;
+            return self.noop_report(kind, &entries);
+        };
         self.roll = Some(Roll {
             kind,
-            target: dep,
-            app: app.to_string(),
-            variant: variant.to_string(),
+            entries,
+            targets,
             next: 0,
             reprogramming: None,
         });
         self.advance_roll();
         self.pool
-            .card(CardId(0))
+            .card(CardId(first_changed as u16))
             .reconfig_log
             .last()
             .cloned()
-            .expect("begin_roll reprograms card 0 immediately")
+            .expect("begin_roll reprograms the first targeted card immediately")
     }
 
     /// Advance an in-flight roll to the current virtual time: rejoin the
-    /// card whose outage has passed, then drain the next one. Called on
-    /// every serve (no-op without a roll) and at window boundaries.
+    /// card whose outage has passed, then drain the next targeted one.
+    /// Called on every serve (no-op without a roll) and at window
+    /// boundaries.
     fn advance_roll(&mut self) {
         let Some(mut roll) = self.roll.take() else {
             return;
@@ -364,24 +543,23 @@ impl FleetEnv {
                 self.router.set_routable(card, true);
                 roll.reprogramming = None;
             }
-            if roll.next >= self.pool.len() {
-                // Every card reprogrammed and rejoined: roll complete.
+            // Cards keeping their current logic are not drained at all.
+            while roll.next < roll.targets.len() && roll.targets[roll.next].is_none() {
+                roll.next += 1;
+            }
+            if roll.next >= roll.targets.len() {
+                // Every targeted card reprogrammed and rejoined: done.
                 return;
             }
             let card = CardId(roll.next as u16);
+            let ei = roll.targets[roll.next].expect("skips consumed above");
             roll.next += 1;
             // Drain: stop feeding the card now; reprogram once its FIFO
             // backlog clears (future-dated on the card's own timeline).
             self.router.set_routable(card, false);
             let start = now.max(self.pool.card(card).busy_until());
-            let report = self.pool.reconfigure_card(
-                card,
-                start,
-                roll.kind,
-                &roll.app,
-                &roll.variant,
-                roll.target,
-            );
+            let (dep, app, variant) = &roll.entries[ei];
+            let report = self.reprogram(card, start, roll.kind, app, variant, *dep);
             roll.reprogramming = Some((card, start + report.downtime_secs));
         }
         self.roll = Some(roll);
@@ -397,9 +575,10 @@ impl FleetEnv {
     /// Serve one request; returns the record (also appended to history).
     ///
     /// Same contract as `ProductionEnv::serve`: steady-state cost is the
-    /// O(cards) route scan, two table indexes and a `Copy` push — no
-    /// allocation (verified by `tests/serve_alloc.rs`); arrivals must be
-    /// non-decreasing across calls.
+    /// O(holders) indexed route, two table indexes and a `Copy` push — no
+    /// allocation (verified by `tests/serve_alloc.rs`, including a
+    /// 64-card heterogeneous pool); arrivals must be non-decreasing
+    /// across calls.
     pub fn serve(&mut self, req: &Request) -> anyhow::Result<RequestRecord> {
         self.clock.advance_to(req.arrival.max(self.clock.now()));
         self.advance_roll();
@@ -530,6 +709,22 @@ impl Environment for FleetEnv {
         FleetEnv::offloaded_time(self, app, size, variant)
     }
 
+    fn cards(&self) -> usize {
+        self.pool.len()
+    }
+
+    fn is_resident(&self, app: AppId, variant: VariantId) -> bool {
+        self.pool
+            .deployments()
+            .iter()
+            .flatten()
+            .any(|d| d.app == app && d.variant == variant)
+    }
+
+    fn residency(&self) -> Option<ResidencyPlan> {
+        FleetEnv::residency(self)
+    }
+
     fn deploy(
         &mut self,
         kind: ReconfigKind,
@@ -538,6 +733,10 @@ impl Environment for FleetEnv {
         improvement_coef: f64,
     ) -> ReconfigReport {
         FleetEnv::deploy(self, kind, app, variant, improvement_coef)
+    }
+
+    fn deploy_plan(&mut self, kind: ReconfigKind, plan: &ResidencyPlan) -> ReconfigReport {
+        FleetEnv::deploy_plan(self, kind, plan)
     }
 
     fn serve(&mut self, req: &Request) -> anyhow::Result<RequestRecord> {
@@ -794,14 +993,154 @@ mod tests {
         let trace = tdfir_burst(&env, 4, 2.0);
         env.run_window(&trace).unwrap();
         env.deploy(ReconfigKind::Static, "mriq", "o1", 2.0);
+        assert_eq!(
+            env.residency().map(|p| (p.entries.len(), p.total_cards())),
+            Some((1, 3)),
+            "deploy records a homogeneous residency intent"
+        );
         env.reset();
         assert!(env.history.is_empty());
         assert!(env.active().is_none());
+        assert!(env.residency().is_none());
         assert!(!env.roll_in_progress());
         assert_eq!(env.serve_stalls(), 0);
         assert_eq!(env.cards(), 3);
         assert_eq!(env.clock.now(), 0.0);
         assert!(env.cpu_time("tdfir", "large").is_ok(), "table survives");
+    }
+
+    /// A manual residency plan: `shares` maps app name → card count,
+    /// every entry on variant `o1` with coefficient 2.0.
+    fn plan_of(env: &FleetEnv, shares: &[(&str, usize)]) -> ResidencyPlan {
+        use crate::coordinator::recon::ResidencyEntry;
+        let entries = shares
+            .iter()
+            .map(|(app, cards)| {
+                let id = app_id(&env.registry, app).unwrap();
+                ResidencyEntry {
+                    app: app.to_string(),
+                    app_id: id,
+                    variant: "o1".into(),
+                    variant_id: VariantId::from_name("o1").unwrap(),
+                    improvement_coef: 2.0,
+                    cards: *cards,
+                    corrected_load_secs: 0.0,
+                }
+            })
+            .collect();
+        ResidencyPlan { entries }
+    }
+
+    #[test]
+    fn deploy_plan_splits_a_fresh_pool_and_serves_both_apps_from_fpga() {
+        let mut env = FleetEnv::new(registry(), D5005, 4);
+        let plan = plan_of(&env, &[("tdfir", 2), ("mriq", 2)]);
+        let report = env.deploy_plan(ReconfigKind::Static, &plan);
+        assert!(!env.roll_in_progress(), "fresh fleet programs in place");
+        assert_eq!(report.downtime_secs, 1.0);
+        let td = app_id(&env.registry, "tdfir").unwrap();
+        let mq = app_id(&env.registry, "mriq").unwrap();
+        assert_eq!(
+            env.pool.cards_holding(td).collect::<Vec<_>>(),
+            vec![CardId(0), CardId(1)]
+        );
+        assert_eq!(
+            env.pool.cards_holding(mq).collect::<Vec<_>>(),
+            vec![CardId(2), CardId(3)]
+        );
+        // Both hot apps ride the FPGA at once; everything else stays CPU.
+        let (td, td_l) = env.resolve("tdfir", "large").unwrap();
+        let (mq, mq_l) = env.resolve("mriq", "large").unwrap();
+        let (hm, hm_s) = env.resolve("himeno", "sample").unwrap();
+        let req = |id, app, size, at| Request {
+            id,
+            app,
+            size,
+            arrival: at,
+            bytes: 1.0e6,
+        };
+        let r = env.serve(&req(0, td, td_l, 2.0)).unwrap();
+        assert_eq!(r.served_by, ServedBy::Fpga(CardId(0)));
+        let r = env.serve(&req(1, mq, mq_l, 2.1)).unwrap();
+        assert_eq!(r.served_by, ServedBy::Fpga(CardId(2)));
+        let r = env.serve(&req(2, hm, hm_s, 2.2)).unwrap();
+        assert_eq!(r.served_by, ServedBy::Cpu);
+        // Step-1 correction sees both resident apps.
+        assert_eq!(Environment::improvement_coef(&env, td), 2.0);
+        assert_eq!(Environment::improvement_coef(&env, mq), 2.0);
+        // The logical deployment is the primary (first of the tie), and
+        // the full plan is retained as the fleet's residency intent (the
+        // Step-7 flap guard's rollback target).
+        assert_eq!(env.active().map(|d| d.app), Some(td));
+        let kept = env.residency().expect("plan retained");
+        assert_eq!(kept.entries.len(), 2);
+        assert_eq!(kept.entries[0].app_id, td);
+        assert_eq!(kept.entries[1].cards, 2);
+    }
+
+    #[test]
+    fn mixed_plan_rolls_only_the_cards_that_change() {
+        let mut env = FleetEnv::new(registry(), D5005, 4);
+        env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.0);
+        let (td, td_l) = env.resolve("tdfir", "large").unwrap();
+        let warm = tdfir_burst(&env, 2, 5.0);
+        env.run_window(&warm).unwrap();
+        let stalls_before = env.serve_stalls();
+
+        // Homogeneous tdfir -> {tdfir on 0-1, mriq on 2-3}: the tdfir
+        // cards hold their exact plan slot and must not be touched.
+        let plan = plan_of(&env, &[("tdfir", 2), ("mriq", 2)]);
+        env.deploy_plan(ReconfigKind::Static, &plan);
+        assert!(env.roll_in_progress());
+        let mut t = env.clock.now();
+        let mut id = 100u64;
+        let mut guard = 0;
+        while env.roll_in_progress() {
+            t += 0.5;
+            env.serve(&Request {
+                id,
+                app: td,
+                size: td_l,
+                arrival: t,
+                bytes: 1.0e6,
+            })
+            .unwrap();
+            id += 1;
+            guard += 1;
+            assert!(guard < 100, "mixed roll did not complete");
+        }
+        assert_eq!(
+            env.serve_stalls(),
+            stalls_before,
+            "mixed-residency roll must add zero fleet-level stalls"
+        );
+        for i in 0..2u16 {
+            let card = env.pool.card(CardId(i));
+            assert!(card.serves("tdfir"), "card {i} kept its logic");
+            assert_eq!(card.reconfig_log.len(), 1, "card {i} was never touched");
+        }
+        for i in 2..4u16 {
+            let card = env.pool.card(CardId(i));
+            assert!(card.serves("mriq"), "card {i} flipped");
+            assert_eq!(card.reconfig_log.len(), 2, "card {i} rolled once");
+            assert_eq!(card.reconfig_log[1].downtime_secs, 1.0);
+        }
+        // Replaying the same plan is free: no roll, no outage, no logs.
+        let report = env.deploy_plan(ReconfigKind::Static, &plan);
+        assert!(!env.roll_in_progress());
+        assert_eq!(report.downtime_secs, 0.0, "no-op transition is free");
+        for i in 0..4u16 {
+            let expect = if i < 2 { 1 } else { 2 };
+            assert_eq!(env.pool.card(CardId(i)).reconfig_log.len(), expect);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cover every card")]
+    fn deploy_plan_rejects_malformed_plans() {
+        let mut env = FleetEnv::new(registry(), D5005, 4);
+        let plan = plan_of(&env, &[("tdfir", 1), ("mriq", 1)]);
+        env.deploy_plan(ReconfigKind::Static, &plan);
     }
 
     #[test]

@@ -9,13 +9,21 @@
 //!    FIFO kernel pipeline, and reconfiguration (outage) state;
 //!  * [`FleetRouter`] — dispatches each request to the best card holding
 //!    the app's logic (minimal earliest start, ties to the lowest card
-//!    index), falling back to the CPU pool exactly as the single-card
-//!    `ProductionEnv` does. The hot path stays allocation-free on
-//!    interned `AppId`/`SizeId`/`VariantId` handles;
+//!    index) through an incrementally maintained `AppId → [CardId]`
+//!    index, so routing costs O(cards holding the app) rather than
+//!    O(cards in the pool); the original linear scan is retained as the
+//!    bit-identical `route_scan` oracle. CPU-pool fallback matches the
+//!    single-card `ProductionEnv` exactly, and the hot path stays
+//!    allocation-free on interned `AppId`/`SizeId`/`VariantId` handles;
 //!  * [`FleetEnv`] — `ProductionEnv` generalized to the pool. It
 //!    implements [`crate::coordinator::Environment`], so the §3.3
 //!    controller (`recon::run_reconfiguration`) and the Step-7 loop
-//!    (`adaptive::run_adaptive`) drive a fleet unchanged.
+//!    (`adaptive::run_adaptive`) drive a fleet unchanged. With
+//!    `ReconConfig::residency_apps > 1` the controller partitions the
+//!    pool across the top-ranked apps (`recon::plan_residency`) and
+//!    [`FleetEnv::deploy_plan`] rolls the fleet to the mixed residency —
+//!    several hot apps on FPGA at once, cards that already match their
+//!    plan slot untouched.
 //!
 //! Reconfiguration rolls by default ([`ReconfigStrategy::Rolling`]):
 //! drain one card, reprogram it via `FpgaDevice::reconfigure` while the
@@ -29,7 +37,9 @@
 //!
 //! `benches/fleet_scaling.rs` measures served-request throughput at
 //! N = 1, 2, 4, 8 cards and asserts the roll adds zero stalls;
-//! `benches/downtime.rs` contrasts rolling against cutover.
+//! `benches/downtime.rs` contrasts rolling against cutover;
+//! `benches/hetero_fleet.rs` gates heterogeneous residency against the
+//! homogeneous plan and the routing index against the linear scan.
 
 pub mod env;
 pub mod pool;

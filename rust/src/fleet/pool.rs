@@ -67,6 +67,20 @@ impl CardPool {
         self.cards.iter().any(|c| c.serves(app))
     }
 
+    /// Cards whose slot currently holds `app`'s logic, ascending card
+    /// index (cold-path residency query for reports and tests; the hot
+    /// path uses `FleetRouter`'s incrementally maintained index).
+    pub fn cards_holding(
+        &self,
+        app: crate::apps::AppId,
+    ) -> impl Iterator<Item = CardId> + '_ {
+        self.deployments
+            .iter()
+            .enumerate()
+            .filter(move |(_, d)| d.is_some_and(|d| d.app == app))
+            .map(|(i, _)| CardId(i as u16))
+    }
+
     /// Program one card's slot at virtual time `at` (future-dated when
     /// the card drains first) and record its new deployment.
     pub fn reconfigure_card(
@@ -136,6 +150,8 @@ mod tests {
         assert!(p.serves("tdfir"));
         assert!(!p.serves("mriq"));
         assert_eq!(p.total_downtime(), 1.0);
+        assert_eq!(p.cards_holding(AppId(0)).collect::<Vec<_>>(), vec![CardId(1)]);
+        assert_eq!(p.cards_holding(AppId(7)).count(), 0);
     }
 
     #[test]

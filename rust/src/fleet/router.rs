@@ -10,9 +10,26 @@
 //! pool), which is what keeps the 1-card fleet bit-identical to the
 //! paper's environment.
 //!
-//! The scan is O(cards) per request with zero allocation — card counts
-//! are single digits here; a per-app card index is the lever if fleets
-//! ever grow past that.
+//! # The per-app card index
+//!
+//! [`FleetRouter::route`] scans an incrementally maintained
+//! `AppId → [CardId]` index — `holders[app]` lists, in ascending card
+//! order, the routable cards whose slot holds `app`'s logic — so a
+//! request pays O(cards holding its app), not O(cards that exist). The
+//! index is updated on the cold paths only (deploy via
+//! [`FleetRouter::note_deploy`], drain/rejoin via
+//! [`FleetRouter::set_routable`]); the hot path reads a slice and
+//! allocates nothing. On a heterogeneous 64-card fleet where each app
+//! rides a handful of cards this is the difference between 64 slot
+//! compares and ~4 horizon reads per request
+//! (`benches/hetero_fleet.rs` gates the speedup).
+//!
+//! The original O(cards) scan is retained verbatim as
+//! [`FleetRouter::route_scan`] — the bit-identical correctness oracle
+//! the index is proptested against, the same pattern as
+//! `history::scan` anchoring the columnar history index. Ascending
+//! holder order reproduces the scan's lowest-card-index tie-break
+//! exactly.
 //!
 //! The router also owns the fleet's **serve-stall counter**: a stall is
 //! a request that arrived inside its serving card's outage window, i.e.
@@ -27,32 +44,120 @@ use crate::fpga::device::CardId;
 
 use super::pool::CardPool;
 
-/// Per-fleet routing state: rotation membership + stall accounting.
+/// Per-fleet routing state: rotation membership, the per-app card
+/// index, and stall accounting.
 #[derive(Clone, Debug)]
 pub struct FleetRouter {
     /// Cards eligible for new work; `false` while a card is drained /
     /// reprogramming during a rolling reconfiguration.
     routable: Vec<bool>,
+    /// Interned app each card's slot currently holds — the router's
+    /// mirror of `CardPool::deployments`, maintained by
+    /// [`FleetRouter::note_deploy`] after every card reprogram.
+    card_app: Vec<Option<AppId>>,
+    /// `holders[app]` — ascending card indices of the routable cards
+    /// holding `app`'s logic (the O(holders) routing index).
+    holders: Vec<Vec<u16>>,
     /// Requests whose start was delayed by an outage window on the card
     /// they were routed to.
     stalls: u64,
 }
 
 impl FleetRouter {
-    pub fn new(cards: usize) -> Self {
-        FleetRouter {
+    /// Build the routing state **from the pool itself** — card count and
+    /// any pre-programmed deployments are read off `pool`, sized for
+    /// `apps` interned app handles. Constructing from the pool makes a
+    /// `routable`/index length that disagrees with the pool's card count
+    /// impossible by construction; [`FleetRouter::route`] additionally
+    /// asserts agreement on every call, so a router paired with the
+    /// wrong pool fails loudly instead of mis-routing.
+    pub fn new(pool: &CardPool, apps: usize) -> Self {
+        let cards = pool.len();
+        let mut r = FleetRouter {
             routable: vec![true; cards],
+            card_app: vec![None; cards],
+            holders: vec![Vec::new(); apps],
             stalls: 0,
+        };
+        for (i, dep) in pool.deployments().iter().enumerate() {
+            if let Some(dep) = dep {
+                r.note_deploy(CardId(i as u16), dep.app);
+            }
         }
+        r
     }
 
-    /// Take a card out of (or return it to) the routing rotation.
+    /// Take a card out of (or return it to) the routing rotation,
+    /// keeping the per-app index in sync.
     pub fn set_routable(&mut self, card: CardId, on: bool) {
-        self.routable[card.0 as usize] = on;
+        let i = card.0 as usize;
+        let was = std::mem::replace(&mut self.routable[i], on);
+        if was == on {
+            return;
+        }
+        if let Some(app) = self.card_app[i] {
+            if on {
+                Self::insert_holder(&mut self.holders, app, card.0);
+            } else {
+                Self::remove_holder(&mut self.holders, app, card.0);
+            }
+        }
     }
 
     pub fn is_routable(&self, card: CardId) -> bool {
         self.routable[card.0 as usize]
+    }
+
+    /// Record that `card`'s slot now holds `app`'s logic. `FleetEnv`
+    /// calls this after every `CardPool::reconfigure_card`, which is
+    /// what keeps the index an exact mirror of the pool's deployments.
+    /// Panics on an app handle beyond the router's sizing — a silently
+    /// unindexed deployment would make `route` CPU-fall-back where
+    /// `route_scan` routes, exactly the quiet divergence this router is
+    /// built to fail loudly on.
+    pub fn note_deploy(&mut self, card: CardId, app: AppId) {
+        assert!(
+            (app.0 as usize) < self.holders.len(),
+            "note_deploy: app handle {app:?} outside the router's {} app slots",
+            self.holders.len()
+        );
+        let i = card.0 as usize;
+        if let Some(old) = self.card_app[i] {
+            if old == app {
+                return;
+            }
+            if self.routable[i] {
+                Self::remove_holder(&mut self.holders, old, card.0);
+            }
+        }
+        self.card_app[i] = Some(app);
+        if self.routable[i] {
+            Self::insert_holder(&mut self.holders, app, card.0);
+        }
+    }
+
+    fn insert_holder(holders: &mut [Vec<u16>], app: AppId, card: u16) {
+        let list = &mut holders[app.0 as usize];
+        if let Err(pos) = list.binary_search(&card) {
+            list.insert(pos, card);
+        }
+    }
+
+    fn remove_holder(holders: &mut [Vec<u16>], app: AppId, card: u16) {
+        let list = &mut holders[app.0 as usize];
+        if let Ok(pos) = list.binary_search(&card) {
+            list.remove(pos);
+        }
+    }
+
+    /// Routable cards currently holding `app`'s logic, ascending card
+    /// index (empty for apps beyond the registry the router was sized
+    /// for — no card can hold those).
+    pub fn holders(&self, app: AppId) -> &[u16] {
+        self.holders
+            .get(app.0 as usize)
+            .map(Vec::as_slice)
+            .unwrap_or(&[])
     }
 
     /// Count one request routed into an outage window.
@@ -67,8 +172,42 @@ impl FleetRouter {
 
     /// The best card holding `app`'s logic for a request arriving at
     /// `arrival`, or `None` when no routable card holds it (the caller
-    /// falls back to the CPU pool). Allocation-free O(cards) scan.
+    /// falls back to the CPU pool). Allocation-free O(holders) walk of
+    /// the per-app index — bit-identical to [`FleetRouter::route_scan`].
     pub fn route(&self, pool: &CardPool, app: AppId, arrival: f64) -> Option<CardId> {
+        assert_eq!(
+            pool.len(),
+            self.routable.len(),
+            "FleetRouter paired with a pool of a different card count"
+        );
+        let cards = pool.cards();
+        let mut best: Option<(f64, u16)> = None;
+        for &c in self.holders(app) {
+            let start = cards[c as usize].earliest_start(arrival);
+            // Strict `<` keeps ties on the lowest card index (holders are
+            // ascending, the same FIFO tie-break idiom as
+            // `workload::merge_linear`).
+            let better = match best {
+                None => true,
+                Some((b, _)) => start < b,
+            };
+            if better {
+                best = Some((start, c));
+            }
+        }
+        best.map(|(_, c)| CardId(c))
+    }
+
+    /// The retained O(cards) scan — the bit-identical correctness
+    /// oracle for the indexed [`FleetRouter::route`]
+    /// (`prop_fleet_route_index_matches_scan` asserts equality on
+    /// random fleets; `benches/hetero_fleet.rs` gates the speedup).
+    pub fn route_scan(&self, pool: &CardPool, app: AppId, arrival: f64) -> Option<CardId> {
+        assert_eq!(
+            pool.len(),
+            self.routable.len(),
+            "FleetRouter paired with a pool of a different card count"
+        );
         let mut best: Option<(f64, usize)> = None;
         for (i, dep) in pool.deployments().iter().enumerate() {
             if !self.routable[i] {
@@ -79,8 +218,6 @@ impl FleetRouter {
                 continue;
             }
             let start = pool.cards()[i].earliest_start(arrival);
-            // Strict `<` keeps ties on the lowest card index (the same
-            // FIFO tie-break idiom as `workload::merge_linear`).
             let better = match best {
                 None => true,
                 Some((b, _)) => start < b,
@@ -127,7 +264,7 @@ mod tests {
     #[test]
     fn routes_to_least_loaded_card_ties_to_lowest_index() {
         let mut pool = pool_of(3, 0);
-        let r = FleetRouter::new(3);
+        let r = FleetRouter::new(&pool, 10);
         // All idle (past the t=1 deploy outage): tie -> card 0.
         assert_eq!(r.route(&pool, AppId(0), 2.0), Some(CardId(0)));
         // Load card 0 and 1; card 2 becomes the best.
@@ -136,27 +273,86 @@ mod tests {
         assert_eq!(r.route(&pool, AppId(0), 2.1), Some(CardId(2)));
         // Wrong app: no card.
         assert_eq!(r.route(&pool, AppId(9), 2.0), None);
+        // Out-of-range app handle: no card either way.
+        assert_eq!(r.route(&pool, AppId(77), 2.0), None);
+        assert_eq!(r.route_scan(&pool, AppId(77), 2.0), None);
     }
 
     #[test]
-    fn drained_cards_leave_the_rotation() {
+    fn drained_cards_leave_the_rotation_and_the_index() {
         let pool = pool_of(2, 0);
-        let mut r = FleetRouter::new(2);
+        let mut r = FleetRouter::new(&pool, 4);
+        assert_eq!(r.holders(AppId(0)), &[0, 1]);
         r.set_routable(CardId(0), false);
         assert!(!r.is_routable(CardId(0)));
+        assert_eq!(r.holders(AppId(0)), &[1]);
         assert_eq!(r.route(&pool, AppId(0), 2.0), Some(CardId(1)));
         r.set_routable(CardId(1), false);
+        assert_eq!(r.holders(AppId(0)), &[] as &[u16]);
         assert_eq!(r.route(&pool, AppId(0), 2.0), None, "CPU fallback");
         r.set_routable(CardId(0), true);
+        // Re-enabling twice is idempotent.
+        r.set_routable(CardId(0), true);
+        assert_eq!(r.holders(AppId(0)), &[0]);
         assert_eq!(r.route(&pool, AppId(0), 2.0), Some(CardId(0)));
+    }
+
+    #[test]
+    fn note_deploy_moves_cards_between_holder_lists() {
+        let mut pool = pool_of(3, 0);
+        let mut r = FleetRouter::new(&pool, 4);
+        // Card 1 flips to app 2: it leaves app 0's list and joins app 2's.
+        pool.reconfigure_card(CardId(1), 5.0, ReconfigKind::Static, "b", "o1", dep(2));
+        r.note_deploy(CardId(1), AppId(2));
+        assert_eq!(r.holders(AppId(0)), &[0, 2]);
+        assert_eq!(r.holders(AppId(2)), &[1]);
+        // Re-deploying the same app is a no-op.
+        r.note_deploy(CardId(1), AppId(2));
+        assert_eq!(r.holders(AppId(2)), &[1]);
+        // A drained card's redeploys are reflected only when it rejoins.
+        r.set_routable(CardId(2), false);
+        pool.reconfigure_card(CardId(2), 6.0, ReconfigKind::Static, "b", "o1", dep(2));
+        r.note_deploy(CardId(2), AppId(2));
+        assert_eq!(r.holders(AppId(2)), &[1]);
+        r.set_routable(CardId(2), true);
+        assert_eq!(r.holders(AppId(2)), &[1, 2]);
+        assert_eq!(r.holders(AppId(0)), &[0]);
+    }
+
+    #[test]
+    fn constructor_picks_up_preprogrammed_pools() {
+        let mut pool = CardPool::new(D5005, 3);
+        pool.reconfigure_card(CardId(1), 0.0, ReconfigKind::Static, "a", "o1", dep(5));
+        let r = FleetRouter::new(&pool, 8);
+        assert_eq!(r.holders(AppId(5)), &[1]);
+        assert_eq!(r.route(&pool, AppId(5), 2.0), Some(CardId(1)));
+        assert_eq!(r.route(&pool, AppId(0), 2.0), None);
     }
 
     #[test]
     fn outage_pushes_routing_to_the_free_card() {
         let mut pool = pool_of(2, 0);
-        let r = FleetRouter::new(2);
+        let r = FleetRouter::new(&pool, 4);
         // Card 0 re-enters an outage at t=10..11; card 1 stays live.
         pool.reconfigure_card(CardId(0), 10.0, ReconfigKind::Static, "a", "o1", dep(0));
         assert_eq!(r.route(&pool, AppId(0), 10.2), Some(CardId(1)));
+        assert_eq!(r.route_scan(&pool, AppId(0), 10.2), Some(CardId(1)));
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the router's")]
+    fn note_deploy_rejects_an_unsized_app_handle() {
+        let pool = pool_of(2, 0);
+        let mut r = FleetRouter::new(&pool, 4);
+        r.note_deploy(CardId(0), AppId(4));
+    }
+
+    #[test]
+    #[should_panic(expected = "different card count")]
+    fn route_rejects_a_mismatched_pool() {
+        let pool3 = pool_of(3, 0);
+        let pool2 = pool_of(2, 0);
+        let r = FleetRouter::new(&pool3, 4);
+        let _ = r.route(&pool2, AppId(0), 2.0);
     }
 }

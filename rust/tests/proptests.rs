@@ -2,11 +2,14 @@
 //! using the in-repo harness (util::check) — proptest is unavailable
 //! offline.
 
-use repro::apps::{registry, AppId, SizeId};
+use repro::apps::{app_id, registry, AppId, SizeId, VariantId};
 use repro::coordinator::history::{scan, HistoryStore, RequestRecord, ServedBy};
-use repro::coordinator::{run_reconfiguration, Approval, ProductionEnv, ReconConfig};
-use repro::fleet::FleetEnv;
-use repro::fpga::device::{FpgaDevice, ReconfigKind};
+use repro::coordinator::server::Deployment;
+use repro::coordinator::{
+    run_reconfiguration, Approval, ProductionEnv, ReconConfig, ResidencyPlan,
+};
+use repro::fleet::{CardPool, FleetEnv, FleetRouter};
+use repro::fpga::device::{CardId, FpgaDevice, ReconfigKind};
 use repro::fpga::part::D5005;
 use repro::loopir::interp::Interp;
 use repro::loopir::walk::{analyze, Bindings};
@@ -488,6 +491,195 @@ fn prop_fleet_one_card_matches_production_env() {
                         && a.finish.to_bits() == b.finish.to_bits()
                         && a.service_secs.to_bits() == b.service_secs.to_bits(),
                     format!("record timing bits for {}", a.id),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Heterogeneous-residency degenerate case: deploying k = 1 residency
+/// plans through `FleetEnv::deploy_plan` is bit-identical to today's
+/// homogeneous `deploy` on random traces — records (timing bits and
+/// serving cards), serve stalls, per-card reconfiguration logs, and the
+/// recon outcome of a full §3.3 cycle run after the transition.
+#[test]
+fn prop_fleet_plan_k1_matches_homogeneous() {
+    let reg = registry();
+    forall(
+        6,
+        0x9_1AA7,
+        |rng| {
+            (
+                2 + rng.next_below(3) as usize,
+                600.0 + rng.next_f64() * 1800.0,
+                rng.next_u64(),
+            )
+        },
+        |&(cards, dur, seed)| {
+            let homogeneous = |env: &FleetEnv, app: &str, coef: f64| {
+                ResidencyPlan::homogeneous(
+                    app,
+                    app_id(&env.registry, app).unwrap(),
+                    "o1",
+                    coef,
+                    cards,
+                )
+            };
+            let mut a = FleetEnv::new(registry(), D5005, cards);
+            let mut b = FleetEnv::new(registry(), D5005, cards);
+            a.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+            let plan = homogeneous(&b, "tdfir", 2.07);
+            b.deploy_plan(ReconfigKind::Static, &plan);
+            let trace = generate(&reg, dur, seed);
+            if trace.is_empty() {
+                return Ok(());
+            }
+            a.run_window(&trace).map_err(|e| e.to_string())?;
+            b.run_window(&trace).map_err(|e| e.to_string())?;
+
+            // Mid-trace transition to a different logic: `deploy` rolls,
+            // the k = 1 plan must roll identically.
+            a.deploy(ReconfigKind::Static, "mriq", "o1", 2.0);
+            let plan = homogeneous(&b, "mriq", 2.0);
+            b.deploy_plan(ReconfigKind::Static, &plan);
+            let t0 = a.clock.now() + 1e-6;
+            let mut more = generate(&reg, 600.0, seed ^ 0x5EED);
+            for r in &mut more {
+                r.arrival += t0;
+            }
+            if !more.is_empty() {
+                a.run_window(&more).map_err(|e| e.to_string())?;
+                b.run_window(&more).map_err(|e| e.to_string())?;
+            }
+
+            ensure(a.history.len() == b.history.len(), "history length")?;
+            for (x, y) in a.history.all().iter().zip(b.history.all()) {
+                ensure(x.id == y.id && x.app == y.app, "record identity")?;
+                ensure(x.served_by == y.served_by, format!("served_by for {}", x.id))?;
+                ensure(
+                    x.start.to_bits() == y.start.to_bits()
+                        && x.finish.to_bits() == y.finish.to_bits()
+                        && x.service_secs.to_bits() == y.service_secs.to_bits(),
+                    format!("record timing bits for {}", x.id),
+                )?;
+            }
+            ensure(a.serve_stalls() == b.serve_stalls(), "serve stalls")?;
+            for i in 0..cards {
+                let (ca, cb) = (a.pool.card(CardId(i as u16)), b.pool.card(CardId(i as u16)));
+                ensure(
+                    ca.reconfig_log.len() == cb.reconfig_log.len(),
+                    format!("card {i} reconfig count"),
+                )?;
+                for (ra, rb) in ca.reconfig_log.iter().zip(&cb.reconfig_log) {
+                    ensure(
+                        ra.started_at.to_bits() == rb.started_at.to_bits()
+                            && ra.downtime_secs == rb.downtime_secs
+                            && ra.to == rb.to,
+                        format!("card {i} reconfig event"),
+                    )?;
+                }
+            }
+            match (a.active(), b.active()) {
+                (Some(x), Some(y)) => {
+                    ensure(x.app == y.app && x.variant == y.variant, "active logic")?;
+                    ensure(
+                        x.improvement_coef.to_bits() == y.improvement_coef.to_bits(),
+                        "active coefficient",
+                    )?;
+                }
+                _ => return Err("active deployment diverged".into()),
+            }
+
+            // A full recon cycle on both: outcomes must agree too.
+            let cfg = ReconConfig {
+                long_window_secs: dur,
+                short_window_secs: dur,
+                ..Default::default()
+            };
+            let mut ap = Approval::auto_yes();
+            let oa = run_reconfiguration(&mut a, &cfg, &mut ap).map_err(|e| e.to_string())?;
+            let ob = run_reconfiguration(&mut b, &cfg, &mut ap).map_err(|e| e.to_string())?;
+            match (&oa.proposal, &ob.proposal) {
+                (Some(p), Some(q)) => {
+                    ensure(p.proposed == q.proposed, "proposed flag")?;
+                    ensure(p.ratio.to_bits() == q.ratio.to_bits(), "ratio bits")?;
+                    ensure(p.best.app == q.best.app, "best app")?;
+                }
+                (None, None) => {}
+                _ => return Err("proposal presence diverged".into()),
+            }
+            ensure(oa.residency.is_none() && ob.residency.is_none(), "k=1 has no plan")?;
+            Ok(())
+        },
+    );
+}
+
+/// Routing index vs the retained scan: on random pools (random
+/// deployments, drains, rejoins, and FIFO load), `FleetRouter::route`
+/// picks bit-identically the same card as `route_scan` for every
+/// (app, arrival) probe — the index is an exact mirror, tie-breaks
+/// included.
+#[test]
+fn prop_fleet_route_index_matches_scan() {
+    forall(
+        60,
+        0x10DEC5,
+        |rng| {
+            let cards = 1 + rng.next_below(12) as usize;
+            let apps = 1 + rng.next_below(6) as u16;
+            // Op stream: (kind, card, app) with kind 0 = reprogram,
+            // 1 = toggle rotation, 2 = schedule FIFO load.
+            let n_ops = rng.next_below(40) as usize;
+            let ops: Vec<(u8, usize, u16, f64)> = (0..n_ops)
+                .map(|_| {
+                    (
+                        rng.next_below(3) as u8,
+                        rng.next_below(cards as u64) as usize,
+                        rng.next_below(apps as u64) as u16,
+                        rng.next_f64() * 20.0,
+                    )
+                })
+                .collect();
+            let probes: Vec<(u16, f64)> = (0..20)
+                .map(|_| {
+                    (
+                        rng.next_below(apps as u64 + 2) as u16,
+                        rng.next_f64() * 40.0,
+                    )
+                })
+                .collect();
+            (cards, apps, ops, probes)
+        },
+        |(cards, apps, ops, probes)| {
+            let mut pool = CardPool::new(D5005, *cards);
+            let mut router = FleetRouter::new(&pool, *apps as usize);
+            let mut t = 0.0f64;
+            for &(kind, card, app, dt) in ops {
+                let id = CardId(card as u16);
+                match kind {
+                    0 => {
+                        t += dt;
+                        let dep = Deployment {
+                            app: AppId(app),
+                            variant: VariantId(1),
+                            improvement_coef: 2.0,
+                        };
+                        pool.reconfigure_card(id, t, ReconfigKind::Static, "a", "o1", dep);
+                        router.note_deploy(id, AppId(app));
+                    }
+                    1 => router.set_routable(id, !router.is_routable(id)),
+                    _ => {
+                        pool.schedule(id, t, dt);
+                    }
+                }
+            }
+            for &(app, arrival) in probes {
+                let fast = router.route(&pool, AppId(app), arrival);
+                let slow = router.route_scan(&pool, AppId(app), arrival);
+                ensure(
+                    fast == slow,
+                    format!("route {fast:?} != scan {slow:?} for app {app} at {arrival}"),
                 )?;
             }
             Ok(())

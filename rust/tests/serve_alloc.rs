@@ -15,6 +15,10 @@
 //!     4-card pool (route scan + per-card FIFO schedule + card-tagged
 //!     record) allocates nothing either, and its service times match the
 //!     single-card table bit for bit.
+//!  5. **Zero-allocation indexed routing at scale** — a 64-card pool
+//!     with a 16-app heterogeneous residency plan serves through the
+//!     per-app card index without allocating, and every indexed route
+//!     decision equals the retained `route_scan` oracle.
 //!
 //! Kept as a single #[test] so no concurrent test pollutes the global
 //! allocation counter between the before/after reads.
@@ -22,8 +26,8 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use repro::apps::{app_id, registry};
-use repro::coordinator::ProductionEnv;
+use repro::apps::{app_id, registry, synthetic_registry};
+use repro::coordinator::{ProductionEnv, ResidencyPlan};
 use repro::fleet::FleetEnv;
 use repro::fpga::device::ReconfigKind;
 use repro::fpga::part::D5005;
@@ -166,5 +170,43 @@ fn serve_is_bit_identical_to_seed_model_and_allocation_free() {
         let (cpu, off) = expected[rec.app.0 as usize][rec.size.0 as usize];
         let want = if rec.app == td { off } else { cpu };
         assert_eq!(rec.service_secs.to_bits(), want.to_bits(), "{rec:?}");
+    }
+
+    // ---- 5. indexed routing on a 64-card heterogeneous pool ---------------
+    // 16 synthetic apps, 4 cards each: the per-app index walks ~4 holders
+    // per request instead of scanning 64 slots, and must do so without a
+    // single allocation once history buffers are reserved.
+    let plan = ResidencyPlan::uniform(&synthetic_registry(16), 4, "o1", 2.0);
+    let mut big = FleetEnv::new(synthetic_registry(16), D5005, 64);
+    big.deploy_plan(ReconfigKind::Static, &plan);
+    let mut big_trace = generate(&big.registry, 3600.0, 7);
+    for r in &mut big_trace {
+        r.arrival += 2.0;
+    }
+    assert!(big_trace.len() > 100, "64-card trace too small");
+    big.history.reserve_trace(&big_trace);
+    let before_b = ALLOCS.load(Ordering::SeqCst);
+    for r in &big_trace {
+        let rec = big.serve(r).unwrap();
+        std::hint::black_box(rec);
+    }
+    let after_b = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after_b - before_b,
+        0,
+        "64-card indexed serve allocated {} time(s) over {} requests",
+        after_b - before_b,
+        big_trace.len()
+    );
+    // Every request rode a card (all 16 apps are resident), and the
+    // indexed decision matches the retained scan on the loaded pool.
+    assert!(big.history.all().iter().all(|r| r.served_by.is_fpga()));
+    for r in &big_trace {
+        assert_eq!(
+            big.router.route(&big.pool, r.app, r.arrival),
+            big.router.route_scan(&big.pool, r.app, r.arrival),
+            "index diverged from scan for app {:?}",
+            r.app
+        );
     }
 }

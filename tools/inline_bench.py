@@ -2,11 +2,12 @@
 """Render BENCH_*.json artifacts as ROADMAP-ready markdown rows.
 
 The CI `bench-smoke` job uploads `BENCH_router_throughput.json`,
-`BENCH_recon_analysis.json`, and `BENCH_fleet_scaling.json` on every
-push; a full (non-smoke) run produces the same files locally via
-`cargo bench --bench <name>`. This script turns either into the
-markdown the ROADMAP Performance section inlines, so refreshing the
-committed numbers is mechanical:
+`BENCH_recon_analysis.json`, `BENCH_fleet_scaling.json`, and
+`BENCH_hetero_fleet.json` on every push; a full (non-smoke) run
+produces the same files locally via `cargo bench --bench <name>`.
+This script turns any of them into the markdown the ROADMAP
+Performance section inlines, so refreshing the committed numbers is
+mechanical:
 
     python3 tools/inline_bench.py BENCH_*.json
 
