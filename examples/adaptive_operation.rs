@@ -18,13 +18,22 @@
 //! the end come out mixed, and cards whose slot already matches the new
 //! plan skip their reprogram entirely.
 //!
+//! `SERVE_THREADS=N` serves each window through the lock-free data
+//! plane instead ([`ConcurrentFleet`]): N worker threads route against
+//! immutable snapshots and their record shards batch-flush into the
+//! same history index — bit-identical results at any N, so the
+//! adaptive controller's decisions don't change, only the serve path.
+//! Windows overlapping a rolling reconfiguration take the sequential
+//! fallback automatically.
+//!
 //!     cargo run --release --example adaptive_operation
+//!     SERVE_THREADS=8 cargo run --release --example adaptive_operation
 
 use repro::apps::registry;
 use repro::coordinator::adaptive::{run_adaptive, AdaptiveConfig};
 use repro::coordinator::config::RunConfig;
 use repro::coordinator::Approval;
-use repro::fleet::FleetEnv;
+use repro::fleet::{ConcurrentFleet, FleetEnv};
 use repro::fpga::device::{CardId, ReconfigKind};
 use repro::fpga::part::D5005;
 use repro::offload::{search, OffloadConfig};
@@ -52,7 +61,19 @@ fn main() -> anyhow::Result<()> {
     // the service launches only after the initial outage has passed.
     env.deploy(ReconfigKind::Static, "tdfir", &pre.best.variant, pre.improvement);
     env.advance_to(2.0);
-    println!("fleet: {CARDS} cards, all serving tdfir:{}\n", pre.best.variant);
+
+    // The serve-thread knob: N > 1 fans each window out across the
+    // lock-free data plane; N = 1 serves inline. Either way the results
+    // are bit-identical to the sequential `FleetEnv`.
+    let threads: usize = std::env::var("SERVE_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+    let mut env = ConcurrentFleet::new(env, threads);
+    println!(
+        "fleet: {CARDS} cards, all serving tdfir:{} — {threads} serve thread(s)\n",
+        pre.best.variant
+    );
 
     let cfg = AdaptiveConfig {
         recon: run_cfg.recon.clone(),
@@ -64,9 +85,9 @@ fn main() -> anyhow::Result<()> {
     let mut approval = Approval::auto_yes();
 
     // Drift: from hour 6, MRI-Q traffic disappears and DFT spikes.
-    let reports = run_adaptive(&mut env, &cfg, &mut approval, |w, env: &mut FleetEnv| {
+    let reports = run_adaptive(&mut env, &cfg, &mut approval, |w, env: &mut ConcurrentFleet| {
         if w == 6 {
-            for app in env.registry.iter_mut() {
+            for app in env.fleet.registry.iter_mut() {
                 match app.name {
                     "mriq" => app.rate_per_hour = 0.0,
                     "dft" => app.rate_per_hour = 30.0,
@@ -112,7 +133,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut cards = Table::new(vec!["card", "logic", "reconfigs", "card outage"]);
     for i in 0..CARDS {
-        let card = env.pool.card(CardId(i as u16));
+        let card = env.fleet.pool.card(CardId(i as u16));
         cards.row(vec![
             format!("{i}"),
             card.logic()
@@ -125,8 +146,16 @@ fn main() -> anyhow::Result<()> {
     print!("{}", cards.render());
     println!(
         "\ntotal per-card outage: {:.2} s over 12 h — fleet-level serve stalls: {}",
-        env.pool.total_downtime(),
-        env.serve_stalls(),
+        env.fleet.pool.total_downtime(),
+        env.fleet.serve_stalls(),
+    );
+    let stats = env.stats();
+    println!(
+        "data plane: {} serve thread(s), {} snapshot crossing(s), \
+         {} lock acquisition(s)",
+        env.threads(),
+        stats.crossings,
+        stats.lock_acquisitions,
     );
     Ok(())
 }

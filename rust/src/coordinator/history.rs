@@ -290,6 +290,35 @@ impl HistoryStore {
         }
     }
 
+    /// Batch-flush a merged, arrival-ordered run of records — the data
+    /// plane's control-side flush after a concurrently served window
+    /// (`fleet::plane::merge_shards` restores global arrival order, so
+    /// the per-push monotonicity invariant holds and the resulting index
+    /// is bit-identical to a push-by-push sequential build). Sizes each
+    /// app's columns exactly (like [`HistoryStore::reserve_trace`]) and
+    /// pushes through the same single entry point.
+    pub fn extend_sorted(&mut self, records: &[RequestRecord]) {
+        self.records.reserve(records.len());
+        if let Some(max_app) = records.iter().map(|r| r.app.0 as usize).max() {
+            if max_app >= self.columns.len() {
+                self.columns
+                    .resize_with(max_app + 1, || AppColumn::new(self.bin_width));
+            }
+        }
+        let mut counts = vec![0usize; self.columns.len()];
+        for r in records {
+            counts[r.app.0 as usize] += 1;
+        }
+        for (col, &n) in self.columns.iter_mut().zip(&counts) {
+            if n > 0 {
+                col.reserve(n);
+            }
+        }
+        for r in records {
+            self.push(*r);
+        }
+    }
+
     /// Current record-buffer capacity (observability for the
     /// allocation-free invariant).
     pub fn capacity(&self) -> usize {

@@ -82,6 +82,7 @@ use crate::workload::Request;
 
 use super::pool::CardPool;
 use super::router::FleetRouter;
+use super::snapshot::RoutingEvent;
 
 /// How [`FleetEnv::deploy`] moves the fleet to a new logic.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -145,6 +146,15 @@ pub struct FleetEnv {
     /// exact prior plan, coefficient bits included.
     active_plan: Option<ResidencyPlan>,
     roll: Option<Roll>,
+    /// Every routing-state change this environment performed, stamped
+    /// with its effective virtual time (see [`RoutingEvent`]): drains
+    /// and reprograms at the clock that applied them, rejoins at the
+    /// card's exact rejoin time. Appended on the cold control paths
+    /// only (deploy/cutover/roll), never on a steady-state serve, so
+    /// the request path stays allocation-free. The data plane's
+    /// [`super::snapshot::ChainBuilder`] folds a slice of this log into
+    /// an immutable snapshot chain for concurrent replay.
+    routing_log: Vec<RoutingEvent>,
     /// Perf-model cache for non-canonical variants (cold paths), keyed by
     /// `Copy` handles like `ProductionEnv`'s.
     models: HashMap<(AppId, SizeId), PerfModel>,
@@ -171,6 +181,7 @@ impl FleetEnv {
             active: None,
             active_plan: None,
             roll: None,
+            routing_log: Vec::new(),
             models: HashMap::new(),
             registry,
         }
@@ -198,6 +209,7 @@ impl FleetEnv {
         self.active = None;
         self.active_plan = None;
         self.roll = None;
+        self.routing_log.clear();
     }
 
     /// Number of cards in the pool.
@@ -225,6 +237,13 @@ impl FleetEnv {
     /// [`FleetRouter::stalls`]). Zero across a rolling reconfiguration.
     pub fn serve_stalls(&self) -> u64 {
         self.router.stalls()
+    }
+
+    /// The routing-event log, oldest first (cleared by `reset`). Callers
+    /// replaying a window concurrently remember the log length at their
+    /// snapshot point and fold only the slice appended afterwards.
+    pub fn routing_log(&self) -> &[RoutingEvent] {
+        &self.routing_log
     }
 
     pub fn app(&self, name: &str) -> Option<&AppSpec> {
@@ -445,6 +464,12 @@ impl FleetEnv {
     ) -> ReconfigReport {
         let report = self.pool.reconfigure_card(card, at, kind, app, variant, dep);
         self.router.note_deploy(card, dep.app);
+        self.routing_log.push(RoutingEvent::Reprogram {
+            card,
+            dep,
+            outage_until: report.started_at + report.downtime_secs,
+            effective: self.clock.now(),
+        });
         report
     }
 
@@ -487,6 +512,12 @@ impl FleetEnv {
                 if first.is_none() {
                     first = Some(report);
                 }
+            }
+            if !self.router.is_routable(card) {
+                self.routing_log.push(RoutingEvent::Rejoin {
+                    card,
+                    effective: now,
+                });
             }
             self.router.set_routable(card, true);
         }
@@ -540,6 +571,13 @@ impl FleetEnv {
                     break;
                 }
                 // Outage over: the card rejoins holding the new logic.
+                // Logged at `rejoin_at` exactly — the first arrival at
+                // or past it is the first that can route to the card,
+                // whatever clock advance processed the rejoin.
+                self.routing_log.push(RoutingEvent::Rejoin {
+                    card,
+                    effective: rejoin_at,
+                });
                 self.router.set_routable(card, true);
                 roll.reprogramming = None;
             }
@@ -556,6 +594,10 @@ impl FleetEnv {
             roll.next += 1;
             // Drain: stop feeding the card now; reprogram once its FIFO
             // backlog clears (future-dated on the card's own timeline).
+            self.routing_log.push(RoutingEvent::Drain {
+                card,
+                effective: now,
+            });
             self.router.set_routable(card, false);
             let start = now.max(self.pool.card(card).busy_until());
             let (dep, app, variant) = &roll.entries[ei];

@@ -35,6 +35,29 @@
 //! to `ProductionEnv` — the proptest-asserted oracle anchoring this
 //! subsystem the same way `history::scan` anchors the columnar index.
 //!
+//! # Control/data-plane split
+//!
+//! Above the single-threaded environment sits a lock-free serve path:
+//!
+//!  * [`snapshot`] — immutable [`RouterSnapshot`]s of the routing state
+//!    (holder index, per-card deployments, outage patches) published on
+//!    a [`SnapshotChain`]; data-plane readers cross snapshots by request
+//!    *arrival time*, never by wall-clock publication order, which is
+//!    what keeps an N-thread replay bit-identical to the oracle;
+//!  * [`plane`] — the N-thread data plane: a deterministic app/card
+//!    partition ([`plane::ShardAssignment`]), per-worker serve loops
+//!    against the chain ([`plane::serve_shard`] — no lock, no
+//!    allocation), sharded record columns merged back in arrival order
+//!    and batch-flushed into the history index, and [`ConcurrentFleet`],
+//!    the [`crate::coordinator::Environment`] wrapper the controller
+//!    drives exactly like a `FleetEnv`.
+//!
+//! `FleetEnv` stays the bit-identical oracle: `tests/proptests.rs`
+//! asserts merged shard output, history-index queries, and recon
+//! outcomes match the sequential environment bit for bit;
+//! `benches/concurrent_serve.rs` gates the serve-path scaling and the
+//! zero-lock/zero-stall mid-swap behavior.
+//!
 //! `benches/fleet_scaling.rs` measures served-request throughput at
 //! N = 1, 2, 4, 8 cards and asserts the roll adds zero stalls;
 //! `benches/downtime.rs` contrasts rolling against cutover;
@@ -42,9 +65,13 @@
 //! homogeneous plan and the routing index against the linear scan.
 
 pub mod env;
+pub mod plane;
 pub mod pool;
 pub mod router;
+pub mod snapshot;
 
 pub use env::{FleetEnv, ReconfigStrategy};
+pub use plane::{ConcurrentFleet, DataShard, PlaneStats, ShardAssignment};
 pub use pool::CardPool;
 pub use router::FleetRouter;
+pub use snapshot::{ChainBuilder, RouterSnapshot, RoutingEvent, SnapshotChain};

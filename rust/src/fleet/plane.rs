@@ -1,0 +1,746 @@
+//! The data plane: N serve threads against immutable routing snapshots,
+//! with sharded, batch-flushed history.
+//!
+//! # The split
+//!
+//! [`FleetEnv`] is the single-threaded oracle: serving, routing-state
+//! maintenance, and the step 1-7 controller share one thread of virtual
+//! time. This module splits that into
+//!
+//!  * a **data plane** — [`serve_shard`] workers, each owning a disjoint
+//!    set of apps *and the cards those apps route to*, serving requests
+//!    against a [`SnapshotChain`] (wait-free `Acquire` reads, never a
+//!    lock, never an allocation on the request path) and appending
+//!    records to a per-worker shard column; and
+//!  * a **control plane** — whoever owns the `FleetEnv`: it runs the
+//!    recon/adaptive loop against the merged history and publishes
+//!    routing changes as snapshots (deploy/drain/rejoin), either ahead
+//!    of a replay (via [`ChainBuilder`]) or live mid-serve
+//!    ([`SnapshotChain::publish`]).
+//!
+//! # Why the partition makes N-thread serving bit-identical
+//!
+//! Card FIFO horizons are sequential state: two threads feeding one card
+//! would race its `busy_until`. [`ShardAssignment`] therefore
+//! unions every app with every card that *ever* holds it across the
+//! chain's snapshots (union-find), yielding app-groups whose card sets
+//! are disjoint; each group lands on exactly one worker. Within a
+//! worker, requests arrive in trace order (the split is stable), so each
+//! card sees exactly the arrival sequence the single-threaded oracle fed
+//! it, and every route/schedule computation is the same `f64` expression
+//! — bit-identical by construction, regardless of thread interleaving.
+//! Apps resident on no card (pure CPU fallback) are stateless and hash
+//! across workers for balance.
+//!
+//! Shards are merged by `(arrival, id)` — the original trace order,
+//! since `workload::generate` assigns ids in arrival order — and
+//! batch-flushed into the per-app columnar [`HistoryStore`], whose
+//! contents then match the oracle's push-by-push build exactly
+//! (`tests/proptests.rs` asserts records, index queries, and recon
+//! outcomes bitwise; `benches/concurrent_serve.rs` gates the scaling).
+//!
+//! # [`ConcurrentFleet`]
+//!
+//! An [`Environment`] wrapper that serves each window through the data
+//! plane and delegates everything else to the inner [`FleetEnv`].
+//! Policy: windows that overlap an in-flight rolling reconfiguration
+//! run on the sequential path (control actions are rare and cold);
+//! steady-state windows — the overwhelming majority — fan out across
+//! the serve threads. Either way the resulting environment state
+//! (records, history index, card horizons, stall counts, clock) is
+//! bit-identical to a `FleetEnv` serving the same windows, for every
+//! thread count including N=1, so `run_reconfiguration` /
+//! `run_adaptive` drive it unchanged and decide identically.
+//! Mid-window snapshot swaps (the live-publication path) are exercised
+//! by the replay API and the bench, where the virtual-time crossing
+//! rule keeps results deterministic.
+
+use crate::apps::VariantId;
+use crate::apps::{AppId, AppSpec, SizeId};
+use crate::coordinator::env::Environment;
+use crate::coordinator::history::{HistoryStore, RequestRecord, ServedBy};
+use crate::coordinator::recon::ResidencyPlan;
+use crate::coordinator::server::Deployment;
+use crate::fpga::device::{CardId, ReconfigKind, ReconfigReport};
+use crate::fpga::perf::ServiceTimeTable;
+use crate::workload::Request;
+
+use super::env::FleetEnv;
+use super::snapshot::{ChainBuilder, SnapshotChain};
+
+/// Per-card scheduling horizons a worker replicates `FpgaDevice` math
+/// on: `busy` is the FIFO horizon, `outage` the reconfiguration window
+/// end. Captured from the pool at the replay's snapshot point.
+#[derive(Clone, Debug)]
+pub struct CardHorizons {
+    pub busy: Vec<f64>,
+    pub outage: Vec<f64>,
+}
+
+impl CardHorizons {
+    pub fn from_pool(pool: &crate::fleet::CardPool) -> Self {
+        CardHorizons {
+            busy: pool.cards().iter().map(|c| c.busy_until()).collect(),
+            outage: pool.cards().iter().map(|c| c.outage_until()).collect(),
+        }
+    }
+}
+
+/// The deterministic trace partition: which worker owns each app (and
+/// therefore each card its requests can route to). Built per chain —
+/// holders may differ between chains, never within one worker's view.
+#[derive(Clone, Debug)]
+pub struct ShardAssignment {
+    pub threads: usize,
+    /// Owning worker per app handle.
+    pub worker_of_app: Vec<u16>,
+    /// Owning worker per card index (cards no app ever holds stay with
+    /// worker 0; no request can route to them).
+    pub worker_of_card: Vec<u16>,
+}
+
+impl ShardAssignment {
+    /// Union every app with every card that holds it in *any* snapshot
+    /// of `chain` (holders and per-card deployments both count), then
+    /// deal the resulting app-groups round-robin across `threads`
+    /// workers. CPU-only apps (no card anywhere in the chain) spread by
+    /// `app % threads`.
+    pub fn for_chain(chain: &SnapshotChain, apps: usize, cards: usize, threads: usize) -> Self {
+        assert!(threads >= 1, "at least one serve thread");
+        // Union-find over apps (0..apps) ∪ cards (apps..apps+cards).
+        let mut parent: Vec<u32> = (0..(apps + cards) as u32).collect();
+        fn find(parent: &mut [u32], x: u32) -> u32 {
+            let mut r = x;
+            while parent[r as usize] != r {
+                r = parent[r as usize];
+            }
+            // Path compression.
+            let mut c = x;
+            while parent[c as usize] != r {
+                let next = parent[c as usize];
+                parent[c as usize] = r;
+                c = next;
+            }
+            r
+        }
+        let mut union = |parent: &mut Vec<u32>, a: u32, b: u32| {
+            let (ra, rb) = (find(parent, a), find(parent, b));
+            if ra != rb {
+                // Deterministic: smaller root wins.
+                let (lo, hi) = if ra < rb { (ra, rb) } else { (rb, ra) };
+                parent[hi as usize] = lo;
+            }
+        };
+        for snap in chain.snapshots() {
+            for (a, held) in snap.holders.iter().enumerate() {
+                for &c in held {
+                    union(&mut parent, a as u32, (apps + c as usize) as u32);
+                }
+            }
+            for (c, dep) in snap.card_dep.iter().enumerate() {
+                if let Some(dep) = dep {
+                    union(&mut parent, dep.app.0 as u32, (apps + c) as u32);
+                }
+            }
+        }
+        // Groups that own at least one card get workers round-robin in
+        // order of their lowest card index (deterministic).
+        let mut worker_of_root: Vec<Option<u16>> = vec![None; apps + cards];
+        let mut next_worker = 0u16;
+        let mut worker_of_card = vec![0u16; cards];
+        for c in 0..cards {
+            let root = find(&mut parent, (apps + c) as u32) as usize;
+            let w = *worker_of_root[root].get_or_insert_with(|| {
+                let w = next_worker % threads as u16;
+                next_worker += 1;
+                w
+            });
+            worker_of_card[c] = w;
+        }
+        let mut worker_of_app = vec![0u16; apps];
+        for (a, w) in worker_of_app.iter_mut().enumerate() {
+            let root = find(&mut parent, a as u32) as usize;
+            *w = worker_of_root[root].unwrap_or((a % threads) as u16);
+        }
+        ShardAssignment {
+            threads,
+            worker_of_app,
+            worker_of_card,
+        }
+    }
+
+    /// Split a trace into per-worker sub-traces, preserving order (the
+    /// stable partition that keeps every card's arrival sequence equal
+    /// to the oracle's). Requests with out-of-range app handles land on
+    /// worker 0, whose serve reports the error.
+    pub fn split(&self, trace: &[Request]) -> Vec<Vec<Request>> {
+        let mut subs: Vec<Vec<Request>> = vec![Vec::new(); self.threads];
+        for r in trace {
+            let w = self
+                .worker_of_app
+                .get(r.app.0 as usize)
+                .copied()
+                .unwrap_or(0) as usize;
+            subs[w].push(*r);
+        }
+        subs
+    }
+}
+
+/// One worker's mutable state: replicated card horizons, the record
+/// shard, and counters. `busy`/`outage` are full-width arrays (every
+/// card), but only the worker's owned cards are ever read or written on
+/// the serve path — the partition guarantees it.
+#[derive(Clone, Debug)]
+pub struct DataShard {
+    pub worker: u16,
+    pub busy: Vec<f64>,
+    pub outage: Vec<f64>,
+    /// Records in sub-trace order (a sorted-by-`(arrival, id)` run).
+    pub records: Vec<RequestRecord>,
+    /// Requests that arrived inside their serving card's outage window.
+    pub stalls: u64,
+    /// Snapshot crossings this worker performed.
+    pub crossings: u64,
+}
+
+impl DataShard {
+    pub fn new(worker: u16, init: &CardHorizons) -> Self {
+        DataShard {
+            worker,
+            busy: init.busy.clone(),
+            outage: init.outage.clone(),
+            records: Vec::new(),
+            stalls: 0,
+            crossings: 0,
+        }
+    }
+
+    /// Rewind to the initial horizons and clear the shard — benches
+    /// replay the same window many times without reallocating.
+    pub fn reset(&mut self, init: &CardHorizons) {
+        self.busy.copy_from_slice(&init.busy);
+        self.outage.copy_from_slice(&init.outage);
+        self.records.clear();
+        self.stalls = 0;
+        self.crossings = 0;
+    }
+}
+
+/// Data-plane counters, aggregated over shards. `lock_acquisitions` is
+/// structural — the serve path takes no lock anywhere (snapshot reads
+/// are `Acquire` pointer loads, shard state is thread-local), so the
+/// field exists to make the claim explicit and gateable, and is always
+/// zero.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlaneStats {
+    pub crossings: u64,
+    pub stalls: u64,
+    pub lock_acquisitions: u64,
+}
+
+impl PlaneStats {
+    pub fn accumulate(&mut self, shards: &[DataShard]) {
+        for s in shards {
+            self.crossings += s.crossings;
+            self.stalls += s.stalls;
+        }
+    }
+}
+
+/// Serve one worker's sub-trace against the snapshot chain. This is the
+/// data-plane hot loop: per request, (1) cross any snapshots now in
+/// force (`effective_from <= arrival`), applying their card patches;
+/// (2) route over the current snapshot's holders — the same
+/// `max(arrival, busy, outage)` expression and strict-`<` lowest-index
+/// tie-break as `FleetRouter::route`; (3) schedule on the worker-local
+/// horizons exactly as `FpgaDevice::schedule` would; (4) push the
+/// record. No lock, and no allocation once `shard.records` is reserved
+/// (`tests/serve_alloc.rs` probes it with the counting allocator).
+pub fn serve_shard(
+    shard: &mut DataShard,
+    sub: &[Request],
+    chain: &SnapshotChain,
+    table: &ServiceTimeTable,
+) -> anyhow::Result<()> {
+    let mut cursor = chain.cursor();
+    for req in sub {
+        while let Some(snap) = cursor.try_advance(req.arrival) {
+            for p in &snap.patches {
+                // `FpgaDevice::reconfigure`'s horizon fold, applied at
+                // the crossing; idempotent if the initial horizons
+                // already included it.
+                let c = p.card as usize;
+                shard.outage[c] = p.outage_until;
+                if shard.busy[c] < p.outage_until {
+                    shard.busy[c] = p.outage_until;
+                }
+            }
+            shard.crossings += 1;
+        }
+        let snap = cursor.current();
+        let mut best: Option<(f64, u16)> = None;
+        for &c in snap.holders(req.app) {
+            let ci = c as usize;
+            let start = req.arrival.max(shard.busy[ci]).max(shard.outage[ci]);
+            let better = match best {
+                None => true,
+                Some((b, _)) => start < b,
+            };
+            if better {
+                best = Some((start, c));
+            }
+        }
+        let record = if let Some((start, c)) = best {
+            let ci = c as usize;
+            let dep = snap.card_dep[ci].expect("routed card holds logic");
+            let service = table
+                .service_time(req.app, req.size, dep.variant)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("request {} has out-of-range app/size handles", req.id)
+                })?;
+            if req.arrival < shard.outage[ci] {
+                shard.stalls += 1;
+            }
+            let finish = start + service;
+            shard.busy[ci] = finish;
+            RequestRecord {
+                id: req.id,
+                app: req.app,
+                size: req.size,
+                bytes: req.bytes,
+                arrival: req.arrival,
+                start,
+                finish,
+                service_secs: service,
+                served_by: ServedBy::Fpga(CardId(c)),
+            }
+        } else {
+            let service = table
+                .service_time(req.app, req.size, VariantId::CPU)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("request {} has out-of-range app/size handles", req.id)
+                })?;
+            RequestRecord {
+                id: req.id,
+                app: req.app,
+                size: req.size,
+                bytes: req.bytes,
+                arrival: req.arrival,
+                start: req.arrival,
+                finish: req.arrival + service,
+                service_secs: service,
+                served_by: ServedBy::Cpu,
+            }
+        };
+        shard.records.push(record);
+    }
+    Ok(())
+}
+
+/// Serve every shard, one scoped thread per worker (the single-shard
+/// case runs inline — N=1 spawns nothing). Panics in a worker propagate;
+/// serve errors (out-of-range handles) are returned.
+pub fn serve_all(
+    shards: &mut [DataShard],
+    subs: &[Vec<Request>],
+    chain: &SnapshotChain,
+    table: &ServiceTimeTable,
+) -> anyhow::Result<()> {
+    assert_eq!(shards.len(), subs.len(), "one sub-trace per shard");
+    if shards.len() == 1 {
+        return serve_shard(&mut shards[0], &subs[0], chain, table);
+    }
+    let results: Vec<anyhow::Result<()>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = shards
+            .iter_mut()
+            .zip(subs)
+            .map(|(shard, sub)| scope.spawn(move || serve_shard(shard, sub, chain, table)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("serve worker panicked"))
+            .collect()
+    });
+    for r in results {
+        r?;
+    }
+    Ok(())
+}
+
+/// K-way merge of shard records by `(arrival, id)` — the original trace
+/// order (`workload::generate` ids are trace positions). Shard runs are
+/// already sorted, so this is a linear scan over ≤ `threads` heads.
+pub fn merge_shards(shards: &[DataShard]) -> Vec<RequestRecord> {
+    let total: usize = shards.iter().map(|s| s.records.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    let mut idx = vec![0usize; shards.len()];
+    for _ in 0..total {
+        let mut best: Option<(f64, u64, usize)> = None;
+        for (si, s) in shards.iter().enumerate() {
+            if let Some(r) = s.records.get(idx[si]) {
+                let better = match best {
+                    None => true,
+                    Some((a, id, _)) => (r.arrival, r.id) < (a, id),
+                };
+                if better {
+                    best = Some((r.arrival, r.id, si));
+                }
+            }
+        }
+        let (_, _, si) = best.expect("total counted above");
+        out.push(shards[si].records[idx[si]]);
+        idx[si] += 1;
+    }
+    out
+}
+
+/// Batch-flush merged records into the columnar history index (see
+/// [`HistoryStore::extend_sorted`] — the merge restored global arrival
+/// order, so the store's non-decreasing push invariant holds and the
+/// resulting index is bit-identical to a push-by-push sequential build).
+pub fn flush_records(history: &mut HistoryStore, merged: &[RequestRecord]) {
+    history.extend_sorted(merged);
+}
+
+/// Convenience wrapper: assign, split, serve (scoped threads), and
+/// return (shards, merged records, stats). Benches and tests that want
+/// to reuse buffers across repeated runs use the pieces directly.
+pub fn run_partitioned(
+    trace: &[Request],
+    chain: &SnapshotChain,
+    table: &ServiceTimeTable,
+    init: &CardHorizons,
+    apps: usize,
+    threads: usize,
+) -> anyhow::Result<(Vec<DataShard>, Vec<RequestRecord>, PlaneStats)> {
+    let assign = ShardAssignment::for_chain(chain, apps, init.busy.len(), threads);
+    let subs = assign.split(trace);
+    let mut shards: Vec<DataShard> = (0..threads)
+        .map(|w| {
+            let mut s = DataShard::new(w as u16, init);
+            s.records.reserve(subs[w].len());
+            s
+        })
+        .collect();
+    serve_all(&mut shards, &subs, chain, table)?;
+    let merged = merge_shards(&shards);
+    let mut stats = PlaneStats::default();
+    stats.accumulate(&shards);
+    Ok((shards, merged, stats))
+}
+
+/// A [`FleetEnv`] whose windows are served by the data plane (see the
+/// module docs for the policy). Implements [`Environment`], so the
+/// §3.3 controller and the Step-7 adaptive loop drive it unchanged —
+/// and decide bit-identically to the sequential fleet.
+pub struct ConcurrentFleet {
+    /// The inner environment — the control plane's state of record
+    /// (pool horizons, router, history, clock). Public so reports and
+    /// examples can read it like a plain `FleetEnv`.
+    pub fleet: FleetEnv,
+    threads: usize,
+    stats: PlaneStats,
+}
+
+impl ConcurrentFleet {
+    pub fn new(fleet: FleetEnv, threads: usize) -> Self {
+        assert!(threads >= 1, "at least one serve thread");
+        ConcurrentFleet {
+            fleet,
+            threads,
+            stats: PlaneStats::default(),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Data-plane counters accumulated over concurrently served
+    /// windows (sequential-fallback windows don't count here).
+    pub fn stats(&self) -> PlaneStats {
+        self.stats
+    }
+
+    pub fn into_inner(self) -> FleetEnv {
+        self.fleet
+    }
+
+    /// Serve one window through the data plane: snapshot the current
+    /// routing state, fan the trace out across the serve threads, then
+    /// merge, batch-flush into the history index, and sync card
+    /// horizons and stall counts back into the fleet. Windows that
+    /// overlap an in-flight roll take the sequential path instead
+    /// (identical semantics, no fan-out).
+    pub fn run_window_concurrent(
+        &mut self,
+        trace: &[Request],
+    ) -> anyhow::Result<(f64, f64)> {
+        anyhow::ensure!(!trace.is_empty(), "empty trace");
+        if self.fleet.roll_in_progress() {
+            return self.fleet.run_window(trace);
+        }
+        let from = self.fleet.clock.now();
+        // No control actions happen mid-window here, so the chain is a
+        // single root snapshot of the current routing state; live
+        // mid-window publication is the replay/bench path.
+        let mut builder = ChainBuilder::from_env(&self.fleet);
+        let chain = builder.chain(&[]);
+        let init = CardHorizons::from_pool(&self.fleet.pool);
+        let assign = ShardAssignment::for_chain(
+            &chain,
+            self.fleet.registry.len(),
+            self.fleet.pool.len(),
+            self.threads,
+        );
+        let subs = assign.split(trace);
+        let mut shards: Vec<DataShard> = (0..self.threads)
+            .map(|w| {
+                let mut s = DataShard::new(w as u16, &init);
+                s.records.reserve(subs[w].len());
+                s
+            })
+            .collect();
+        serve_all(&mut shards, &subs, &chain, &self.fleet.table)?;
+        // Control-plane flush: merged records into the columnar index,
+        // worker horizons back onto the cards, stalls onto the router.
+        let merged = merge_shards(&shards);
+        flush_records(&mut self.fleet.history, &merged);
+        for c in 0..self.fleet.pool.len() {
+            let owner = &shards[assign.worker_of_card[c] as usize];
+            self.fleet.pool.sync_busy(CardId(c as u16), owner.busy[c]);
+        }
+        let stalls: u64 = shards.iter().map(|s| s.stalls).sum();
+        self.fleet.router.record_stalls(stalls);
+        self.stats.accumulate(&shards);
+        let to = trace.last().unwrap().arrival.max(self.fleet.clock.now());
+        self.fleet.advance_to(to);
+        Ok((from, to))
+    }
+}
+
+impl Environment for ConcurrentFleet {
+    fn registry(&self) -> &[AppSpec] {
+        &self.fleet.registry
+    }
+
+    fn registry_mut(&mut self) -> &mut [AppSpec] {
+        &mut self.fleet.registry
+    }
+
+    fn now(&self) -> f64 {
+        self.fleet.clock.now()
+    }
+
+    fn history(&self) -> &HistoryStore {
+        &self.fleet.history
+    }
+
+    fn deployment(&self) -> Option<Deployment> {
+        self.fleet.active()
+    }
+
+    fn improvement_coef(&self, app: AppId) -> f64 {
+        Environment::improvement_coef(&self.fleet, app)
+    }
+
+    fn app_name(&self, id: AppId) -> &str {
+        FleetEnv::app_name(&self.fleet, id)
+    }
+
+    fn size_name(&self, app: AppId, size: SizeId) -> &str {
+        FleetEnv::size_name(&self.fleet, app, size)
+    }
+
+    fn app_spec(&self, name: &str) -> Option<&AppSpec> {
+        FleetEnv::app(&self.fleet, name)
+    }
+
+    fn cpu_time(&self, app: &str, size: &str) -> anyhow::Result<f64> {
+        FleetEnv::cpu_time(&self.fleet, app, size)
+    }
+
+    fn offloaded_time(
+        &mut self,
+        app: &str,
+        size: &str,
+        variant: &str,
+    ) -> anyhow::Result<f64> {
+        FleetEnv::offloaded_time(&mut self.fleet, app, size, variant)
+    }
+
+    fn cards(&self) -> usize {
+        self.fleet.pool.len()
+    }
+
+    fn is_resident(&self, app: AppId, variant: VariantId) -> bool {
+        Environment::is_resident(&self.fleet, app, variant)
+    }
+
+    fn residency(&self) -> Option<ResidencyPlan> {
+        FleetEnv::residency(&self.fleet)
+    }
+
+    fn deploy(
+        &mut self,
+        kind: ReconfigKind,
+        app: &str,
+        variant: &str,
+        improvement_coef: f64,
+    ) -> ReconfigReport {
+        FleetEnv::deploy(&mut self.fleet, kind, app, variant, improvement_coef)
+    }
+
+    fn deploy_plan(&mut self, kind: ReconfigKind, plan: &ResidencyPlan) -> ReconfigReport {
+        FleetEnv::deploy_plan(&mut self.fleet, kind, plan)
+    }
+
+    fn serve(&mut self, req: &Request) -> anyhow::Result<RequestRecord> {
+        // Single out-of-band serves go through the control plane's
+        // sequential path (arrival monotonicity spans both paths).
+        FleetEnv::serve(&mut self.fleet, req)
+    }
+
+    fn run_window(&mut self, trace: &[Request]) -> anyhow::Result<(f64, f64)> {
+        self.run_window_concurrent(trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::registry;
+    use crate::fpga::part::D5005;
+    use crate::workload::generate;
+
+    fn bitwise_equal(a: &[RequestRecord], b: &[RequestRecord]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| {
+                x.id == y.id
+                    && x.app == y.app
+                    && x.size == y.size
+                    && x.served_by == y.served_by
+                    && x.arrival.to_bits() == y.arrival.to_bits()
+                    && x.start.to_bits() == y.start.to_bits()
+                    && x.finish.to_bits() == y.finish.to_bits()
+                    && x.service_secs.to_bits() == y.service_secs.to_bits()
+            })
+    }
+
+    fn deployed_fleet(cards: usize) -> FleetEnv {
+        let mut env = FleetEnv::new(registry(), D5005, cards);
+        env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+        env
+    }
+
+    #[test]
+    fn replay_matches_sequential_serve_across_thread_counts() {
+        let mut oracle = deployed_fleet(4);
+        let mut trace = generate(&oracle.registry, 900.0, 23);
+        for r in &mut trace {
+            r.arrival += 2.0;
+        }
+        let mut builder = ChainBuilder::from_env(&oracle);
+        let init = CardHorizons::from_pool(&oracle.pool);
+        for r in &trace {
+            oracle.serve(r).unwrap();
+        }
+        assert!(
+            oracle.routing_log().len() == 4,
+            "initial cutover logged one reprogram per card"
+        );
+        let chain = builder.chain(&[]); // no events after the snapshot
+        for threads in [1, 2, 3, 8] {
+            let (shards, merged, stats) = run_partitioned(
+                &trace,
+                &chain,
+                &oracle.table,
+                &init,
+                oracle.registry.len(),
+                threads,
+            )
+            .unwrap();
+            assert_eq!(shards.len(), threads);
+            assert!(bitwise_equal(&merged, oracle.history.all()), "{threads} threads");
+            assert_eq!(stats.stalls, oracle.serve_stalls(), "{threads} threads");
+            assert_eq!(stats.lock_acquisitions, 0);
+        }
+    }
+
+    #[test]
+    fn assignment_keeps_each_apps_cards_on_one_worker() {
+        let env = deployed_fleet(6);
+        let mut builder = ChainBuilder::from_env(&env);
+        let chain = builder.chain(&[]);
+        let assign =
+            ShardAssignment::for_chain(&chain, env.registry.len(), env.pool.len(), 4);
+        // All six cards hold tdfir: one group, one worker.
+        let w0 = assign.worker_of_card[0];
+        assert!(assign.worker_of_card.iter().all(|&w| w == w0));
+        let td = crate::apps::app_id(&env.registry, "tdfir").unwrap();
+        assert_eq!(assign.worker_of_app[td.0 as usize], w0);
+        // CPU-only apps spread deterministically.
+        for (a, &w) in assign.worker_of_app.iter().enumerate() {
+            if AppId(a as u16) != td {
+                assert_eq!(w as usize, a % 4);
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_fleet_window_is_bit_identical_to_fleet_env() {
+        for threads in [1, 3] {
+            let mut seq = deployed_fleet(4);
+            let mut conc = ConcurrentFleet::new(deployed_fleet(4), threads);
+            let mut trace = generate(&seq.registry, 600.0, 9);
+            for r in &mut trace {
+                r.arrival += 2.0;
+            }
+            let (f1, t1) = seq.run_window(&trace).unwrap();
+            let (f2, t2) = conc.run_window_concurrent(&trace).unwrap();
+            assert_eq!(f1.to_bits(), f2.to_bits());
+            assert_eq!(t1.to_bits(), t2.to_bits());
+            assert!(bitwise_equal(seq.history.all(), conc.fleet.history.all()));
+            assert_eq!(seq.serve_stalls(), conc.fleet.serve_stalls());
+            assert_eq!(
+                seq.clock.now().to_bits(),
+                conc.fleet.clock.now().to_bits()
+            );
+            for c in 0..4 {
+                let id = CardId(c as u16);
+                assert_eq!(
+                    seq.pool.card(id).busy_until().to_bits(),
+                    conc.fleet.pool.card(id).busy_until().to_bits(),
+                    "card {c} horizon"
+                );
+            }
+            assert_eq!(conc.stats().lock_acquisitions, 0);
+        }
+    }
+
+    #[test]
+    fn roll_windows_fall_back_to_the_sequential_path() {
+        let mut conc = ConcurrentFleet::new(deployed_fleet(4), 2);
+        let mut seq = deployed_fleet(4);
+        let mut warm = generate(&seq.registry, 300.0, 3);
+        for r in &mut warm {
+            r.arrival += 2.0;
+        }
+        seq.run_window(&warm).unwrap();
+        conc.run_window_concurrent(&warm).unwrap();
+        // Start a roll on both; the next window must still match.
+        seq.deploy(ReconfigKind::Static, "mriq", "o1", 2.0);
+        Environment::deploy(&mut conc, ReconfigKind::Static, "mriq", "o1", 2.0);
+        assert!(conc.fleet.roll_in_progress());
+        let mut next = generate(&seq.registry, 300.0, 4);
+        let t0 = seq.clock.now() + 1e-6;
+        for r in &mut next {
+            r.arrival += t0;
+        }
+        seq.run_window(&next).unwrap();
+        conc.run_window_concurrent(&next).unwrap();
+        assert!(bitwise_equal(seq.history.all(), conc.fleet.history.all()));
+        assert_eq!(seq.serve_stalls(), conc.fleet.serve_stalls());
+    }
+}

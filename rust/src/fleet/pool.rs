@@ -118,6 +118,14 @@ impl CardPool {
         (start, finish, stalled)
     }
 
+    /// Sync one card's FIFO horizon to a worker-computed value — the
+    /// data plane's batch flush after a concurrently served window (see
+    /// [`FpgaDevice::advance_busy_to`]; outage horizons are untouched,
+    /// serving never changes them).
+    pub fn sync_busy(&mut self, id: CardId, busy_until: f64) {
+        self.cards[id.0 as usize].advance_busy_to(busy_until);
+    }
+
     /// Total outage seconds charged across all cards (sum of per-card
     /// reconfiguration downtimes).
     pub fn total_downtime(&self) -> f64 {

@@ -165,6 +165,12 @@ impl FleetRouter {
         self.stalls += 1;
     }
 
+    /// Fold a batch of stalls counted off-router (the data plane's
+    /// per-shard counters, merged at flush time).
+    pub fn record_stalls(&mut self, n: u64) {
+        self.stalls += n;
+    }
+
     /// Total requests routed into outage windows since construction.
     pub fn stalls(&self) -> u64 {
         self.stalls

@@ -1,0 +1,465 @@
+//! Immutable routing snapshots and the lock-free chain that publishes
+//! them from the control plane to the data plane.
+//!
+//! # Why snapshots
+//!
+//! [`FleetEnv`] interleaves serving and control on one thread of virtual
+//! time: every `serve` may advance a rolling reconfiguration, so routing
+//! state (`FleetRouter` holders, per-card outage horizons) mutates
+//! mid-trace. To serve the same trace from N threads without a lock, the
+//! control flow is inverted: every routing-state change is captured as a
+//! [`RoutingEvent`] with its *effective virtual time*, folded into an
+//! immutable [`RouterSnapshot`], and published on a [`SnapshotChain`].
+//! Data-plane workers read the chain wait-free — an `Acquire` pointer
+//! load per check, no lock, no refcount, no allocation — and cross to
+//! the next snapshot when a request's arrival reaches its
+//! `effective_from`. Keying the crossing on *virtual* arrival time
+//! rather than wall-clock publication order is what makes an N-thread
+//! replay bit-identical to the single-threaded oracle: whichever worker
+//! looks first, a request at arrival `t` is always served under the
+//! snapshot in force at `t`.
+//!
+//! # Event semantics (mirroring `FleetEnv` exactly)
+//!
+//!  * [`RoutingEvent::Drain`] — the card left the rotation at
+//!    `effective` (the clock when `advance_roll` drained it; the
+//!    triggering request itself already sees the drain, and the crossing
+//!    rule `effective <= arrival` reproduces that inclusively).
+//!  * [`RoutingEvent::Reprogram`] — the card's slot changed logic; the
+//!    patch carries the absolute `outage_until` (= start + downtime), so
+//!    applying it to a worker's card horizons replicates
+//!    `FpgaDevice::reconfigure` exactly: `outage = outage_until;
+//!    busy = busy.max(outage_until)`. Applying it twice is idempotent,
+//!    which lets replays start from a pool that already folded the event.
+//!  * [`RoutingEvent::Rejoin`] — the card re-entered the rotation, at
+//!    `rejoin_at` *exactly* (not at the clock that processed it):
+//!    `advance_roll` rejoins when `now >= rejoin_at`, so the first
+//!    arrival `>= rejoin_at` is the first request that can route to the
+//!    card — the same `>=` the crossing rule uses.
+//!
+//! # The chain
+//!
+//! A forward-linked list of heap nodes: the single writer (the control
+//! plane) appends with a `Release` store, readers walk forward from
+//! their cached cursor with `Acquire` loads. Nodes are never freed while
+//! the chain lives (workers borrow `&SnapshotChain` under
+//! `std::thread::scope`), and the whole list drops with the chain — no
+//! reference counting on the read path. [`ChainBuilder`] folds an event
+//! log (e.g. [`FleetEnv::routing_log`]) into a chain, grouping events
+//! that share one effective time into one snapshot.
+
+use std::sync::atomic::{AtomicPtr, Ordering};
+
+use crate::apps::AppId;
+use crate::coordinator::server::Deployment;
+use crate::fpga::device::CardId;
+
+use super::env::FleetEnv;
+use super::router::FleetRouter;
+
+/// One routing-state change, stamped with the virtual time at which it
+/// took effect in the single-threaded environment (see module docs for
+/// the per-variant semantics).
+#[derive(Clone, Copy, Debug)]
+pub enum RoutingEvent {
+    /// Card left the routing rotation (drained for reprogramming).
+    Drain { card: CardId, effective: f64 },
+    /// Card re-entered the rotation.
+    Rejoin { card: CardId, effective: f64 },
+    /// Card's slot was reprogrammed: new interned deployment plus the
+    /// absolute end of the reconfiguration outage on that card's
+    /// timeline (possibly future-dated past `effective` while a drained
+    /// card's FIFO backlog clears).
+    Reprogram {
+        card: CardId,
+        dep: Deployment,
+        outage_until: f64,
+        effective: f64,
+    },
+}
+
+impl RoutingEvent {
+    /// The virtual time this event took effect.
+    pub fn effective(&self) -> f64 {
+        match *self {
+            RoutingEvent::Drain { effective, .. }
+            | RoutingEvent::Rejoin { effective, .. }
+            | RoutingEvent::Reprogram { effective, .. } => effective,
+        }
+    }
+}
+
+/// Card-state delta a worker applies when crossing into a snapshot:
+/// the absolute outage horizon `FpgaDevice::reconfigure` set. The fold
+/// (`outage = outage_until; busy = busy.max(outage_until)`) is
+/// idempotent, so a replay whose initial horizons already include the
+/// reprogram is unaffected.
+#[derive(Clone, Copy, Debug)]
+pub struct CardPatch {
+    pub card: u16,
+    pub outage_until: f64,
+}
+
+/// An immutable view of everything the data plane needs to route: the
+/// per-app holder index, per-card deployments (for the service-time
+/// variant), and the card patches to apply when crossing into it.
+#[derive(Clone, Debug)]
+pub struct RouterSnapshot {
+    /// Requests with `arrival >= effective_from` are served under this
+    /// snapshot (the root uses `f64::NEG_INFINITY`).
+    pub effective_from: f64,
+    /// `holders[app]` — ascending card indices of the routable cards
+    /// holding `app`'s logic, cloned from the builder's `FleetRouter`.
+    pub holders: Vec<Vec<u16>>,
+    /// Per-card deployments, indexed by `CardId.0`.
+    pub card_dep: Vec<Option<Deployment>>,
+    /// Deltas to fold into worker card horizons at the crossing.
+    pub patches: Vec<CardPatch>,
+}
+
+impl RouterSnapshot {
+    /// Routable cards holding `app`, ascending card index (empty for
+    /// out-of-range handles — same contract as `FleetRouter::holders`).
+    pub fn holders(&self, app: AppId) -> &[u16] {
+        self.holders
+            .get(app.0 as usize)
+            .map(Vec::as_slice)
+            .unwrap_or(&[])
+    }
+}
+
+struct Node {
+    snap: RouterSnapshot,
+    next: AtomicPtr<Node>,
+}
+
+/// The published snapshot sequence: a forward-linked list with atomic
+/// `next` pointers. One writer appends ([`SnapshotChain::publish`]),
+/// any number of readers walk forward ([`SnapshotCursor`]); reads are
+/// wait-free and allocation-free. Nodes live until the chain drops.
+pub struct SnapshotChain {
+    head: *mut Node,
+}
+
+// SAFETY: nodes are immutable after publication except `next`, which is
+// only ever CAS'd from null to a fully initialized node (Release) and
+// read with Acquire; the raw head pointer is owned by the chain and
+// freed only on Drop, after all borrows (`cursor`, `snapshots`) end.
+unsafe impl Send for SnapshotChain {}
+unsafe impl Sync for SnapshotChain {}
+
+impl SnapshotChain {
+    /// A chain holding only the root snapshot. The root's
+    /// `effective_from` should be `f64::NEG_INFINITY` (every request is
+    /// at or past it); [`ChainBuilder`] guarantees this.
+    pub fn new(root: RouterSnapshot) -> Self {
+        let node = Box::new(Node {
+            snap: root,
+            next: AtomicPtr::new(std::ptr::null_mut()),
+        });
+        SnapshotChain {
+            head: Box::into_raw(node),
+        }
+    }
+
+    /// Append a snapshot at the tail. Effective times must be
+    /// non-decreasing along the chain (asserted) — the crossing rule
+    /// walks forward only. Lock-free: concurrent publishers race on a
+    /// tail CAS and the loser re-walks, though in this codebase there is
+    /// exactly one publisher (the control plane).
+    pub fn publish(&self, snap: RouterSnapshot) {
+        let node = Box::into_raw(Box::new(Node {
+            snap,
+            next: AtomicPtr::new(std::ptr::null_mut()),
+        }));
+        let mut cur = self.head;
+        loop {
+            // SAFETY: `cur` is the head or a published node; both live
+            // until Drop.
+            let tail = unsafe { &*cur };
+            let next = tail.next.load(Ordering::Acquire);
+            if !next.is_null() {
+                cur = next;
+                continue;
+            }
+            // SAFETY: `node` is initialized above and not yet shared.
+            let eff = unsafe { &*node }.snap.effective_from;
+            assert!(
+                tail.snap.effective_from <= eff,
+                "snapshot chain must be published in non-decreasing \
+                 effective order ({} after {})",
+                eff,
+                tail.snap.effective_from,
+            );
+            match tail.next.compare_exchange(
+                std::ptr::null_mut(),
+                node,
+                Ordering::Release,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return,
+                Err(raced) => cur = raced,
+            }
+        }
+    }
+
+    /// A reader cursor positioned at the root.
+    pub fn cursor(&self) -> SnapshotCursor<'_> {
+        // SAFETY: head lives as long as `self`; the borrow ties the
+        // cursor's lifetime to the chain.
+        SnapshotCursor {
+            cur: unsafe { &*self.head },
+        }
+    }
+
+    /// Snapshots published so far, oldest first (includes the root).
+    pub fn snapshots(&self) -> impl Iterator<Item = &RouterSnapshot> {
+        let mut next = self.head;
+        std::iter::from_fn(move || {
+            if next.is_null() {
+                return None;
+            }
+            // SAFETY: non-null nodes live as long as the chain borrow.
+            let node = unsafe { &*next };
+            next = node.next.load(Ordering::Acquire);
+            Some(&node.snap)
+        })
+    }
+
+    /// Number of snapshots currently published (>= 1: the root).
+    pub fn len(&self) -> usize {
+        self.snapshots().count()
+    }
+
+    /// Never true — a chain always holds its root — but paired with
+    /// `len` for the conventional API shape.
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+}
+
+impl Drop for SnapshotChain {
+    fn drop(&mut self) {
+        let mut cur = self.head;
+        while !cur.is_null() {
+            // SAFETY: every node was leaked via Box::into_raw and is
+            // reachable exactly once along the `next` chain.
+            let node = unsafe { Box::from_raw(cur) };
+            cur = node.next.load(Ordering::Acquire);
+        }
+    }
+}
+
+/// A worker's position on the chain. Advancing is wait-free: one
+/// `Acquire` load to peek the next node, a pointer move to cross.
+pub struct SnapshotCursor<'a> {
+    cur: &'a Node,
+}
+
+impl<'a> SnapshotCursor<'a> {
+    /// The snapshot this cursor currently serves under.
+    pub fn current(&self) -> &'a RouterSnapshot {
+        &self.cur.snap
+    }
+
+    /// Cross into the next snapshot if one is published and in force at
+    /// `arrival` (`effective_from <= arrival`); returns the
+    /// newly-entered snapshot so the caller can apply its patches. Call
+    /// in a loop — several snapshots may come into force between two
+    /// requests.
+    pub fn try_advance(&mut self, arrival: f64) -> Option<&'a RouterSnapshot> {
+        let next = self.cur.next.load(Ordering::Acquire);
+        if next.is_null() {
+            return None;
+        }
+        // SAFETY: published nodes live as long as the chain borrow.
+        let node = unsafe { &*next };
+        if node.snap.effective_from <= arrival {
+            self.cur = node;
+            Some(&node.snap)
+        } else {
+            None
+        }
+    }
+}
+
+/// Folds a [`RoutingEvent`] log into a [`SnapshotChain`], replicating
+/// `FleetEnv`'s router maintenance exactly: the builder owns a
+/// `FleetRouter` replica and per-card deployment mirror, applies events
+/// through the same `set_routable` / `note_deploy` entry points, and
+/// snapshots the holder index after each distinct effective time.
+pub struct ChainBuilder {
+    router: FleetRouter,
+    card_dep: Vec<Option<Deployment>>,
+    apps: usize,
+}
+
+impl ChainBuilder {
+    /// Capture the environment's *current* routing state as the root.
+    /// Pair with the routing-log position at capture time: feed only
+    /// events logged afterwards into [`ChainBuilder::chain`].
+    pub fn from_env(env: &FleetEnv) -> Self {
+        ChainBuilder {
+            router: env.router.clone(),
+            card_dep: env.pool.deployments().to_vec(),
+            apps: env.registry.len(),
+        }
+    }
+
+    fn snapshot(&self, effective_from: f64, patches: Vec<CardPatch>) -> RouterSnapshot {
+        let holders = (0..self.apps)
+            .map(|a| self.router.holders(AppId(a as u16)).to_vec())
+            .collect();
+        RouterSnapshot {
+            effective_from,
+            holders,
+            card_dep: self.card_dep.clone(),
+            patches,
+        }
+    }
+
+    fn apply(&mut self, ev: &RoutingEvent) {
+        match *ev {
+            RoutingEvent::Drain { card, .. } => self.router.set_routable(card, false),
+            RoutingEvent::Rejoin { card, .. } => self.router.set_routable(card, true),
+            RoutingEvent::Reprogram { card, dep, .. } => {
+                self.router.note_deploy(card, dep.app);
+                self.card_dep[card.0 as usize] = Some(dep);
+            }
+        }
+    }
+
+    /// Build a chain: the root is the builder's current state (in force
+    /// from `NEG_INFINITY`), then one snapshot per distinct effective
+    /// time in `events` (which must be non-decreasing — they are, in
+    /// log order). The builder's state advances past the events, so a
+    /// long-running caller can keep folding successive log slices.
+    pub fn chain(&mut self, events: &[RoutingEvent]) -> SnapshotChain {
+        let chain = SnapshotChain::new(self.snapshot(f64::NEG_INFINITY, Vec::new()));
+        let mut i = 0;
+        let mut prev = f64::NEG_INFINITY;
+        while i < events.len() {
+            let t = events[i].effective();
+            assert!(
+                prev <= t,
+                "routing log out of order: {t} after {prev}"
+            );
+            prev = t;
+            let mut patches = Vec::new();
+            let mut j = i;
+            while j < events.len() && events[j].effective().to_bits() == t.to_bits() {
+                self.apply(&events[j]);
+                if let RoutingEvent::Reprogram {
+                    card, outage_until, ..
+                } = events[j]
+                {
+                    patches.push(CardPatch {
+                        card: card.0,
+                        outage_until,
+                    });
+                }
+                j += 1;
+            }
+            chain.publish(self.snapshot(t, patches));
+            i = j;
+        }
+        chain
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::VariantId;
+
+    fn dep(app: u16) -> Deployment {
+        Deployment {
+            app: AppId(app),
+            variant: VariantId(1),
+            improvement_coef: 2.0,
+        }
+    }
+
+    fn snap(effective_from: f64) -> RouterSnapshot {
+        RouterSnapshot {
+            effective_from,
+            holders: vec![vec![0]],
+            card_dep: vec![Some(dep(0))],
+            patches: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn cursor_crosses_on_arrival_not_publication() {
+        let chain = SnapshotChain::new(snap(f64::NEG_INFINITY));
+        chain.publish(snap(10.0));
+        chain.publish(snap(20.0));
+        assert_eq!(chain.len(), 3);
+        assert!(!chain.is_empty());
+        let mut c = chain.cursor();
+        assert!(c.try_advance(5.0).is_none(), "before effective_from");
+        let s = c.try_advance(10.0).expect(">= effective_from crosses");
+        assert_eq!(s.effective_from, 10.0);
+        // Both remaining nodes come into force by t=25: two crossings.
+        let s = c.try_advance(25.0).expect("second crossing");
+        assert_eq!(s.effective_from, 20.0);
+        assert!(c.try_advance(25.0).is_none(), "tail reached");
+        assert_eq!(c.current().effective_from, 20.0);
+    }
+
+    #[test]
+    fn publish_after_readers_started_is_seen_at_the_right_time() {
+        let chain = SnapshotChain::new(snap(f64::NEG_INFINITY));
+        let mut c = chain.cursor();
+        assert!(c.try_advance(100.0).is_none(), "nothing published yet");
+        chain.publish(snap(50.0));
+        let s = c.try_advance(100.0).expect("published node visible");
+        assert_eq!(s.effective_from, 50.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-decreasing")]
+    fn publish_rejects_out_of_order_snapshots() {
+        let chain = SnapshotChain::new(snap(f64::NEG_INFINITY));
+        chain.publish(snap(10.0));
+        chain.publish(snap(5.0));
+    }
+
+    #[test]
+    fn builder_folds_drain_reprogram_rejoin_into_snapshots() {
+        use crate::apps::registry;
+        use crate::fpga::device::ReconfigKind;
+        use crate::fpga::part::D5005;
+
+        let mut env = FleetEnv::new(registry(), D5005, 2);
+        env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.0);
+        let td = crate::apps::app_id(&env.registry, "tdfir").unwrap();
+        let mut b = ChainBuilder::from_env(&env);
+        let events = [
+            RoutingEvent::Drain {
+                card: CardId(0),
+                effective: 10.0,
+            },
+            RoutingEvent::Reprogram {
+                card: CardId(0),
+                dep: dep(td.0),
+                outage_until: 11.0,
+                effective: 10.0,
+            },
+            RoutingEvent::Rejoin {
+                card: CardId(0),
+                effective: 11.0,
+            },
+        ];
+        let chain = b.chain(&events);
+        let snaps: Vec<_> = chain.snapshots().collect();
+        assert_eq!(snaps.len(), 3, "root + drain group + rejoin");
+        assert_eq!(snaps[0].holders(td), &[0, 1], "root: both cards");
+        assert_eq!(snaps[1].holders(td), &[1], "drained: card 1 only");
+        assert_eq!(snaps[1].patches.len(), 1);
+        assert_eq!(snaps[1].patches[0].card, 0);
+        assert_eq!(snaps[1].patches[0].outage_until, 11.0);
+        assert_eq!(snaps[2].holders(td), &[0, 1], "rejoined");
+        assert!(snaps[2].patches.is_empty());
+    }
+}

@@ -128,6 +128,21 @@ impl FpgaDevice {
         (start, finish)
     }
 
+    /// Advance the FIFO horizon to `busy_until` — the data plane's
+    /// batch flush syncing a worker-computed horizon back into the
+    /// card after a concurrently served window (the worker replicated
+    /// [`FpgaDevice::schedule`] bit for bit, so the horizon only ever
+    /// moves forward; asserted). Exact-bits assignment, not a max: the
+    /// synced value *is* the card's horizon.
+    pub fn advance_busy_to(&mut self, busy_until: f64) {
+        debug_assert!(
+            busy_until >= self.busy_until,
+            "FIFO horizon may only advance ({busy_until} < {})",
+            self.busy_until
+        );
+        self.busy_until = busy_until;
+    }
+
     /// Card available (not in an outage window) at `t`?
     pub fn available_at(&self, t: f64) -> bool {
         t >= self.outage_until

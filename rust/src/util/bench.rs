@@ -15,6 +15,11 @@ use crate::util::stats::Summary;
 pub struct Measurement {
     pub name: String,
     pub iters: u64,
+    /// Worker threads the measured section ran on (1 for sequential
+    /// sections; see [`Bench::run_threads`]) — thread-scaling benches
+    /// carry the axis into the JSON artifact so a reader never has to
+    /// parse it back out of section names.
+    pub threads: u64,
     pub mean_s: f64,
     pub p50_s: f64,
     pub p95_s: f64,
@@ -46,6 +51,7 @@ impl Measurement {
         Json::obj()
             .set("name", self.name.as_str())
             .set("iterations", self.iters as i64)
+            .set("threads", self.threads as i64)
             .set("mean_s", self.mean_s)
             .set("p50_s", self.p50_s)
             .set("p95_s", self.p95_s)
@@ -108,7 +114,19 @@ impl Bench {
     }
 
     /// Time `f` repeatedly; returns and records the measurement.
-    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> Measurement {
+    pub fn run<F: FnMut()>(&mut self, name: &str, f: F) -> Measurement {
+        self.run_threads(name, 1, f)
+    }
+
+    /// Like [`Bench::run`] for a section whose body fans work out across
+    /// `threads` workers; the count is carried into the measurement and
+    /// the JSON artifact (the thread-scaling axis).
+    pub fn run_threads<F: FnMut()>(
+        &mut self,
+        name: &str,
+        threads: u64,
+        mut f: F,
+    ) -> Measurement {
         // Warmup.
         let w0 = Instant::now();
         while w0.elapsed() < self.warmup {
@@ -127,6 +145,7 @@ impl Bench {
         let m = Measurement {
             name: name.to_string(),
             iters,
+            threads,
             mean_s: s.mean(),
             p50_s: s.median(),
             p95_s: s.percentile(95.0),
@@ -143,6 +162,7 @@ impl Bench {
         let m = Measurement {
             name: name.to_string(),
             iters: 1,
+            threads: 1,
             mean_s: seconds,
             p50_s: seconds,
             p95_s: seconds,
@@ -164,6 +184,11 @@ impl Bench {
     ///
     /// `units` maps section name → work items per iteration; sections not
     /// listed default to 1 unit per iteration.
+    ///
+    /// A `host_cores` extra (the runner's available parallelism) is
+    /// always included, so thread-scaling artifacts record how many
+    /// cores the numbers were taken on; caller extras of the same name
+    /// override it.
     pub fn write_json(
         &self,
         path: &str,
@@ -179,7 +204,12 @@ impl Bench {
                 .unwrap_or(1.0);
             sections.push(m.to_json(u));
         }
-        let mut root = Json::obj().set("sections", Json::Arr(sections));
+        let cores = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let mut root = Json::obj()
+            .set("sections", Json::Arr(sections))
+            .set("host_cores", cores as f64);
         for (k, v) in extras {
             root = root.set(k, *v);
         }
@@ -205,7 +235,12 @@ mod tests {
         assert!(m.iters > 0);
         assert!(m.mean_s >= 0.0);
         assert!(m.p95_s >= m.p50_s || m.iters < 3);
-        assert_eq!(b.results().len(), 1);
+        assert_eq!(m.threads, 1, "plain run is a one-thread section");
+        let m = b.run_threads("spin8", 8, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(m.threads, 8);
+        assert_eq!(b.results().len(), 2);
     }
 
     #[test]
@@ -213,5 +248,8 @@ mod tests {
         let mut b = Bench::new();
         let m = b.record("sim", 1.25);
         assert_eq!(m.mean_s, 1.25);
+        assert_eq!(m.threads, 1);
+        let j = m.to_json(1.0).to_pretty();
+        assert!(j.contains("\"threads\""), "{j}");
     }
 }

@@ -6,9 +6,11 @@ use repro::apps::{app_id, registry, AppId, SizeId, VariantId};
 use repro::coordinator::history::{scan, HistoryStore, RequestRecord, ServedBy};
 use repro::coordinator::server::Deployment;
 use repro::coordinator::{
-    run_reconfiguration, Approval, ProductionEnv, ReconConfig, ResidencyPlan,
+    run_reconfiguration, Approval, ProductionEnv, ReconConfig, ReconOutcome, ResidencyPlan,
 };
-use repro::fleet::{CardPool, FleetEnv, FleetRouter};
+use repro::fleet::plane::{run_partitioned, CardHorizons};
+use repro::fleet::snapshot::ChainBuilder;
+use repro::fleet::{CardPool, ConcurrentFleet, FleetEnv, FleetRouter};
 use repro::fpga::device::{CardId, FpgaDevice, ReconfigKind};
 use repro::fpga::part::D5005;
 use repro::loopir::interp::Interp;
@@ -849,6 +851,287 @@ fn prop_opencl_structure() {
                 )?;
             }
             Ok(())
+        },
+    );
+}
+
+/// The recon-outcome fields two environments must agree on bit for bit
+/// when they claim to be interchangeable (shared by the data-plane
+/// properties below; mirrors the `prop_fleet_one_card` comparisons).
+fn recon_outcomes_agree(a: &ReconOutcome, b: &ReconOutcome) -> Result<(), String> {
+    ensure(a.rankings.len() == b.rankings.len(), "ranking count")?;
+    for (x, y) in a.rankings.iter().zip(&b.rankings) {
+        ensure(x.app == y.app && x.app_id == y.app_id, "ranking order")?;
+        ensure(
+            x.actual_total_secs.to_bits() == y.actual_total_secs.to_bits()
+                && x.corrected_total_secs.to_bits() == y.corrected_total_secs.to_bits(),
+            format!("ranking totals for {}", x.app),
+        )?;
+        ensure(
+            x.usage_count == y.usage_count && x.coef.to_bits() == y.coef.to_bits(),
+            "ranking usage/coef",
+        )?;
+    }
+    ensure(
+        a.representatives.len() == b.representatives.len(),
+        "representative count",
+    )?;
+    for (x, y) in a.representatives.iter().zip(&b.representatives) {
+        ensure(x.app == y.app && x.size == y.size, "representative class")?;
+        ensure(
+            x.bytes.to_bits() == y.bytes.to_bits() && x.mode_count == y.mode_count,
+            "representative datum",
+        )?;
+    }
+    match (&a.proposal, &b.proposal) {
+        (Some(p), Some(q)) => {
+            ensure(p.proposed == q.proposed, "proposed flag")?;
+            ensure(p.ratio.to_bits() == q.ratio.to_bits(), "effect ratio bits")?;
+            ensure(
+                p.best.app == q.best.app && p.best.variant == q.best.variant,
+                "best pattern",
+            )?;
+        }
+        (None, None) => {}
+        _ => return Err("proposal presence diverged".into()),
+    }
+    ensure(a.decision == b.decision, "decision")?;
+    match (&a.reconfig, &b.reconfig) {
+        (Some(x), Some(y)) => {
+            ensure(
+                x.kind == y.kind && x.to == y.to && x.from == y.from,
+                "reconfig logic",
+            )?;
+            ensure(
+                x.started_at.to_bits() == y.started_at.to_bits()
+                    && x.downtime_secs == y.downtime_secs,
+                "reconfig timing",
+            )?;
+        }
+        (None, None) => {}
+        _ => return Err("reconfig presence diverged".into()),
+    }
+    Ok(())
+}
+
+/// Data plane vs the sequential oracle: on random traces with a random
+/// mid-trace redeployment — a rolling reconfiguration that drains,
+/// reprograms, and rejoins each card in turn — folding the oracle's
+/// routing log through `ChainBuilder` and replaying the trace at 1-4
+/// threads via `run_partitioned` reproduces the oracle bit for bit:
+/// records, stall counts, zero lock acquisitions, and a batch-flushed
+/// columnar index (`extend_sorted`) whose window queries answer exactly
+/// like the oracle's push-by-push build.
+#[test]
+fn prop_data_plane_replay_matches_fleet_oracle() {
+    let reg = registry();
+    forall(
+        6,
+        0xDA7AB1,
+        |rng| {
+            (
+                2 + rng.next_below(4) as usize,
+                600.0 + rng.next_f64() * 1200.0,
+                rng.next_u64(),
+                rng.next_f64(),
+                rng.next_below(5) as usize,
+                1.5 + rng.next_f64() * 1.5,
+            )
+        },
+        |&(cards, dur, seed, frac, app_i, coef)| {
+            let mut oracle = FleetEnv::new(registry(), D5005, cards);
+            oracle.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+            let mut trace = generate(&reg, dur, seed);
+            for r in &mut trace {
+                r.arrival += 2.0;
+            }
+            if trace.len() < 8 {
+                return Ok(());
+            }
+
+            // Snapshot point: routing state, card horizons, and the
+            // log position — the replay starts exactly here.
+            let mut builder = ChainBuilder::from_env(&oracle);
+            let init = CardHorizons::from_pool(&oracle.pool);
+            let logged = oracle.routing_log().len();
+
+            // Redeploy at a strict midpoint between two distinct
+            // arrivals, so no request sits on a snapshot boundary the
+            // oracle didn't also process at that exact clock. Skipped
+            // when the tail of the trace is one tied arrival.
+            let p = 1 + (frac * (trace.len() - 2) as f64) as usize;
+            let anchor = trace[p].arrival;
+            let mut deploy_at = None;
+            if let Some(j) = trace.iter().position(|r| r.arrival > anchor) {
+                let next = trace[j].arrival;
+                let mid = anchor + (next - anchor) * 0.5;
+                if mid > anchor && mid < next {
+                    deploy_at = Some((j, mid));
+                }
+            }
+            for (i, r) in trace.iter().enumerate() {
+                if let Some((j, mid)) = deploy_at {
+                    if i == j {
+                        oracle.advance_to(mid);
+                        oracle.deploy(ReconfigKind::Static, reg[app_i].name, "o1", coef);
+                    }
+                }
+                oracle.serve(r).map_err(|e| e.to_string())?;
+            }
+            let chain = builder.chain(&oracle.routing_log()[logged..]);
+            if deploy_at.is_some() {
+                ensure(chain.len() > 1, "redeploy published no snapshot")?;
+            }
+
+            let now = oracle.clock.now();
+            let windows = [
+                (0.0, f64::INFINITY),
+                (now * 0.25, now * 0.6),
+                (trace[0].arrival, trace[trace.len() / 2].arrival),
+            ];
+            for threads in 1..=4 {
+                let (_, merged, stats) =
+                    run_partitioned(&trace, &chain, &oracle.table, &init, reg.len(), threads)
+                        .map_err(|e| e.to_string())?;
+                ensure(merged.len() == oracle.history.len(), "record count")?;
+                for (x, y) in merged.iter().zip(oracle.history.all()) {
+                    ensure(
+                        x.id == y.id && x.app == y.app && x.size == y.size,
+                        "record identity",
+                    )?;
+                    ensure(
+                        x.served_by == y.served_by,
+                        format!("served_by for {} at {threads} threads", x.id),
+                    )?;
+                    ensure(
+                        x.arrival.to_bits() == y.arrival.to_bits()
+                            && x.start.to_bits() == y.start.to_bits()
+                            && x.finish.to_bits() == y.finish.to_bits()
+                            && x.service_secs.to_bits() == y.service_secs.to_bits(),
+                        format!("timing bits for {} at {threads} threads", x.id),
+                    )?;
+                }
+                ensure(stats.stalls == oracle.serve_stalls(), "stall count")?;
+                ensure(stats.lock_acquisitions == 0, "data plane took a lock")?;
+
+                // The batch flush must build the same index a
+                // sequential push-by-push run builds.
+                let mut h = HistoryStore::new();
+                h.extend_sorted(&merged);
+                ensure(h.len() == oracle.history.len(), "flushed length")?;
+                for &(lo, hi) in &windows {
+                    let got: Vec<u64> = h.window(lo, hi).map(|r| r.id).collect();
+                    let want: Vec<u64> =
+                        oracle.history.window(lo, hi).map(|r| r.id).collect();
+                    ensure(got == want, format!("window [{lo},{hi}) ids"))?;
+                    for a in 0..reg.len() {
+                        let app = AppId(a as u16);
+                        let (s1, c1) = h.totals_in_window(app, lo, hi);
+                        let (s2, c2) = oracle.history.totals_in_window(app, lo, hi);
+                        ensure(
+                            s1.to_bits() == s2.to_bits() && c1 == c2,
+                            format!("totals app {a} window [{lo},{hi})"),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// `ConcurrentFleet` as a drop-in `Environment`: across two serve
+/// windows with a full auto-approved §3.3 cycle after each — the second
+/// window starting inside whatever roll the first cycle's deploy kicked
+/// off, which exercises the sequential-fallback path — every thread
+/// count produces bit-identical recon outcomes, histories, clocks,
+/// card horizons, and stall counts to the sequential `FleetEnv`.
+#[test]
+fn prop_concurrent_fleet_recon_matches_sequential() {
+    let reg = registry();
+    forall(
+        4,
+        0x2C0C01,
+        |rng| {
+            (
+                2 + rng.next_below(3) as usize,
+                1 + rng.next_below(3) as usize,
+                900.0 + rng.next_f64() * 1800.0,
+                rng.next_u64(),
+            )
+        },
+        |&(cards, threads, dur, seed)| {
+            let mut seq = FleetEnv::new(registry(), D5005, cards);
+            seq.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+            let mut inner = FleetEnv::new(registry(), D5005, cards);
+            inner.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+            let mut conc = ConcurrentFleet::new(inner, threads);
+            let cfg = ReconConfig {
+                long_window_secs: dur,
+                short_window_secs: dur,
+                ..Default::default()
+            };
+            let mut ap = Approval::auto_yes();
+            let mut t0 = 2.0;
+            for round in 0u64..2 {
+                let mut w = generate(&reg, dur, seed ^ (round * 0x9E37_79B9));
+                for r in &mut w {
+                    r.arrival += t0;
+                }
+                if w.is_empty() {
+                    return Ok(());
+                }
+                let (a1, b1) = seq.run_window(&w).map_err(|e| e.to_string())?;
+                let (a2, b2) = conc.run_window_concurrent(&w).map_err(|e| e.to_string())?;
+                ensure(
+                    a1.to_bits() == a2.to_bits() && b1.to_bits() == b2.to_bits(),
+                    format!("window {round} span"),
+                )?;
+                let os =
+                    run_reconfiguration(&mut seq, &cfg, &mut ap).map_err(|e| e.to_string())?;
+                let oc =
+                    run_reconfiguration(&mut conc, &cfg, &mut ap).map_err(|e| e.to_string())?;
+                recon_outcomes_agree(&os, &oc)?;
+                ensure(
+                    seq.clock.now().to_bits() == conc.fleet.clock.now().to_bits(),
+                    format!("clock after round {round}"),
+                )?;
+                t0 = seq.clock.now() + 1e-6;
+            }
+            ensure(
+                seq.history.len() == conc.fleet.history.len(),
+                "history length",
+            )?;
+            for (x, y) in seq.history.all().iter().zip(conc.fleet.history.all()) {
+                ensure(x.id == y.id && x.served_by == y.served_by, "record identity")?;
+                ensure(
+                    x.start.to_bits() == y.start.to_bits()
+                        && x.finish.to_bits() == y.finish.to_bits()
+                        && x.service_secs.to_bits() == y.service_secs.to_bits(),
+                    format!("timing bits for {}", x.id),
+                )?;
+            }
+            ensure(seq.serve_stalls() == conc.fleet.serve_stalls(), "stalls")?;
+            for c in 0..cards {
+                let id = CardId(c as u16);
+                ensure(
+                    seq.pool.card(id).busy_until().to_bits()
+                        == conc.fleet.pool.card(id).busy_until().to_bits(),
+                    format!("card {c} horizon"),
+                )?;
+            }
+            match (seq.active(), conc.fleet.active()) {
+                (Some(x), Some(y)) => {
+                    ensure(x.app == y.app && x.variant == y.variant, "active logic")?;
+                    ensure(
+                        x.improvement_coef.to_bits() == y.improvement_coef.to_bits(),
+                        "active coefficient",
+                    )?;
+                }
+                (None, None) => {}
+                _ => return Err("active deployment diverged".into()),
+            }
+            ensure(conc.stats().lock_acquisitions == 0, "data plane took a lock")
         },
     );
 }

@@ -19,6 +19,11 @@
 //!     with a 16-app heterogeneous residency plan serves through the
 //!     per-app card index without allocating, and every indexed route
 //!     decision equals the retained `route_scan` oracle.
+//!  6. **Zero-allocation data-plane serve** — the lock-free serve path
+//!     (`fleet::plane::serve_shard` against a `SnapshotChain`) replays
+//!     the 64-card trace through a mid-trace drain → reprogram → rejoin
+//!     snapshot swap without a single allocation once the record shard
+//!     is reserved — snapshot crossings included.
 //!
 //! Kept as a single #[test] so no concurrent test pollutes the global
 //! allocation counter between the before/after reads.
@@ -28,8 +33,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use repro::apps::{app_id, registry, synthetic_registry};
 use repro::coordinator::{ProductionEnv, ResidencyPlan};
+use repro::fleet::plane::{serve_shard, CardHorizons, DataShard};
+use repro::fleet::snapshot::{ChainBuilder, RoutingEvent};
 use repro::fleet::FleetEnv;
-use repro::fpga::device::ReconfigKind;
+use repro::fpga::device::{CardId, ReconfigKind};
 use repro::fpga::part::D5005;
 use repro::fpga::perf::PerfModel;
 use repro::workload::generate;
@@ -209,4 +216,65 @@ fn serve_is_bit_identical_to_seed_model_and_allocation_free() {
             r.app
         );
     }
+
+    // ---- 6. data-plane serve against a snapshot chain ---------------------
+    // A fresh 64-card fleet, a chain carrying a mid-trace drain →
+    // reprogram → rejoin of card 0, and one shard owning every card,
+    // served on THIS thread so the global counter sees it. Crossing the
+    // swap snapshots (patch fold included) must allocate nothing.
+    let mut plane_env = FleetEnv::new(synthetic_registry(16), D5005, 64);
+    plane_env.deploy_plan(ReconfigKind::Static, &plan);
+    let dep0 = plane_env.pool.deployment(CardId(0)).expect("card 0 deployed");
+    // A strict midpoint between two distinct arrivals: no request sits
+    // exactly on the snapshot boundary.
+    let mid_arrival = big_trace[big_trace.len() / 2].arrival;
+    let next_arrival = big_trace[big_trace.len() / 2..]
+        .iter()
+        .map(|r| r.arrival)
+        .find(|&t| t > mid_arrival)
+        .expect("a later distinct arrival");
+    let t_swap = mid_arrival + (next_arrival - mid_arrival) * 0.5;
+    let events = [
+        RoutingEvent::Drain {
+            card: CardId(0),
+            effective: t_swap,
+        },
+        RoutingEvent::Reprogram {
+            card: CardId(0),
+            dep: dep0,
+            outage_until: t_swap + 1.0,
+            effective: t_swap,
+        },
+        RoutingEvent::Rejoin {
+            card: CardId(0),
+            effective: t_swap + 1.0,
+        },
+    ];
+    let chain = ChainBuilder::from_env(&plane_env).chain(&events);
+    let init = CardHorizons::from_pool(&plane_env.pool);
+    let mut shard = DataShard::new(0, &init);
+    shard.records.reserve(big_trace.len());
+    let before_p = ALLOCS.load(Ordering::SeqCst);
+    serve_shard(&mut shard, &big_trace, &chain, &plane_env.table).unwrap();
+    let after_p = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after_p - before_p,
+        0,
+        "data-plane serve allocated {} time(s) over {} requests \
+         (snapshot crossings included)",
+        after_p - before_p,
+        big_trace.len()
+    );
+    assert_eq!(shard.records.len(), big_trace.len());
+    assert_eq!(
+        shard.crossings, 2,
+        "the shard must cross both swap snapshots"
+    );
+    assert_eq!(shard.stalls, 0, "the drained card cannot stall anyone");
+    // Every app keeps >= 3 resident cards through the swap, so the
+    // whole replay stays FPGA-served.
+    assert!(shard
+        .records
+        .iter()
+        .all(|r| matches!(r.served_by, repro::coordinator::ServedBy::Fpga(_))));
 }

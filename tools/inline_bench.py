@@ -2,9 +2,10 @@
 """Render BENCH_*.json artifacts as ROADMAP-ready markdown rows.
 
 The CI `bench-smoke` job uploads `BENCH_router_throughput.json`,
-`BENCH_recon_analysis.json`, `BENCH_fleet_scaling.json`, and
-`BENCH_hetero_fleet.json` on every push; a full (non-smoke) run
-produces the same files locally via `cargo bench --bench <name>`.
+`BENCH_recon_analysis.json`, `BENCH_fleet_scaling.json`,
+`BENCH_hetero_fleet.json`, and `BENCH_concurrent_serve.json` on every
+push; a full (non-smoke) run produces the same files locally via
+`cargo bench --bench <name>`.
 This script turns any of them into the markdown the ROADMAP
 Performance section inlines, so refreshing the committed numbers is
 mechanical:
@@ -44,11 +45,11 @@ def render(path: str) -> None:
     sections = doc.get("sections", [])
     extras = {k: v for k, v in doc.items() if k != "sections"}
     print(f"### `{path}`\n")
-    print("| section | iters | mean | throughput |")
-    print("|---------|-------|------|------------|")
+    print("| section | threads | iters | mean | throughput |")
+    print("|---------|---------|-------|------|------------|")
     for s in sections:
         print(
-            f"| `{s['name']}` | {s['iterations']} "
+            f"| `{s['name']}` | {s.get('threads', 1)} | {s['iterations']} "
             f"| {fmt_secs(s['mean_s'])} | {fmt_rate(s.get('rps', 0.0))} |"
         )
     if extras:
