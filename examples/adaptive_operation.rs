@@ -26,17 +26,33 @@
 //! Windows overlapping a rolling reconfiguration take the sequential
 //! fallback automatically.
 //!
+//! Two operational features ride on top of the loop here:
+//!
+//!  * **artifact cache** (`"artifact_cache": true`) — every compiled
+//!    bitstream is shelved in the fleet's artifact library, so a
+//!    reconfiguration back to logic the fleet has run before reprograms
+//!    at the §3.2 partial-reconfiguration cost
+//!    (`partial_reconfig_fraction` x the 1 s cold outage) instead of
+//!    recompiling; watch the hits/misses summary at the end.
+//!  * **warm restart** — at hour 6 the whole controller state (card
+//!    horizons, history, residency intent, artifact manifest, adaptive
+//!    loop cursor) is serialized to JSON and restored into a brand-new
+//!    fleet + data plane, which resumes hour 7 bit-identically to an
+//!    uninterrupted run — a coordinator redeploy with zero served-state
+//!    loss.
+//!
 //!     cargo run --release --example adaptive_operation
 //!     SERVE_THREADS=8 cargo run --release --example adaptive_operation
 
 use repro::apps::registry;
-use repro::coordinator::adaptive::{run_adaptive, AdaptiveConfig};
+use repro::coordinator::adaptive::{run_adaptive_from, AdaptiveConfig, AdaptiveState};
 use repro::coordinator::config::RunConfig;
 use repro::coordinator::Approval;
 use repro::fleet::{ConcurrentFleet, FleetEnv};
 use repro::fpga::device::{CardId, ReconfigKind};
 use repro::fpga::part::D5005;
 use repro::offload::{search, OffloadConfig};
+use repro::util::json::Json;
 use repro::util::table::Table;
 
 fn main() -> anyhow::Result<()> {
@@ -47,6 +63,8 @@ fn main() -> anyhow::Result<()> {
         "top_apps": 2,
         "residency_apps": 2,
         "reconfig": "static",
+        "artifact_cache": true,
+        "partial_reconfig_fraction": 0.005,
         "seed": 42
     }"#;
     let run_cfg = RunConfig::parse(cfg_json)?;
@@ -54,6 +72,9 @@ fn main() -> anyhow::Result<()> {
 
     const CARDS: usize = 4;
     let mut env = FleetEnv::new(registry(), D5005, CARDS);
+    // Attach the compiled-artifact library before the first deploy, so
+    // even the launch bitstream lands in the manifest.
+    env.configure_artifact_cache(&run_cfg.recon);
     let reg = registry();
     let td = repro::apps::find(&reg, "tdfir").unwrap();
     let pre = search(td, "large", &OffloadConfig::default())?;
@@ -85,7 +106,7 @@ fn main() -> anyhow::Result<()> {
     let mut approval = Approval::auto_yes();
 
     // Drift: from hour 6, MRI-Q traffic disappears and DFT spikes.
-    let reports = run_adaptive(&mut env, &cfg, &mut approval, |w, env: &mut ConcurrentFleet| {
+    let drift = |w: usize, env: &mut ConcurrentFleet| {
         if w == 6 {
             for app in env.fleet.registry.iter_mut() {
                 match app.name {
@@ -96,7 +117,38 @@ fn main() -> anyhow::Result<()> {
             }
             println!("-- hour 6: usage drift (mriq -> 0 req/h, dft -> 30 req/h) --");
         }
-    })?;
+    };
+
+    // Hours 0-5, then a coordinator redeploy: serialize the whole
+    // controller state (fleet + adaptive loop cursor), throw the process
+    // state away, and warm-restart a brand-new fleet from the snapshot.
+    let mut state = AdaptiveState::default();
+    let first_half = AdaptiveConfig {
+        windows: 6,
+        ..cfg.clone()
+    };
+    let mut reports = run_adaptive_from(&mut env, &first_half, &mut approval, &mut state, drift)?;
+    let snapshot = Json::obj()
+        .set("env", env.fleet.save_state())
+        .set("loop", state.to_json())
+        .to_pretty();
+    drop(env);
+    println!(
+        "-- hour 6: warm restart — controller state saved ({} bytes of JSON), \
+         new fleet restored --",
+        snapshot.len()
+    );
+
+    let snap = Json::parse(&snapshot).map_err(|e| anyhow::anyhow!("snapshot: {e}"))?;
+    let mut restored = FleetEnv::new(registry(), D5005, CARDS);
+    restored.restore_state(snap.get("env").expect("snapshot env"))?;
+    let mut state = AdaptiveState::from_json(snap.get("loop").expect("snapshot loop"))?;
+    let mut env = ConcurrentFleet::new(restored, threads);
+
+    // Hours 6-11 resume exactly where the snapshot left off — the drift
+    // fires in this half, and the artifact cache turns the resulting
+    // logic changes into partial reconfigurations.
+    reports.extend(run_adaptive_from(&mut env, &cfg, &mut approval, &mut state, drift)?);
 
     let mut t = Table::new(vec!["hour", "requests", "serving", "reconfigured", "effect ratio"]);
     for r in &reports {
@@ -149,6 +201,16 @@ fn main() -> anyhow::Result<()> {
         env.fleet.pool.total_downtime(),
         env.fleet.serve_stalls(),
     );
+    if let Some(lib) = env.fleet.artifact_library() {
+        println!(
+            "artifact cache: {} bitstream(s) shelved — {} hit(s) / {} miss(es); \
+             each hit reprogrammed in {:.0} ms instead of a 1 s cold outage",
+            lib.len(),
+            lib.hits(),
+            lib.misses(),
+            run_cfg.recon.partial_reconfig_fraction * 1000.0,
+        );
+    }
     let stats = env.stats();
     println!(
         "data plane: {} serve thread(s), {} snapshot crossing(s), \

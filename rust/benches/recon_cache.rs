@@ -1,0 +1,203 @@
+//! Artifact-cache bench: what the partial-reconfiguration fast path buys
+//! on a fleet that keeps revisiting the same logic. Writes
+//! `BENCH_recon_cache.json`.
+//!
+//! The workload is the PR 4 oscillation: a 4-card fleet flips between a
+//! homogeneous plan (tdFIR on every card) and a mixed residency plan
+//! (2 tdFIR + 2 MRI-Q) T times, serving traffic through every rolling
+//! transition. Each transition flips exactly 2 cards.
+//!
+//!  * **cold** — no artifact library: every flip pays the paper's full
+//!    1 s static outage, so cumulative downtime grows 2 s per transition
+//!    forever, even though the fleet has compiled both bitstreams before;
+//!  * **cached** — the artifact library is attached: the first visit to
+//!    each logic is a miss (cold compile + full outage, manifest
+//!    populated), every revisit reprograms at
+//!    `partial_reconfig_fraction x 1 s` (§3.2 "ms order" partial
+//!    reconfiguration).
+//!
+//! Gates (asserted):
+//!  * cached cumulative downtime over the oscillation is ≥ 5x lower than
+//!    cold (same trace, same transitions, same JSON artifact);
+//!  * zero fleet-level serve stalls in both modes — the rolling drain
+//!    machinery must see the shortened outage exactly like the full one;
+//!  * every transition's roll completes within its serve chunk, and the
+//!    cache ends with exactly 2 misses (two distinct bitstreams).
+
+use std::time::Instant;
+
+use repro::apps::{app_id, registry, AppSpec, VariantId};
+use repro::coordinator::recon::{ResidencyEntry, ResidencyPlan};
+use repro::fleet::FleetEnv;
+use repro::fpga::device::ReconfigKind;
+use repro::fpga::part::D5005;
+use repro::util::bench::{smoke_mode, Bench};
+use repro::workload::{boost_rate, generate};
+
+/// Run the homogeneous↔mixed oscillation: initial deploy of `plans[0]`,
+/// then `transitions` alternating `deploy_plan` calls, each followed by a
+/// chunk of served traffic so the roll completes. Returns (cumulative
+/// downtime charged by the transitions, fleet-level serve stalls).
+fn oscillate(
+    env: &mut FleetEnv,
+    plans: [&ResidencyPlan; 2],
+    reg: &[AppSpec],
+    transitions: usize,
+    chunk_secs: f64,
+) -> (f64, u64) {
+    let serve_chunk = |env: &mut FleetEnv, seed: u64| {
+        let t0 = env.clock.now() + 1e-6;
+        let mut trace = generate(reg, chunk_secs, seed);
+        for r in &mut trace {
+            r.arrival += t0;
+        }
+        env.run_window(&trace).unwrap();
+    };
+    env.deploy_plan(ReconfigKind::Static, plans[0]);
+    serve_chunk(env, 7);
+    assert!(!env.roll_in_progress(), "initial deploy must settle");
+    // Transitions are measured from here: the initial programming of
+    // empty cards costs the same in both modes.
+    let base = env.pool.total_downtime();
+    for t in 0..transitions {
+        env.deploy_plan(ReconfigKind::Static, plans[(t + 1) % 2]);
+        serve_chunk(env, 100 + t as u64);
+        assert!(
+            !env.roll_in_progress(),
+            "transition {t} must complete within its serve chunk"
+        );
+    }
+    (env.pool.total_downtime() - base, env.serve_stalls())
+}
+
+fn main() {
+    println!("== recon cache: partial-reconfiguration fast path ==\n");
+
+    let hot_registry = || {
+        let mut reg = registry();
+        boost_rate(&mut reg, "tdfir", 2400.0);
+        boost_rate(&mut reg, "mriq", 1200.0);
+        reg
+    };
+    let reg = hot_registry();
+
+    // Plans built once so the deployment identity — coefficient bits
+    // included — is stable across the whole oscillation.
+    let mut probe = FleetEnv::new(hot_registry(), D5005, 4);
+    let mut coef = |app: &str| {
+        probe.mean_service_time(app, "cpu").unwrap()
+            / probe.mean_service_time(app, "o1").unwrap()
+    };
+    let mut entry = |app: &str, cards: usize| ResidencyEntry {
+        app: app.to_string(),
+        app_id: app_id(&reg, app).unwrap(),
+        variant: "o1".to_string(),
+        variant_id: VariantId::from_name("o1").unwrap(),
+        improvement_coef: coef(app),
+        cards,
+        corrected_load_secs: 0.0,
+    };
+    let homogeneous = ResidencyPlan {
+        entries: vec![entry("tdfir", 4)],
+    };
+    let mixed = ResidencyPlan {
+        entries: vec![entry("tdfir", 2), entry("mriq", 2)],
+    };
+
+    let transitions = if smoke_mode() { 6 } else { 10 };
+    let chunk_secs = 60.0;
+    println!(
+        "oscillation: {transitions} homogeneous<->mixed transitions, \
+         {chunk_secs} s of traffic each (2 cards flip per transition)\n"
+    );
+
+    let mut b = Bench::from_env();
+
+    // ---- cold: every flip pays the full outage ---------------------------
+    let mut cold_env = FleetEnv::new(hot_registry(), D5005, 4);
+    let t0 = Instant::now();
+    let (cold_downtime, cold_stalls) = oscillate(
+        &mut cold_env,
+        [&homogeneous, &mixed],
+        &reg,
+        transitions,
+        chunk_secs,
+    );
+    b.record("oscillation_cold", t0.elapsed().as_secs_f64());
+    println!(
+        "cold:   {cold_downtime:.3} s cumulative downtime, \
+         {cold_stalls} fleet-level stalls"
+    );
+
+    // ---- cached: revisits reprogram at the partial fraction --------------
+    let fraction = 5e-3;
+    let mut cached_env =
+        FleetEnv::new(hot_registry(), D5005, 4).with_artifact_cache(fraction);
+    let t0 = Instant::now();
+    let (cached_downtime, cached_stalls) = oscillate(
+        &mut cached_env,
+        [&homogeneous, &mixed],
+        &reg,
+        transitions,
+        chunk_secs,
+    );
+    b.record("oscillation_cached", t0.elapsed().as_secs_f64());
+    let lib = cached_env.artifact_library().unwrap();
+    let (hits, misses, artifacts) = (lib.hits(), lib.misses(), lib.len());
+    println!(
+        "cached: {cached_downtime:.3} s cumulative downtime, \
+         {cached_stalls} fleet-level stalls \
+         ({hits} hits / {misses} misses, {artifacts} artifacts)"
+    );
+
+    let ratio = cold_downtime / cached_downtime.max(1e-12);
+    println!("\ndowntime ratio: {ratio:.1}x less with the artifact cache");
+
+    // ---- artifact + gates ------------------------------------------------
+    let units: Vec<(&str, f64)> = vec![
+        ("oscillation_cold", transitions as f64),
+        ("oscillation_cached", transitions as f64),
+    ];
+    b.write_json(
+        "BENCH_recon_cache.json",
+        &units,
+        &[
+            ("cold_downtime_s", cold_downtime),
+            ("cached_downtime_s", cached_downtime),
+            ("downtime_ratio_x", ratio),
+            ("cache_hits", hits as f64),
+            ("cache_misses", misses as f64),
+            ("artifacts", artifacts as f64),
+            ("roll_stalls_cold", cold_stalls as f64),
+            ("roll_stalls_cached", cached_stalls as f64),
+            ("transitions", transitions as f64),
+            ("partial_fraction", fraction),
+        ],
+    )
+    .expect("write BENCH_recon_cache.json");
+    println!("wrote BENCH_recon_cache.json");
+
+    assert!(
+        ratio >= 5.0,
+        "artifact cache must cut cumulative oscillation downtime >= 5x \
+         (cold {cold_downtime:.3} s vs cached {cached_downtime:.3} s, \
+         got {ratio:.2}x)"
+    );
+    assert_eq!(
+        cold_stalls, 0,
+        "cold rolls must add zero fleet-level serve stalls"
+    );
+    assert_eq!(
+        cached_stalls, 0,
+        "cache-hit rolls must add zero fleet-level serve stalls \
+         (stall accounting must see the shortened outage)"
+    );
+    assert_eq!(
+        misses, 2,
+        "exactly two distinct bitstreams are ever compiled (tdfir, mriq)"
+    );
+    assert!(
+        hits >= transitions as u64 - 1,
+        "every revisit after the first mixed deploy must hit ({hits} hits)"
+    );
+}

@@ -16,6 +16,7 @@
 
 use crate::apps::{app_id, AppId};
 use crate::fpga::device::ReconfigKind;
+use crate::util::json::Json;
 use crate::workload::generate;
 
 use super::env::Environment;
@@ -76,6 +77,63 @@ impl AdaptiveConfig {
     }
 }
 
+/// The loop's cross-window controller state, externalized so a restarted
+/// coordinator can resume the Step-7 loop mid-trace exactly where it
+/// stopped. [`run_adaptive`] starts from `AdaptiveState::default()`;
+/// [`run_adaptive_from`] continues from a caller-owned (possibly
+/// deserialized) state. Each window's trace is seeded by its *absolute*
+/// window index, so a run split at any point re-generates the identical
+/// traffic the uninterrupted run would have served.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct AdaptiveState {
+    /// Windows left before the next recon cycle may run.
+    pub cooldown: usize,
+    /// Interned app of the most recently evicted logic (flap guard).
+    pub last_evicted: Option<AppId>,
+    /// Step-1 ranking order carried across windows (sort-skip fast path).
+    pub ranks: RankCache,
+    /// The next window index to run.
+    pub next_window: usize,
+}
+
+impl AdaptiveState {
+    /// Serialize for the warm-restart controller snapshot.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("cooldown", self.cooldown)
+            .set(
+                "last_evicted",
+                match self.last_evicted {
+                    Some(a) => Json::Num(a.0 as f64),
+                    None => Json::Null,
+                },
+            )
+            .set("ranks", self.ranks.to_json())
+            .set("next_window", self.next_window)
+    }
+
+    /// Restore a serialized state (see [`AdaptiveState::to_json`]).
+    pub fn from_json(j: &Json) -> anyhow::Result<AdaptiveState> {
+        let last_evicted = match j.get("last_evicted") {
+            Some(Json::Null) | None => None,
+            Some(v) => Some(AppId(
+                v.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("adaptive state: bad app id"))?
+                    as u16,
+            )),
+        };
+        Ok(AdaptiveState {
+            cooldown: j.usize_at("cooldown")?,
+            last_evicted,
+            ranks: RankCache::from_json(
+                j.get("ranks")
+                    .ok_or_else(|| anyhow::anyhow!("adaptive state: missing ranks"))?,
+            )?,
+            next_window: j.usize_at("next_window")?,
+        })
+    }
+}
+
 /// What happened in one window.
 #[derive(Debug)]
 pub struct WindowReport {
@@ -99,6 +157,25 @@ pub fn run_adaptive<E, F>(
     env: &mut E,
     cfg: &AdaptiveConfig,
     approval: &mut Approval,
+    drift: F,
+) -> anyhow::Result<Vec<WindowReport>>
+where
+    E: Environment,
+    F: FnMut(usize, &mut E),
+{
+    run_adaptive_from(env, cfg, approval, &mut AdaptiveState::default(), drift)
+}
+
+/// [`run_adaptive`] continuing from a caller-owned [`AdaptiveState`]:
+/// runs windows `state.next_window .. cfg.windows`, mutating the state
+/// after each one. Running `[0, k)` then `[k, W)` against the same
+/// environment (or a warm-restarted copy of it) is bit-identical to one
+/// uninterrupted `[0, W)` run — the warm-restart proptest's contract.
+pub fn run_adaptive_from<E, F>(
+    env: &mut E,
+    cfg: &AdaptiveConfig,
+    approval: &mut Approval,
+    state: &mut AdaptiveState,
     mut drift: F,
 ) -> anyhow::Result<Vec<WindowReport>>
 where
@@ -107,17 +184,9 @@ where
 {
     cfg.validate()?;
     let mut reports = Vec::new();
-    let mut cooldown = 0usize;
-    // Interned app of the most recently evicted logic — a `Copy` handle,
-    // so the per-window flap check never clones strings. (The variant is
-    // irrelevant: flapping is about the app's logic coming back at all.)
-    let mut last_evicted: Option<AppId> = None;
-    // Step-1 ranking order carried across windows: steady workloads keep
-    // the same corrected-load order, so most cycles skip the 1-3 sort
-    // (bit-identical by construction — see `recon::RankCache`).
-    let mut ranks = RankCache::default();
 
-    for w in 0..cfg.windows {
+    for w in state.next_window..cfg.windows {
+        state.next_window = w + 1;
         drift(w, env);
         // Serve one window of traffic.
         let t0 = env.now() + 1e-6;
@@ -131,8 +200,8 @@ where
         }
 
         // Cooling down: observe only.
-        if cooldown > 0 {
-            cooldown -= 1;
+        if state.cooldown > 0 {
+            state.cooldown -= 1;
             reports.push(WindowReport {
                 window: w,
                 requests: n,
@@ -151,18 +220,19 @@ where
         // from this window's (already drifted) estimates. Only taken when
         // a rollback could fire at all — it requires a prior eviction —
         // so steady windows skip the plan clone entirely.
-        let prior = if last_evicted.is_some() {
+        let prior = if state.last_evicted.is_some() {
             env.residency()
         } else {
             None
         };
-        let outcome = run_reconfiguration_with(env, &rcfg, approval, &mut ranks)?;
+        let outcome =
+            run_reconfiguration_with(env, &rcfg, approval, &mut state.ranks)?;
 
         // Flap suppression: if the proposal re-installs the most recently
         // evicted logic, require `flap_ratio`.
         let mut reconfigured = outcome.reconfig.is_some();
         if let (Some(p), Some(evicted_app)) =
-            (outcome.proposal.as_ref(), last_evicted)
+            (outcome.proposal.as_ref(), state.last_evicted)
         {
             if reconfigured
                 && app_id(env.registry(), &p.best.app) == Some(evicted_app)
@@ -201,9 +271,9 @@ where
             if let Some(p) = outcome.proposal.as_ref() {
                 // A fresh install (no previous deployment) has an empty
                 // current app, which interns to None — nothing to flap to.
-                last_evicted = app_id(env.registry(), &p.current.app);
+                state.last_evicted = app_id(env.registry(), &p.current.app);
             }
-            cooldown = cfg.cooldown_windows;
+            state.cooldown = cfg.cooldown_windows;
         }
         reports.push(WindowReport {
             window: w,
@@ -341,6 +411,76 @@ mod tests {
         assert!(cfg.validate().is_err());
         assert!(AdaptiveConfig::default().validate().is_ok());
         assert!(env.device.serves("tdfir"), "rejected configs ran nothing");
+    }
+
+    #[test]
+    fn split_run_matches_uninterrupted_run() {
+        // [0, 3) then [3, 6) with a carried AdaptiveState must equal one
+        // [0, 6) run: same reconfig windows, same serving logic, and the
+        // environments' histories agree bitwise.
+        let cfg = AdaptiveConfig {
+            windows: 6,
+            ..Default::default()
+        };
+        let mut oracle_env = base_env();
+        let mut ap = Approval::auto_yes();
+        let oracle =
+            run_adaptive(&mut oracle_env, &cfg, &mut ap, |_, _| {}).unwrap();
+
+        let mut env = base_env();
+        let mut ap = Approval::auto_yes();
+        let mut state = AdaptiveState::default();
+        let first_cfg = AdaptiveConfig {
+            windows: 3,
+            ..cfg.clone()
+        };
+        let mut reports =
+            run_adaptive_from(&mut env, &first_cfg, &mut ap, &mut state, |_, _| {})
+                .unwrap();
+        assert_eq!(state.next_window, 3);
+        // The state survives a JSON round-trip between the halves.
+        let mut state = AdaptiveState::from_json(
+            &Json::parse(&state.to_json().to_pretty()).unwrap(),
+        )
+        .unwrap();
+        reports.extend(
+            run_adaptive_from(&mut env, &cfg, &mut ap, &mut state, |_, _| {})
+                .unwrap(),
+        );
+
+        assert_eq!(reports.len(), oracle.len());
+        for (a, b) in reports.iter().zip(&oracle) {
+            assert_eq!(a.window, b.window);
+            assert_eq!(a.requests, b.requests);
+            assert_eq!(a.reconfigured, b.reconfigured);
+            assert_eq!(a.serving, b.serving);
+        }
+        let (h0, h1) = (oracle_env.history(), env.history());
+        assert_eq!(h0.len(), h1.len());
+        for (a, b) in h0.all().iter().zip(h1.all()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.start.to_bits(), b.start.to_bits());
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+        }
+    }
+
+    #[test]
+    fn adaptive_state_roundtrips_through_json() {
+        let state = AdaptiveState {
+            cooldown: 2,
+            last_evicted: Some(AppId(4)),
+            ranks: RankCache::default(),
+            next_window: 7,
+        };
+        let back = AdaptiveState::from_json(
+            &Json::parse(&state.to_json().to_pretty()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back, state);
+        // None round-trips too.
+        let none = AdaptiveState::default();
+        let back = AdaptiveState::from_json(&none.to_json()).unwrap();
+        assert_eq!(back, none);
     }
 
     #[test]

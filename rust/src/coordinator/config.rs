@@ -72,6 +72,8 @@ impl RunConfig {
             "farm_slots",
             "seed",
             "rates_per_hour",
+            "artifact_cache",
+            "partial_reconfig_fraction",
         ];
         for k in obj.keys() {
             anyhow::ensure!(KNOWN.contains(&k.as_str()), "unknown config key `{k}`");
@@ -130,6 +132,16 @@ impl RunConfig {
         }
         if let Some(s) = j.get("seed").and_then(Json::as_usize) {
             cfg.seed = s as u64;
+        }
+        if let Some(on) = j.get("artifact_cache").and_then(Json::as_bool) {
+            cfg.recon.artifact_cache = on;
+        }
+        if let Some(fr) = f("partial_reconfig_fraction") {
+            anyhow::ensure!(
+                fr > 0.0 && fr <= 1.0,
+                "partial_reconfig_fraction must be in (0, 1]"
+            );
+            cfg.recon.partial_reconfig_fraction = fr;
         }
         if let Some(Json::Obj(rates)) = j.get("rates_per_hour") {
             for (app, v) in rates {
@@ -223,5 +235,21 @@ mod tests {
         assert!(RunConfig::parse(r#"{"window_hours": -1}"#).is_err());
         assert!(RunConfig::parse(r#"[1,2]"#).is_err());
         assert!(RunConfig::parse("nonsense").is_err());
+        assert!(RunConfig::parse(r#"{"partial_reconfig_fraction": 0}"#).is_err());
+        assert!(RunConfig::parse(r#"{"partial_reconfig_fraction": 1.5}"#).is_err());
+    }
+
+    #[test]
+    fn artifact_cache_knobs_parse_with_paper_defaults_off() {
+        let c = RunConfig::parse("{}").unwrap();
+        assert!(!c.recon.artifact_cache, "cache must default off (paper run)");
+        assert_eq!(c.recon.partial_reconfig_fraction, 5e-3);
+        let c = RunConfig::parse(
+            r#"{"artifact_cache": true, "partial_reconfig_fraction": 0.01}"#,
+        )
+        .unwrap();
+        assert!(c.recon.artifact_cache);
+        assert_eq!(c.recon.partial_reconfig_fraction, 0.01);
+        assert!(c.recon.validate().is_ok());
     }
 }

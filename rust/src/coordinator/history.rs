@@ -57,6 +57,7 @@
 
 use crate::apps::{AppId, SizeId};
 use crate::fpga::device::CardId;
+use crate::util::json::Json;
 use crate::util::stats::FreqDist;
 
 /// Default byte-size histogram bin width (1 MiB, §4.1.2) used by the
@@ -111,6 +112,49 @@ pub struct RequestRecord {
 impl RequestRecord {
     pub fn wait_secs(&self) -> f64 {
         self.start - self.arrival
+    }
+
+    /// Serialize for the warm-restart controller snapshot. Every f64
+    /// rides as its exact IEEE-754 bits (`util::json::Json::from_f64_bits`)
+    /// — restored records must bit-compare equal to the originals or the
+    /// resumed run's window queries diverge from the oracle.
+    pub fn to_json(&self) -> Json {
+        let served = match self.served_by {
+            ServedBy::Cpu => Json::Str("cpu".to_string()),
+            ServedBy::Fpga(c) => Json::Num(c.0 as f64),
+        };
+        Json::obj()
+            .set("id", Json::from_u64(self.id))
+            .set("app", self.app.0 as usize)
+            .set("size", self.size.0 as usize)
+            .set("bytes", Json::from_f64_bits(self.bytes))
+            .set("arrival", Json::from_f64_bits(self.arrival))
+            .set("start", Json::from_f64_bits(self.start))
+            .set("finish", Json::from_f64_bits(self.finish))
+            .set("service", Json::from_f64_bits(self.service_secs))
+            .set("served_by", served)
+    }
+
+    /// Restore a serialized record (see [`RequestRecord::to_json`]).
+    pub fn from_json(j: &Json) -> anyhow::Result<RequestRecord> {
+        let served_by = match j.get("served_by") {
+            Some(Json::Str(s)) if s == "cpu" => ServedBy::Cpu,
+            Some(Json::Num(_)) => {
+                ServedBy::Fpga(CardId(j.usize_at("served_by")? as u16))
+            }
+            other => anyhow::bail!("record served_by malformed: {other:?}"),
+        };
+        Ok(RequestRecord {
+            id: j.u64_at("id")?,
+            app: AppId(j.usize_at("app")? as u16),
+            size: SizeId(j.usize_at("size")? as u16),
+            bytes: j.f64_bits_at("bytes")?,
+            arrival: j.f64_bits_at("arrival")?,
+            start: j.f64_bits_at("start")?,
+            finish: j.f64_bits_at("finish")?,
+            service_secs: j.f64_bits_at("service")?,
+            served_by,
+        })
     }
 }
 
@@ -426,6 +470,38 @@ impl HistoryStore {
         dist
     }
 
+    /// Serialize the whole history for the warm-restart controller
+    /// snapshot: bin width plus the arrival-ordered row store. The
+    /// columnar index is *not* serialized — [`HistoryStore::from_json`]
+    /// rebuilds it by replaying every record through [`HistoryStore::push`],
+    /// which reproduces the prefix sums and push-time histograms
+    /// bit-identically (same left folds, same insertion order).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("bin_width", Json::from_f64_bits(self.bin_width))
+            .set(
+                "records",
+                Json::Arr(self.records.iter().map(RequestRecord::to_json).collect()),
+            )
+    }
+
+    /// Restore a serialized history (see [`HistoryStore::to_json`]) with
+    /// columns pre-created for `apps` registry entries, exactly like the
+    /// store a fresh environment starts with.
+    pub fn from_json(j: &Json, apps: usize) -> anyhow::Result<HistoryStore> {
+        let mut h = HistoryStore::with_apps(apps);
+        h.bin_width = j.f64_bits_at("bin_width")?;
+        for col in &mut h.columns {
+            col.dist = FreqDist::new(h.bin_width);
+        }
+        let records = j.arr_at("records")?;
+        h.reserve(records.len());
+        for r in records {
+            h.push(RequestRecord::from_json(r)?);
+        }
+        Ok(h)
+    }
+
     /// First in-window record of `app` whose bytes fall in `dist`'s modal
     /// bin — the paper's step 1-5 representative datum. O(log n + k).
     pub fn representative_in_window(
@@ -707,6 +783,55 @@ mod tests {
         assert_eq!(h.app_total_service(AppId(0)), 2.0);
         assert_eq!(h.last_of_app(AppId(0)).unwrap().arrival, 2.0);
         assert!(h.last_of_app(AppId(7)).is_none());
+    }
+
+    #[test]
+    fn history_roundtrips_bit_identically_through_json() {
+        let mut h = HistoryStore::with_apps(3);
+        // Awkward floats (full mantissas, huge ids, card-served records)
+        // so any lossy numeric path would show.
+        for i in 0..20u64 {
+            let mut r = rec((i % 3) as u16, 0.1 + 0.2 * i as f64, 1.0 / 3.0 + i as f64);
+            r.id = (1u64 << 60) + i;
+            r.bytes = 2.5e6 + i as f64 * 1e-9;
+            r.start = r.arrival + 1e-12;
+            r.finish = r.start + r.service_secs;
+            if i % 2 == 0 {
+                r.served_by = ServedBy::Fpga(CardId((i % 4) as u16));
+            }
+            h.push(r);
+        }
+        let text = h.to_json().to_pretty();
+        let back = HistoryStore::from_json(&Json::parse(&text).unwrap(), 3).unwrap();
+        assert_eq!(back.len(), h.len());
+        assert_eq!(back.bin_width().to_bits(), h.bin_width().to_bits());
+        for (a, b) in h.all().iter().zip(back.all()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.app, b.app);
+            assert_eq!(a.size, b.size);
+            assert_eq!(a.bytes.to_bits(), b.bytes.to_bits());
+            assert_eq!(a.arrival.to_bits(), b.arrival.to_bits());
+            assert_eq!(a.start.to_bits(), b.start.to_bits());
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+            assert_eq!(a.service_secs.to_bits(), b.service_secs.to_bits());
+            assert_eq!(a.served_by, b.served_by);
+        }
+        // The replayed index answers window queries identically — prefix
+        // sums and push-time histograms are rebuilt by the same folds.
+        for app in 0..3u16 {
+            let (s0, n0) = h.totals_in_window(AppId(app), 1.0, 3.5);
+            let (s1, n1) = back.totals_in_window(AppId(app), 1.0, 3.5);
+            assert_eq!(s0.to_bits(), s1.to_bits());
+            assert_eq!(n0, n1);
+            assert_eq!(
+                h.size_dist_in_window(AppId(app), 0.0, f64::INFINITY, h.bin_width()),
+                back.size_dist_in_window(AppId(app), 0.0, f64::INFINITY, h.bin_width())
+            );
+        }
+        assert_eq!(
+            h.apps_in_window(0.0, f64::INFINITY),
+            back.apps_in_window(0.0, f64::INFINITY)
+        );
     }
 
     #[test]

@@ -19,6 +19,9 @@ pub mod policy;
 pub mod recon;
 pub mod server;
 
+pub use adaptive::{
+    run_adaptive, run_adaptive_from, AdaptiveConfig, AdaptiveState, WindowReport,
+};
 pub use env::Environment;
 pub use history::{HistoryStore, RequestRecord, ServedBy};
 pub use policy::{Approval, ApprovalDecision, ThresholdPolicy};

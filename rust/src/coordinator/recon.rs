@@ -21,6 +21,7 @@ use std::time::Instant;
 use crate::apps::{app_id, AppId, AppSpec, VariantId};
 use crate::fpga::device::{ReconfigKind, ReconfigReport};
 use crate::offload::{self, OffloadConfig, OffloadResult};
+use crate::util::json::Json;
 
 use super::env::Environment;
 use super::history::DEFAULT_BIN_WIDTH_BYTES;
@@ -47,6 +48,16 @@ pub struct ReconConfig {
     pub policy: ThresholdPolicy,
     pub offload: OffloadConfig,
     pub kind: ReconfigKind,
+    /// Enable the compiled-artifact library: transitions whose target
+    /// bitstream was compiled before reprogram at partial-reconfiguration
+    /// cost instead of the cold outage (see
+    /// [`crate::fleet::ArtifactLibrary`]). Off by default — the paper's
+    /// every-change-pays-cold behaviour.
+    pub artifact_cache: bool,
+    /// Fraction of the cold `kind.downtime_secs()` a cache-hit reprogram
+    /// costs (§3.2 puts partial reconfiguration at "ms order" against the
+    /// ~1 s static outage, hence the 5 ms default).
+    pub partial_reconfig_fraction: f64,
 }
 
 impl Default for ReconConfig {
@@ -60,6 +71,8 @@ impl Default for ReconConfig {
             policy: ThresholdPolicy::default(),
             offload: OffloadConfig::default(),
             kind: ReconfigKind::Static,
+            artifact_cache: false,
+            partial_reconfig_fraction: 5e-3,
         }
     }
 }
@@ -105,6 +118,14 @@ impl ReconConfig {
             "recon config: min_effect_ratio must be >= 1.0 (below that every \
              cycle proposes), got {}",
             self.policy.min_effect_ratio
+        );
+        anyhow::ensure!(
+            self.partial_reconfig_fraction > 0.0
+                && self.partial_reconfig_fraction <= 1.0
+                && self.partial_reconfig_fraction.is_finite(),
+            "recon config: partial_reconfig_fraction must be in (0, 1] \
+             (a fraction of the cold outage), got {}",
+            self.partial_reconfig_fraction
         );
         Ok(())
     }
@@ -280,6 +301,51 @@ impl ResidencyPlan {
         }
         best.expect("empty residency plan")
     }
+
+    /// Serialize the plan for the warm-restart controller snapshot.
+    /// Coefficients and load figures ride as exact-bits strings so the
+    /// restored plan's deployments bit-compare equal to the originals
+    /// (`same_deployment`, `ArtifactKey` — both compare coefficient bits).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.entries
+                .iter()
+                .map(|e| {
+                    Json::obj()
+                        .set("app", e.app.as_str())
+                        .set("app_id", e.app_id.0 as usize)
+                        .set("variant", e.variant.as_str())
+                        .set("variant_id", e.variant_id.0 as usize)
+                        .set("coef_bits", Json::from_f64_bits(e.improvement_coef))
+                        .set("cards", e.cards)
+                        .set(
+                            "load_bits",
+                            Json::from_f64_bits(e.corrected_load_secs),
+                        )
+                })
+                .collect(),
+        )
+    }
+
+    /// Restore a serialized plan (see [`ResidencyPlan::to_json`]).
+    pub fn from_json(j: &Json) -> anyhow::Result<ResidencyPlan> {
+        let arr = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("residency plan: expected array"))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for e in arr {
+            entries.push(ResidencyEntry {
+                app: e.str_at("app")?.to_string(),
+                app_id: AppId(e.usize_at("app_id")? as u16),
+                variant: e.str_at("variant")?.to_string(),
+                variant_id: VariantId(e.usize_at("variant_id")? as u8),
+                improvement_coef: e.f64_bits_at("coef_bits")?,
+                cards: e.usize_at("cards")?,
+                corrected_load_secs: e.f64_bits_at("load_bits")?,
+            });
+        }
+        Ok(ResidencyPlan { entries })
+    }
 }
 
 /// Step 6 (fleet edition): partition `cards` across the top
@@ -422,13 +488,55 @@ pub struct ReconOutcome {
 /// path by construction, and asserted against it by
 /// `steady_ranking_skips_sort_bit_identically`. Any tie, growth
 /// inversion, or app-set change falls back to the full stable sort.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct RankCache {
     prev: Vec<AppId>,
     /// Cycles that reused the previous order without sorting.
     pub sort_skips: u64,
     /// Cycles that took the full sorting path.
     pub sorts: u64,
+}
+
+impl RankCache {
+    /// The previous cycle's ranking order (diagnostics / serialization).
+    pub fn prev(&self) -> &[AppId] {
+        &self.prev
+    }
+
+    /// Serialize for the warm-restart controller snapshot: the cached
+    /// order must survive a restart exactly, or the resumed run's first
+    /// cycle takes the sorting path where the uninterrupted run skipped
+    /// it (same totals, but divergent skip counters).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set(
+                "prev",
+                Json::Arr(
+                    self.prev
+                        .iter()
+                        .map(|a| Json::Num(a.0 as f64))
+                        .collect(),
+                ),
+            )
+            .set("sort_skips", Json::from_u64(self.sort_skips))
+            .set("sorts", Json::from_u64(self.sorts))
+    }
+
+    /// Restore a serialized cache (see [`RankCache::to_json`]).
+    pub fn from_json(j: &Json) -> anyhow::Result<RankCache> {
+        let mut prev = Vec::new();
+        for a in j.arr_at("prev")? {
+            let id = a
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("rank cache: bad app id"))?;
+            prev.push(AppId(id as u16));
+        }
+        Ok(RankCache {
+            prev,
+            sort_skips: j.u64_at("sort_skips")?,
+            sorts: j.u64_at("sorts")?,
+        })
+    }
 }
 
 /// Step 1: load ranking + representative selection, on the columnar
@@ -949,6 +1057,27 @@ mod tests {
                 },
                 "min_effect_ratio",
             ),
+            (
+                ReconConfig {
+                    partial_reconfig_fraction: 0.0,
+                    ..Default::default()
+                },
+                "partial_reconfig_fraction",
+            ),
+            (
+                ReconConfig {
+                    partial_reconfig_fraction: 1.5,
+                    ..Default::default()
+                },
+                "partial_reconfig_fraction",
+            ),
+            (
+                ReconConfig {
+                    partial_reconfig_fraction: f64::NAN,
+                    ..Default::default()
+                },
+                "partial_reconfig_fraction",
+            ),
         ] {
             let err = cfg.validate().unwrap_err().to_string();
             assert!(err.contains(needle), "`{err}` should mention {needle}");
@@ -1095,6 +1224,52 @@ mod tests {
             out.proposal.unwrap().proposed,
             "k = 1 keeps the paper's re-proposal behaviour"
         );
+    }
+
+    #[test]
+    fn residency_plan_and_rank_cache_roundtrip_bit_identically() {
+        // A plan with full-mantissa coefficients and loads: the restored
+        // entries' deployments must bit-compare equal to the originals.
+        let rankings = vec![rank("a", 0, 300.0 + 1.0 / 3.0), rank("b", 1, 100.0)];
+        let cands = vec![cand("a", 2.0, 0.3), cand("b", 30.0, 7.0)];
+        let plan = plan_residency(&rankings, &cands, 4, 2);
+        let text = plan.to_json().to_pretty();
+        let back =
+            ResidencyPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.entries.len(), plan.entries.len());
+        for (a, b) in plan.entries.iter().zip(&back.entries) {
+            assert_eq!(a.app, b.app);
+            assert_eq!(a.app_id, b.app_id);
+            assert_eq!(a.variant, b.variant);
+            assert_eq!(a.variant_id, b.variant_id);
+            assert_eq!(
+                a.improvement_coef.to_bits(),
+                b.improvement_coef.to_bits(),
+                "coefficient must restore exactly"
+            );
+            assert_eq!(a.cards, b.cards);
+            assert_eq!(
+                a.corrected_load_secs.to_bits(),
+                b.corrected_load_secs.to_bits()
+            );
+            let (da, db) = (a.deployment(), b.deployment());
+            assert_eq!(da.app, db.app);
+            assert_eq!(da.variant, db.variant);
+            assert_eq!(
+                da.improvement_coef.to_bits(),
+                db.improvement_coef.to_bits()
+            );
+        }
+
+        let cache = RankCache {
+            prev: vec![AppId(3), AppId(0), AppId(1)],
+            sort_skips: 41,
+            sorts: 7,
+        };
+        let text = cache.to_json().to_pretty();
+        let back = RankCache::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, cache, "rank cache must restore exactly");
+        assert_eq!(back.prev(), &[AppId(3), AppId(0), AppId(1)]);
     }
 
     #[test]

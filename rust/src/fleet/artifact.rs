@@ -1,0 +1,317 @@
+//! Compiled-bitstream artifact library: the partial-reconfiguration
+//! fast path.
+//!
+//! The paper charges a full ~1 s serve outage for every FPGA logic
+//! change, but in the real toolchain the expensive step is *compilation*
+//! (hours of place-and-route per variant); a compiled bitstream is a
+//! reusable artifact. Under continuous environment adaptation the fleet
+//! keeps revisiting patterns it has held before, so this library keeps a
+//! manifest of every bitstream ever compiled, keyed by the exact
+//! deployment identity `(AppId, VariantId, improvement-coef bits)` — the
+//! same bit-compare `fleet::env::same_deployment` uses, so "cache hit"
+//! and "this card already holds that logic" can never disagree.
+//!
+//! [`crate::fleet::FleetEnv`] consults the library once per transition
+//! entry (a cold-path lookup; the serve hot path never touches it):
+//!
+//!  * **hit** — the bitstream exists; every card flipped to that entry in
+//!    this transition reprograms at `fraction x kind.downtime_secs()`
+//!    (Intel/Xilinx partial reconfiguration, §3.2 "ms order");
+//!  * **miss** — the transition pays the cold compile + full outage and
+//!    the library gains the artifact, so the *next* transition to the
+//!    same logic is cheap.
+//!
+//! The manifest serializes through `util::json` with per-artifact
+//! checksums (the shape of a compiler manifest: version, provenance,
+//! content digests) and restores bit-identically — it is part of the
+//! warm-restart controller snapshot, so a restarted coordinator keeps
+//! its compiled artifacts instead of re-paying cold outages.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::server::Deployment;
+use crate::util::json::Json;
+
+/// Manifest schema version (bumped on incompatible layout changes).
+pub const ARTIFACT_VERSION: u64 = 1;
+
+/// Identity of one compiled bitstream: interned deployment handles plus
+/// the exact IEEE-754 bits of the improvement coefficient. Matches the
+/// `same_deployment` bit-compare in `fleet::env`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct ArtifactKey {
+    pub app: u16,
+    pub variant: u16,
+    pub coef_bits: u64,
+}
+
+impl ArtifactKey {
+    pub fn of(dep: Deployment) -> ArtifactKey {
+        ArtifactKey {
+            app: dep.app.0,
+            variant: u16::from(dep.variant.0),
+            coef_bits: dep.improvement_coef.to_bits(),
+        }
+    }
+}
+
+/// One manifest entry: provenance + content digest for a compiled
+/// bitstream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Artifact {
+    /// Application / variant names at compile time (provenance; the
+    /// *key* is the interned handles).
+    pub app: String,
+    pub variant: String,
+    /// Virtual time the cold compile that produced this artifact landed.
+    pub compiled_at: f64,
+    /// Content digest (FNV-1a 64 over the artifact identity) — verified
+    /// on manifest load so a corrupted snapshot fails loudly instead of
+    /// silently shortening the wrong outages.
+    pub checksum: String,
+    /// Times this artifact short-circuited a cold reprogram.
+    pub hits: u64,
+}
+
+/// FNV-1a 64-bit digest of the artifact identity. Deterministic and
+/// dependency-free; stands in for the sha256 a real bitstream manifest
+/// would carry.
+fn digest(app: &str, variant: &str, key: ArtifactKey) -> String {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(PRIME);
+        }
+    };
+    eat(app.as_bytes());
+    eat(&[0]);
+    eat(variant.as_bytes());
+    eat(&[0]);
+    eat(&key.coef_bits.to_le_bytes());
+    format!("fnv1a:{h:016x}")
+}
+
+/// The compiled-artifact library: manifest + hit/miss accounting + the
+/// partial-reconfiguration cost knob.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactLibrary {
+    /// Fraction of the cold `kind.downtime_secs()` a cache-hit reprogram
+    /// costs (validated into (0, 1] by `ReconConfig::validate`).
+    fraction: f64,
+    entries: BTreeMap<ArtifactKey, Artifact>,
+    hits: u64,
+    misses: u64,
+}
+
+impl ArtifactLibrary {
+    pub fn new(fraction: f64) -> ArtifactLibrary {
+        debug_assert!(
+            fraction > 0.0 && fraction <= 1.0,
+            "partial fraction must be in (0, 1], got {fraction}"
+        );
+        ArtifactLibrary {
+            fraction,
+            entries: BTreeMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// The partial-reconfiguration cost fraction.
+    pub fn fraction(&self) -> f64 {
+        self.fraction
+    }
+
+    /// Is a compiled bitstream for this exact deployment on the shelf?
+    pub fn contains(&self, dep: Deployment) -> bool {
+        self.entries.contains_key(&ArtifactKey::of(dep))
+    }
+
+    /// Transition-time lookup: returns `true` on a hit (the caller
+    /// charges the partial outage); on a miss, records the freshly
+    /// compiled artifact at virtual time `now` and returns `false` (the
+    /// caller charges the cold outage). One call per transition *entry*,
+    /// not per card — every card flipped to the same logic in one
+    /// transition shares the same hit/miss outcome.
+    pub fn acquire(
+        &mut self,
+        dep: Deployment,
+        app: &str,
+        variant: &str,
+        now: f64,
+    ) -> bool {
+        let key = ArtifactKey::of(dep);
+        if let Some(a) = self.entries.get_mut(&key) {
+            a.hits += 1;
+            self.hits += 1;
+            true
+        } else {
+            self.entries.insert(
+                key,
+                Artifact {
+                    app: app.to_string(),
+                    variant: variant.to_string(),
+                    compiled_at: now,
+                    checksum: digest(app, variant, key),
+                    hits: 0,
+                },
+            );
+            self.misses += 1;
+            false
+        }
+    }
+
+    /// Artifacts on the shelf.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Transitions short-circuited to partial reconfigurations.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Cold compiles paid (each populated one artifact).
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Drop every artifact and counter (the benches' cold baseline).
+    pub fn clear(&mut self) {
+        self.entries.clear();
+        self.hits = 0;
+        self.misses = 0;
+    }
+
+    /// Serialize the manifest. Scalars that must restore bit-identically
+    /// (the fraction, compile times, counters) ride as exact-bits
+    /// strings; see `util::json`.
+    pub fn to_json(&self) -> Json {
+        let artifacts: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|(k, a)| {
+                Json::obj()
+                    .set("app", a.app.as_str())
+                    .set("app_id", k.app as usize)
+                    .set("variant", a.variant.as_str())
+                    .set("variant_id", k.variant as usize)
+                    .set("coef_bits", Json::from_u64(k.coef_bits))
+                    .set("compiled_at", Json::from_f64_bits(a.compiled_at))
+                    .set("checksum", a.checksum.as_str())
+                    .set("hits", Json::from_u64(a.hits))
+            })
+            .collect();
+        Json::obj()
+            .set("artifact_version", Json::from_u64(ARTIFACT_VERSION))
+            .set("partial_fraction", Json::from_f64_bits(self.fraction))
+            .set("hits", Json::from_u64(self.hits))
+            .set("misses", Json::from_u64(self.misses))
+            .set("artifacts", Json::Arr(artifacts))
+    }
+
+    /// Restore a manifest, verifying version and per-artifact checksums.
+    pub fn from_json(j: &Json) -> anyhow::Result<ArtifactLibrary> {
+        let version = j.u64_at("artifact_version")?;
+        anyhow::ensure!(
+            version == ARTIFACT_VERSION,
+            "artifact manifest version {version} != {ARTIFACT_VERSION}"
+        );
+        let mut lib = ArtifactLibrary::new(j.f64_bits_at("partial_fraction")?);
+        lib.hits = j.u64_at("hits")?;
+        lib.misses = j.u64_at("misses")?;
+        for a in j.arr_at("artifacts")? {
+            let key = ArtifactKey {
+                app: a.usize_at("app_id")? as u16,
+                variant: a.usize_at("variant_id")? as u16,
+                coef_bits: a.u64_at("coef_bits")?,
+            };
+            let art = Artifact {
+                app: a.str_at("app")?.to_string(),
+                variant: a.str_at("variant")?.to_string(),
+                compiled_at: a.f64_bits_at("compiled_at")?,
+                checksum: a.str_at("checksum")?.to_string(),
+                hits: a.u64_at("hits")?,
+            };
+            let want = digest(&art.app, &art.variant, key);
+            anyhow::ensure!(
+                art.checksum == want,
+                "artifact {}:{} checksum mismatch ({} != {want})",
+                art.app,
+                art.variant,
+                art.checksum
+            );
+            lib.entries.insert(key, art);
+        }
+        Ok(lib)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{AppId, VariantId};
+
+    fn dep(app: u16, coef: f64) -> Deployment {
+        Deployment {
+            app: AppId(app),
+            variant: VariantId(1),
+            improvement_coef: coef,
+        }
+    }
+
+    #[test]
+    fn miss_populates_then_hits() {
+        let mut lib = ArtifactLibrary::new(0.05);
+        let d = dep(0, 2.0);
+        assert!(!lib.contains(d));
+        assert!(!lib.acquire(d, "tdfir", "o1", 3.0), "first sight is a miss");
+        assert!(lib.contains(d));
+        assert!(lib.acquire(d, "tdfir", "o1", 9.0), "second sight hits");
+        assert_eq!((lib.hits(), lib.misses(), lib.len()), (1, 1, 1));
+        // A different coefficient is a different bitstream.
+        assert!(!lib.acquire(dep(0, 2.5), "tdfir", "o1", 10.0));
+        assert_eq!(lib.len(), 2);
+        lib.clear();
+        assert!(lib.is_empty());
+        assert_eq!((lib.hits(), lib.misses()), (0, 0));
+    }
+
+    #[test]
+    fn manifest_roundtrips_bit_identically() {
+        let mut lib = ArtifactLibrary::new(5e-3);
+        // A coefficient with a full mantissa and a compile time that
+        // breaks a naive numeric round-trip.
+        lib.acquire(dep(3, 1.0 / 3.0), "mriq", "o13", 0.1 + 0.2);
+        lib.acquire(dep(3, 1.0 / 3.0), "mriq", "o13", 7.0);
+        lib.acquire(dep(1, 2.0), "tdfir", "o1", 42.0);
+        let text = lib.to_json().to_pretty();
+        let back = ArtifactLibrary::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, lib, "manifest must restore bit-identically");
+        assert_eq!(back.fraction().to_bits(), lib.fraction().to_bits());
+        assert!(back.contains(dep(3, 1.0 / 3.0)));
+        assert_eq!((back.hits(), back.misses()), (1, 2));
+    }
+
+    #[test]
+    fn corrupted_manifest_is_rejected() {
+        let mut lib = ArtifactLibrary::new(0.05);
+        lib.acquire(dep(0, 2.0), "tdfir", "o1", 1.0);
+        // Flip the stored app name without recomputing the checksum.
+        let json = lib.to_json();
+        let text = json.to_pretty().replace("\"tdfir\"", "\"mriq\"");
+        let err = ArtifactLibrary::from_json(&Json::parse(&text).unwrap());
+        assert!(err.is_err(), "checksum mismatch must fail the load");
+        assert!(format!("{:#}", err.unwrap_err()).contains("checksum"));
+        // Wrong schema version fails too.
+        let bad = lib.to_json().set("artifact_version", Json::from_u64(99));
+        assert!(ArtifactLibrary::from_json(&bad).is_err());
+    }
+}

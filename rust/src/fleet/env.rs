@@ -78,8 +78,10 @@ use crate::fpga::device::{CardId, LoadedLogic, ReconfigKind, ReconfigReport};
 use crate::fpga::part::Part;
 use crate::fpga::perf::{PerfModel, ServiceTimeTable};
 use crate::simtime::Clock;
+use crate::util::json::Json;
 use crate::workload::Request;
 
+use super::artifact::ArtifactLibrary;
 use super::pool::CardPool;
 use super::router::FleetRouter;
 use super::snapshot::RoutingEvent;
@@ -107,6 +109,12 @@ struct Roll {
     kind: ReconfigKind,
     /// The distinct target logics of this transition.
     entries: Vec<TargetLogic>,
+    /// Per-entry outage charged when a card flips to that entry —
+    /// `kind.downtime_secs()` cold, or the artifact-cache fraction of it
+    /// when the entry's bitstream was already compiled. Decided once at
+    /// transition start (see [`FleetEnv::entry_downtimes`]), so every
+    /// card of one transition shares its entry's hit/miss outcome.
+    downtimes: Vec<f64>,
     /// Per-card target: an index into `entries`, or `None` to keep the
     /// card's current logic untouched (it already matches its plan slot).
     targets: Vec<Option<usize>>,
@@ -158,6 +166,11 @@ pub struct FleetEnv {
     /// Perf-model cache for non-canonical variants (cold paths), keyed by
     /// `Copy` handles like `ProductionEnv`'s.
     models: HashMap<(AppId, SizeId), PerfModel>,
+    /// Compiled-bitstream library (`None` = cache disabled, the paper's
+    /// semantics: every reconfiguration pays the full outage). Consulted
+    /// once per transition entry on the cold deploy paths only — the
+    /// serve hot path never touches it.
+    artifacts: Option<ArtifactLibrary>,
 }
 
 impl FleetEnv {
@@ -183,6 +196,7 @@ impl FleetEnv {
             roll: None,
             routing_log: Vec::new(),
             models: HashMap::new(),
+            artifacts: None,
             registry,
         }
     }
@@ -197,9 +211,49 @@ impl FleetEnv {
         self.strategy
     }
 
+    /// Attach the compiled-artifact library (builder form): transitions
+    /// whose target bitstream is already on the shelf reprogram each
+    /// changed card at `fraction x kind.downtime_secs()` instead of the
+    /// cold outage. `fraction` must be in (0, 1] (the validated
+    /// `ReconConfig::partial_reconfig_fraction` knob).
+    pub fn with_artifact_cache(mut self, fraction: f64) -> Self {
+        self.enable_artifact_cache(fraction);
+        self
+    }
+
+    /// Attach (or replace) the compiled-artifact library. See
+    /// [`FleetEnv::with_artifact_cache`].
+    pub fn enable_artifact_cache(&mut self, fraction: f64) {
+        self.artifacts = Some(ArtifactLibrary::new(fraction));
+    }
+
+    /// Apply the artifact-cache knobs of a [`ReconConfig`]: enables the
+    /// library at `partial_reconfig_fraction` when `artifact_cache` is
+    /// set, no-op otherwise (the default — the paper's cold semantics).
+    ///
+    /// [`ReconConfig`]: crate::coordinator::recon::ReconConfig
+    pub fn configure_artifact_cache(&mut self, cfg: &crate::coordinator::recon::ReconConfig) {
+        if cfg.artifact_cache {
+            self.enable_artifact_cache(cfg.partial_reconfig_fraction);
+        }
+    }
+
+    /// Detach the artifact library (back to cold-outage semantics).
+    pub fn disable_artifact_cache(&mut self) {
+        self.artifacts = None;
+    }
+
+    /// The attached compiled-artifact library, if any.
+    pub fn artifact_library(&self) -> Option<&ArtifactLibrary> {
+        self.artifacts.as_ref()
+    }
+
     /// Reset operational state (clock, cards, history, deployments) while
-    /// keeping the precomputed table and model cache — used by benches to
-    /// replay traces on a warm environment.
+    /// keeping the precomputed table, the model cache, and the compiled
+    /// artifact library (bitstreams are compile outputs, not operational
+    /// state — a bench wanting a truly cold replay detaches the library
+    /// with [`FleetEnv::disable_artifact_cache`] or re-attaches a fresh
+    /// one) — used by benches to replay traces on a warm environment.
     pub fn reset(&mut self) {
         let cards = self.pool.len();
         self.pool = CardPool::new(self.part, cards);
@@ -434,35 +488,80 @@ impl FleetEnv {
         self.transition(kind, entries, targets)
     }
 
-    /// Shared step-6 machinery behind `deploy` and `deploy_plan`: pick
-    /// cutover or roll exactly as before (fresh fleets and single cards
-    /// program in place), then move every targeted card to its logic.
+    /// Shared step-6 machinery behind `deploy` and `deploy_plan`: decide
+    /// each entry's outage (artifact-cache hit or cold), pick cutover or
+    /// roll exactly as before (fresh fleets and single cards program in
+    /// place), then move every targeted card to its logic.
     fn transition(
         &mut self,
         kind: ReconfigKind,
         entries: Vec<TargetLogic>,
         targets: Vec<Option<usize>>,
     ) -> ReconfigReport {
+        let downtimes = self.entry_downtimes(kind, &entries, &targets);
         let fresh = self.pool.deployments().iter().all(Option::is_none);
         if self.strategy == ReconfigStrategy::Cutover || self.pool.len() == 1 || fresh {
-            self.cutover(kind, &entries, &targets)
+            self.cutover(kind, &entries, &targets, &downtimes)
         } else {
-            self.begin_roll(kind, entries, targets)
+            self.begin_roll(kind, entries, targets, downtimes)
         }
     }
 
+    /// Per-entry outage for one transition: `kind.downtime_secs()` when
+    /// no library is attached (bit-identical to the pre-cache fleet —
+    /// every reprogram receives exactly the value `reconfigure` would
+    /// have computed); with a library, one `acquire` per entry that
+    /// actually flips a card — a **hit** charges `fraction x cold` on
+    /// every card flipped to that entry, a **miss** charges cold and
+    /// shelves the freshly compiled bitstream. Entries whose cards were
+    /// all skipped don't touch the library: nothing is compiled or
+    /// reprogrammed for them.
+    fn entry_downtimes(
+        &mut self,
+        kind: ReconfigKind,
+        entries: &[TargetLogic],
+        targets: &[Option<usize>],
+    ) -> Vec<f64> {
+        let cold = kind.downtime_secs();
+        let now = self.clock.now();
+        let Some(lib) = self.artifacts.as_mut() else {
+            return vec![cold; entries.len()];
+        };
+        entries
+            .iter()
+            .enumerate()
+            .map(|(ei, (dep, app, variant))| {
+                if !targets.contains(&Some(ei)) {
+                    cold // untargeted: value never reaches a card
+                } else if lib.acquire(*dep, app, variant, now) {
+                    lib.fraction() * cold
+                } else {
+                    cold
+                }
+            })
+            .collect()
+    }
+
     /// Program one card and keep the router's per-app index in sync —
-    /// the only place pool deployments may change.
+    /// the only place pool deployments may change. `downtime_secs` is
+    /// the transition entry's decided outage; everything downstream
+    /// (outage horizon, `RoutingEvent` stamp, roll rejoin time, stall
+    /// accounting, downtime totals) reads it off the report, so a
+    /// cache-shortened outage propagates with no special cases.
+    #[allow(clippy::too_many_arguments)]
     fn reprogram(
         &mut self,
         card: CardId,
         at: f64,
         kind: ReconfigKind,
+        downtime_secs: f64,
         app: &str,
         variant: &str,
         dep: Deployment,
     ) -> ReconfigReport {
-        let report = self.pool.reconfigure_card(card, at, kind, app, variant, dep);
+        let report = self
+            .pool
+            .reconfigure_card_with_downtime(card, at, kind, downtime_secs, app, variant, dep);
         self.router.note_deploy(card, dep.app);
         self.routing_log.push(RoutingEvent::Reprogram {
             card,
@@ -496,6 +595,7 @@ impl FleetEnv {
         kind: ReconfigKind,
         entries: &[TargetLogic],
         targets: &[Option<usize>],
+        downtimes: &[f64],
     ) -> ReconfigReport {
         // A cutover supersedes any unfinished roll: every targeted card
         // is reprogrammed and returned to the rotation right here
@@ -508,7 +608,8 @@ impl FleetEnv {
             let card = CardId(i as u16);
             if let Some(ei) = t {
                 let (dep, app, variant) = &entries[*ei];
-                let report = self.reprogram(card, now, kind, app, variant, *dep);
+                let report =
+                    self.reprogram(card, now, kind, downtimes[*ei], app, variant, *dep);
                 if first.is_none() {
                     first = Some(report);
                 }
@@ -534,6 +635,7 @@ impl FleetEnv {
         kind: ReconfigKind,
         entries: Vec<TargetLogic>,
         targets: Vec<Option<usize>>,
+        downtimes: Vec<f64>,
     ) -> ReconfigReport {
         let Some(first_changed) = targets.iter().position(Option::is_some) else {
             // Every card already holds its plan slot: nothing to flip.
@@ -543,6 +645,7 @@ impl FleetEnv {
         self.roll = Some(Roll {
             kind,
             entries,
+            downtimes,
             targets,
             next: 0,
             reprogramming: None,
@@ -601,7 +704,15 @@ impl FleetEnv {
             self.router.set_routable(card, false);
             let start = now.max(self.pool.card(card).busy_until());
             let (dep, app, variant) = &roll.entries[ei];
-            let report = self.reprogram(card, start, roll.kind, app, variant, *dep);
+            let report = self.reprogram(
+                card,
+                start,
+                roll.kind,
+                roll.downtimes[ei],
+                app,
+                variant,
+                *dep,
+            );
             roll.reprogramming = Some((card, start + report.downtime_secs));
         }
         self.roll = Some(roll);
@@ -686,6 +797,276 @@ impl FleetEnv {
         self.advance_to(to);
         Ok((from, to))
     }
+
+    // -- warm restart --------------------------------------------------------
+
+    /// Serialize the environment's operational state: clock, registry
+    /// rates, per-card horizons/logic/deployments, router drains and
+    /// stall counter, residency intent, any in-flight roll (per-entry
+    /// decided downtimes included), the full request history, and the
+    /// artifact manifest. Every scalar that must restore bit-identically
+    /// rides as an exact-bits string (see `util::json`), so a coordinator
+    /// restored from this snapshot resumes **bit-identically** mid-trace
+    /// — the proptest-asserted warm-restart contract.
+    ///
+    /// The routing-event log is *not* captured: it is consumed by
+    /// data-plane replays of already-served windows, which a restart does
+    /// not repeat. A restored environment starts a fresh log, exactly
+    /// like `reset`.
+    pub fn save_state(&self) -> Json {
+        let cards: Vec<Json> = (0..self.pool.len())
+            .map(|i| {
+                let id = CardId(i as u16);
+                let dev = self.pool.card(id);
+                let logic = match dev.logic() {
+                    Some(l) => Json::obj()
+                        .set("app", l.app.as_str())
+                        .set("variant", l.variant.as_str()),
+                    None => Json::Null,
+                };
+                let dep = match self.pool.deployment(id) {
+                    Some(d) => dep_to_json(d),
+                    None => Json::Null,
+                };
+                Json::obj()
+                    .set("logic", logic)
+                    .set("dep", dep)
+                    .set("outage_bits", Json::from_f64_bits(dev.outage_until()))
+                    .set("busy_bits", Json::from_f64_bits(dev.busy_until()))
+                    .set("routable", self.router.is_routable(id))
+            })
+            .collect();
+        let rates: Vec<Json> = self
+            .registry
+            .iter()
+            .map(|a| Json::from_f64_bits(a.rate_per_hour))
+            .collect();
+        let mut state = Json::obj()
+            .set("state_version", Json::from_u64(1))
+            .set("clock_bits", Json::from_f64_bits(self.clock.now()))
+            .set("rates", Json::Arr(rates))
+            .set("cards", Json::Arr(cards))
+            .set("stalls", Json::from_u64(self.router.stalls()))
+            .set("history", self.history.to_json());
+        state = match self.active {
+            Some(d) => state.set("active", dep_to_json(d)),
+            None => state.set("active", Json::Null),
+        };
+        state = match &self.active_plan {
+            Some(p) => state.set("plan", p.to_json()),
+            None => state.set("plan", Json::Null),
+        };
+        state = match &self.roll {
+            Some(r) => state.set("roll", roll_to_json(r)),
+            None => state.set("roll", Json::Null),
+        };
+        match &self.artifacts {
+            Some(a) => state.set("artifacts", a.to_json()),
+            None => state.set("artifacts", Json::Null),
+        }
+    }
+
+    /// Restore a [`FleetEnv::save_state`] snapshot into this environment,
+    /// which must have been freshly built with the same registry, part,
+    /// and card count (checked where possible). The history index is
+    /// rebuilt by replaying the serialized records through the same
+    /// `push` path that built it — bit-identical columns, prefix sums,
+    /// and histograms by construction. On error the environment is left
+    /// partially restored: rebuild it before serving.
+    pub fn restore_state(&mut self, j: &Json) -> anyhow::Result<()> {
+        let version = j.u64_at("state_version")?;
+        anyhow::ensure!(version == 1, "unknown fleet state version {version}");
+        let cards = j.arr_at("cards")?;
+        anyhow::ensure!(
+            cards.len() == self.pool.len(),
+            "snapshot has {} cards, pool has {}",
+            cards.len(),
+            self.pool.len()
+        );
+        let rates = j.arr_at("rates")?;
+        anyhow::ensure!(
+            rates.len() == self.registry.len(),
+            "snapshot has {} app rates, registry has {}",
+            rates.len(),
+            self.registry.len()
+        );
+        for (app, r) in self.registry.iter_mut().zip(rates) {
+            app.rate_per_hour = r
+                .as_f64_bits()
+                .ok_or_else(|| anyhow::anyhow!("malformed rate for app `{}`", app.name))?;
+        }
+        self.clock = Clock::new();
+        self.clock.advance_to(j.f64_bits_at("clock_bits")?);
+        for (i, c) in cards.iter().enumerate() {
+            let logic = match c.get("logic") {
+                Some(Json::Null) | None => None,
+                Some(l) => Some(LoadedLogic {
+                    app: l.str_at("app")?.to_string(),
+                    variant: l.str_at("variant")?.to_string(),
+                }),
+            };
+            let dep = match c.get("dep") {
+                Some(Json::Null) | None => None,
+                Some(d) => Some(dep_from_json(d)?),
+            };
+            self.pool.restore_card(
+                CardId(i as u16),
+                logic,
+                c.f64_bits_at("outage_bits")?,
+                c.f64_bits_at("busy_bits")?,
+                dep,
+            );
+        }
+        // The router's holder index is a function of the restored
+        // deployments; rebuild it, then re-apply drains and the stall
+        // counter.
+        self.router = FleetRouter::new(&self.pool, self.registry.len());
+        for (i, c) in cards.iter().enumerate() {
+            let routable = c
+                .get("routable")
+                .and_then(Json::as_bool)
+                .ok_or_else(|| anyhow::anyhow!("card {i}: missing `routable`"))?;
+            if !routable {
+                self.router.set_routable(CardId(i as u16), false);
+            }
+        }
+        self.router.record_stalls(j.u64_at("stalls")?);
+        self.active = match j.get("active") {
+            Some(Json::Null) | None => None,
+            Some(d) => Some(dep_from_json(d)?),
+        };
+        self.active_plan = match j.get("plan") {
+            Some(Json::Null) | None => None,
+            Some(p) => Some(ResidencyPlan::from_json(p)?),
+        };
+        self.roll = match j.get("roll") {
+            Some(Json::Null) | None => None,
+            Some(r) => Some(roll_from_json(r)?),
+        };
+        self.history = HistoryStore::from_json(
+            j.get("history")
+                .ok_or_else(|| anyhow::anyhow!("missing `history`"))?,
+            self.registry.len(),
+        )?;
+        self.artifacts = match j.get("artifacts") {
+            Some(Json::Null) | None => None,
+            Some(a) => Some(ArtifactLibrary::from_json(a)?),
+        };
+        self.routing_log.clear();
+        Ok(())
+    }
+}
+
+// -- snapshot (de)serialization helpers -------------------------------------
+
+fn dep_to_json(d: Deployment) -> Json {
+    Json::obj()
+        .set("app_id", d.app.0 as usize)
+        .set("variant_id", d.variant.0 as usize)
+        .set("coef_bits", Json::from_u64(d.improvement_coef.to_bits()))
+}
+
+fn dep_from_json(j: &Json) -> anyhow::Result<Deployment> {
+    Ok(Deployment {
+        app: AppId(j.usize_at("app_id")? as u16),
+        variant: VariantId(j.usize_at("variant_id")? as u8),
+        improvement_coef: f64::from_bits(j.u64_at("coef_bits")?),
+    })
+}
+
+fn kind_to_str(k: ReconfigKind) -> &'static str {
+    match k {
+        ReconfigKind::Static => "static",
+        ReconfigKind::Dynamic => "dynamic",
+    }
+}
+
+fn kind_from_str(s: &str) -> anyhow::Result<ReconfigKind> {
+    match s {
+        "static" => Ok(ReconfigKind::Static),
+        "dynamic" => Ok(ReconfigKind::Dynamic),
+        other => anyhow::bail!("unknown reconfig kind `{other}`"),
+    }
+}
+
+fn roll_to_json(r: &Roll) -> Json {
+    let entries: Vec<Json> = r
+        .entries
+        .iter()
+        .zip(&r.downtimes)
+        .map(|((dep, app, variant), dt)| {
+            Json::obj()
+                .set("dep", dep_to_json(*dep))
+                .set("app", app.as_str())
+                .set("variant", variant.as_str())
+                .set("downtime_bits", Json::from_f64_bits(*dt))
+        })
+        .collect();
+    let targets: Vec<Json> = r
+        .targets
+        .iter()
+        .map(|t| match t {
+            Some(ei) => Json::Num(*ei as f64),
+            None => Json::Null,
+        })
+        .collect();
+    let mut out = Json::obj()
+        .set("kind", kind_to_str(r.kind))
+        .set("entries", Json::Arr(entries))
+        .set("targets", Json::Arr(targets))
+        .set("next", r.next);
+    out = match r.reprogramming {
+        Some((card, rejoin)) => out.set(
+            "reprogramming",
+            Json::obj()
+                .set("card", card.0 as usize)
+                .set("rejoin_bits", Json::from_f64_bits(rejoin)),
+        ),
+        None => out.set("reprogramming", Json::Null),
+    };
+    out
+}
+
+fn roll_from_json(j: &Json) -> anyhow::Result<Roll> {
+    let mut entries = Vec::new();
+    let mut downtimes = Vec::new();
+    for e in j.arr_at("entries")? {
+        entries.push((
+            dep_from_json(
+                e.get("dep")
+                    .ok_or_else(|| anyhow::anyhow!("roll entry missing `dep`"))?,
+            )?,
+            e.str_at("app")?.to_string(),
+            e.str_at("variant")?.to_string(),
+        ));
+        downtimes.push(e.f64_bits_at("downtime_bits")?);
+    }
+    let mut targets = Vec::new();
+    for t in j.arr_at("targets")? {
+        targets.push(match t {
+            Json::Null => None,
+            other => Some(
+                other
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("malformed roll target"))?,
+            ),
+        });
+    }
+    let reprogramming = match j.get("reprogramming") {
+        Some(Json::Null) | None => None,
+        Some(r) => Some((
+            CardId(r.usize_at("card")? as u16),
+            r.f64_bits_at("rejoin_bits")?,
+        )),
+    };
+    Ok(Roll {
+        kind: kind_from_str(j.str_at("kind")?)?,
+        entries,
+        downtimes,
+        targets,
+        next: j.usize_at("next")?,
+        reprogramming,
+    })
 }
 
 impl Environment for FleetEnv {
@@ -1183,6 +1564,171 @@ mod tests {
         let mut env = FleetEnv::new(registry(), D5005, 4);
         let plan = plan_of(&env, &[("tdfir", 1), ("mriq", 1)]);
         env.deploy_plan(ReconfigKind::Static, &plan);
+    }
+
+    #[test]
+    fn artifact_cache_shortens_repeat_rolls_only() {
+        let mut env = FleetEnv::new(registry(), D5005, 4).with_artifact_cache(0.05);
+        env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.0);
+        let (td, td_l) = env.resolve("tdfir", "large").unwrap();
+        let lib = env.artifact_library().unwrap();
+        assert_eq!((lib.hits(), lib.misses()), (0, 1), "initial compile is cold");
+        // Drive a window, then roll to mriq (miss: cold outage).
+        let warm = tdfir_burst(&env, 2, 5.0);
+        env.run_window(&warm).unwrap();
+        env.deploy(ReconfigKind::Static, "mriq", "o1", 2.0);
+        let march = |env: &mut FleetEnv, from: f64, id0: u64| {
+            let mut t = from;
+            let mut id = id0;
+            let mut guard = 0;
+            while env.roll_in_progress() {
+                t += 0.5;
+                env.serve(&Request {
+                    id,
+                    app: td,
+                    size: td_l,
+                    arrival: t,
+                    bytes: 1.0e6,
+                })
+                .unwrap();
+                id += 1;
+                guard += 1;
+                assert!(guard < 200, "roll did not complete");
+            }
+            t
+        };
+        let roll_start = env.clock.now();
+        let t = march(&mut env, roll_start, 1000);
+        for i in 0..4u16 {
+            assert_eq!(
+                env.pool.card(CardId(i)).reconfig_log[1].downtime_secs,
+                1.0,
+                "first mriq compile pays the cold outage on card {i}"
+            );
+        }
+        // Roll back to tdfir: its bitstream is on the shelf — every
+        // flipped card reprograms at 5% of the cold second, and the
+        // shortened outage is what the rejoin clock and stall
+        // accounting see.
+        let stalls_before = env.serve_stalls();
+        env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.0);
+        march(&mut env, t, 2000);
+        for i in 0..4u16 {
+            let rep = &env.pool.card(CardId(i)).reconfig_log[2];
+            assert_eq!(rep.downtime_secs, 0.05, "cache hit on card {i}");
+            assert_eq!(rep.kind, ReconfigKind::Static);
+        }
+        assert_eq!(env.serve_stalls(), stalls_before, "rolls still stall-free");
+        let lib = env.artifact_library().unwrap();
+        assert_eq!((lib.hits(), lib.misses()), (1, 2));
+        assert_eq!(lib.len(), 2, "tdfir + mriq bitstreams on the shelf");
+    }
+
+    #[test]
+    fn cache_disabled_fleet_is_bitwise_the_pre_cache_fleet() {
+        // No library attached (the default): every downtime decision is
+        // `kind.downtime_secs()` passed through unchanged, so this env
+        // must reproduce the plain fleet bit for bit — outage horizons,
+        // records, and reconfig logs.
+        let mut a = FleetEnv::new(registry(), D5005, 3);
+        let mut b = FleetEnv::new(registry(), D5005, 3);
+        b.disable_artifact_cache(); // explicit no-op
+        for env in [&mut a, &mut b] {
+            env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+        }
+        let trace = generate(&registry(), 900.0, 23);
+        let shifted: Vec<Request> = trace
+            .iter()
+            .map(|r| {
+                let mut r = *r;
+                r.arrival += 2.0;
+                r
+            })
+            .collect();
+        for env in [&mut a, &mut b] {
+            env.run_window(&shifted).unwrap();
+            env.deploy(ReconfigKind::Static, "mriq", "o1", 2.0);
+            env.advance_to(env.clock.now() + 30.0);
+        }
+        assert_eq!(a.history.len(), b.history.len());
+        for (ra, rb) in a.history.all().iter().zip(b.history.all()) {
+            assert_eq!(ra.start.to_bits(), rb.start.to_bits());
+            assert_eq!(ra.served_by, rb.served_by);
+        }
+        for i in 0..3u16 {
+            let (ca, cb) = (a.pool.card(CardId(i)), b.pool.card(CardId(i)));
+            assert_eq!(ca.reconfig_log, cb.reconfig_log);
+            assert_eq!(ca.outage_until().to_bits(), cb.outage_until().to_bits());
+        }
+    }
+
+    #[test]
+    fn save_restore_roundtrips_mid_roll_bit_identically() {
+        let mut env = FleetEnv::new(registry(), D5005, 4).with_artifact_cache(5e-3);
+        env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+        let trace = generate(&registry(), 600.0, 11);
+        let shifted: Vec<Request> = trace
+            .iter()
+            .map(|r| {
+                let mut r = *r;
+                r.arrival += 2.0;
+                r
+            })
+            .collect();
+        env.run_window(&shifted).unwrap();
+        // Start a roll and snapshot while a card is mid-outage.
+        env.deploy(ReconfigKind::Static, "mriq", "o1", 2.0);
+        assert!(env.roll_in_progress());
+        let snap = env.save_state();
+        let text = snap.to_pretty();
+
+        let mut back = FleetEnv::new(registry(), D5005, 4);
+        back.restore_state(&Json::parse(&text).unwrap()).unwrap();
+        assert!(back.roll_in_progress(), "mid-roll state survives");
+        assert_eq!(back.clock.now().to_bits(), env.clock.now().to_bits());
+        assert_eq!(back.history.len(), env.history.len());
+        assert_eq!(back.serve_stalls(), env.serve_stalls());
+        for i in 0..4u16 {
+            let (o, r) = (env.pool.card(CardId(i)), back.pool.card(CardId(i)));
+            assert_eq!(o.busy_until().to_bits(), r.busy_until().to_bits());
+            assert_eq!(o.outage_until().to_bits(), r.outage_until().to_bits());
+            assert_eq!(o.logic(), r.logic());
+            assert_eq!(
+                env.router.is_routable(CardId(i)),
+                back.router.is_routable(CardId(i))
+            );
+        }
+        // Both finish the roll and serve identically from here on.
+        let (td, td_l) = env.resolve("tdfir", "large").unwrap();
+        let mut t = env.clock.now();
+        let mut id = 50_000u64;
+        while env.roll_in_progress() || back.roll_in_progress() {
+            t += 0.5;
+            let req = Request {
+                id,
+                app: td,
+                size: td_l,
+                arrival: t,
+                bytes: 1.0e6,
+            };
+            let a = env.serve(&req).unwrap();
+            let b = back.serve(&req).unwrap();
+            assert_eq!(a.start.to_bits(), b.start.to_bits());
+            assert_eq!(a.served_by, b.served_by);
+            id += 1;
+            assert!(id < 50_200, "rolls did not complete");
+        }
+        // The artifact manifest came along.
+        let (lo, lr) = (
+            env.artifact_library().unwrap(),
+            back.artifact_library().unwrap(),
+        );
+        assert_eq!(lo, lr);
+        // History queries answer identically (index rebuilt by replay).
+        let now = env.clock.now();
+        let (sa, na) = env.history.totals_in_window(td, now - 300.0, now);
+        let (sb, nb) = back.history.totals_in_window(td, now - 300.0, now);
+        assert_eq!((sa.to_bits(), na), (sb.to_bits(), nb));
     }
 
     #[test]

@@ -63,13 +63,32 @@
 //! `benches/downtime.rs` contrasts rolling against cutover;
 //! `benches/hetero_fleet.rs` gates heterogeneous residency against the
 //! homogeneous plan and the routing index against the linear scan.
+//!
+//! # Artifact cache + warm restart
+//!
+//! [`artifact`] adds the partial-reconfiguration fast path: a manifest
+//! of every compiled bitstream, keyed by the exact deployment identity
+//! `(AppId, VariantId, improvement-coef bits)`. A transition whose
+//! target logic is already on the shelf reprograms each changed card at
+//! a configurable fraction of the cold outage (`ReconConfig::
+//! {artifact_cache, partial_reconfig_fraction}`); a miss pays the cold
+//! compile + full outage and populates the library. The shortened
+//! downtime flows through the one `FleetEnv::reprogram` choke point, so
+//! outage horizons, `RoutingEvent` stamps, stall accounting, and the
+//! snapshot chain all see it with no special cases. The manifest is part
+//! of the serialized controller state ([`FleetEnv::save_state`]), so a
+//! warm-restarted coordinator keeps its compiled artifacts;
+//! `benches/recon_cache.rs` gates the cumulative-downtime win on a
+//! homogeneous↔mixed oscillation.
 
+pub mod artifact;
 pub mod env;
 pub mod plane;
 pub mod pool;
 pub mod router;
 pub mod snapshot;
 
+pub use artifact::{Artifact, ArtifactKey, ArtifactLibrary};
 pub use env::{FleetEnv, ReconfigStrategy};
 pub use plane::{ConcurrentFleet, DataShard, PlaneStats, ShardAssignment};
 pub use pool::CardPool;

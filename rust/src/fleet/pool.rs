@@ -92,9 +92,50 @@ impl CardPool {
         variant: &str,
         dep: Deployment,
     ) -> ReconfigReport {
-        let report = self.cards[id.0 as usize].reconfigure(at, kind, app, variant);
+        let downtime = kind.downtime_secs();
+        self.reconfigure_card_with_downtime(id, at, kind, downtime, app, variant, dep)
+    }
+
+    /// [`CardPool::reconfigure_card`] with an explicit outage duration —
+    /// the artifact-cache partial-reconfiguration fast path (a cached
+    /// bitstream reprograms at a fraction of the cold cost). Passing
+    /// `kind.downtime_secs()` is arithmetic-identical to the cold path.
+    #[allow(clippy::too_many_arguments)]
+    pub fn reconfigure_card_with_downtime(
+        &mut self,
+        id: CardId,
+        at: f64,
+        kind: ReconfigKind,
+        downtime_secs: f64,
+        app: &str,
+        variant: &str,
+        dep: Deployment,
+    ) -> ReconfigReport {
+        let report = self.cards[id.0 as usize].reconfigure_with_downtime(
+            at,
+            kind,
+            downtime_secs,
+            app,
+            variant,
+        );
         self.deployments[id.0 as usize] = Some(dep);
         report
+    }
+
+    /// Warm-restart hook: overwrite one card's operational state (loaded
+    /// logic, outage/FIFO horizons, deployment handles) with values
+    /// deserialized from a controller snapshot. Exact-bits assignment;
+    /// see [`FpgaDevice::restore_state`].
+    pub fn restore_card(
+        &mut self,
+        id: CardId,
+        logic: Option<crate::fpga::device::LoadedLogic>,
+        outage_until: f64,
+        busy_until: f64,
+        dep: Option<Deployment>,
+    ) {
+        self.cards[id.0 as usize].restore_state(logic, outage_until, busy_until);
+        self.deployments[id.0 as usize] = dep;
     }
 
     /// Schedule one request on a card's FIFO pipeline. Returns (start,
@@ -180,5 +221,39 @@ mod tests {
     #[should_panic(expected = "at least one card")]
     fn empty_pool_is_a_construction_bug() {
         let _ = CardPool::new(D5005, 0);
+    }
+
+    #[test]
+    fn partial_downtime_passes_through_to_the_card() {
+        let mut p = CardPool::new(D5005, 2);
+        p.reconfigure_card(CardId(0), 0.0, ReconfigKind::Static, "tdfir", "o1", dep(0));
+        let r = p.reconfigure_card_with_downtime(
+            CardId(0),
+            5.0,
+            ReconfigKind::Static,
+            0.05,
+            "mriq",
+            "o1",
+            dep(1),
+        );
+        assert_eq!(r.downtime_secs, 0.05);
+        assert_eq!(p.card(CardId(0)).outage_until(), 5.05);
+        assert_eq!(p.total_downtime(), 1.05);
+        // Stall accounting sees the shortened window: arriving after it
+        // is clean, arriving inside it stalls.
+        let (_, _, stalled) = p.schedule(CardId(0), 5.06, 1.0);
+        assert!(!stalled);
+        let mut q = CardPool::new(D5005, 1);
+        q.reconfigure_card_with_downtime(
+            CardId(0),
+            0.0,
+            ReconfigKind::Static,
+            0.05,
+            "tdfir",
+            "o1",
+            dep(0),
+        );
+        let (_, _, stalled) = q.schedule(CardId(0), 0.01, 1.0);
+        assert!(stalled, "arrival inside the shortened window still stalls");
     }
 }

@@ -69,7 +69,11 @@ pub enum RoutingEvent {
     /// Card's slot was reprogrammed: new interned deployment plus the
     /// absolute end of the reconfiguration outage on that card's
     /// timeline (possibly future-dated past `effective` while a drained
-    /// card's FIFO backlog clears).
+    /// card's FIFO backlog clears). The stamp is whatever downtime the
+    /// reprogram actually charged — an artifact-cache hit's shortened
+    /// partial-reconfiguration window rides through unchanged, so chain
+    /// replays see the same outage horizons as the sequential oracle
+    /// with no cache-specific cases.
     Reprogram {
         card: CardId,
         dep: Deployment,

@@ -98,11 +98,31 @@ impl FpgaDevice {
         app: impl Into<String>,
         variant: impl Into<String>,
     ) -> ReconfigReport {
+        let downtime = kind.downtime_secs();
+        self.reconfigure_with_downtime(now, kind, downtime, app, variant)
+    }
+
+    /// [`FpgaDevice::reconfigure`] with an explicit outage duration.
+    ///
+    /// The partial-reconfiguration fast path: when a compiled bitstream
+    /// for the target logic is already in the artifact library, the fleet
+    /// charges a configurable fraction of the cold outage instead of
+    /// `kind.downtime_secs()`. Passing `kind.downtime_secs()` makes this
+    /// arithmetic-identical to the cold path, which is how
+    /// [`FpgaDevice::reconfigure`] delegates here.
+    pub fn reconfigure_with_downtime(
+        &mut self,
+        now: f64,
+        kind: ReconfigKind,
+        downtime_secs: f64,
+        app: impl Into<String>,
+        variant: impl Into<String>,
+    ) -> ReconfigReport {
         let to = LoadedLogic {
             app: app.into(),
             variant: variant.into(),
         };
-        let downtime = kind.downtime_secs();
+        let downtime = downtime_secs;
         let report = ReconfigReport {
             kind,
             from: self.logic.clone(),
@@ -117,6 +137,24 @@ impl FpgaDevice {
         self.logic = Some(to);
         self.reconfig_log.push(report.clone());
         report
+    }
+
+    /// Warm-restart hook: overwrite the card's operational state with
+    /// values deserialized from a controller snapshot. Exact-bits
+    /// assignment (no `max`) — the snapshot *is* the card's state; the
+    /// reconfig log restarts empty (historical reports are accounting,
+    /// not schedule state, and future reports read `from` off the
+    /// restored `logic`).
+    pub fn restore_state(
+        &mut self,
+        logic: Option<LoadedLogic>,
+        outage_until: f64,
+        busy_until: f64,
+    ) {
+        self.logic = logic;
+        self.outage_until = outage_until;
+        self.busy_until = busy_until;
+        self.reconfig_log.clear();
     }
 
     /// Schedule one request on the card's pipeline (serialized FIFO).
@@ -213,6 +251,38 @@ mod tests {
         let (_, f1) = d.schedule(0.2, 2.0);
         assert_eq!(d.busy_until(), f1);
         assert_eq!(d.earliest_start(0.3), f1, "FIFO backlog binds");
+    }
+
+    #[test]
+    fn explicit_downtime_shortens_the_outage_window() {
+        // The artifact-cache fast path: same kind, 5% of the cold cost.
+        let mut d = FpgaDevice::new(D5005);
+        d.reconfigure(0.0, ReconfigKind::Static, "tdfir", "o1");
+        let r = d.reconfigure_with_downtime(10.0, ReconfigKind::Static, 0.05, "mriq", "o13");
+        assert_eq!(r.kind, ReconfigKind::Static);
+        assert_eq!(r.downtime_secs, 0.05);
+        assert_eq!(d.outage_until(), 10.05);
+        assert!(!d.available_at(10.01));
+        assert!(d.available_at(10.05));
+        // Stall accounting and the downtime sum both see the short window.
+        let (s, _) = d.schedule(10.01, 1.0);
+        assert_eq!(s, 10.05, "request queues only to the shortened outage");
+        assert_eq!(d.total_downtime(), 1.05);
+    }
+
+    #[test]
+    fn restore_state_overwrites_horizons_exactly() {
+        let mut d = FpgaDevice::new(D5005);
+        d.reconfigure(0.0, ReconfigKind::Static, "tdfir", "o1");
+        d.schedule(1.0, 2.0);
+        let logic = d.logic().cloned();
+        let (out, busy) = (d.outage_until(), d.busy_until());
+        let mut fresh = FpgaDevice::new(D5005);
+        fresh.restore_state(logic, out, busy);
+        assert_eq!(fresh.outage_until().to_bits(), out.to_bits());
+        assert_eq!(fresh.busy_until().to_bits(), busy.to_bits());
+        assert!(fresh.serves("tdfir"));
+        assert!(fresh.reconfig_log.is_empty());
     }
 
     #[test]

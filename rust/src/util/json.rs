@@ -99,6 +99,50 @@ impl Json {
         }
     }
 
+    // -- exact-bits carriers -----------------------------------------------
+    //
+    // `Json::Num` is f64-backed, so a u64 above 2^53 (and the low bits of
+    // an arbitrary f64 bit pattern) would be corrupted by a numeric
+    // round-trip. Controller snapshots that must restore *bit-identically*
+    // (clock values, scheduling horizons, improvement coefficients, stall
+    // counters) therefore carry those scalars as decimal strings of the
+    // exact integer — lossless through parse/print by construction.
+
+    /// Exact f64 carrier: the IEEE-754 bit pattern as a decimal string.
+    pub fn from_f64_bits(x: f64) -> Json {
+        Json::Str(x.to_bits().to_string())
+    }
+
+    /// Exact u64 carrier (counters, id tails, bit patterns).
+    pub fn from_u64(x: u64) -> Json {
+        Json::Str(x.to_string())
+    }
+
+    /// Read back a scalar written by [`Json::from_f64_bits`].
+    pub fn as_f64_bits(&self) -> Option<f64> {
+        self.as_str()
+            .and_then(|s| s.parse::<u64>().ok())
+            .map(f64::from_bits)
+    }
+
+    /// Read back a scalar written by [`Json::from_u64`].
+    pub fn as_u64_str(&self) -> Option<u64> {
+        self.as_str().and_then(|s| s.parse::<u64>().ok())
+    }
+
+    /// `obj.f64_bits_at("key")` with a descriptive error for snapshots.
+    pub fn f64_bits_at(&self, key: &str) -> anyhow::Result<f64> {
+        self.get(key)
+            .and_then(Json::as_f64_bits)
+            .ok_or_else(|| anyhow::anyhow!("missing f64-bits field `{key}`"))
+    }
+
+    pub fn u64_at(&self, key: &str) -> anyhow::Result<u64> {
+        self.get(key)
+            .and_then(Json::as_u64_str)
+            .ok_or_else(|| anyhow::anyhow!("missing u64 field `{key}`"))
+    }
+
     /// `obj.str_at("key")` with a descriptive error for manifest loading.
     pub fn str_at(&self, key: &str) -> anyhow::Result<&str> {
         self.get(key)
@@ -558,5 +602,35 @@ mod tests {
     fn integers_render_without_fraction() {
         assert_eq!(Json::Num(3.0).to_string(), "3");
         assert_eq!(Json::Num(3.5).to_string(), "3.5");
+    }
+
+    #[test]
+    fn f64_bits_roundtrip_is_exact_where_num_is_not() {
+        // Values chosen to break a numeric round-trip: a subnormal, a
+        // negative zero, an ulp-off sum, and a coefficient with a full
+        // mantissa. All must survive print -> parse bit-exactly.
+        let cases = [
+            0.1 + 0.2,
+            -0.0,
+            f64::MIN_POSITIVE / 8.0,
+            1.0 / 3.0,
+            2.0f64.powi(60) + 1.0,
+            f64::INFINITY,
+        ];
+        for &x in &cases {
+            let j = Json::from_f64_bits(x);
+            let text = Json::obj().set("t", j).to_string();
+            let back = Json::parse(&text).unwrap().f64_bits_at("t").unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x:?} corrupted");
+        }
+        // u64 above 2^53: Json::Num would round it; the string carrier
+        // must not.
+        let big = (1u64 << 60) + 7;
+        let text = Json::obj().set("n", Json::from_u64(big)).to_string();
+        let back = Json::parse(&text).unwrap().u64_at("n").unwrap();
+        assert_eq!(back, big);
+        // Descriptive errors on absent/malformed fields.
+        assert!(Json::obj().f64_bits_at("missing").is_err());
+        assert!(Json::obj().set("n", "not-a-number").u64_at("n").is_err());
     }
 }

@@ -6,7 +6,9 @@ use repro::apps::{app_id, registry, AppId, SizeId, VariantId};
 use repro::coordinator::history::{scan, HistoryStore, RequestRecord, ServedBy};
 use repro::coordinator::server::Deployment;
 use repro::coordinator::{
-    run_reconfiguration, Approval, ProductionEnv, ReconConfig, ReconOutcome, ResidencyPlan,
+    run_adaptive, run_adaptive_from, AdaptiveConfig, AdaptiveState, Approval,
+    ProductionEnv, ReconConfig, ReconOutcome, ResidencyPlan,
+    run_reconfiguration,
 };
 use repro::fleet::plane::{run_partitioned, CardHorizons};
 use repro::fleet::snapshot::ChainBuilder;
@@ -1034,6 +1036,163 @@ fn prop_data_plane_replay_matches_fleet_oracle() {
                         )?;
                     }
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Warm restart: on random fleets, traces, and restart points — run the
+/// Step-7 adaptive loop for k windows, serialize the whole controller
+/// state (environment snapshot + loop state) through `util::json`,
+/// restore it into a **fresh** fleet, and continue to W windows. The
+/// resumed run must be bit-identical to an uninterrupted W-window oracle:
+/// request records, recon outcomes, clock, per-card horizons, stall
+/// counts, and the artifact manifest. Runs with the artifact cache both
+/// on and off, so the shortened partial-reconfiguration outages round-trip
+/// through the snapshot too.
+#[test]
+fn prop_warm_restart_resumes_bit_identically() {
+    forall(
+        4,
+        0x3E57A27,
+        |rng| {
+            let windows = 3 + rng.next_below(3) as usize;
+            (
+                2 + rng.next_below(3) as usize,
+                windows,
+                1 + rng.next_below(windows as u64 - 1) as usize,
+                rng.next_u64(),
+                rng.next_f64() < 0.5,
+            )
+        },
+        |&(cards, windows, k, seed, cache)| {
+            let cfg = AdaptiveConfig {
+                recon: ReconConfig {
+                    artifact_cache: cache,
+                    partial_reconfig_fraction: 5e-3,
+                    ..Default::default()
+                },
+                windows,
+                window_secs: 600.0 + (seed % 7) as f64 * 100.0,
+                cooldown_windows: 1,
+                flap_ratio: 4.0,
+            };
+            let fresh = |cfg: &AdaptiveConfig| {
+                let mut env = FleetEnv::new(registry(), D5005, cards);
+                env.configure_artifact_cache(&cfg.recon);
+                env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+                env
+            };
+
+            // Uninterrupted oracle: all W windows in one run.
+            let mut oracle = fresh(&cfg);
+            let mut ap = Approval::auto_yes();
+            let oracle_reports = run_adaptive(&mut oracle, &cfg, &mut ap, |_, _| {})
+                .map_err(|e| e.to_string())?;
+
+            // Interrupted run: k windows, snapshot, restore into a fresh
+            // fleet, continue to W.
+            let mut env = fresh(&cfg);
+            let mut ap = Approval::auto_yes();
+            let mut state = AdaptiveState::default();
+            let head_cfg = AdaptiveConfig {
+                windows: k,
+                ..cfg.clone()
+            };
+            let mut reports =
+                run_adaptive_from(&mut env, &head_cfg, &mut ap, &mut state, |_, _| {})
+                    .map_err(|e| e.to_string())?;
+            let snapshot = Json::obj()
+                .set("env", env.save_state())
+                .set("loop", state.to_json())
+                .to_pretty();
+            drop(env);
+
+            let snap = Json::parse(&snapshot).map_err(|e| e.to_string())?;
+            let mut env = FleetEnv::new(registry(), D5005, cards);
+            env.restore_state(snap.get("env").ok_or("missing env")?)
+                .map_err(|e| e.to_string())?;
+            let mut state = AdaptiveState::from_json(snap.get("loop").ok_or("missing loop")?)
+                .map_err(|e| e.to_string())?;
+            ensure(state.next_window == k, "loop state must resume at k")?;
+            reports.extend(
+                run_adaptive_from(&mut env, &cfg, &mut ap, &mut state, |_, _| {})
+                    .map_err(|e| e.to_string())?,
+            );
+
+            // Window reports agree (recon outcomes bit for bit where run).
+            ensure(reports.len() == oracle_reports.len(), "report count")?;
+            for (a, b) in reports.iter().zip(&oracle_reports) {
+                ensure(a.window == b.window, "window index")?;
+                ensure(a.requests == b.requests, format!("window {} requests", a.window))?;
+                ensure(
+                    a.reconfigured == b.reconfigured,
+                    format!("window {} reconfigured", a.window),
+                )?;
+                ensure(a.serving == b.serving, format!("window {} serving", a.window))?;
+                match (&a.outcome, &b.outcome) {
+                    (Some(x), Some(y)) => recon_outcomes_agree(x, y)?,
+                    (None, None) => {}
+                    _ => return Err(format!("window {} outcome presence", a.window)),
+                }
+            }
+
+            // Environment state agrees bit for bit.
+            ensure(
+                env.clock.now().to_bits() == oracle.clock.now().to_bits(),
+                "clock",
+            )?;
+            ensure(env.serve_stalls() == oracle.serve_stalls(), "stalls")?;
+            ensure(env.history.len() == oracle.history.len(), "history length")?;
+            for (x, y) in env.history.all().iter().zip(oracle.history.all()) {
+                ensure(
+                    x.id == y.id && x.app == y.app && x.size == y.size,
+                    "record identity",
+                )?;
+                ensure(x.served_by == y.served_by, format!("served_by for {}", x.id))?;
+                ensure(
+                    x.arrival.to_bits() == y.arrival.to_bits()
+                        && x.start.to_bits() == y.start.to_bits()
+                        && x.finish.to_bits() == y.finish.to_bits()
+                        && x.service_secs.to_bits() == y.service_secs.to_bits(),
+                    format!("record timing bits for {}", x.id),
+                )?;
+            }
+            for c in 0..cards {
+                let id = CardId(c as u16);
+                let (ca, cb) = (env.pool.card(id), oracle.pool.card(id));
+                ensure(
+                    ca.busy_until().to_bits() == cb.busy_until().to_bits()
+                        && ca.outage_until().to_bits() == cb.outage_until().to_bits(),
+                    format!("card {c} horizons"),
+                )?;
+            }
+            match (env.active(), oracle.active()) {
+                (Some(x), Some(y)) => {
+                    ensure(x.app == y.app && x.variant == y.variant, "active logic")?;
+                    ensure(
+                        x.improvement_coef.to_bits() == y.improvement_coef.to_bits(),
+                        "active coefficient",
+                    )?;
+                }
+                (None, None) => {}
+                _ => return Err("active deployment diverged".into()),
+            }
+            ensure(
+                env.artifact_library() == oracle.artifact_library(),
+                "artifact manifest",
+            )?;
+            // History queries answer identically on the replayed index.
+            let now = oracle.clock.now();
+            for a in 0..registry().len() {
+                let app = AppId(a as u16);
+                let (s1, c1) = env.history.totals_in_window(app, now * 0.3, now);
+                let (s2, c2) = oracle.history.totals_in_window(app, now * 0.3, now);
+                ensure(
+                    s1.to_bits() == s2.to_bits() && c1 == c2,
+                    format!("totals app {a}"),
+                )?;
             }
             Ok(())
         },

@@ -24,6 +24,13 @@
 //!     the 64-card trace through a mid-trace drain → reprogram → rejoin
 //!     snapshot swap without a single allocation once the record shard
 //!     is reserved — snapshot crossings included.
+//!  7. **Artifact cache off the hot path** — with the compiled-artifact
+//!     library attached the steady-state serve loop still allocates
+//!     nothing (the library is consulted only at deploy time), and a
+//!     cache-hit reprogram charges exactly the shortened
+//!     partial-reconfiguration outage: an arrival inside the 5 ms window
+//!     stalls, an arrival past it — but inside where the cold 1 s window
+//!     would still have been — does not.
 //!
 //! Kept as a single #[test] so no concurrent test pollutes the global
 //! allocation counter between the before/after reads.
@@ -277,4 +284,97 @@ fn serve_is_bit_identical_to_seed_model_and_allocation_free() {
         .records
         .iter()
         .all(|r| matches!(r.served_by, repro::coordinator::ServedBy::Fpga(_))));
+
+    // ---- 7. artifact cache: alloc-free serve + exact shortened outage -----
+    // One card, library attached. The initial tdfir deploy is a miss
+    // (cold 1 s outage, manifest populated); the trace is shifted clear
+    // of it so the steady-state loop sees zero stalls — and must still
+    // allocate nothing, since serve never touches the library.
+    let fraction = 5e-3;
+    let cold = ReconfigKind::Static.downtime_secs();
+    let mut cached = FleetEnv::new(registry(), D5005, 1).with_artifact_cache(fraction);
+    cached.deploy(ReconfigKind::Static, "tdfir", VARIANT, 2.0);
+    let mut shifted = trace.clone();
+    for r in &mut shifted {
+        r.arrival += 2.0;
+    }
+    cached.history.reserve(shifted.len() + 1);
+    let before_c = ALLOCS.load(Ordering::SeqCst);
+    for r in &shifted {
+        let rec = cached.serve(r).unwrap();
+        std::hint::black_box(rec);
+    }
+    let after_c = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after_c - before_c,
+        0,
+        "serve with the artifact library attached allocated {} time(s)",
+        after_c - before_c
+    );
+    assert_eq!(cached.serve_stalls(), 0, "trace cleared the deploy outage");
+    {
+        let lib = cached.artifact_library().unwrap();
+        assert_eq!(
+            (lib.len(), lib.hits(), lib.misses()),
+            (1, 0, 1),
+            "initial deploy must be the only (miss) compile so far"
+        );
+    }
+
+    // Flip away (second miss: cold outage) and back (hit): the return
+    // reprogram's outage window is exactly `fraction x cold` wide.
+    let rep_away = cached.deploy(ReconfigKind::Static, "mriq", "o1", 1.5);
+    assert_eq!(rep_away.downtime_secs.to_bits(), cold.to_bits());
+    // Clear of the mriq outage AND any FIFO backlog from the trace, so
+    // the probes below queue behind the outage horizon alone.
+    let t1 = cached.clock.now() + 64.0;
+    cached.advance_to(t1);
+    let rep_back = cached.deploy(ReconfigKind::Static, "tdfir", VARIANT, 2.0);
+    assert_eq!(
+        rep_back.downtime_secs.to_bits(),
+        (fraction * cold).to_bits(),
+        "cache hit must charge exactly the partial-reconfiguration outage"
+    );
+    assert_eq!(
+        cached.pool.card(CardId(0)).outage_until().to_bits(),
+        (t1 + fraction * cold).to_bits(),
+        "card outage horizon must end exactly at the shortened window"
+    );
+
+    // Stall accounting sees the shortened window bit-exactly: a tdfir
+    // arrival inside (t1, t1 + 5 ms) stalls; one at t1 + 0.5 — inside
+    // where the cold 1 s window would still have been — does not.
+    let tdfir_req = *trace
+        .iter()
+        .find(|r| r.app == td)
+        .expect("production trace has tdfir traffic");
+    let mut probe = tdfir_req;
+    probe.arrival = t1 + fraction * cold * 0.5;
+    let rec = cached.serve(&probe).unwrap();
+    assert!(rec.served_by.is_fpga());
+    assert_eq!(
+        cached.serve_stalls(),
+        1,
+        "an arrival inside the shortened window is a stall"
+    );
+    assert_eq!(
+        rec.start.to_bits(),
+        (t1 + fraction * cold).to_bits(),
+        "the stalled request starts exactly at the shortened outage end"
+    );
+    let mut probe = tdfir_req;
+    probe.arrival = t1 + 0.5;
+    let rec = cached.serve(&probe).unwrap();
+    assert!(rec.served_by.is_fpga());
+    assert_eq!(
+        cached.serve_stalls(),
+        1,
+        "past the shortened window (but inside the old cold window) no stall"
+    );
+    let lib = cached.artifact_library().unwrap();
+    assert_eq!(
+        (lib.len(), lib.hits(), lib.misses()),
+        (2, 1, 2),
+        "two bitstreams compiled, one revisit hit"
+    );
 }

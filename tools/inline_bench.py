@@ -3,9 +3,9 @@
 
 The CI `bench-smoke` job uploads `BENCH_router_throughput.json`,
 `BENCH_recon_analysis.json`, `BENCH_fleet_scaling.json`,
-`BENCH_hetero_fleet.json`, and `BENCH_concurrent_serve.json` on every
-push; a full (non-smoke) run produces the same files locally via
-`cargo bench --bench <name>`.
+`BENCH_hetero_fleet.json`, `BENCH_concurrent_serve.json`, and
+`BENCH_recon_cache.json` on every push; a full (non-smoke) run produces
+the same files locally via `cargo bench --bench <name>`.
 This script turns any of them into the markdown the ROADMAP
 Performance section inlines, so refreshing the committed numbers is
 mechanical:
@@ -39,6 +39,15 @@ def fmt_rate(r: float) -> str:
     return f"{r:.1f}/s"
 
 
+def fmt_extra(key: str, v: float) -> str:
+    """Unit-aware extras: `*_s` are (down)time seconds, `*_x` ratios."""
+    if key.endswith("_s"):
+        return fmt_secs(v)
+    if key.endswith("_x"):
+        return f"{v:.2f}x"
+    return f"{v:g}"
+
+
 def render(path: str) -> None:
     with open(path, encoding="utf-8") as f:
         doc = json.load(f)
@@ -53,7 +62,9 @@ def render(path: str) -> None:
             f"| {fmt_secs(s['mean_s'])} | {fmt_rate(s.get('rps', 0.0))} |"
         )
     if extras:
-        pairs = ", ".join(f"`{k}` = {v:g}" for k, v in sorted(extras.items()))
+        pairs = ", ".join(
+            f"`{k}` = {fmt_extra(k, v)}" for k, v in sorted(extras.items())
+        )
         print(f"\nextras: {pairs}")
     print()
 
