@@ -35,14 +35,22 @@
 //!    (`partial_reconfig_fraction` x the 1 s cold outage) instead of
 //!    recompiling; watch the hits/misses summary at the end.
 //!  * **warm restart** — at hour 6 the whole controller state (card
-//!    horizons, history, residency intent, artifact manifest, adaptive
-//!    loop cursor) is serialized to JSON and restored into a brand-new
-//!    fleet + data plane, which resumes hour 7 bit-identically to an
-//!    uninterrupted run — a coordinator redeploy with zero served-state
-//!    loss.
+//!    horizons, history, residency intent, artifact manifest, telemetry,
+//!    adaptive loop cursor) is serialized to JSON and restored into a
+//!    brand-new fleet + data plane, which resumes hour 7 bit-identically
+//!    to an uninterrupted run — a coordinator redeploy with zero
+//!    served-state loss.
+//!
+//! The run is observed through the **telemetry plane**: per-window lane
+//! splits, stalls, and latency quantiles come from the deterministic
+//! serve metrics, and every controller decision (analysis, proposal,
+//! plan, drain/reprogram/rejoin, artifact hit/miss) lands in the
+//! decision trace. `TRACE_JSONL=path` writes the trace as JSONL —
+//! render it with `python3 tools/render_trace.py path`.
 //!
 //!     cargo run --release --example adaptive_operation
 //!     SERVE_THREADS=8 cargo run --release --example adaptive_operation
+//!     TRACE_JSONL=trace.jsonl cargo run --release --example adaptive_operation
 
 use repro::apps::registry;
 use repro::coordinator::adaptive::{run_adaptive_from, AdaptiveConfig, AdaptiveState};
@@ -52,6 +60,8 @@ use repro::fleet::{ConcurrentFleet, FleetEnv};
 use repro::fpga::device::{CardId, ReconfigKind};
 use repro::fpga::part::D5005;
 use repro::offload::{search, OffloadConfig};
+use repro::report::telemetry_window_summary;
+use repro::telemetry::write_jsonl;
 use repro::util::json::Json;
 use repro::util::table::Table;
 
@@ -73,7 +83,9 @@ fn main() -> anyhow::Result<()> {
     const CARDS: usize = 4;
     let mut env = FleetEnv::new(registry(), D5005, CARDS);
     // Attach the compiled-artifact library before the first deploy, so
-    // even the launch bitstream lands in the manifest.
+    // even the launch bitstream lands in the manifest — and enable the
+    // telemetry plane first, so the launch reprogram is traced too.
+    env.enable_telemetry();
     env.configure_artifact_cache(&run_cfg.recon);
     let reg = registry();
     let td = repro::apps::find(&reg, "tdfir").unwrap();
@@ -150,21 +162,13 @@ fn main() -> anyhow::Result<()> {
     // logic changes into partial reconfigurations.
     reports.extend(run_adaptive_from(&mut env, &cfg, &mut approval, &mut state, drift)?);
 
-    let mut t = Table::new(vec!["hour", "requests", "serving", "reconfigured", "effect ratio"]);
-    for r in &reports {
-        t.row(vec![
-            r.window.to_string(),
-            r.requests.to_string(),
-            r.serving.clone().unwrap_or_default(),
-            if r.reconfigured { "YES (rolling)" } else { "" }.to_string(),
-            r.outcome
-                .as_ref()
-                .and_then(|o| o.proposal.as_ref())
-                .map(|p| format!("{:.2}", p.ratio))
-                .unwrap_or_else(|| "(cooldown)".into()),
-        ]);
-    }
-    print!("{}", t.render());
+    // The per-window story, entirely from the telemetry plane: loop
+    // reports joined with the decision trace's window events.
+    let telemetry = env.fleet.telemetry().expect("telemetry enabled above");
+    print!(
+        "{}",
+        telemetry_window_summary(&reports, &telemetry.trace).render()
+    );
 
     let switches: Vec<_> = reports
         .iter()
@@ -219,5 +223,29 @@ fn main() -> anyhow::Result<()> {
         stats.crossings,
         stats.lock_acquisitions,
     );
+
+    // Telemetry exports: cumulative latency quantiles to stdout, the
+    // decision trace as JSONL to `TRACE_JSONL` (if set).
+    let telemetry = env.fleet.telemetry().expect("telemetry enabled above");
+    let m = &telemetry.metrics;
+    println!(
+        "telemetry: {} request(s) ({} fpga / {} cpu), {} stall(s) — \
+         latency p50 <= {:.4} s, p99 <= {:.4} s; {} trace event(s)",
+        m.total_requests(),
+        m.fpga_requests(),
+        m.cpu_fallbacks(),
+        m.stalls(),
+        m.latency_quantile(0.5),
+        m.latency_quantile(0.99),
+        telemetry.trace.len(),
+    );
+    if let Ok(path) = std::env::var("TRACE_JSONL") {
+        write_jsonl(&path, &telemetry.trace)?;
+        println!(
+            "decision trace: {} event(s) written to {path} \
+             (render: python3 tools/render_trace.py {path})",
+            telemetry.trace.len()
+        );
+    }
     Ok(())
 }

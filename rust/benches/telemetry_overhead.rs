@@ -1,0 +1,212 @@
+//! Telemetry overhead bench: what serve-path metric recording costs.
+//! Writes `BENCH_telemetry.json`.
+//!
+//! **Sections 1-2 — sequential fleet serve, metrics off/on.** The same
+//! window replays through `FleetEnv::run_window` on a fresh oracle per
+//! iteration (reset + redeploy + serve — identical control cost in both
+//! sections, so the delta is the recording itself).
+//!
+//! **Sections 3-4 — data-plane shard serve (4 threads), metrics off/on.**
+//! The hot path the telemetry plane was designed around: worker-local
+//! `ServeMetrics` recording inside `serve_shard`, merged after the timed
+//! loop.
+//!
+//! Gates (asserted):
+//!  * metrics-enabled throughput ≥ 0.9x disabled, on both the
+//!    sequential and the sharded path;
+//!  * metrics-off record streams bitwise-identical to the pre-telemetry
+//!    fleet (same construction, telemetry never enabled);
+//!  * metrics-on record streams bitwise-identical to metrics-off —
+//!    recording must not perturb a single served bit;
+//!  * shard-merged metrics bit-equal (`==`, all-integer state) to the
+//!    sequential fleet's cumulative metrics over the same window.
+
+use repro::apps::synthetic_registry;
+use repro::coordinator::history::RequestRecord;
+use repro::coordinator::recon::ResidencyPlan;
+use repro::fleet::plane::{
+    merge_shards, serve_all, CardHorizons, DataShard, ShardAssignment,
+};
+use repro::fleet::snapshot::ChainBuilder;
+use repro::fleet::FleetEnv;
+use repro::fpga::device::ReconfigKind;
+use repro::fpga::part::D5005;
+use repro::util::bench::{smoke_mode, Bench};
+use repro::workload::{generate, Request};
+
+const APPS: usize = 8;
+const CARDS: usize = 8;
+const THREADS: usize = 4;
+/// Metrics-enabled mean must stay within 1/0.9 of disabled.
+const MIN_THROUGHPUT_RATIO: f64 = 0.9;
+
+fn hot_registry() -> Vec<repro::apps::AppSpec> {
+    let mut reg = synthetic_registry(APPS);
+    for a in &mut reg {
+        a.rate_per_hour = 3750.0;
+    }
+    reg
+}
+
+fn deployed_fleet(telemetry: bool) -> FleetEnv {
+    let plan = ResidencyPlan::uniform(&hot_registry(), CARDS / APPS, "o1", 2.0);
+    let mut env = FleetEnv::new(hot_registry(), D5005, CARDS);
+    if telemetry {
+        env.enable_telemetry();
+    }
+    env.deploy_plan(ReconfigKind::Static, &plan);
+    env
+}
+
+fn bitwise_equal(a: &[RequestRecord], b: &[RequestRecord]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.id == y.id
+                && x.served_by == y.served_by
+                && x.arrival.to_bits() == y.arrival.to_bits()
+                && x.start.to_bits() == y.start.to_bits()
+                && x.finish.to_bits() == y.finish.to_bits()
+                && x.service_secs.to_bits() == y.service_secs.to_bits()
+        })
+}
+
+fn main() {
+    println!("== telemetry overhead: serve-path metric recording ==\n");
+
+    let duration = if smoke_mode() { 1200.0 } else { 3600.0 };
+    let mut trace = generate(&hot_registry(), duration, 31);
+    for r in &mut trace {
+        r.arrival += 2.0; // past the pre-launch deploy outage
+    }
+    let n = trace.len() as f64;
+    println!(
+        "trace: {} requests over {duration} simulated seconds, {CARDS} cards, {APPS} apps\n",
+        trace.len()
+    );
+
+    // The pre-telemetry oracle: same fleet, telemetry never enabled.
+    let mut oracle = deployed_fleet(false);
+    oracle.run_window(&trace).unwrap();
+
+    // ---- sequential fleet serve, metrics off vs on -----------------------
+    let mut b = Bench::from_env();
+    let plan = ResidencyPlan::uniform(&hot_registry(), CARDS / APPS, "o1", 2.0);
+    let mut env_off = deployed_fleet(false);
+    let m_off = b.run("fleet_serve_metrics_off", || {
+        env_off.reset();
+        env_off.deploy_plan(ReconfigKind::Static, &plan);
+        env_off.run_window(&trace).unwrap();
+    });
+    let mut env_on = deployed_fleet(true);
+    let m_on = b.run("fleet_serve_metrics_on", || {
+        env_on.reset();
+        env_on.deploy_plan(ReconfigKind::Static, &plan);
+        env_on.run_window(&trace).unwrap();
+    });
+    assert!(
+        bitwise_equal(env_off.history.all(), oracle.history.all()),
+        "metrics-off fleet must be bitwise the pre-telemetry fleet"
+    );
+    assert!(
+        bitwise_equal(env_on.history.all(), oracle.history.all()),
+        "metric recording must not perturb a single served bit"
+    );
+    let seq_metrics = env_on.telemetry().expect("enabled").metrics.clone();
+    assert_eq!(seq_metrics.total_requests(), trace.len() as u64);
+    let seq_ratio = m_off.mean_s / m_on.mean_s.max(1e-12);
+
+    // ---- data-plane shard serve, metrics off vs on -----------------------
+    let env = deployed_fleet(false);
+    let mut builder = ChainBuilder::from_env(&env);
+    let chain = builder.chain(&[]);
+    let init = CardHorizons::from_pool(&env.pool);
+    let assign = ShardAssignment::for_chain(&chain, APPS, CARDS, THREADS);
+    let subs: Vec<Vec<Request>> = assign.split(&trace);
+    let mk_shards = |metrics: bool| -> Vec<DataShard> {
+        (0..THREADS)
+            .map(|w| {
+                let mut s = DataShard::new(w as u16, &init);
+                s.records.reserve(subs[w].len());
+                if metrics {
+                    s.enable_metrics(APPS);
+                }
+                s
+            })
+            .collect()
+    };
+
+    let mut shards_off = mk_shards(false);
+    let s_off = b.run_threads("shard_serve_metrics_off", THREADS as u64, || {
+        for s in &mut shards_off {
+            s.reset(&init);
+        }
+        serve_all(&mut shards_off, &subs, &chain, &env.table).expect("serve");
+    });
+    let mut shards_on = mk_shards(true);
+    let s_on = b.run_threads("shard_serve_metrics_on", THREADS as u64, || {
+        for s in &mut shards_on {
+            s.reset(&init);
+        }
+        serve_all(&mut shards_on, &subs, &chain, &env.table).expect("serve");
+    });
+    let merged_off = merge_shards(&shards_off);
+    let merged_on = merge_shards(&shards_on);
+    assert!(
+        bitwise_equal(&merged_off, oracle.history.all()),
+        "metrics-off shard merge must match the pre-telemetry oracle"
+    );
+    assert!(
+        bitwise_equal(&merged_on, &merged_off),
+        "shard metric recording must not perturb a single served bit"
+    );
+    // The merged worker-local metrics equal sequential recording exactly
+    // (u64 state throughout, so plain == is a bit-for-bit comparison).
+    let mut merged_metrics = repro::telemetry::ServeMetrics::new(APPS);
+    for s in &shards_on {
+        merged_metrics.merge_from(s.metrics.as_ref().expect("enabled"));
+    }
+    // The sequential run's histogram also saw the window; diff off its
+    // own deploy-free state is the whole window, so totals line up.
+    assert_eq!(merged_metrics.total_requests(), seq_metrics.total_requests());
+    assert_eq!(merged_metrics.fpga_requests(), seq_metrics.fpga_requests());
+    assert_eq!(merged_metrics.stalls(), seq_metrics.stalls());
+    assert_eq!(
+        merged_metrics.latency_quantile(0.99).to_bits(),
+        seq_metrics.latency_quantile(0.99).to_bits(),
+        "quantiles derive from the same merged integer buckets"
+    );
+    let shard_ratio = s_off.mean_s / s_on.mean_s.max(1e-12);
+
+    // ---- artifact + gates -------------------------------------------------
+    let units: Vec<(&str, f64)> = vec![
+        ("fleet_serve_metrics_off", n),
+        ("fleet_serve_metrics_on", n),
+        ("shard_serve_metrics_off", n),
+        ("shard_serve_metrics_on", n),
+    ];
+    let extras: Vec<(&str, f64)> = vec![
+        ("seq_throughput_ratio", seq_ratio),
+        ("shard_throughput_ratio", shard_ratio),
+        ("min_throughput_ratio", MIN_THROUGHPUT_RATIO),
+        ("trace_requests", n),
+        ("trace_secs", duration),
+        ("stalls", seq_metrics.stalls() as f64),
+    ];
+    b.write_json("BENCH_telemetry.json", &units, &extras)
+        .expect("write BENCH_telemetry.json");
+    println!(
+        "\n  throughput ratio (off/on): sequential {seq_ratio:.3}x, sharded {shard_ratio:.3}x"
+    );
+    println!("wrote BENCH_telemetry.json");
+
+    assert!(
+        seq_ratio >= MIN_THROUGHPUT_RATIO,
+        "sequential metrics-on throughput fell below {MIN_THROUGHPUT_RATIO}x \
+         of disabled: off/on mean ratio {seq_ratio:.3}"
+    );
+    assert!(
+        shard_ratio >= MIN_THROUGHPUT_RATIO,
+        "sharded metrics-on throughput fell below {MIN_THROUGHPUT_RATIO}x \
+         of disabled: off/on mean ratio {shard_ratio:.3}"
+    );
+}

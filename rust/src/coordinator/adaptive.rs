@@ -16,6 +16,7 @@
 
 use crate::apps::{app_id, AppId};
 use crate::fpga::device::ReconfigKind;
+use crate::telemetry::TraceEvent;
 use crate::util::json::Json;
 use crate::workload::generate;
 
@@ -189,6 +190,7 @@ where
         state.next_window = w + 1;
         drift(w, env);
         // Serve one window of traffic.
+        let before = env.metrics_snapshot();
         let t0 = env.now() + 1e-6;
         let mut trace = generate(env.registry(), cfg.window_secs, 1000 + w as u64);
         for r in &mut trace {
@@ -197,6 +199,26 @@ where
         let n = trace.len();
         if !trace.is_empty() {
             env.run_window(&trace)?;
+        }
+
+        // Telemetry: one window event per window (cooldown windows
+        // included), carrying this window's request/stall deltas and
+        // latency quantiles diffed from the cumulative metrics.
+        if let (Some(m0), Some(m1)) = (before, env.metrics_snapshot()) {
+            let d = m1.diff(&m0);
+            let at = env.now();
+            if let Some(log) = env.trace_mut() {
+                log.push(TraceEvent::Window {
+                    window: w as u64,
+                    at,
+                    requests: d.total_requests(),
+                    fpga: d.fpga_requests(),
+                    cpu: d.cpu_fallbacks(),
+                    stalls: d.stalls(),
+                    p50: d.latency_quantile(0.5),
+                    p99: d.latency_quantile(0.99),
+                });
+            }
         }
 
         // Cooling down: observe only.
@@ -248,6 +270,14 @@ where
                 // the flapped cycle actually flipped. The estimate-based
                 // fallback is defensive: a fired guard implies a prior
                 // deployment, which implies a snapshot.
+                let at = env.now();
+                if let Some(log) = env.trace_mut() {
+                    log.push(TraceEvent::FlapRollback {
+                        at,
+                        window: w as u64,
+                        app: p.best.app.clone(),
+                    });
+                }
                 match &prior {
                     Some(plan) => {
                         env.deploy_plan(ReconfigKind::Static, plan);

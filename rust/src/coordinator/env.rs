@@ -140,6 +140,20 @@ pub trait Environment {
 
     /// Serve a whole arrival-ordered trace; returns (first, last) time.
     fn run_window(&mut self, trace: &[Request]) -> anyhow::Result<(f64, f64)>;
+
+    /// A clone of the cumulative serve metrics, if this environment has
+    /// telemetry enabled. The adaptive loop diffs snapshots taken around
+    /// a window to emit per-window trace events. Cold path only.
+    fn metrics_snapshot(&self) -> Option<crate::telemetry::ServeMetrics> {
+        None
+    }
+
+    /// Mutable access to the decision trace, if telemetry is enabled —
+    /// the §3.3 controller appends analysis/proposal/plan events through
+    /// this hook. `None` (the default) makes every emit a no-op.
+    fn trace_mut(&mut self) -> Option<&mut crate::telemetry::DecisionTrace> {
+        None
+    }
 }
 
 impl Environment for ProductionEnv {

@@ -21,6 +21,7 @@ use std::time::Instant;
 use crate::apps::{app_id, AppId, AppSpec, VariantId};
 use crate::fpga::device::{ReconfigKind, ReconfigReport};
 use crate::offload::{self, OffloadConfig, OffloadResult};
+use crate::telemetry::{PlanShare, RankSample, TraceEvent};
 use crate::util::json::Json;
 
 use super::env::Environment;
@@ -688,6 +689,65 @@ pub fn run_reconfiguration<E: Environment>(
     run_reconfiguration_with(env, cfg, approval, &mut RankCache::default())
 }
 
+/// Telemetry: the step-1 analysis event — the top-k ranking with
+/// corrected (CPU-equivalent) loads. No-op without a trace.
+fn emit_analysis<E: Environment>(env: &mut E, cfg: &ReconConfig, rankings: &[LoadRanking]) {
+    let at = env.now();
+    if env.trace_mut().is_none() {
+        return;
+    }
+    let top: Vec<RankSample> = rankings
+        .iter()
+        .take(cfg.top_apps)
+        .map(|r| RankSample {
+            app: r.app.clone(),
+            usage: r.usage_count,
+            corrected: r.corrected_total_secs,
+        })
+        .collect();
+    if let Some(log) = env.trace_mut() {
+        log.push(TraceEvent::Analysis { at, top });
+    }
+}
+
+/// Telemetry: the step-4/5 proposal event. `approved` is `None` when
+/// the pattern was skipped at step 4, else the step-5 decision.
+fn emit_proposal<E: Environment>(env: &mut E, p: &ReconProposal, approved: Option<bool>) {
+    let at = env.now();
+    if let Some(log) = env.trace_mut() {
+        log.push(TraceEvent::Proposal {
+            at,
+            current_app: p.current.app.clone(),
+            current_variant: p.current.variant.clone(),
+            best_app: p.best.app.clone(),
+            best_variant: p.best.variant.clone(),
+            ratio: p.ratio,
+            proposed: p.proposed,
+            approved,
+        });
+    }
+}
+
+/// Telemetry: the step-6 residency plan about to be deployed.
+fn emit_plan<E: Environment>(env: &mut E, plan: &ResidencyPlan) {
+    let at = env.now();
+    if env.trace_mut().is_none() {
+        return;
+    }
+    let entries: Vec<PlanShare> = plan
+        .entries
+        .iter()
+        .map(|e| PlanShare {
+            app: e.app.clone(),
+            variant: e.variant.clone(),
+            cards: e.cards as u64,
+        })
+        .collect();
+    if let Some(log) = env.trace_mut() {
+        log.push(TraceEvent::Plan { at, entries });
+    }
+}
+
 /// [`run_reconfiguration`] with a caller-owned [`RankCache`] so repeated
 /// cycles (the Step-7 loop) skip the step 1-3 sort on order-stable
 /// workloads.
@@ -702,6 +762,7 @@ pub fn run_reconfiguration_with<E: Environment>(
     let t0 = Instant::now();
     let (rankings, representatives) = analyze_load_with(env, cfg, ranks)?;
     let analysis_wall_secs = t0.elapsed().as_secs_f64();
+    emit_analysis(env, cfg, &rankings);
 
     // ---- Step 2: pattern search on representative data -------------------
     let mut searches = Vec::new();
@@ -833,6 +894,7 @@ pub fn run_reconfiguration_with<E: Environment>(
     };
 
     if !proposed {
+        emit_proposal(env, &proposal, None);
         return Ok(ReconOutcome {
             rankings,
             representatives,
@@ -858,6 +920,7 @@ pub fn run_reconfiguration_with<E: Environment>(
     );
     let decision = approval.decide(&text);
     if decision == ApprovalDecision::Rejected {
+        emit_proposal(env, &proposal, Some(false));
         return Ok(ReconOutcome {
             rankings,
             representatives,
@@ -877,6 +940,7 @@ pub fn run_reconfiguration_with<E: Environment>(
     // and deployed through the environment's rolling mechanism; otherwise
     // (and on any single-card environment) it is the paper's homogeneous
     // deploy of the best pattern, exactly as before.
+    emit_proposal(env, &proposal, Some(true));
     let improvement = best.cpu_secs / best.pattern_secs;
     let mut residency = None;
     let report = if cfg.residency_apps > 1 && env.cards() > 1 {
@@ -891,6 +955,7 @@ pub fn run_reconfiguration_with<E: Environment>(
             // residency: `deploy_plan`'s skip economy leaves cards that
             // already hold the target untouched, where a plain `deploy`
             // would reprogram (and outage) every card unconditionally.
+            emit_plan(env, &plan);
             let r = env.deploy_plan(cfg.kind, &plan);
             if plan.entries.len() > 1 {
                 residency = Some(plan);

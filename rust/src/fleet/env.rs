@@ -78,6 +78,7 @@ use crate::fpga::device::{CardId, LoadedLogic, ReconfigKind, ReconfigReport};
 use crate::fpga::part::Part;
 use crate::fpga::perf::{PerfModel, ServiceTimeTable};
 use crate::simtime::Clock;
+use crate::telemetry::{Telemetry, TraceEvent};
 use crate::util::json::Json;
 use crate::workload::Request;
 
@@ -171,6 +172,12 @@ pub struct FleetEnv {
     /// once per transition entry on the cold deploy paths only — the
     /// serve hot path never touches it.
     artifacts: Option<ArtifactLibrary>,
+    /// The telemetry plane (`None` = disabled, the default — the fleet
+    /// is then bitwise the pre-telemetry fleet). Enabled, the fixed-slot
+    /// metrics are recorded on every serve (integer adds into
+    /// preallocated slots, no allocation) and the decision trace is
+    /// appended on the cold control paths alongside `routing_log`.
+    telemetry: Option<Telemetry>,
 }
 
 impl FleetEnv {
@@ -197,6 +204,7 @@ impl FleetEnv {
             routing_log: Vec::new(),
             models: HashMap::new(),
             artifacts: None,
+            telemetry: None,
             registry,
         }
     }
@@ -248,6 +256,38 @@ impl FleetEnv {
         self.artifacts.as_ref()
     }
 
+    /// Enable the telemetry plane: fixed-slot serve metrics (counters +
+    /// log2 latency histograms per app × lane) and the decision trace.
+    /// Slots are allocated here, sized to the registry, so the enabled
+    /// steady-state serve path stays allocation-free. Replaces any
+    /// existing telemetry state.
+    pub fn enable_telemetry(&mut self) {
+        self.telemetry = Some(Telemetry::new(self.registry.len()));
+    }
+
+    /// Builder form of [`FleetEnv::enable_telemetry`].
+    pub fn with_telemetry(mut self) -> Self {
+        self.enable_telemetry();
+        self
+    }
+
+    /// Detach the telemetry plane — the fleet is then bitwise the
+    /// pre-telemetry fleet again.
+    pub fn disable_telemetry(&mut self) {
+        self.telemetry = None;
+    }
+
+    /// The telemetry plane, if enabled.
+    pub fn telemetry(&self) -> Option<&Telemetry> {
+        self.telemetry.as_ref()
+    }
+
+    /// Mutable telemetry access (the concurrent data plane merges shard
+    /// metrics through this on flush; exporters drain the trace).
+    pub fn telemetry_mut(&mut self) -> Option<&mut Telemetry> {
+        self.telemetry.as_mut()
+    }
+
     /// Reset operational state (clock, cards, history, deployments) while
     /// keeping the precomputed table, the model cache, and the compiled
     /// artifact library (bitstreams are compile outputs, not operational
@@ -264,6 +304,9 @@ impl FleetEnv {
         self.active_plan = None;
         self.roll = None;
         self.routing_log.clear();
+        if let Some(t) = self.telemetry.as_mut() {
+            t.reset();
+        }
     }
 
     /// Number of cards in the pool.
@@ -527,19 +570,33 @@ impl FleetEnv {
         let Some(lib) = self.artifacts.as_mut() else {
             return vec![cold; entries.len()];
         };
-        entries
-            .iter()
-            .enumerate()
-            .map(|(ei, (dep, app, variant))| {
-                if !targets.contains(&Some(ei)) {
-                    cold // untargeted: value never reaches a card
-                } else if lib.acquire(*dep, app, variant, now) {
-                    lib.fraction() * cold
-                } else {
-                    cold
-                }
-            })
-            .collect()
+        let mut downtimes = Vec::with_capacity(entries.len());
+        // (entry index, hit, charged downtime) per consulted entry, so
+        // trace events can be pushed after the library borrow ends.
+        let mut consulted: Vec<(usize, bool, f64)> = Vec::new();
+        for (ei, (dep, app, variant)) in entries.iter().enumerate() {
+            if !targets.contains(&Some(ei)) {
+                downtimes.push(cold); // untargeted: value never reaches a card
+            } else {
+                let hit = lib.acquire(*dep, app, variant, now);
+                let dt = if hit { lib.fraction() * cold } else { cold };
+                downtimes.push(dt);
+                consulted.push((ei, hit, dt));
+            }
+        }
+        if let Some(t) = self.telemetry.as_mut() {
+            for (ei, hit, downtime) in consulted {
+                let (_, app, variant) = &entries[ei];
+                t.trace.push(TraceEvent::Artifact {
+                    at: now,
+                    app: app.clone(),
+                    variant: variant.clone(),
+                    hit,
+                    downtime,
+                });
+            }
+        }
+        downtimes
     }
 
     /// Program one card and keep the router's per-app index in sync —
@@ -563,12 +620,24 @@ impl FleetEnv {
             .pool
             .reconfigure_card_with_downtime(card, at, kind, downtime_secs, app, variant, dep);
         self.router.note_deploy(card, dep.app);
+        let outage_until = report.started_at + report.downtime_secs;
+        let effective = self.clock.now();
         self.routing_log.push(RoutingEvent::Reprogram {
             card,
             dep,
-            outage_until: report.started_at + report.downtime_secs,
-            effective: self.clock.now(),
+            outage_until,
+            effective,
         });
+        if let Some(t) = self.telemetry.as_mut() {
+            t.trace.push(TraceEvent::Reprogram {
+                at: effective,
+                card: card.0,
+                app: app.to_string(),
+                variant: variant.to_string(),
+                downtime: report.downtime_secs,
+                outage_until,
+            });
+        }
         report
     }
 
@@ -619,6 +688,9 @@ impl FleetEnv {
                     card,
                     effective: now,
                 });
+                if let Some(t) = self.telemetry.as_mut() {
+                    t.trace.push(TraceEvent::Rejoin { at: now, card: card.0 });
+                }
             }
             self.router.set_routable(card, true);
         }
@@ -681,6 +753,12 @@ impl FleetEnv {
                     card,
                     effective: rejoin_at,
                 });
+                if let Some(t) = self.telemetry.as_mut() {
+                    t.trace.push(TraceEvent::Rejoin {
+                        at: rejoin_at,
+                        card: card.0,
+                    });
+                }
                 self.router.set_routable(card, true);
                 roll.reprogramming = None;
             }
@@ -701,6 +779,9 @@ impl FleetEnv {
                 card,
                 effective: now,
             });
+            if let Some(t) = self.telemetry.as_mut() {
+                t.trace.push(TraceEvent::Drain { at: now, card: card.0 });
+            }
             self.router.set_routable(card, false);
             let start = now.max(self.pool.card(card).busy_until());
             let (dep, app, variant) = &roll.entries[ei];
@@ -735,6 +816,7 @@ impl FleetEnv {
     pub fn serve(&mut self, req: &Request) -> anyhow::Result<RequestRecord> {
         self.clock.advance_to(req.arrival.max(self.clock.now()));
         self.advance_roll();
+        let mut stalled = false;
         let record = if let Some(card) = self.router.route(&self.pool, req.app, req.arrival)
         {
             let dep = self
@@ -747,8 +829,9 @@ impl FleetEnv {
                 .ok_or_else(|| {
                     anyhow::anyhow!("request {} has out-of-range app/size handles", req.id)
                 })?;
-            let (start, finish, stalled) = self.pool.schedule(card, req.arrival, service);
-            if stalled {
+            let (start, finish, st) = self.pool.schedule(card, req.arrival, service);
+            if st {
+                stalled = true;
                 self.router.record_stall();
             }
             RequestRecord {
@@ -781,6 +864,9 @@ impl FleetEnv {
                 served_by: ServedBy::Cpu,
             }
         };
+        if let Some(t) = self.telemetry.as_mut() {
+            t.metrics.record(&record, stalled);
+        }
         self.history.push(record);
         Ok(record)
     }
@@ -812,7 +898,9 @@ impl FleetEnv {
     /// The routing-event log is *not* captured: it is consumed by
     /// data-plane replays of already-served windows, which a restart does
     /// not repeat. A restored environment starts a fresh log, exactly
-    /// like `reset`.
+    /// like `reset`. The telemetry plane *is* captured (cumulative
+    /// metrics and the decision trace), so a warm-restarted coordinator
+    /// appends to the same timeline it would have written uninterrupted.
     pub fn save_state(&self) -> Json {
         let cards: Vec<Json> = (0..self.pool.len())
             .map(|i| {
@@ -860,9 +948,13 @@ impl FleetEnv {
             Some(r) => state.set("roll", roll_to_json(r)),
             None => state.set("roll", Json::Null),
         };
-        match &self.artifacts {
+        state = match &self.artifacts {
             Some(a) => state.set("artifacts", a.to_json()),
             None => state.set("artifacts", Json::Null),
+        };
+        match &self.telemetry {
+            Some(t) => state.set("telemetry", t.to_json()),
+            None => state.set("telemetry", Json::Null),
         }
     }
 
@@ -951,6 +1043,11 @@ impl FleetEnv {
         self.artifacts = match j.get("artifacts") {
             Some(Json::Null) | None => None,
             Some(a) => Some(ArtifactLibrary::from_json(a)?),
+        };
+        // Missing key (pre-telemetry snapshot) reads as disabled.
+        self.telemetry = match j.get("telemetry") {
+            Some(Json::Null) | None => None,
+            Some(t) => Some(Telemetry::from_json(t)?),
         };
         self.routing_log.clear();
         Ok(())
@@ -1168,6 +1265,14 @@ impl Environment for FleetEnv {
 
     fn run_window(&mut self, trace: &[Request]) -> anyhow::Result<(f64, f64)> {
         FleetEnv::run_window(self, trace)
+    }
+
+    fn metrics_snapshot(&self) -> Option<crate::telemetry::ServeMetrics> {
+        self.telemetry.as_ref().map(|t| t.metrics.clone())
+    }
+
+    fn trace_mut(&mut self) -> Option<&mut crate::telemetry::DecisionTrace> {
+        self.telemetry.as_mut().map(|t| &mut t.trace)
     }
 }
 
@@ -1745,5 +1850,59 @@ mod tests {
         assert!(env.roll_in_progress());
         assert_eq!(Environment::improvement_coef(&env, td), 2.07);
         assert_eq!(Environment::improvement_coef(&env, mq), 3.0);
+    }
+
+    #[test]
+    fn cutover_stall_telemetry_agrees_with_router_accounting() {
+        // A cutover reprograms every card at t=0 with a 1 s outage;
+        // arrivals landing inside [0, 1) stall behind it. The telemetry
+        // stall counter and outage-wait histogram must agree exactly
+        // with the router's own accounting.
+        let mut env = FleetEnv::new(registry(), D5005, 2)
+            .with_strategy(ReconfigStrategy::Cutover)
+            .with_telemetry();
+        env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+        // One arrival per card at t=0.5: each starts at the t=1 outage
+        // end with no FIFO queueing, so every wait is exactly 0.5 s.
+        let trace = tdfir_burst(&env, 2, 0.5);
+        env.run_window(&trace).unwrap();
+        let m = &env.telemetry().unwrap().metrics;
+        assert!(env.serve_stalls() >= 1, "cutover probe must stall");
+        assert_eq!(m.stalls(), env.serve_stalls());
+        assert_eq!(m.outage_wait_total(), m.stalls());
+        // All outage waits land in the [0.5, 1) bucket.
+        let b = crate::telemetry::bucket_of(0.5);
+        assert_eq!(m.outage_wait_counts()[b], m.stalls());
+        // The trace saw the initial cutover as per-card reprograms.
+        let t = &env.telemetry().unwrap().trace;
+        let reprograms = t
+            .events()
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::Reprogram { .. }))
+            .count();
+        assert_eq!(reprograms, 2);
+    }
+
+    #[test]
+    fn telemetry_rides_save_and_restore() {
+        let mut env = fleet_with_tdfir(2).with_telemetry();
+        let warm = tdfir_burst(&env, 6, 2.0);
+        env.run_window(&warm).unwrap();
+        env.deploy(ReconfigKind::Static, "mriq", "o1", 3.0);
+        let snap = env.save_state();
+        let mut back = FleetEnv::new(registry(), D5005, 2);
+        back.restore_state(&Json::parse(&snap.to_pretty()).expect("parse"))
+            .expect("restore");
+        let (a, b) = (env.telemetry().unwrap(), back.telemetry().unwrap());
+        assert_eq!(a.metrics, b.metrics);
+        assert_eq!(a.trace.to_jsonl(), b.trace.to_jsonl());
+        assert!(!a.trace.is_empty(), "deploy must have traced");
+        // A pre-telemetry snapshot restores as disabled.
+        let mut plain = fleet_with_tdfir(2);
+        let warm = tdfir_burst(&plain, 2, 2.0);
+        plain.run_window(&warm).unwrap();
+        let mut back = FleetEnv::new(registry(), D5005, 2);
+        back.restore_state(&plain.save_state()).expect("restore");
+        assert!(back.telemetry().is_none());
     }
 }

@@ -63,6 +63,7 @@ use crate::coordinator::recon::ResidencyPlan;
 use crate::coordinator::server::Deployment;
 use crate::fpga::device::{CardId, ReconfigKind, ReconfigReport};
 use crate::fpga::perf::ServiceTimeTable;
+use crate::telemetry::ServeMetrics;
 use crate::workload::Request;
 
 use super::env::FleetEnv;
@@ -202,6 +203,12 @@ pub struct DataShard {
     pub stalls: u64,
     /// Snapshot crossings this worker performed.
     pub crossings: u64,
+    /// Worker-local serve metrics (`None` = recording disabled). Merged
+    /// into the fleet's cumulative metrics at flush: every count is an
+    /// integer function of the record stream, so the merge is exactly
+    /// associative and the merged result is bit-identical to sequential
+    /// recording, whatever the shard split.
+    pub metrics: Option<ServeMetrics>,
 }
 
 impl DataShard {
@@ -213,7 +220,15 @@ impl DataShard {
             records: Vec::new(),
             stalls: 0,
             crossings: 0,
+            metrics: None,
         }
+    }
+
+    /// Attach fixed-slot metric storage for `apps` registered apps
+    /// (allocated here, so the recording serve path stays
+    /// allocation-free).
+    pub fn enable_metrics(&mut self, apps: usize) {
+        self.metrics = Some(ServeMetrics::new(apps));
     }
 
     /// Rewind to the initial horizons and clear the shard — benches
@@ -224,6 +239,9 @@ impl DataShard {
         self.records.clear();
         self.stalls = 0;
         self.crossings = 0;
+        if let Some(m) = self.metrics.as_mut() {
+            m.reset();
+        }
     }
 }
 
@@ -291,6 +309,7 @@ pub fn serve_shard(
                 best = Some((start, c));
             }
         }
+        let mut stalled = false;
         let record = if let Some((start, c)) = best {
             let ci = c as usize;
             let dep = snap.card_dep[ci].expect("routed card holds logic");
@@ -300,6 +319,7 @@ pub fn serve_shard(
                     anyhow::anyhow!("request {} has out-of-range app/size handles", req.id)
                 })?;
             if req.arrival < shard.outage[ci] {
+                stalled = true;
                 shard.stalls += 1;
             }
             let finish = start + service;
@@ -333,6 +353,9 @@ pub fn serve_shard(
                 served_by: ServedBy::Cpu,
             }
         };
+        if let Some(m) = shard.metrics.as_mut() {
+            m.record(&record, stalled);
+        }
         shard.records.push(record);
     }
     Ok(())
@@ -495,10 +518,15 @@ impl ConcurrentFleet {
             self.threads,
         );
         let subs = assign.split(trace);
+        let record_metrics = self.fleet.telemetry().is_some();
+        let apps = self.fleet.registry.len();
         let mut shards: Vec<DataShard> = (0..self.threads)
             .map(|w| {
                 let mut s = DataShard::new(w as u16, &init);
                 s.records.reserve(subs[w].len());
+                if record_metrics {
+                    s.enable_metrics(apps);
+                }
                 s
             })
             .collect();
@@ -514,6 +542,17 @@ impl ConcurrentFleet {
         let stalls: u64 = shards.iter().map(|s| s.stalls).sum();
         self.fleet.router.record_stalls(stalls);
         self.stats.accumulate(&shards);
+        // Fold worker-local metrics into the cumulative plane — integer
+        // adds, so the result matches sequential recording bit-for-bit
+        // (the root-only chain makes crossings 0 on both paths).
+        if let Some(t) = self.fleet.telemetry_mut() {
+            for s in &shards {
+                if let Some(m) = s.metrics.as_ref() {
+                    t.metrics.merge_from(m);
+                }
+                t.metrics.note_crossings(s.crossings);
+            }
+        }
         let to = trace.last().unwrap().arrival.max(self.fleet.clock.now());
         self.fleet.advance_to(to);
         Ok((from, to))
@@ -604,6 +643,14 @@ impl Environment for ConcurrentFleet {
 
     fn run_window(&mut self, trace: &[Request]) -> anyhow::Result<(f64, f64)> {
         self.run_window_concurrent(trace)
+    }
+
+    fn metrics_snapshot(&self) -> Option<ServeMetrics> {
+        Environment::metrics_snapshot(&self.fleet)
+    }
+
+    fn trace_mut(&mut self) -> Option<&mut crate::telemetry::DecisionTrace> {
+        Environment::trace_mut(&mut self.fleet)
     }
 }
 

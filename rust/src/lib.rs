@@ -53,5 +53,6 @@ pub mod opencl;
 pub mod report;
 pub mod runtime;
 pub mod simtime;
+pub mod telemetry;
 pub mod util;
 pub mod workload;

@@ -1,6 +1,8 @@
 //! Figure/table renderers: the exact rows the paper reports.
 
+use crate::coordinator::adaptive::WindowReport;
 use crate::coordinator::recon::ReconOutcome;
+use crate::telemetry::{DecisionTrace, TraceEvent};
 use crate::util::table::{fmt_bytes, fmt_secs, Table};
 
 /// FIG3: the evaluation environment table.
@@ -137,6 +139,66 @@ pub fn representatives(outcome: &ReconOutcome) -> Table {
     t
 }
 
+/// Per-window operation summary: the adaptive loop's [`WindowReport`]s
+/// joined with the decision trace's `window` events (matched by window
+/// index). Lane splits, stall deltas, and latency quantiles come from
+/// the telemetry plane; serving/reconfigured/ratio from the loop. A
+/// window with no trace event (telemetry disabled) renders "-" in the
+/// telemetry columns.
+pub fn telemetry_window_summary(reports: &[WindowReport], trace: &DecisionTrace) -> Table {
+    let mut t = Table::new(vec![
+        "Window", "Requests", "FPGA", "CPU", "Stalls", "p50", "p99", "Serving", "Action",
+    ]);
+    for rep in reports {
+        let ev = trace.events().iter().find_map(|e| match e {
+            TraceEvent::Window { window, .. } if *window == rep.window as u64 => Some(e),
+            _ => None,
+        });
+        let (fpga, cpu, stalls, p50, p99) = match ev {
+            Some(TraceEvent::Window {
+                fpga,
+                cpu,
+                stalls,
+                p50,
+                p99,
+                ..
+            }) => (
+                fpga.to_string(),
+                cpu.to_string(),
+                stalls.to_string(),
+                fmt_secs(*p50),
+                fmt_secs(*p99),
+            ),
+            _ => ("-".into(), "-".into(), "-".into(), "-".into(), "-".into()),
+        };
+        let action = if rep.reconfigured {
+            let ratio = rep
+                .outcome
+                .as_ref()
+                .and_then(|o| o.proposal.as_ref())
+                .map(|p| format!(" ({:.2}x)", p.ratio))
+                .unwrap_or_default();
+            format!("reconfigured{ratio}")
+        } else if rep.outcome.is_none() {
+            "cooldown".to_string()
+        } else {
+            "hold".to_string()
+        };
+        t.row(vec![
+            rep.window.to_string(),
+            rep.requests.to_string(),
+            fpga,
+            cpu,
+            stalls,
+            p50,
+            p99,
+            rep.serving.clone().unwrap_or_else(|| "-".into()),
+            action,
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,5 +209,41 @@ mod tests {
         let s = t.render();
         assert!(s.contains("Stratix 10"));
         assert!(s.contains("ProBook"));
+    }
+
+    #[test]
+    fn window_summary_joins_reports_with_trace_events() {
+        let reports = vec![
+            WindowReport {
+                window: 0,
+                requests: 42,
+                outcome: None,
+                serving: Some("tdfir".into()),
+                reconfigured: false,
+            },
+            WindowReport {
+                window: 1,
+                requests: 7,
+                outcome: None,
+                serving: None,
+                reconfigured: false,
+            },
+        ];
+        let mut trace = DecisionTrace::new();
+        trace.push(TraceEvent::Window {
+            window: 0,
+            at: 3600.0,
+            requests: 42,
+            fpga: 40,
+            cpu: 2,
+            stalls: 1,
+            p50: 0.125,
+            p99: 2.0,
+        });
+        let s = telemetry_window_summary(&reports, &trace).render();
+        assert!(s.contains("40"), "{s}");
+        assert!(s.contains("cooldown"), "{s}");
+        // Window 1 has no trace event: telemetry columns render "-".
+        assert!(s.lines().any(|l| l.contains("| 1 ") && l.contains(" - ")), "{s}");
     }
 }

@@ -1,0 +1,163 @@
+//! Exporters: Prometheus text exposition for metrics, JSONL for traces.
+//!
+//! Both renderers are pure functions of already-merged telemetry state,
+//! so they can run after a window, at shutdown, or over a restored
+//! snapshot without perturbing determinism.
+
+use crate::apps::AppId;
+use crate::telemetry::metrics::{bucket_ceiling, bucket_floor, ServeMetrics, BUCKETS};
+use crate::telemetry::trace::DecisionTrace;
+
+/// Render merged serve metrics in the Prometheus text exposition
+/// format (version 0.0.4). `app_names[i]` labels `AppId(i)`.
+///
+/// Histogram `_sum` lines are a *deterministic approximation*: each
+/// observation is attributed its bucket's floor, so the sum is derived
+/// from the merged integer buckets rather than accumulated in floating
+/// point (an f64 running sum would break merge-order independence).
+pub fn prometheus_text(m: &ServeMetrics, app_names: &[&str]) -> String {
+    assert_eq!(
+        app_names.len(),
+        m.apps(),
+        "prometheus_text: one name per registered app"
+    );
+    let mut out = String::new();
+
+    out.push_str("# HELP fleet_requests_total Requests served, by app and lane.\n");
+    out.push_str("# TYPE fleet_requests_total counter\n");
+    for (i, name) in app_names.iter().enumerate() {
+        for (lane, fpga) in [("cpu", false), ("fpga", true)] {
+            let n = m.requests_of(AppId(i as u16), fpga);
+            out.push_str(&format!(
+                "fleet_requests_total{{app=\"{name}\",lane=\"{lane}\"}} {n}\n"
+            ));
+        }
+    }
+
+    out.push_str("# HELP fleet_router_stalls_total Requests that waited on a card outage.\n");
+    out.push_str("# TYPE fleet_router_stalls_total counter\n");
+    out.push_str(&format!("fleet_router_stalls_total {}\n", m.stalls()));
+
+    out.push_str("# HELP fleet_snapshot_crossings_total Data-plane snapshot-chain crossings.\n");
+    out.push_str("# TYPE fleet_snapshot_crossings_total counter\n");
+    out.push_str(&format!(
+        "fleet_snapshot_crossings_total {}\n",
+        m.crossings()
+    ));
+
+    out.push_str("# HELP fleet_cpu_fallbacks_total Requests served on the CPU software path.\n");
+    out.push_str("# TYPE fleet_cpu_fallbacks_total counter\n");
+    out.push_str(&format!("fleet_cpu_fallbacks_total {}\n", m.cpu_fallbacks()));
+
+    out.push_str(
+        "# HELP fleet_request_latency_seconds Arrival-to-finish latency, log2 buckets.\n",
+    );
+    out.push_str("# TYPE fleet_request_latency_seconds histogram\n");
+    for (i, name) in app_names.iter().enumerate() {
+        for (lane, fpga) in [("cpu", false), ("fpga", true)] {
+            let counts = m.latency_counts(AppId(i as u16), fpga);
+            render_histogram(
+                &mut out,
+                "fleet_request_latency_seconds",
+                &format!("app=\"{name}\",lane=\"{lane}\""),
+                counts,
+            );
+        }
+    }
+
+    out.push_str("# HELP fleet_outage_wait_seconds Stalled-request wait behind outages.\n");
+    out.push_str("# TYPE fleet_outage_wait_seconds histogram\n");
+    render_histogram(&mut out, "fleet_outage_wait_seconds", "", m.outage_wait_counts());
+
+    out
+}
+
+fn render_histogram(out: &mut String, name: &str, labels: &str, counts: &[u64]) {
+    debug_assert_eq!(counts.len(), BUCKETS);
+    let sep = if labels.is_empty() { "" } else { "," };
+    let mut cumulative = 0u64;
+    // Approximate sum in bucket-floor units; exact given the counts.
+    let mut floor_sum = 0.0f64;
+    for (b, &n) in counts.iter().enumerate() {
+        if n == 0 {
+            continue;
+        }
+        cumulative += n;
+        floor_sum += n as f64 * bucket_floor(b);
+        let le = bucket_ceiling(b);
+        let le = if le.is_infinite() {
+            "+Inf".to_string()
+        } else {
+            format!("{le:e}")
+        };
+        out.push_str(&format!(
+            "{name}_bucket{{{labels}{sep}le=\"{le}\"}} {cumulative}\n"
+        ));
+    }
+    if counts[BUCKETS - 1] == 0 {
+        out.push_str(&format!(
+            "{name}_bucket{{{labels}{sep}le=\"+Inf\"}} {cumulative}\n"
+        ));
+    }
+    out.push_str(&format!("{name}_sum{{{labels}}} {floor_sum:e}\n"));
+    out.push_str(&format!("{name}_count{{{labels}}} {cumulative}\n"));
+}
+
+/// Write a decision trace as JSONL (one compact object per line).
+pub fn write_jsonl(path: &str, trace: &DecisionTrace) -> std::io::Result<()> {
+    std::fs::write(path, trace.to_jsonl())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::SizeId;
+    use crate::coordinator::history::{RequestRecord, ServedBy};
+    use crate::fpga::device::CardId;
+
+    fn record(app: u16, arrival: f64, start: f64, finish: f64, by: ServedBy) -> RequestRecord {
+        RequestRecord {
+            id: 0,
+            app: AppId(app),
+            size: SizeId(0),
+            bytes: 1.0,
+            arrival,
+            start,
+            finish,
+            service_secs: finish - start,
+            served_by: by,
+        }
+    }
+
+    #[test]
+    fn prometheus_text_renders_counters_and_histograms() {
+        let mut m = ServeMetrics::new(2);
+        m.record(&record(0, 0.0, 0.0, 0.5, ServedBy::Fpga(CardId(0))), false);
+        m.record(&record(0, 1.0, 2.0, 3.0, ServedBy::Fpga(CardId(1))), true);
+        m.record(&record(1, 0.0, 0.0, 0.25, ServedBy::Cpu), false);
+        let text = prometheus_text(&m, &["tdfir", "mriq"]);
+        assert!(text.contains("fleet_requests_total{app=\"tdfir\",lane=\"fpga\"} 2"), "{text}");
+        assert!(text.contains("fleet_requests_total{app=\"mriq\",lane=\"cpu\"} 1"), "{text}");
+        assert!(text.contains("fleet_router_stalls_total 1"), "{text}");
+        assert!(text.contains("fleet_cpu_fallbacks_total 1"), "{text}");
+        // 0.5s latency lands in the [0.5, 1) bucket: ceiling 1e0.
+        assert!(
+            text.contains("fleet_request_latency_seconds_bucket{app=\"tdfir\",lane=\"fpga\",le=\"1e0\"} 1"),
+            "{text}"
+        );
+        // Every histogram closes with an +Inf bucket and a count line.
+        assert!(text.contains("fleet_request_latency_seconds_bucket{app=\"tdfir\",lane=\"fpga\",le=\"+Inf\"} 2"), "{text}");
+        assert!(text.contains("fleet_outage_wait_seconds_count{} 1"), "{text}");
+    }
+
+    #[test]
+    fn histogram_sum_is_derived_from_bucket_floors() {
+        let mut m = ServeMetrics::new(1);
+        // latency 0.5 → bucket floor 0.5; latency 2.0 → floor 2.0.
+        m.record(&record(0, 0.0, 0.0, 0.5, ServedBy::Fpga(CardId(0))), false);
+        m.record(&record(0, 0.0, 0.0, 2.0, ServedBy::Fpga(CardId(0))), false);
+        let text = prometheus_text(&m, &["tdfir"]);
+        let want = format!("fleet_request_latency_seconds_sum{{app=\"tdfir\",lane=\"fpga\"}} {:e}\n", 2.5f64);
+        assert!(text.contains(&want), "{text}");
+    }
+}

@@ -1,0 +1,449 @@
+//! Fixed-slot serve-path metrics: counters and log2-bucketed latency
+//! histograms whose merge is exact.
+//!
+//! Every quantity here is a `u64` count — a pure function of the record
+//! stream ([`RequestRecord`] fields plus the per-request stall flag both
+//! serve paths already compute). Because `u64` addition is associative
+//! and commutative *exactly* (no rounding), worker-local recording
+//! merged in any shard order is bit-identical to sequential recording:
+//! the N-thread data plane and the sequential `FleetEnv` oracle produce
+//! the same [`ServeMetrics`], field for field (`tests/proptests.rs`
+//! asserts it on random splits and thread counts). No f64 accumulates
+//! across merges; derived figures (quantiles, Prometheus `_sum`) are
+//! computed from the merged integer buckets at render time.
+//!
+//! Slots are fixed at construction — `apps x 2` lanes (CPU fallback /
+//! FPGA) of request counters and [`BUCKETS`]-wide latency histograms —
+//! so recording is two or three array index increments and the serve
+//! hot path stays allocation-free (`tests/serve_alloc.rs` probes it
+//! with the counting allocator).
+
+use crate::apps::AppId;
+use crate::coordinator::history::{RequestRecord, ServedBy};
+use crate::util::json::Json;
+
+/// Histogram width. Bucket `i` holds latencies with
+/// `floor(log2(v)) == i - 40`, i.e. `[2^(i-40), 2^(i-39))` seconds:
+/// bucket 0 is everything below ~1.8 ns (including zero), bucket 63
+/// everything from ~97 days up. Virtual-clock service times land well
+/// inside the range.
+pub const BUCKETS: usize = 64;
+
+/// Exponent of bucket 0's floor (2^-40 s).
+const BUCKET_EXP_MIN: i64 = -40;
+
+/// 2^e as an f64, for in-range biased exponents (no rounding).
+fn exp2i(e: i64) -> f64 {
+    f64::from_bits(((e + 1023) as u64) << 52)
+}
+
+/// The bucket index for a latency value. Computed from the IEEE-754
+/// exponent field — integer math, so the mapping is exact and
+/// platform-independent (no `log2` call whose last bit could differ).
+pub fn bucket_of(v: f64) -> usize {
+    if v.is_nan() || v <= 0.0 {
+        return 0;
+    }
+    let exp = ((v.to_bits() >> 52) & 0x7ff) as i64;
+    if exp == 0 {
+        return 0; // subnormal: far below bucket 0's ceiling
+    }
+    (exp - 1023 - BUCKET_EXP_MIN).clamp(0, BUCKETS as i64 - 1) as usize
+}
+
+/// Exclusive upper bound of bucket `i` (`+inf` for the last bucket).
+pub fn bucket_ceiling(i: usize) -> f64 {
+    if i + 1 >= BUCKETS {
+        f64::INFINITY
+    } else {
+        exp2i(i as i64 + 1 + BUCKET_EXP_MIN)
+    }
+}
+
+/// Inclusive lower bound of bucket `i` (0 for bucket 0, which also
+/// catches zero and subnormal values).
+pub fn bucket_floor(i: usize) -> f64 {
+    if i == 0 {
+        0.0
+    } else {
+        exp2i(i as i64 + BUCKET_EXP_MIN)
+    }
+}
+
+fn lane_of(s: ServedBy) -> usize {
+    match s {
+        ServedBy::Cpu => 0,
+        ServedBy::Fpga(_) => 1,
+    }
+}
+
+/// Serve-path metrics: per `app x ServedBy` request counters and
+/// latency histograms, a stall counter with a wait-time histogram for
+/// stalled requests, snapshot-crossing and CPU-fallback counters. See
+/// the module docs for the exact-merge contract.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeMetrics {
+    apps: usize,
+    /// Request count per slot (`app * 2 + lane`; lane 0 CPU, 1 FPGA).
+    requests: Vec<u64>,
+    /// Latency (finish - arrival) histogram per slot:
+    /// `[slot * BUCKETS + bucket]`.
+    latency: Vec<u64>,
+    /// Wait-time (start - arrival) histogram of stalled requests only —
+    /// requests that arrived inside their serving card's outage window.
+    outage_wait: Vec<u64>,
+    stalls: u64,
+    crossings: u64,
+    cpu_fallbacks: u64,
+}
+
+impl ServeMetrics {
+    /// Allocate the fixed slots for a registry of `apps` applications.
+    /// All later recording is index increments into these buffers.
+    pub fn new(apps: usize) -> Self {
+        ServeMetrics {
+            apps,
+            requests: vec![0; apps * 2],
+            latency: vec![0; apps * 2 * BUCKETS],
+            outage_wait: vec![0; BUCKETS],
+            stalls: 0,
+            crossings: 0,
+            cpu_fallbacks: 0,
+        }
+    }
+
+    /// Number of app slots (registry length at construction).
+    pub fn apps(&self) -> usize {
+        self.apps
+    }
+
+    /// Record one served request. `stalled` is the serve path's own
+    /// stall determination (arrival inside the serving card's outage
+    /// window) — both the sequential router and the data-plane worker
+    /// already compute it. Allocation-free; out-of-range app handles
+    /// are clamped onto the last slot (they cannot occur for records
+    /// built from a registry-checked trace).
+    #[inline]
+    pub fn record(&mut self, r: &RequestRecord, stalled: bool) {
+        let app = (r.app.0 as usize).min(self.apps.saturating_sub(1));
+        let slot = app * 2 + lane_of(r.served_by);
+        self.requests[slot] += 1;
+        self.latency[slot * BUCKETS + bucket_of(r.finish - r.arrival)] += 1;
+        if let ServedBy::Cpu = r.served_by {
+            self.cpu_fallbacks += 1;
+        }
+        if stalled {
+            self.stalls += 1;
+            self.outage_wait[bucket_of(r.start - r.arrival)] += 1;
+        }
+    }
+
+    /// Count snapshot crossings (data-plane workers tally them
+    /// per-shard; the merge step folds them in here).
+    pub fn note_crossings(&mut self, n: u64) {
+        self.crossings += n;
+    }
+
+    /// Fold another metrics block into this one — element-wise `u64`
+    /// addition, so the merge is associative and order-independent
+    /// *exactly*. Panics on mismatched app counts (a construction bug).
+    pub fn merge_from(&mut self, other: &ServeMetrics) {
+        assert_eq!(self.apps, other.apps, "merge of mismatched metrics");
+        for (a, b) in self.requests.iter_mut().zip(&other.requests) {
+            *a += b;
+        }
+        for (a, b) in self.latency.iter_mut().zip(&other.latency) {
+            *a += b;
+        }
+        for (a, b) in self.outage_wait.iter_mut().zip(&other.outage_wait) {
+            *a += b;
+        }
+        self.stalls += other.stalls;
+        self.crossings += other.crossings;
+        self.cpu_fallbacks += other.cpu_fallbacks;
+    }
+
+    /// Zero every counter, keeping the allocated slots (benches replay
+    /// against the same block without reallocating).
+    pub fn reset(&mut self) {
+        self.requests.fill(0);
+        self.latency.fill(0);
+        self.outage_wait.fill(0);
+        self.stalls = 0;
+        self.crossings = 0;
+        self.cpu_fallbacks = 0;
+    }
+
+    /// `self - earlier`, element-wise — the per-window delta between two
+    /// cumulative snapshots. Panics if `earlier` is not a prefix (every
+    /// counter must be <= this block's).
+    pub fn diff(&self, earlier: &ServeMetrics) -> ServeMetrics {
+        assert_eq!(self.apps, earlier.apps, "diff of mismatched metrics");
+        let sub = |a: &[u64], b: &[u64]| -> Vec<u64> {
+            a.iter()
+                .zip(b)
+                .map(|(x, y)| x.checked_sub(*y).expect("diff: earlier not a prefix"))
+                .collect()
+        };
+        ServeMetrics {
+            apps: self.apps,
+            requests: sub(&self.requests, &earlier.requests),
+            latency: sub(&self.latency, &earlier.latency),
+            outage_wait: sub(&self.outage_wait, &earlier.outage_wait),
+            stalls: self
+                .stalls
+                .checked_sub(earlier.stalls)
+                .expect("diff: earlier not a prefix"),
+            crossings: self
+                .crossings
+                .checked_sub(earlier.crossings)
+                .expect("diff: earlier not a prefix"),
+            cpu_fallbacks: self
+                .cpu_fallbacks
+                .checked_sub(earlier.cpu_fallbacks)
+                .expect("diff: earlier not a prefix"),
+        }
+    }
+
+    /// Requests recorded for `app` on one lane.
+    pub fn requests_of(&self, app: AppId, fpga: bool) -> u64 {
+        let slot = (app.0 as usize) * 2 + usize::from(fpga);
+        self.requests.get(slot).copied().unwrap_or(0)
+    }
+
+    /// Total requests recorded (both lanes, all apps).
+    pub fn total_requests(&self) -> u64 {
+        self.requests.iter().sum()
+    }
+
+    /// Total FPGA-served requests.
+    pub fn fpga_requests(&self) -> u64 {
+        self.requests.iter().skip(1).step_by(2).sum()
+    }
+
+    /// Requests served by the CPU pool (no routable card held the app).
+    pub fn cpu_fallbacks(&self) -> u64 {
+        self.cpu_fallbacks
+    }
+
+    /// Requests that arrived inside their serving card's outage window.
+    pub fn stalls(&self) -> u64 {
+        self.stalls
+    }
+
+    /// Snapshot crossings performed by data-plane workers.
+    pub fn crossings(&self) -> u64 {
+        self.crossings
+    }
+
+    /// One lane's latency histogram (length [`BUCKETS`]).
+    pub fn latency_counts(&self, app: AppId, fpga: bool) -> &[u64] {
+        let slot = (app.0 as usize) * 2 + usize::from(fpga);
+        &self.latency[slot * BUCKETS..(slot + 1) * BUCKETS]
+    }
+
+    /// The stalled-request wait-time histogram (length [`BUCKETS`]).
+    pub fn outage_wait_counts(&self) -> &[u64] {
+        &self.outage_wait
+    }
+
+    /// Total entries in the outage-wait histogram (== `stalls()` for
+    /// metrics built purely through `record`).
+    pub fn outage_wait_total(&self) -> u64 {
+        self.outage_wait.iter().sum()
+    }
+
+    /// Nearest-rank latency quantile over all apps and lanes, answered
+    /// as the matching bucket's ceiling (a conservative upper bound —
+    /// deterministic integer math over the merged counts). 0.0 when
+    /// nothing is recorded.
+    pub fn latency_quantile(&self, q: f64) -> f64 {
+        let total: u64 = self.latency.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for b in 0..BUCKETS {
+            for slot in 0..self.apps * 2 {
+                cum += self.latency[slot * BUCKETS + b];
+            }
+            if cum >= rank {
+                return bucket_ceiling(b);
+            }
+        }
+        bucket_ceiling(BUCKETS - 1)
+    }
+
+    /// Serialize — every counter as an exact decimal-`u64` string (see
+    /// `util::json`; `Json::Num` is f64-backed and lossy above 2^53).
+    pub fn to_json(&self) -> Json {
+        let arr = |v: &[u64]| Json::Arr(v.iter().map(|&x| Json::from_u64(x)).collect());
+        Json::obj()
+            .set("apps", self.apps)
+            .set("requests", arr(&self.requests))
+            .set("latency", arr(&self.latency))
+            .set("outage_wait", arr(&self.outage_wait))
+            .set("stalls", Json::from_u64(self.stalls))
+            .set("crossings", Json::from_u64(self.crossings))
+            .set("cpu_fallbacks", Json::from_u64(self.cpu_fallbacks))
+    }
+
+    /// Restore a [`ServeMetrics::to_json`] block, validating slot counts.
+    pub fn from_json(j: &Json) -> anyhow::Result<ServeMetrics> {
+        let apps = j.usize_at("apps")?;
+        let counts = |key: &str, want: usize| -> anyhow::Result<Vec<u64>> {
+            let arr = j.arr_at(key)?;
+            anyhow::ensure!(
+                arr.len() == want,
+                "metrics `{key}`: {} slots, expected {want}",
+                arr.len()
+            );
+            arr.iter()
+                .map(|v| {
+                    v.as_u64_str()
+                        .ok_or_else(|| anyhow::anyhow!("metrics `{key}`: malformed count"))
+                })
+                .collect()
+        };
+        Ok(ServeMetrics {
+            apps,
+            requests: counts("requests", apps * 2)?,
+            latency: counts("latency", apps * 2 * BUCKETS)?,
+            outage_wait: counts("outage_wait", BUCKETS)?,
+            stalls: j.u64_at("stalls")?,
+            crossings: j.u64_at("crossings")?,
+            cpu_fallbacks: j.u64_at("cpu_fallbacks")?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::SizeId;
+
+    fn rec(app: u16, served_by: ServedBy, arrival: f64, start: f64, finish: f64) -> RequestRecord {
+        RequestRecord {
+            id: 0,
+            app: AppId(app),
+            size: SizeId(0),
+            bytes: 1.0,
+            arrival,
+            start,
+            finish,
+            service_secs: finish - start,
+            served_by,
+        }
+    }
+
+    #[test]
+    fn buckets_partition_by_binary_exponent() {
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(-1.0), 0);
+        assert_eq!(bucket_of(f64::NAN), 0);
+        assert_eq!(bucket_of(f64::MIN_POSITIVE / 2.0), 0); // subnormal
+        assert_eq!(bucket_of(1.0), 40);
+        assert_eq!(bucket_of(1.999), 40);
+        assert_eq!(bucket_of(2.0), 41);
+        assert_eq!(bucket_of(0.5), 39);
+        assert_eq!(bucket_of(f64::INFINITY), BUCKETS - 1);
+        assert_eq!(bucket_of(1e300), BUCKETS - 1);
+        // Floors/ceilings agree with the mapping on every bucket.
+        for b in 0..BUCKETS {
+            if b > 0 {
+                assert_eq!(bucket_of(bucket_floor(b)), b, "floor of {b}");
+            }
+            let c = bucket_ceiling(b);
+            if c.is_finite() {
+                assert_eq!(bucket_of(c), b + 1, "ceiling of {b}");
+            }
+        }
+        assert_eq!(bucket_ceiling(0), bucket_floor(1));
+    }
+
+    #[test]
+    fn record_counts_lanes_stalls_and_fallbacks() {
+        let mut m = ServeMetrics::new(3);
+        m.record(&rec(1, ServedBy::Fpga(crate::fpga::device::CardId(0)), 0.0, 0.5, 1.5), true);
+        m.record(&rec(1, ServedBy::Cpu, 1.0, 1.0, 2.0), false);
+        m.record(&rec(2, ServedBy::Cpu, 2.0, 2.0, 2.25), false);
+        assert_eq!(m.total_requests(), 3);
+        assert_eq!(m.fpga_requests(), 1);
+        assert_eq!(m.cpu_fallbacks(), 2);
+        assert_eq!(m.requests_of(AppId(1), true), 1);
+        assert_eq!(m.requests_of(AppId(1), false), 1);
+        assert_eq!(m.stalls(), 1);
+        assert_eq!(m.outage_wait_total(), 1);
+        // Latency 1.5s lands in bucket 40 ([1, 2)); wait 0.5s in 39.
+        assert_eq!(m.latency_counts(AppId(1), true)[40], 1);
+        assert_eq!(m.outage_wait_counts()[39], 1);
+        // 0.25s latency for app 2: bucket 38 ([0.25, 0.5)).
+        assert_eq!(m.latency_counts(AppId(2), false)[38], 1);
+    }
+
+    #[test]
+    fn merge_equals_sequential_and_diff_inverts() {
+        let records: Vec<(RequestRecord, bool)> = (0..40)
+            .map(|i| {
+                let served = if i % 3 == 0 {
+                    ServedBy::Cpu
+                } else {
+                    ServedBy::Fpga(crate::fpga::device::CardId((i % 4) as u16))
+                };
+                let t = i as f64 * 0.37;
+                (rec((i % 5) as u16, served, t, t + 0.01 * i as f64, t + 0.5 + i as f64), i % 7 == 0)
+            })
+            .collect();
+        let mut seq = ServeMetrics::new(5);
+        for (r, s) in &records {
+            seq.record(r, *s);
+        }
+        // Split across 3 shards, merge in a different order.
+        let mut shards = vec![ServeMetrics::new(5), ServeMetrics::new(5), ServeMetrics::new(5)];
+        for (i, (r, s)) in records.iter().enumerate() {
+            shards[i % 3].record(r, *s);
+        }
+        let mut merged = ServeMetrics::new(5);
+        for i in [2, 0, 1] {
+            merged.merge_from(&shards[i]);
+        }
+        assert_eq!(merged, seq);
+        // A snapshot diff recovers the second half exactly.
+        let mut first = ServeMetrics::new(5);
+        for (r, s) in &records[..20] {
+            first.record(r, *s);
+        }
+        let mut second = ServeMetrics::new(5);
+        for (r, s) in &records[20..] {
+            second.record(r, *s);
+        }
+        assert_eq!(seq.diff(&first), second);
+    }
+
+    #[test]
+    fn quantiles_walk_the_merged_buckets() {
+        let mut m = ServeMetrics::new(1);
+        assert_eq!(m.latency_quantile(0.99), 0.0);
+        for i in 0..100u64 {
+            // 90 fast (~0.5s -> bucket 39), 10 slow (~3s -> bucket 41).
+            let lat = if i < 90 { 0.5 } else { 3.0 };
+            m.record(&rec(0, ServedBy::Cpu, 0.0, 0.0, lat), false);
+        }
+        assert_eq!(m.latency_quantile(0.5), bucket_ceiling(39));
+        assert_eq!(m.latency_quantile(0.99), bucket_ceiling(41));
+    }
+
+    #[test]
+    fn metrics_roundtrip_through_json() {
+        let mut m = ServeMetrics::new(2);
+        m.record(&rec(0, ServedBy::Cpu, 0.0, 0.0, 1.0), false);
+        m.record(&rec(1, ServedBy::Fpga(crate::fpga::device::CardId(1)), 0.0, 1.0, 2.0), true);
+        m.note_crossings(3);
+        let back = ServeMetrics::from_json(
+            &Json::parse(&m.to_json().to_pretty()).expect("parse"),
+        )
+        .expect("restore");
+        assert_eq!(back, m);
+    }
+}

@@ -1,0 +1,129 @@
+//! Deterministic telemetry plane: serve-path metrics, the adaptive-loop
+//! decision trace, and exporters.
+//!
+//! The design constraint that shapes everything here is the repo's
+//! determinism contract: the N-thread `ConcurrentFleet` data plane must
+//! stay bit-identical to the sequential `FleetEnv` oracle, *including
+//! its telemetry*. So:
+//!
+//! - Every metric is an integer count derived purely from the request
+//!   record stream (latency = finish − arrival, wait = start − arrival,
+//!   both computed from identical record bits on every path). Integer
+//!   addition is exactly associative, so worker-local shard metrics
+//!   merged at flush equal sequential recording bit-for-bit, regardless
+//!   of shard split or merge order.
+//! - Latency histograms bucket by the IEEE-754 binary exponent (one
+//!   bucket per power of two), extracted with integer bit math — never
+//!   `f64::log2` — so bucketing is platform-exact.
+//! - Quantiles and Prometheus `_sum` lines are *derived* from the
+//!   merged integer buckets at render time; no f64 ever accumulates
+//!   across a merge.
+//! - Telemetry is opt-in (`FleetEnv::enable_telemetry`). Disabled, the
+//!   fleet is bitwise the pre-telemetry fleet; enabled, the fixed-slot
+//!   storage is allocated up front so the steady-state serve path stays
+//!   allocation-free (probed by `tests/serve_alloc.rs`).
+//!
+//! # Reading a decision trace
+//!
+//! The trace is a JSONL stream (one event per line, floats as exact
+//! bits). `tools/render_trace.py trace.jsonl` validates the schema and
+//! renders a markdown timeline. Events group naturally by window:
+//!
+//! ```text
+//! ## pre-launch
+//! - artifact miss tdfir/o1 (downtime 1.000s)
+//! - reprogram card 0 -> tdfir/o1 (1.000s, outage until t=1.000)
+//!
+//! ## window 6 (t=25200.0s) — 412 requests, 390 fpga / 22 cpu, p99 1.0s
+//! - analysis: top mriq (241 uses, corrected 3200.5s), tdfir (...)
+//! - proposal: mriq/o2 over tdfir/o1, ratio 3.2x — proposed, approved
+//! - plan: mriq/o2 x3 cards, tdfir/o1 x1 card
+//! - drain card 1 (t=25200.0)
+//! - artifact hit mriq/o2 (downtime 0.005s)
+//! - reprogram card 1 -> mriq/o2 (0.005s, outage until t=25200.005)
+//! - rejoin card 1 (t=25200.005)
+//!
+//! ## window 7 ...
+//! - flap_rollback: tdfir re-proposed within guard window; plan restored
+//! ```
+//!
+//! Each `window` event carries the *per-window* request/stall deltas and
+//! latency quantiles (diffed from the cumulative metrics), so a p99
+//! excursion lines up against the drain/reprogram/rejoin events that
+//! caused it — the paper's Fig-4 narrative as a machine-readable
+//! artifact. Because the trace rides in `save_state`/`restore_state`, a
+//! warm-restarted coordinator appends to the same timeline it would
+//! have written uninterrupted.
+
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+pub use export::{prometheus_text, write_jsonl};
+pub use metrics::{bucket_ceiling, bucket_floor, bucket_of, ServeMetrics, BUCKETS};
+pub use trace::{DecisionTrace, PlanShare, RankSample, TraceEvent};
+
+use crate::util::json::Json;
+
+/// The per-environment telemetry state: cumulative serve metrics plus
+/// the decision trace. Held as `Option<Telemetry>` on `FleetEnv` so the
+/// disabled fleet is bitwise the pre-telemetry fleet.
+#[derive(Clone, Debug)]
+pub struct Telemetry {
+    pub metrics: ServeMetrics,
+    pub trace: DecisionTrace,
+}
+
+impl Telemetry {
+    /// Allocate fixed-slot storage for `apps` registered applications.
+    pub fn new(apps: usize) -> Self {
+        Telemetry {
+            metrics: ServeMetrics::new(apps),
+            trace: DecisionTrace::new(),
+        }
+    }
+
+    /// Clear counts and events, keeping the slot allocation.
+    pub fn reset(&mut self) {
+        self.metrics.reset();
+        self.trace.clear();
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("metrics", self.metrics.to_json())
+            .set("trace", self.trace.to_json())
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Telemetry> {
+        let metrics = ServeMetrics::from_json(
+            j.get("metrics")
+                .ok_or_else(|| anyhow::anyhow!("telemetry: missing `metrics`"))?,
+        )?;
+        let trace = DecisionTrace::from_json(
+            j.get("trace")
+                .ok_or_else(|| anyhow::anyhow!("telemetry: missing `trace`"))?,
+        )?;
+        Ok(Telemetry { metrics, trace })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn telemetry_roundtrips_with_trace_and_metrics() {
+        let mut t = Telemetry::new(3);
+        t.trace.push(TraceEvent::Drain { at: 1.5, card: 2 });
+        t.metrics.note_crossings(7);
+        let j = t.to_json();
+        let back = Telemetry::from_json(&Json::parse(&j.to_pretty()).expect("parse")).expect("restore");
+        assert_eq!(back.metrics, t.metrics);
+        assert_eq!(back.trace.to_jsonl(), t.trace.to_jsonl());
+        // reset keeps the slot shape but clears everything.
+        t.reset();
+        assert_eq!(t.metrics, ServeMetrics::new(3));
+        assert!(t.trace.is_empty());
+    }
+}

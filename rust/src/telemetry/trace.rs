@@ -1,0 +1,520 @@
+//! The adaptive-loop decision trace: a structured, virtual-clock-stamped
+//! event log of *why* the fleet changed.
+//!
+//! Events are appended on cold control paths only — window boundaries,
+//! the §3.3 analysis/proposal steps, flap-guard rollbacks, and the
+//! drain/reprogram/rejoin machinery behind every deploy — never on a
+//! steady-state serve, so the request hot path stays allocation-free.
+//!
+//! Serialization uses `util::json` exact-bits carriers for every float
+//! (virtual timestamps, downtimes, ratios, quantiles), so a trace
+//! round-trips bit-identically through JSONL and rides inside
+//! `FleetEnv::save_state` — a warm-restarted coordinator resumes the
+//! same trace it would have written uninterrupted. Unknown event kinds
+//! fail loudly on read (`tools/render_trace.py` enforces the same
+//! schema on the Python side).
+
+use crate::util::json::Json;
+
+/// One step-1 ranking row carried in an [`TraceEvent::Analysis`] event.
+#[derive(Clone, Debug)]
+pub struct RankSample {
+    pub app: String,
+    pub usage: u64,
+    /// Corrected load (actual x improvement coefficient), seconds.
+    pub corrected: f64,
+}
+
+/// One residency-plan share carried in a [`TraceEvent::Plan`] event.
+#[derive(Clone, Debug)]
+pub struct PlanShare {
+    pub app: String,
+    pub variant: String,
+    pub cards: u64,
+}
+
+/// A decision-trace event. All `f64` fields serialize as exact bits
+/// (`*_bits` keys in the JSON form); `at` is the virtual clock when the
+/// event was recorded, except `Rejoin`/`Reprogram` whose stamps follow
+/// the routing-event convention (rejoins at the card's exact rejoin
+/// time).
+#[derive(Clone, Debug)]
+pub enum TraceEvent {
+    /// One serve window completed: request totals by lane, the stall
+    /// delta, and per-window latency quantiles from the metrics diff.
+    Window {
+        window: u64,
+        at: f64,
+        requests: u64,
+        fpga: u64,
+        cpu: u64,
+        stalls: u64,
+        p50: f64,
+        p99: f64,
+    },
+    /// Step 1 ran: the top-k load ranking (corrected totals).
+    Analysis { at: f64, top: Vec<RankSample> },
+    /// Step 4/5: the threshold decision on the best candidate.
+    /// `proposed == false` means the pattern was skipped (threshold,
+    /// already running, or already resident); `approved` is `None` for
+    /// skipped proposals, else the step-5 operator decision.
+    Proposal {
+        at: f64,
+        current_app: String,
+        current_variant: String,
+        best_app: String,
+        best_variant: String,
+        ratio: f64,
+        proposed: bool,
+        approved: Option<bool>,
+    },
+    /// Step 6 chose a heterogeneous residency plan (the diff is implicit:
+    /// `deploy_plan` skips matching cards, and the per-card reprogram
+    /// events that follow show exactly which cards flipped).
+    Plan { at: f64, entries: Vec<PlanShare> },
+    /// The Step-7 flap guard rolled a just-approved cycle back.
+    FlapRollback { at: f64, window: u64, app: String },
+    /// Artifact-cache consultation for one transition entry: `hit`
+    /// charges `fraction x cold` on every card flipped to this entry.
+    Artifact {
+        at: f64,
+        app: String,
+        variant: String,
+        hit: bool,
+        downtime: f64,
+    },
+    /// A card left the routing rotation (roll step 1).
+    Drain { at: f64, card: u16 },
+    /// A card was reprogrammed, charging `downtime` seconds of outage
+    /// ending at `outage_until` (roll step 2, or a cutover).
+    Reprogram {
+        at: f64,
+        card: u16,
+        app: String,
+        variant: String,
+        downtime: f64,
+        outage_until: f64,
+    },
+    /// A card re-entered the rotation (roll step 3), stamped at its
+    /// exact rejoin time.
+    Rejoin { at: f64, card: u16 },
+}
+
+impl TraceEvent {
+    /// The event's JSONL discriminator.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Window { .. } => "window",
+            TraceEvent::Analysis { .. } => "analysis",
+            TraceEvent::Proposal { .. } => "proposal",
+            TraceEvent::Plan { .. } => "plan",
+            TraceEvent::FlapRollback { .. } => "flap_rollback",
+            TraceEvent::Artifact { .. } => "artifact",
+            TraceEvent::Drain { .. } => "drain",
+            TraceEvent::Reprogram { .. } => "reprogram",
+            TraceEvent::Rejoin { .. } => "rejoin",
+        }
+    }
+
+    /// Serialize one event (floats as exact bits).
+    pub fn to_json(&self) -> Json {
+        let base = Json::obj().set("kind", self.kind());
+        match self {
+            TraceEvent::Window {
+                window,
+                at,
+                requests,
+                fpga,
+                cpu,
+                stalls,
+                p50,
+                p99,
+            } => base
+                .set("window", Json::from_u64(*window))
+                .set("at_bits", Json::from_f64_bits(*at))
+                .set("requests", Json::from_u64(*requests))
+                .set("fpga", Json::from_u64(*fpga))
+                .set("cpu", Json::from_u64(*cpu))
+                .set("stalls", Json::from_u64(*stalls))
+                .set("p50_bits", Json::from_f64_bits(*p50))
+                .set("p99_bits", Json::from_f64_bits(*p99)),
+            TraceEvent::Analysis { at, top } => base
+                .set("at_bits", Json::from_f64_bits(*at))
+                .set(
+                    "top",
+                    Json::Arr(
+                        top.iter()
+                            .map(|r| {
+                                Json::obj()
+                                    .set("app", r.app.as_str())
+                                    .set("usage", Json::from_u64(r.usage))
+                                    .set("corrected_bits", Json::from_f64_bits(r.corrected))
+                            })
+                            .collect(),
+                    ),
+                ),
+            TraceEvent::Proposal {
+                at,
+                current_app,
+                current_variant,
+                best_app,
+                best_variant,
+                ratio,
+                proposed,
+                approved,
+            } => base
+                .set("at_bits", Json::from_f64_bits(*at))
+                .set("current_app", current_app.as_str())
+                .set("current_variant", current_variant.as_str())
+                .set("best_app", best_app.as_str())
+                .set("best_variant", best_variant.as_str())
+                .set("ratio_bits", Json::from_f64_bits(*ratio))
+                .set("proposed", *proposed)
+                .set(
+                    "approved",
+                    match approved {
+                        Some(b) => Json::Bool(*b),
+                        None => Json::Null,
+                    },
+                ),
+            TraceEvent::Plan { at, entries } => base
+                .set("at_bits", Json::from_f64_bits(*at))
+                .set(
+                    "entries",
+                    Json::Arr(
+                        entries
+                            .iter()
+                            .map(|e| {
+                                Json::obj()
+                                    .set("app", e.app.as_str())
+                                    .set("variant", e.variant.as_str())
+                                    .set("cards", Json::from_u64(e.cards))
+                            })
+                            .collect(),
+                    ),
+                ),
+            TraceEvent::FlapRollback { at, window, app } => base
+                .set("at_bits", Json::from_f64_bits(*at))
+                .set("window", Json::from_u64(*window))
+                .set("app", app.as_str()),
+            TraceEvent::Artifact {
+                at,
+                app,
+                variant,
+                hit,
+                downtime,
+            } => base
+                .set("at_bits", Json::from_f64_bits(*at))
+                .set("app", app.as_str())
+                .set("variant", variant.as_str())
+                .set("hit", *hit)
+                .set("downtime_bits", Json::from_f64_bits(*downtime)),
+            TraceEvent::Drain { at, card } => base
+                .set("at_bits", Json::from_f64_bits(*at))
+                .set("card", *card as usize),
+            TraceEvent::Reprogram {
+                at,
+                card,
+                app,
+                variant,
+                downtime,
+                outage_until,
+            } => base
+                .set("at_bits", Json::from_f64_bits(*at))
+                .set("card", *card as usize)
+                .set("app", app.as_str())
+                .set("variant", variant.as_str())
+                .set("downtime_bits", Json::from_f64_bits(*downtime))
+                .set("outage_until_bits", Json::from_f64_bits(*outage_until)),
+            TraceEvent::Rejoin { at, card } => base
+                .set("at_bits", Json::from_f64_bits(*at))
+                .set("card", *card as usize),
+        }
+    }
+
+    /// Restore one event. Unknown `kind`s are an error — a trace from a
+    /// newer schema must fail loudly, not be silently dropped.
+    pub fn from_json(j: &Json) -> anyhow::Result<TraceEvent> {
+        let approved_at = |j: &Json| -> anyhow::Result<Option<bool>> {
+            match j.get("approved") {
+                Some(Json::Null) | None => Ok(None),
+                Some(v) => v
+                    .as_bool()
+                    .map(Some)
+                    .ok_or_else(|| anyhow::anyhow!("trace proposal: malformed `approved`")),
+            }
+        };
+        let bool_at = |j: &Json, key: &str| -> anyhow::Result<bool> {
+            j.get(key)
+                .and_then(Json::as_bool)
+                .ok_or_else(|| anyhow::anyhow!("trace event: missing bool `{key}`"))
+        };
+        let card_at = |j: &Json| -> anyhow::Result<u16> { Ok(j.usize_at("card")? as u16) };
+        match j.str_at("kind")? {
+            "window" => Ok(TraceEvent::Window {
+                window: j.u64_at("window")?,
+                at: j.f64_bits_at("at_bits")?,
+                requests: j.u64_at("requests")?,
+                fpga: j.u64_at("fpga")?,
+                cpu: j.u64_at("cpu")?,
+                stalls: j.u64_at("stalls")?,
+                p50: j.f64_bits_at("p50_bits")?,
+                p99: j.f64_bits_at("p99_bits")?,
+            }),
+            "analysis" => {
+                let mut top = Vec::new();
+                for r in j.arr_at("top")? {
+                    top.push(RankSample {
+                        app: r.str_at("app")?.to_string(),
+                        usage: r.u64_at("usage")?,
+                        corrected: r.f64_bits_at("corrected_bits")?,
+                    });
+                }
+                Ok(TraceEvent::Analysis {
+                    at: j.f64_bits_at("at_bits")?,
+                    top,
+                })
+            }
+            "proposal" => Ok(TraceEvent::Proposal {
+                at: j.f64_bits_at("at_bits")?,
+                current_app: j.str_at("current_app")?.to_string(),
+                current_variant: j.str_at("current_variant")?.to_string(),
+                best_app: j.str_at("best_app")?.to_string(),
+                best_variant: j.str_at("best_variant")?.to_string(),
+                ratio: j.f64_bits_at("ratio_bits")?,
+                proposed: bool_at(j, "proposed")?,
+                approved: approved_at(j)?,
+            }),
+            "plan" => {
+                let mut entries = Vec::new();
+                for e in j.arr_at("entries")? {
+                    entries.push(PlanShare {
+                        app: e.str_at("app")?.to_string(),
+                        variant: e.str_at("variant")?.to_string(),
+                        cards: e.u64_at("cards")?,
+                    });
+                }
+                Ok(TraceEvent::Plan {
+                    at: j.f64_bits_at("at_bits")?,
+                    entries,
+                })
+            }
+            "flap_rollback" => Ok(TraceEvent::FlapRollback {
+                at: j.f64_bits_at("at_bits")?,
+                window: j.u64_at("window")?,
+                app: j.str_at("app")?.to_string(),
+            }),
+            "artifact" => Ok(TraceEvent::Artifact {
+                at: j.f64_bits_at("at_bits")?,
+                app: j.str_at("app")?.to_string(),
+                variant: j.str_at("variant")?.to_string(),
+                hit: bool_at(j, "hit")?,
+                downtime: j.f64_bits_at("downtime_bits")?,
+            }),
+            "drain" => Ok(TraceEvent::Drain {
+                at: j.f64_bits_at("at_bits")?,
+                card: card_at(j)?,
+            }),
+            "reprogram" => Ok(TraceEvent::Reprogram {
+                at: j.f64_bits_at("at_bits")?,
+                card: card_at(j)?,
+                app: j.str_at("app")?.to_string(),
+                variant: j.str_at("variant")?.to_string(),
+                downtime: j.f64_bits_at("downtime_bits")?,
+                outage_until: j.f64_bits_at("outage_until_bits")?,
+            }),
+            "rejoin" => Ok(TraceEvent::Rejoin {
+                at: j.f64_bits_at("at_bits")?,
+                card: card_at(j)?,
+            }),
+            other => anyhow::bail!("unknown trace event kind `{other}`"),
+        }
+    }
+}
+
+/// An append-only decision trace. Cleared by `FleetEnv::reset`,
+/// serialized inside `save_state` so a warm restart resumes it.
+#[derive(Clone, Debug, Default)]
+pub struct DecisionTrace {
+    events: Vec<TraceEvent>,
+}
+
+impl DecisionTrace {
+    pub fn new() -> Self {
+        DecisionTrace::default()
+    }
+
+    pub fn push(&mut self, e: TraceEvent) {
+        self.events.push(e);
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.events.clear();
+    }
+
+    /// Serialize as a JSON array (the `save_state` form).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.events.iter().map(TraceEvent::to_json).collect())
+    }
+
+    /// Restore a [`DecisionTrace::to_json`] array.
+    pub fn from_json(j: &Json) -> anyhow::Result<DecisionTrace> {
+        let arr = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("decision trace: expected an array"))?;
+        let mut events = Vec::with_capacity(arr.len());
+        for e in arr {
+            events.push(TraceEvent::from_json(e)?);
+        }
+        Ok(DecisionTrace { events })
+    }
+
+    /// One compact JSON object per line — the exporter format
+    /// `tools/render_trace.py` consumes.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for e in &self.events {
+            out.push_str(&e.to_json().to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Parse a JSONL trace (blank lines ignored; unknown kinds error).
+    pub fn from_jsonl(text: &str) -> anyhow::Result<DecisionTrace> {
+        let mut events = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 1))?;
+            events.push(
+                TraceEvent::from_json(&j)
+                    .map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 1))?,
+            );
+        }
+        Ok(DecisionTrace { events })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> DecisionTrace {
+        let mut t = DecisionTrace::new();
+        t.push(TraceEvent::Artifact {
+            at: 0.0,
+            app: "tdfir".into(),
+            variant: "o1".into(),
+            hit: false,
+            downtime: 1.0,
+        });
+        t.push(TraceEvent::Reprogram {
+            at: 0.0,
+            card: 0,
+            app: "tdfir".into(),
+            variant: "o1".into(),
+            downtime: 1.0,
+            outage_until: 1.0,
+        });
+        t.push(TraceEvent::Window {
+            window: 0,
+            at: 3600.0,
+            requests: 412,
+            fpga: 390,
+            cpu: 22,
+            stalls: 0,
+            p50: 0.001953125,
+            p99: f64::INFINITY,
+        });
+        t.push(TraceEvent::Analysis {
+            at: 3600.0,
+            top: vec![RankSample {
+                app: "mriq".into(),
+                usage: 241,
+                corrected: 3200.5,
+            }],
+        });
+        t.push(TraceEvent::Proposal {
+            at: 3600.0,
+            current_app: "tdfir".into(),
+            current_variant: "o1".into(),
+            best_app: "mriq".into(),
+            best_variant: "o2".into(),
+            ratio: 3.2,
+            proposed: true,
+            approved: Some(true),
+        });
+        t.push(TraceEvent::Plan {
+            at: 3600.0,
+            entries: vec![PlanShare {
+                app: "mriq".into(),
+                variant: "o2".into(),
+                cards: 3,
+            }],
+        });
+        t.push(TraceEvent::Drain { at: 3600.0, card: 1 });
+        t.push(TraceEvent::Rejoin { at: 3601.0, card: 1 });
+        t.push(TraceEvent::FlapRollback {
+            at: 7200.0,
+            window: 1,
+            app: "tdfir".into(),
+        });
+        t
+    }
+
+    #[test]
+    fn jsonl_roundtrip_is_exact() {
+        let t = sample_trace();
+        let jsonl = t.to_jsonl();
+        let back = DecisionTrace::from_jsonl(&jsonl).expect("parse");
+        assert_eq!(back.to_jsonl(), jsonl);
+        assert_eq!(back.len(), t.len());
+        // The save_state array form round-trips through pretty JSON too.
+        let arr = Json::parse(&t.to_json().to_pretty()).expect("parse");
+        let back = DecisionTrace::from_json(&arr).expect("restore");
+        assert_eq!(back.to_jsonl(), jsonl);
+    }
+
+    #[test]
+    fn unknown_event_kinds_fail_loudly() {
+        let line = r#"{"kind": "espresso_break", "at_bits": "0"}"#;
+        let err = DecisionTrace::from_jsonl(line).unwrap_err().to_string();
+        assert!(err.contains("unknown trace event kind"), "{err}");
+        assert!(err.contains("espresso_break"), "{err}");
+    }
+
+    #[test]
+    fn kind_strings_cover_every_variant() {
+        let t = sample_trace();
+        let kinds: Vec<&str> = t.events().iter().map(TraceEvent::kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                "artifact",
+                "reprogram",
+                "window",
+                "analysis",
+                "proposal",
+                "plan",
+                "drain",
+                "rejoin",
+                "flap_rollback"
+            ]
+        );
+    }
+}

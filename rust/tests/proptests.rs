@@ -1080,6 +1080,7 @@ fn prop_warm_restart_resumes_bit_identically() {
             };
             let fresh = |cfg: &AdaptiveConfig| {
                 let mut env = FleetEnv::new(registry(), D5005, cards);
+                env.enable_telemetry();
                 env.configure_artifact_cache(&cfg.recon);
                 env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
                 env
@@ -1183,6 +1184,17 @@ fn prop_warm_restart_resumes_bit_identically() {
                 env.artifact_library() == oracle.artifact_library(),
                 "artifact manifest",
             )?;
+            // Telemetry rides the snapshot: restored metrics and trace
+            // match the uninterrupted run bit for bit.
+            let (te, to) = (
+                env.telemetry().ok_or("telemetry lost in the snapshot")?,
+                oracle.telemetry().expect("enabled"),
+            );
+            ensure(te.metrics == to.metrics, "telemetry metrics diverged")?;
+            ensure(
+                te.trace.to_jsonl() == to.trace.to_jsonl(),
+                "decision trace diverged across the warm restart",
+            )?;
             // History queries answer identically on the replayed index.
             let now = oracle.clock.now();
             for a in 0..registry().len() {
@@ -1204,7 +1216,8 @@ fn prop_warm_restart_resumes_bit_identically() {
 /// window starting inside whatever roll the first cycle's deploy kicked
 /// off, which exercises the sequential-fallback path — every thread
 /// count produces bit-identical recon outcomes, histories, clocks,
-/// card horizons, and stall counts to the sequential `FleetEnv`.
+/// card horizons, stall counts — and telemetry (shard-merged metrics
+/// plus decision trace) — to the sequential `FleetEnv`.
 #[test]
 fn prop_concurrent_fleet_recon_matches_sequential() {
     let reg = registry();
@@ -1220,9 +1233,13 @@ fn prop_concurrent_fleet_recon_matches_sequential() {
             )
         },
         |&(cards, threads, dur, seed)| {
+            // Telemetry enabled on both sides: the shard-merged metrics
+            // and the decision trace must come out bit-identical too.
             let mut seq = FleetEnv::new(registry(), D5005, cards);
+            seq.enable_telemetry();
             seq.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
             let mut inner = FleetEnv::new(registry(), D5005, cards);
+            inner.enable_telemetry();
             inner.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
             let mut conc = ConcurrentFleet::new(inner, threads);
             let cfg = ReconConfig {
@@ -1290,7 +1307,221 @@ fn prop_concurrent_fleet_recon_matches_sequential() {
                 (None, None) => {}
                 _ => return Err("active deployment diverged".into()),
             }
+            let (ts, tc) = (
+                seq.telemetry().expect("enabled"),
+                conc.fleet.telemetry().expect("enabled"),
+            );
+            ensure(ts.metrics == tc.metrics, "telemetry metrics diverged")?;
+            ensure(
+                ts.trace.to_jsonl() == tc.trace.to_jsonl(),
+                "decision traces diverged",
+            )?;
+            ensure(!ts.trace.is_empty(), "recon cycles must leave a trace")?;
             ensure(conc.stats().lock_acquisitions == 0, "data plane took a lock")
+        },
+    );
+}
+
+/// Telemetry metrics: recording a stream shard-by-shard and merging the
+/// shards in *any* order is bit-identical to recording the whole stream
+/// sequentially — the merge is element-wise `u64` addition, so this
+/// holds exactly, for any split and any permutation.
+#[test]
+fn prop_metrics_merge_is_shard_order_independent() {
+    forall(
+        40,
+        0x7E1E_0DD,
+        |rng| {
+            let apps = 1 + rng.next_below(6) as usize;
+            let n = rng.next_below(160) as usize;
+            let shards = 1 + rng.next_below(6) as usize;
+            let recs: Vec<(RequestRecord, bool, usize)> = (0..n)
+                .map(|i| {
+                    let arrival = rng.next_f64() * 1000.0;
+                    let wait = if rng.next_f64() < 0.3 {
+                        rng.next_f64() * 4.0
+                    } else {
+                        0.0
+                    };
+                    let start = arrival + wait;
+                    // A few adversarial latencies: raw-bit f64s exercise
+                    // the NaN / negative / subnormal bucket-0 fallback.
+                    let finish = if rng.next_f64() < 0.1 {
+                        f64::from_bits(rng.next_u64())
+                    } else {
+                        start + rng.next_f64() * 8.0
+                    };
+                    let rec = RequestRecord {
+                        id: i as u64,
+                        app: AppId(rng.next_below(apps as u64) as u16),
+                        size: SizeId(rng.next_below(3) as u16),
+                        bytes: rng.next_f64() * 1e6,
+                        arrival,
+                        start,
+                        finish,
+                        service_secs: finish - start,
+                        served_by: if rng.next_f64() < 0.25 {
+                            ServedBy::Cpu
+                        } else {
+                            ServedBy::Fpga(CardId(rng.next_below(4) as u16))
+                        },
+                    };
+                    (rec, wait > 0.0, rng.next_below(shards as u64) as usize)
+                })
+                .collect();
+            let crossings: Vec<u64> = (0..shards).map(|_| rng.next_below(5)).collect();
+            // A random merge order over the shards.
+            let mut order: Vec<usize> = (0..shards).collect();
+            for i in (1..shards).rev() {
+                order.swap(i, rng.next_below(i as u64 + 1) as usize);
+            }
+            (apps, shards, recs, crossings, order)
+        },
+        |(apps, shards, recs, crossings, order)| {
+            use repro::telemetry::ServeMetrics;
+            // Sequential oracle: one block sees the whole stream.
+            let mut seq = ServeMetrics::new(*apps);
+            for (rec, stalled, _) in recs {
+                seq.record(rec, *stalled);
+            }
+            seq.note_crossings(crossings.iter().sum());
+            // Sharded: each worker-local block sees its subset...
+            let mut blocks: Vec<ServeMetrics> =
+                (0..*shards).map(|_| ServeMetrics::new(*apps)).collect();
+            for (rec, stalled, shard) in recs {
+                blocks[*shard].record(rec, *stalled);
+            }
+            for (b, &c) in blocks.iter_mut().zip(crossings) {
+                b.note_crossings(c);
+            }
+            // ...and the merge folds them in a random order.
+            let mut merged = ServeMetrics::new(*apps);
+            for &i in order {
+                merged.merge_from(&blocks[i]);
+            }
+            ensure(merged == seq, "shard merge diverged from sequential recording")?;
+            ensure(
+                merged.total_requests() == recs.len() as u64,
+                "request conservation",
+            )?;
+            // And the JSON snapshot form round-trips the merged block.
+            let back = ServeMetrics::from_json(&merged.to_json()).map_err(|e| e.to_string())?;
+            ensure(back == merged, "metrics JSON round-trip")
+        },
+    );
+}
+
+/// Decision trace: JSONL round-trips every event kind *exactly*, float
+/// bits included — even NaNs and infinities from raw bit patterns.
+#[test]
+fn prop_trace_jsonl_roundtrip_exact() {
+    use repro::telemetry::{DecisionTrace, PlanShare, RankSample, TraceEvent};
+    fn word(rng: &mut Rng) -> String {
+        let names = ["tdfir", "mriq", "dft", "sobel", "app-x"];
+        names[rng.next_below(names.len() as u64) as usize].to_string()
+    }
+    forall(
+        60,
+        0x7124CE,
+        |rng| {
+            let mut t = DecisionTrace::new();
+            // Raw-bit floats: the exact-bits encoding must carry NaN,
+            // ±inf, and subnormals through JSONL unchanged.
+            let n = 1 + rng.next_below(12);
+            for _ in 0..n {
+                let f = |rng: &mut Rng| {
+                    if rng.next_f64() < 0.2 {
+                        f64::from_bits(rng.next_u64())
+                    } else {
+                        rng.next_f64() * 1e4
+                    }
+                };
+                let ev = match rng.next_below(9) {
+                    0 => TraceEvent::Window {
+                        window: rng.next_below(64),
+                        at: f(rng),
+                        requests: rng.next_u64(),
+                        fpga: rng.next_u64(),
+                        cpu: rng.next_u64(),
+                        stalls: rng.next_u64(),
+                        p50: f(rng),
+                        p99: f(rng),
+                    },
+                    1 => TraceEvent::Analysis {
+                        at: f(rng),
+                        top: (0..rng.next_below(4))
+                            .map(|_| RankSample {
+                                app: word(rng),
+                                usage: rng.next_u64(),
+                                corrected: f(rng),
+                            })
+                            .collect(),
+                    },
+                    2 => TraceEvent::Proposal {
+                        at: f(rng),
+                        current_app: word(rng),
+                        current_variant: word(rng),
+                        best_app: word(rng),
+                        best_variant: word(rng),
+                        ratio: f(rng),
+                        proposed: rng.next_f64() < 0.5,
+                        approved: match rng.next_below(3) {
+                            0 => None,
+                            1 => Some(false),
+                            _ => Some(true),
+                        },
+                    },
+                    3 => TraceEvent::Plan {
+                        at: f(rng),
+                        entries: (0..rng.next_below(4))
+                            .map(|_| PlanShare {
+                                app: word(rng),
+                                variant: word(rng),
+                                cards: rng.next_below(64),
+                            })
+                            .collect(),
+                    },
+                    4 => TraceEvent::FlapRollback {
+                        at: f(rng),
+                        window: rng.next_below(64),
+                        app: word(rng),
+                    },
+                    5 => TraceEvent::Artifact {
+                        at: f(rng),
+                        app: word(rng),
+                        variant: word(rng),
+                        hit: rng.next_f64() < 0.5,
+                        downtime: f(rng),
+                    },
+                    6 => TraceEvent::Drain {
+                        at: f(rng),
+                        card: rng.next_below(64) as u16,
+                    },
+                    7 => TraceEvent::Reprogram {
+                        at: f(rng),
+                        card: rng.next_below(64) as u16,
+                        app: word(rng),
+                        variant: word(rng),
+                        downtime: f(rng),
+                        outage_until: f(rng),
+                    },
+                    _ => TraceEvent::Rejoin {
+                        at: f(rng),
+                        card: rng.next_below(64) as u16,
+                    },
+                };
+                t.push(ev);
+            }
+            t
+        },
+        |t| {
+            let jsonl = t.to_jsonl();
+            let back = DecisionTrace::from_jsonl(&jsonl).map_err(|e| e.to_string())?;
+            ensure(back.len() == t.len(), "event count")?;
+            ensure(back.to_jsonl() == jsonl, "JSONL round-trip not exact")?;
+            // The array (snapshot) form agrees with the line form.
+            let arr = DecisionTrace::from_json(&t.to_json()).map_err(|e| e.to_string())?;
+            ensure(arr.to_jsonl() == jsonl, "array/JSONL forms diverged")
         },
     );
 }

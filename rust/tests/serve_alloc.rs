@@ -31,6 +31,12 @@
 //!     partial-reconfiguration outage: an arrival inside the 5 ms window
 //!     stalls, an arrival past it — but inside where the cold 1 s window
 //!     would still have been — does not.
+//!  8. **Telemetry on the hot path for free** — with the telemetry
+//!     plane enabled (fixed-slot counters + log2 latency histograms,
+//!     allocated up front) both `FleetEnv::serve` and the data-plane
+//!     `serve_shard` with worker-local shard metrics still allocate
+//!     nothing in steady state; trace events live on the cold control
+//!     paths only.
 //!
 //! Kept as a single #[test] so no concurrent test pollutes the global
 //! allocation counter between the before/after reads.
@@ -377,4 +383,49 @@ fn serve_is_bit_identical_to_seed_model_and_allocation_free() {
         (2, 1, 2),
         "two bitstreams compiled, one revisit hit"
     );
+
+    // ---- 8. telemetry-enabled serve is still allocation-free --------------
+    // Metric slots (counters + histograms, per app × lane) are allocated
+    // when telemetry is enabled, before the loop; recording is pure
+    // fixed-slot u64 arithmetic. The deploy's trace events land before
+    // the measured region — steady-state serve never touches the trace.
+    let mut tel = FleetEnv::new(synthetic_registry(16), D5005, 64).with_telemetry();
+    tel.deploy_plan(ReconfigKind::Static, &plan);
+    tel.history.reserve_trace(&big_trace);
+    let before_t = ALLOCS.load(Ordering::SeqCst);
+    for r in &big_trace {
+        let rec = tel.serve(r).unwrap();
+        std::hint::black_box(rec);
+    }
+    let after_t = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after_t - before_t,
+        0,
+        "telemetry-enabled fleet serve allocated {} time(s) over {} requests",
+        after_t - before_t,
+        big_trace.len()
+    );
+    let m = &tel.telemetry().unwrap().metrics;
+    assert_eq!(m.total_requests(), big_trace.len() as u64);
+    assert_eq!(m.fpga_requests(), big_trace.len() as u64);
+
+    // The data-plane shard with worker-local metrics: same guarantee on
+    // the same chain-crossing replay as section 6.
+    let mut tel_shard = DataShard::new(0, &init);
+    tel_shard.records.reserve(big_trace.len());
+    tel_shard.enable_metrics(16);
+    let before_s = ALLOCS.load(Ordering::SeqCst);
+    serve_shard(&mut tel_shard, &big_trace, &chain, &plane_env.table).unwrap();
+    let after_s = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after_s - before_s,
+        0,
+        "metrics-enabled data-plane serve allocated {} time(s) over {} requests \
+         (snapshot crossings included)",
+        after_s - before_s,
+        big_trace.len()
+    );
+    let sm = tel_shard.metrics.as_ref().unwrap();
+    assert_eq!(sm.total_requests(), big_trace.len() as u64);
+    assert_eq!(sm.stalls(), 0);
 }

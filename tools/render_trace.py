@@ -1,0 +1,254 @@
+#!/usr/bin/env python3
+"""Validate and render a decision-trace JSONL file as a markdown timeline.
+
+The telemetry plane writes one compact JSON object per line
+(`repro::telemetry::write_jsonl`, or `TRACE_JSONL=path` on the
+`adaptive_operation` example). Floats travel as exact IEEE-754 bits in
+`*_bits` string fields and u64 counters as decimal strings, so the
+Python side decodes without rounding:
+
+    python3 tools/render_trace.py trace.jsonl
+
+The script is also the schema gate CI runs: an unknown event `kind`, a
+missing field, or a mistyped field fails loudly (exit 2) instead of
+being skipped — a trace written by a newer producer must not be
+silently mis-rendered by an older reader.
+"""
+
+import json
+import struct
+import sys
+
+# field -> decoder; every field listed is required.
+#   bits : f64 carried as decimal-u64-bit string
+#   u64  : u64 carried as decimal string
+#   num  : plain JSON number (small ints: card indices)
+#   str  : string
+#   bool : bool
+#   opt_bool : bool or null
+# (kind, fields) for every event the Rust enum can emit.
+KINDS = {
+    "window": {
+        "window": "u64",
+        "at_bits": "bits",
+        "requests": "u64",
+        "fpga": "u64",
+        "cpu": "u64",
+        "stalls": "u64",
+        "p50_bits": "bits",
+        "p99_bits": "bits",
+    },
+    "analysis": {"at_bits": "bits", "top": "arr"},
+    "proposal": {
+        "at_bits": "bits",
+        "current_app": "str",
+        "current_variant": "str",
+        "best_app": "str",
+        "best_variant": "str",
+        "ratio_bits": "bits",
+        "proposed": "bool",
+        "approved": "opt_bool",
+    },
+    "plan": {"at_bits": "bits", "entries": "arr"},
+    "flap_rollback": {"at_bits": "bits", "window": "u64", "app": "str"},
+    "artifact": {
+        "at_bits": "bits",
+        "app": "str",
+        "variant": "str",
+        "hit": "bool",
+        "downtime_bits": "bits",
+    },
+    "drain": {"at_bits": "bits", "card": "num"},
+    "reprogram": {
+        "at_bits": "bits",
+        "card": "num",
+        "app": "str",
+        "variant": "str",
+        "downtime_bits": "bits",
+        "outage_until_bits": "bits",
+    },
+    "rejoin": {"at_bits": "bits", "card": "num"},
+}
+
+# Sub-object schemas for the two array-carrying events.
+SUB = {
+    "top": {"app": "str", "usage": "u64", "corrected_bits": "bits"},
+    "entries": {"app": "str", "variant": "str", "cards": "u64"},
+}
+
+
+def fail(line_no, msg):
+    print(f"render_trace: line {line_no}: {msg}", file=sys.stderr)
+    sys.exit(2)
+
+
+def decode_bits(s):
+    return struct.unpack("<d", struct.pack("<Q", int(s)))[0]
+
+
+def decode_field(line_no, obj, key, typ):
+    if key not in obj:
+        fail(line_no, f"missing field `{key}` for kind `{obj.get('kind')}`")
+    v = obj[key]
+    try:
+        if typ == "bits":
+            if not isinstance(v, str):
+                raise ValueError("expected a bit-string")
+            return decode_bits(v)
+        if typ == "u64":
+            if not isinstance(v, str):
+                raise ValueError("expected a decimal string")
+            n = int(v)
+            if n < 0 or n > 0xFFFFFFFFFFFFFFFF:
+                raise ValueError("out of u64 range")
+            return n
+        if typ == "num":
+            if isinstance(v, bool) or not isinstance(v, (int, float)):
+                raise ValueError("expected a number")
+            return int(v)
+        if typ == "str":
+            if not isinstance(v, str):
+                raise ValueError("expected a string")
+            return v
+        if typ == "bool":
+            if not isinstance(v, bool):
+                raise ValueError("expected a bool")
+            return v
+        if typ == "opt_bool":
+            if v is not None and not isinstance(v, bool):
+                raise ValueError("expected a bool or null")
+            return v
+        if typ == "arr":
+            if not isinstance(v, list):
+                raise ValueError("expected an array")
+            return [
+                {k: decode_field(line_no, e, k, t) for k, t in SUB[key].items()}
+                for e in v
+            ]
+        raise ValueError(f"unknown decoder `{typ}`")
+    except (ValueError, TypeError, struct.error) as e:
+        fail(line_no, f"malformed `{key}`: {e}")
+
+
+def parse(path):
+    """Validate the whole file; return a list of decoded event dicts."""
+    events = []
+    with open(path, encoding="utf-8") as fh:
+        for line_no, line in enumerate(fh, start=1):
+            if not line.strip():
+                continue
+            try:
+                obj = json.loads(line)
+            except json.JSONDecodeError as e:
+                fail(line_no, f"not JSON: {e}")
+            if not isinstance(obj, dict):
+                fail(line_no, "event must be a JSON object")
+            kind = obj.get("kind")
+            if kind not in KINDS:
+                fail(line_no, f"unknown trace event kind `{kind}`")
+            ev = {"kind": kind}
+            for key, typ in KINDS[kind].items():
+                ev[key] = decode_field(line_no, obj, key, typ)
+            extra = set(obj) - set(KINDS[kind]) - {"kind"}
+            if extra:
+                fail(line_no, f"unexpected field(s) {sorted(extra)} for `{kind}`")
+            events.append(ev)
+    return events
+
+
+def fmt_t(s):
+    if s != s or s in (float("inf"), float("-inf")):
+        return str(s)
+    if abs(s) >= 0.1:
+        return f"{s:.3f} s"
+    return f"{s * 1e3:.3f} ms"
+
+
+def describe(ev):
+    k = ev["kind"]
+    at = fmt_t(ev["at_bits"])
+    if k == "window":
+        return (
+            f"`t={at}` **window {ev['window']} served**: {ev['requests']} "
+            f"request(s) ({ev['fpga']} fpga / {ev['cpu']} cpu), "
+            f"{ev['stalls']} stall(s), p50 <= {fmt_t(ev['p50_bits'])}, "
+            f"p99 <= {fmt_t(ev['p99_bits'])}"
+        )
+    if k == "analysis":
+        top = ", ".join(
+            f"{r['app']} ({r['usage']} uses, {fmt_t(r['corrected_bits'])} corrected)"
+            for r in ev["top"]
+        )
+        return f"`t={at}` analysis: top [{top or '-'}]"
+    if k == "proposal":
+        verdict = (
+            "skipped (threshold / already placed)"
+            if not ev["proposed"]
+            else {None: "proposed", True: "approved", False: "rejected"}[ev["approved"]]
+        )
+        return (
+            f"`t={at}` proposal: {ev['current_app']}:{ev['current_variant']} -> "
+            f"{ev['best_app']}:{ev['best_variant']} "
+            f"(ratio {ev['ratio_bits']:.2f}x) — {verdict}"
+        )
+    if k == "plan":
+        shares = ", ".join(
+            f"{e['app']}:{e['variant']} x{e['cards']}" for e in ev["entries"]
+        )
+        return f"`t={at}` residency plan: [{shares or '-'}]"
+    if k == "flap_rollback":
+        return (
+            f"`t={at}` **flap guard**: rolled back {ev['app']} "
+            f"in window {ev['window']}"
+        )
+    if k == "artifact":
+        word = "hit (partial reconfig)" if ev["hit"] else "miss (cold compile)"
+        return (
+            f"`t={at}` artifact cache {word}: {ev['app']}:{ev['variant']}, "
+            f"downtime {fmt_t(ev['downtime_bits'])}"
+        )
+    if k == "drain":
+        return f"`t={at}` drain card {ev['card']}"
+    if k == "reprogram":
+        return (
+            f"`t={at}` reprogram card {ev['card']} -> "
+            f"{ev['app']}:{ev['variant']} (downtime {fmt_t(ev['downtime_bits'])}, "
+            f"outage until {fmt_t(ev['outage_until_bits'])})"
+        )
+    if k == "rejoin":
+        return f"`t={at}` rejoin card {ev['card']}"
+    raise AssertionError(k)  # unreachable: parse() rejected unknown kinds
+
+
+def render(path, events):
+    print(f"# Decision trace: {path}\n")
+    section = None  # None = pre-launch block not yet opened
+    for ev in events:
+        if ev["kind"] == "window":
+            print(f"\n## Window {ev['window']}\n")
+            section = ev["window"]
+        elif section is None:
+            print("## Pre-launch\n")
+            section = "pre"
+        print(f"- {describe(ev)}")
+    counts = {}
+    for ev in events:
+        counts[ev["kind"]] = counts.get(ev["kind"], 0) + 1
+    summary = ", ".join(f"{k}: {counts[k]}" for k in sorted(counts))
+    print(f"\n---\n{len(events)} event(s) validated — {summary}")
+
+
+def main(argv):
+    if len(argv) != 2:
+        print("usage: render_trace.py <trace.jsonl>", file=sys.stderr)
+        return 1
+    events = parse(argv[1])
+    if not events:
+        print(f"render_trace: {argv[1]}: empty trace", file=sys.stderr)
+        return 2
+    render(argv[1], events)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
