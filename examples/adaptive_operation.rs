@@ -26,8 +26,15 @@
 //! Windows overlapping a rolling reconfiguration take the sequential
 //! fallback automatically.
 //!
-//! Two operational features ride on top of the loop here:
+//! Three operational features ride on top of the loop here:
 //!
+//!  * **forecast-driven planning** (`forecast.enabled`) — the loop fits
+//!    a Holt-Winters model (EWMA level + window-of-day seasonal) to the
+//!    per-app corrected loads and hands `plan_residency` the prediction
+//!    for the window being *opened* instead of the one just closed;
+//!    every window also emits a `forecast` trace event (predicted vs
+//!    observed per app) and, between proposals, out-of-band share drift
+//!    triggers a `rebalance` re-split of the current residents.
 //!  * **artifact cache** (`"artifact_cache": true`) — every compiled
 //!    bitstream is shelved in the fleet's artifact library, so a
 //!    reconfiguration back to logic the fleet has run before reprograms
@@ -55,7 +62,7 @@
 use repro::apps::registry;
 use repro::coordinator::adaptive::{run_adaptive_from, AdaptiveConfig, AdaptiveState};
 use repro::coordinator::config::RunConfig;
-use repro::coordinator::Approval;
+use repro::coordinator::{Approval, ForecastConfig};
 use repro::fleet::{ConcurrentFleet, FleetEnv};
 use repro::fpga::device::{CardId, ReconfigKind};
 use repro::fpga::part::D5005;
@@ -114,6 +121,16 @@ fn main() -> anyhow::Result<()> {
         window_secs: run_cfg.window_secs,
         cooldown_windows: 1,
         flap_ratio: 4.0,
+        // Forecast-driven planning: each window's residency plan is
+        // drawn against the Holt-Winters prediction for the *opening*
+        // window instead of the trailing one, and the per-window
+        // forecast (predicted vs observed load per app) lands in the
+        // decision trace.
+        forecast: ForecastConfig {
+            enabled: true,
+            season_windows: 12,
+            ..Default::default()
+        },
     };
     let mut approval = Approval::auto_yes();
 

@@ -1,0 +1,615 @@
+//! Forecast-driven proactive planning vs the reactive trailing-window
+//! planner, scored on fleet-served FPGA requests.
+//!
+//! Three planners replay identical modulated traces through identical
+//! fleets; the only difference is the load vector handed to
+//! `apply_forecast` + `plan_residency` at each window boundary:
+//!
+//!  * **reactive**  — last window's observed per-app request counts
+//!    (today's carry-forward behaviour);
+//!  * **proactive** — the Holt-Winters forecast for the *opening*
+//!    window (`ForecastState::forecast_vector`);
+//!  * **oracle**    — the opening window's actual counts (future-seeing
+//!    upper bound; regret is measured against it).
+//!
+//! Loads are request counts, so the planning objective and the scored
+//! metric coincide: with uniform candidate effects, residency membership
+//! alone decides which requests the fleet serves on FPGA. Scenarios:
+//!
+//!  * `diurnal` — mriq/symm in antiphase period-2 half-sine alternation
+//!    (window-average factors 1 ± 2/π), tdfir flat. The reactive planner
+//!    perpetually seats the app that *was* hot; the forecaster's
+//!    two-slot seasonal table learns the alternation within a few
+//!    windows.
+//!  * `flash` — the diurnal core plus a dft flash-crowd recurring at the
+//!    same slot of each 8-window day; the day-period seasonal table
+//!    pre-seats dft from day 2 on.
+//!  * `drift` — static membership on 4 cards while tdfir's rate dips
+//!    5%; no membership change is warranted, so the between-proposal
+//!    `maybe_rebalance` step re-splits card shares once forecast drift
+//!    leaves the hysteresis band (exercises `TraceEvent::Rebalance`).
+//!
+//! Gates: proactive >= 1.3x reactive fleet-served req/s on diurnal and
+//! flash; at least one rebalance on drift; and with forecasting disabled
+//! `run_adaptive_from` is bit-identical to `run_reactive_reference` on a
+//! stationary k=1 fleet (records, reports, trace JSONL). Per-window
+//! regret vs the oracle is printed per decision and summarized in
+//! `BENCH_forecast_plan.json`; the drift + proactive decision traces
+//! (window/forecast/rebalance events) land in
+//! `BENCH_forecast_plan_trace.jsonl` for `tools/render_trace.py`.
+
+use repro::apps::{registry, AppId, AppSpec, VariantId};
+use repro::coordinator::forecast::emit_forecast;
+use repro::coordinator::recon::{EffectEstimate, LoadRanking};
+use repro::coordinator::{
+    apply_forecast, maybe_rebalance, plan_residency, run_adaptive_from, run_reactive_reference,
+    AdaptiveConfig, AdaptiveState, Approval, Environment, ForecastConfig, ForecastState,
+    ResidencyEntry, ResidencyPlan,
+};
+use repro::fleet::FleetEnv;
+use repro::fpga::device::ReconfigKind;
+use repro::fpga::part::D5005;
+use repro::offload::{search, OffloadConfig};
+use repro::telemetry::TraceEvent;
+use repro::util::bench::Bench;
+use repro::workload::modulated::{generate_modulated, Modulation};
+use repro::workload::{boost_rate, Request};
+
+/// Planning-window length (seconds of virtual time).
+const W: f64 = 3600.0;
+/// Residency seats per plan (top-k apps share the fleet).
+const SEATS: usize = 2;
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Planner {
+    Reactive,
+    Proactive,
+    Oracle,
+}
+
+struct Scenario {
+    reg: Vec<AppSpec>,
+    /// Per-window request slices, arrivals rebased to `[0, W)`.
+    windows: Vec<Vec<Request>>,
+    /// Per-window per-app request counts (every registry app).
+    counts: Vec<Vec<(AppId, f64)>>,
+    cards: usize,
+    fcfg: ForecastConfig,
+}
+
+/// Split a modulated trace into `n` planning windows and count each
+/// window's per-app requests — the load vectors every planner sees.
+fn slice_windows(
+    reg: &[AppSpec],
+    trace: &[Request],
+    n: usize,
+) -> (Vec<Vec<Request>>, Vec<Vec<(AppId, f64)>>) {
+    let mut windows = vec![Vec::new(); n];
+    for r in trace {
+        let w = (r.arrival / W) as usize;
+        if w < n {
+            let mut q = *r;
+            q.arrival -= w as f64 * W;
+            windows[w].push(q);
+        }
+    }
+    let counts = windows
+        .iter()
+        .map(|ws| {
+            (0..reg.len())
+                .map(|i| {
+                    let app = AppId(i as u16);
+                    (app, ws.iter().filter(|r| r.app == app).count() as f64)
+                })
+                .collect()
+        })
+        .collect();
+    (windows, counts)
+}
+
+/// Step-1 rankings seeded from registry base rates; `apply_forecast`
+/// overwrites the corrected totals with each planner's load vector.
+fn base_rankings(reg: &[AppSpec]) -> Vec<LoadRanking> {
+    let mut r: Vec<LoadRanking> = reg
+        .iter()
+        .enumerate()
+        .map(|(i, a)| LoadRanking {
+            app: a.name.to_string(),
+            app_id: AppId(i as u16),
+            actual_total_secs: a.rate_per_hour,
+            corrected_total_secs: a.rate_per_hour,
+            usage_count: a.rate_per_hour as u64,
+            coef: 1.0,
+        })
+        .collect();
+    r.sort_by(|a, b| {
+        b.corrected_total_secs
+            .partial_cmp(&a.corrected_total_secs)
+            .unwrap()
+    });
+    r
+}
+
+/// One real searched variant per app, so every deployed plan programs
+/// canonical logic.
+fn variant_templates(reg: &[AppSpec]) -> Vec<(String, String)> {
+    let cfg = OffloadConfig::default();
+    reg.iter()
+        .map(|a| {
+            let s = search(a, a.sizes[0].name, &cfg).expect("offload search");
+            (a.name.to_string(), s.best.variant.clone())
+        })
+        .collect()
+}
+
+/// Plan residency from a load vector and deploy it. Candidate effects
+/// are uniform (cpu 2.0 / pattern 1.0, effect = load), so membership is
+/// decided purely by the load ranking — the quantity under test.
+fn plan_and_deploy(
+    env: &mut FleetEnv,
+    base: &[LoadRanking],
+    templates: &[(String, String)],
+    loads: &[(AppId, f64)],
+    cards: usize,
+) {
+    let adjusted = apply_forecast(base, loads);
+    let cands: Vec<EffectEstimate> = templates
+        .iter()
+        .enumerate()
+        .map(|(i, (app, variant))| {
+            let load = loads
+                .iter()
+                .find(|(a, _)| a.0 as usize == i)
+                .map(|&(_, l)| l)
+                .unwrap_or(0.0);
+            EffectEstimate {
+                app: app.clone(),
+                variant: variant.clone(),
+                cpu_secs: 2.0,
+                pattern_secs: 1.0,
+                reduction_per_req: 1.0,
+                usage_count: load as u64,
+                effect_secs: load,
+            }
+        })
+        .collect();
+    let plan = plan_residency(&adjusted, &cands, cards, SEATS);
+    if !plan.entries.is_empty() {
+        env.deploy_plan(ReconfigKind::Static, &plan);
+    }
+}
+
+/// Replay one scenario under one planner; returns per-window FPGA-served
+/// request counts and the environment (for its decision trace).
+fn run_planner(sc: &Scenario, planner: Planner) -> (Vec<f64>, FleetEnv) {
+    let mut env = FleetEnv::new(sc.reg.clone(), D5005, sc.cards);
+    env.enable_telemetry();
+    let base = base_rankings(&sc.reg);
+    let templates = variant_templates(&sc.reg);
+    let mut st = ForecastState::default();
+    // Identical pre-launch plan for every planner: base registry rates.
+    let seed: Vec<(AppId, f64)> = sc
+        .reg
+        .iter()
+        .enumerate()
+        .map(|(i, a)| (AppId(i as u16), a.rate_per_hour))
+        .collect();
+    plan_and_deploy(&mut env, &base, &templates, &seed, sc.cards);
+
+    let mut fpga = Vec::with_capacity(sc.windows.len());
+    for (w, window) in sc.windows.iter().enumerate() {
+        let loads = match planner {
+            Planner::Oracle => Some(sc.counts[w].clone()),
+            Planner::Reactive => (w > 0).then(|| sc.counts[w - 1].clone()),
+            Planner::Proactive => (w > 0).then(|| st.forecast_vector(&sc.fcfg, w as u64)),
+        };
+        if let Some(l) = &loads {
+            plan_and_deploy(&mut env, &base, &templates, l, sc.cards);
+        }
+
+        let before = env.metrics_snapshot().expect("telemetry enabled");
+        let t0 = env.now() + 1e-6;
+        let mut slice = window.clone();
+        for r in &mut slice {
+            r.arrival += t0;
+        }
+        if !slice.is_empty() {
+            env.run_window(&slice).expect("serve window");
+        }
+        let d = env.metrics_snapshot().expect("telemetry enabled").diff(&before);
+        fpga.push(d.fpga_requests() as f64);
+
+        let at = env.now();
+        if let Some(log) = env.trace_mut() {
+            log.push(TraceEvent::Window {
+                window: w as u64,
+                at,
+                requests: d.total_requests(),
+                fpga: d.fpga_requests(),
+                cpu: d.cpu_fallbacks(),
+                stalls: d.stalls(),
+                p50: d.latency_quantile(0.5),
+                p99: d.latency_quantile(0.99),
+            });
+        }
+        if planner == Planner::Proactive {
+            let predicted = st.forecast_vector(&sc.fcfg, w as u64);
+            emit_forecast(&mut env, w as u64, &sc.counts[w], &predicted);
+            st.observe(&sc.fcfg, w as u64, &sc.counts[w]);
+        }
+    }
+    (fpga, env)
+}
+
+/// mriq/symm antiphase period-2 alternation over tdfir's flat base.
+fn diurnal_scenario() -> Scenario {
+    let mut reg = registry();
+    boost_rate(&mut reg, "mriq", 400.0);
+    boost_rate(&mut reg, "symm", 400.0);
+    let mut profiles = vec![Modulation::Flat; reg.len()];
+    let mriq = reg.iter().position(|a| a.name == "mriq").unwrap();
+    let symm = reg.iter().position(|a| a.name == "symm").unwrap();
+    profiles[mriq] = Modulation::Diurnal {
+        period_secs: 2.0 * W,
+        depth: 1.0,
+        phase_secs: 0.0,
+    };
+    profiles[symm] = Modulation::Diurnal {
+        period_secs: 2.0 * W,
+        depth: 1.0,
+        phase_secs: W,
+    };
+    let n = 24;
+    let trace = generate_modulated(&reg, &profiles, n as f64 * W, 70);
+    let (windows, counts) = slice_windows(&reg, &trace, n);
+    Scenario {
+        reg,
+        windows,
+        counts,
+        cards: 2,
+        fcfg: ForecastConfig {
+            enabled: true,
+            season_windows: 2,
+            ..Default::default()
+        },
+    }
+}
+
+/// The diurnal core plus a dft flash-crowd recurring at slot 4 of every
+/// 8-window day (three days; per-day generation keeps the step at the
+/// same day slot, which is what makes it forecastable).
+fn flash_scenario() -> Scenario {
+    let mut reg = registry();
+    boost_rate(&mut reg, "mriq", 400.0);
+    boost_rate(&mut reg, "symm", 400.0);
+    boost_rate(&mut reg, "dft", 30.0);
+    let mut profiles = vec![Modulation::Flat; reg.len()];
+    let mriq = reg.iter().position(|a| a.name == "mriq").unwrap();
+    let symm = reg.iter().position(|a| a.name == "symm").unwrap();
+    let dft = reg.iter().position(|a| a.name == "dft").unwrap();
+    profiles[mriq] = Modulation::Diurnal {
+        period_secs: 2.0 * W,
+        depth: 1.0,
+        phase_secs: 0.0,
+    };
+    profiles[symm] = Modulation::Diurnal {
+        period_secs: 2.0 * W,
+        depth: 1.0,
+        phase_secs: W,
+    };
+    profiles[dft] = Modulation::Flash {
+        start_secs: 4.0 * W,
+        end_secs: 5.0 * W,
+        factor: 40.0,
+    };
+    let day = 8.0 * W;
+    let days = 3;
+    let mut trace = Vec::new();
+    for d in 0..days {
+        let mut t = generate_modulated(&reg, &profiles, day, 700 + d as u64);
+        for r in &mut t {
+            r.arrival += d as f64 * day;
+        }
+        trace.extend(t);
+    }
+    let n = 8 * days;
+    let (windows, counts) = slice_windows(&reg, &trace, n);
+    Scenario {
+        reg,
+        windows,
+        counts,
+        cards: 2,
+        fcfg: ForecastConfig {
+            enabled: true,
+            season_windows: 8,
+            ..Default::default()
+        },
+    }
+}
+
+/// Static two-resident membership on four cards while tdfir's rate dips
+/// to 5%: only `maybe_rebalance` runs between windows, and it must
+/// re-split 2/2 into 1/3 exactly once the forecast drift leaves the
+/// band. Returns (rebalance count, final card split, env with trace).
+fn run_drift_scenario() -> (usize, Vec<usize>, FleetEnv) {
+    let mut reg = registry();
+    boost_rate(&mut reg, "mriq", 300.0);
+    let mut profiles = vec![Modulation::Flat; reg.len()];
+    let tdfir = reg.iter().position(|a| a.name == "tdfir").unwrap();
+    let n = 14;
+    profiles[tdfir] = Modulation::Flash {
+        start_secs: 6.0 * W,
+        end_secs: n as f64 * W,
+        factor: 0.05,
+    };
+    let trace = generate_modulated(&reg, &profiles, n as f64 * W, 91);
+    let (windows, counts) = slice_windows(&reg, &trace, n);
+    let fcfg = ForecastConfig {
+        enabled: true,
+        alpha: 0.5,
+        season_windows: 4,
+        ..Default::default()
+    };
+
+    let mut env = FleetEnv::new(reg.clone(), D5005, 4);
+    env.enable_telemetry();
+    let templates = variant_templates(&reg);
+    let entry = |name: &str, cards: usize| {
+        let i = reg.iter().position(|a| a.name == name).unwrap();
+        let variant = templates[i].1.clone();
+        ResidencyEntry {
+            app: name.to_string(),
+            app_id: AppId(i as u16),
+            variant_id: VariantId::from_name(&variant).unwrap(),
+            variant,
+            improvement_coef: 2.0,
+            cards,
+            corrected_load_secs: 300.0,
+        }
+    };
+    let plan = ResidencyPlan {
+        entries: vec![entry("tdfir", 2), entry("mriq", 2)],
+    };
+    env.deploy_plan(ReconfigKind::Static, &plan);
+
+    let mut st = ForecastState::default();
+    let mut rebalances = 0;
+    for (w, window) in windows.iter().enumerate() {
+        if w > 0 {
+            let fvec = st.forecast_vector(&fcfg, w as u64);
+            if maybe_rebalance(&mut env, &fcfg, &mut st, w as u64, &fvec, ReconfigKind::Static)
+                .is_some()
+            {
+                rebalances += 1;
+            }
+        }
+        let before = env.metrics_snapshot().expect("telemetry enabled");
+        let t0 = env.now() + 1e-6;
+        let mut slice = window.clone();
+        for r in &mut slice {
+            r.arrival += t0;
+        }
+        env.run_window(&slice).expect("serve window");
+        let d = env.metrics_snapshot().expect("telemetry enabled").diff(&before);
+        let at = env.now();
+        if let Some(log) = env.trace_mut() {
+            log.push(TraceEvent::Window {
+                window: w as u64,
+                at,
+                requests: d.total_requests(),
+                fpga: d.fpga_requests(),
+                cpu: d.cpu_fallbacks(),
+                stalls: d.stalls(),
+                p50: d.latency_quantile(0.5),
+                p99: d.latency_quantile(0.99),
+            });
+        }
+        let predicted = st.forecast_vector(&fcfg, w as u64);
+        emit_forecast(&mut env, w as u64, &counts[w], &predicted);
+        st.observe(&fcfg, w as u64, &counts[w]);
+    }
+    let split: Vec<usize> = env
+        .residency()
+        .expect("plan deployed")
+        .entries
+        .iter()
+        .map(|e| e.cards)
+        .collect();
+    (rebalances, split, env)
+}
+
+/// Forecasting disabled must be byte-for-byte the retained reactive
+/// loop: same reports, clock bits, record bits, and trace JSONL on a
+/// stationary single-card fleet.
+fn identity_check() -> bool {
+    let cfg = AdaptiveConfig {
+        windows: 6,
+        ..Default::default()
+    };
+    assert!(!cfg.forecast.enabled, "identity section runs forecast-off");
+    let build = || {
+        let mut env = FleetEnv::new(registry(), D5005, 1);
+        env.enable_telemetry();
+        let reg = registry();
+        let td = reg.iter().find(|a| a.name == "tdfir").unwrap();
+        let pre = search(td, "large", &OffloadConfig::default()).unwrap();
+        env.deploy(ReconfigKind::Static, "tdfir", &pre.best.variant, pre.improvement);
+        env
+    };
+
+    let mut ref_env = build();
+    let mut ap = Approval::auto_yes();
+    let mut ref_state = AdaptiveState::default();
+    let oracle = run_reactive_reference(&mut ref_env, &cfg, &mut ap, &mut ref_state, |_, _| {})
+        .expect("reference loop");
+
+    let mut env = build();
+    let mut ap = Approval::auto_yes();
+    let mut state = AdaptiveState::default();
+    let reports =
+        run_adaptive_from(&mut env, &cfg, &mut ap, &mut state, |_, _| {}).expect("adaptive loop");
+
+    let reports_match = reports.len() == oracle.len()
+        && reports.iter().zip(&oracle).all(|(a, b)| {
+            a.window == b.window
+                && a.requests == b.requests
+                && a.reconfigured == b.reconfigured
+                && a.serving == b.serving
+        });
+    let clock_match = env.now().to_bits() == ref_env.now().to_bits();
+    let records_match = env.history().len() == ref_env.history().len()
+        && env
+            .history()
+            .all()
+            .iter()
+            .zip(ref_env.history().all())
+            .all(|(a, b)| {
+                a.id == b.id
+                    && a.start.to_bits() == b.start.to_bits()
+                    && a.finish.to_bits() == b.finish.to_bits()
+            });
+    let trace_match = env.trace_mut().expect("telemetry").to_jsonl()
+        == ref_env.trace_mut().expect("telemetry").to_jsonl();
+    reports_match && clock_match && records_match && trace_match
+}
+
+/// Total, peak, and per-window print-out of oracle-relative regret.
+fn regret(name: &str, oracle: &[f64], pro: &[f64], re: &[f64]) -> (f64, f64) {
+    let mut total = 0.0f64;
+    let mut peak = 0.0f64;
+    println!("\n{name}: per-window fpga-served (regret = oracle - proactive)");
+    println!("  win   oracle  proactive  reactive  regret");
+    for (w, ((&o, &p), &r)) in oracle.iter().zip(pro).zip(re).enumerate() {
+        let reg = o - p;
+        total += reg;
+        peak = peak.max(reg);
+        println!("  {w:>3}  {o:>7.0}  {p:>9.0}  {r:>8.0}  {reg:>6.0}");
+    }
+    (total, peak)
+}
+
+fn main() {
+    println!("== forecast-driven proactive planning ==");
+
+    let mut b = Bench::from_env();
+
+    let t = std::time::Instant::now();
+    let diurnal = diurnal_scenario();
+    let (d_re, _) = run_planner(&diurnal, Planner::Reactive);
+    let (d_or, _) = run_planner(&diurnal, Planner::Oracle);
+    let (d_pro, mut d_env) = run_planner(&diurnal, Planner::Proactive);
+    b.record("diurnal_sim", t.elapsed().as_secs_f64());
+
+    let t = std::time::Instant::now();
+    let flash = flash_scenario();
+    let (f_re, _) = run_planner(&flash, Planner::Reactive);
+    let (f_or, _) = run_planner(&flash, Planner::Oracle);
+    let (f_pro, mut f_env) = run_planner(&flash, Planner::Proactive);
+    b.record("flash_sim", t.elapsed().as_secs_f64());
+
+    let t = std::time::Instant::now();
+    let (rebalances, split, mut drift_env) = run_drift_scenario();
+    b.record("drift_sim", t.elapsed().as_secs_f64());
+
+    let identity_ok = identity_check();
+
+    // Planner-overhead micro-sections: the forecast update + the planning
+    // step itself, at fleet-registry scale.
+    let reg = registry();
+    let base = base_rankings(&reg);
+    let loads: Vec<(AppId, f64)> = reg
+        .iter()
+        .enumerate()
+        .map(|(i, a)| (AppId(i as u16), a.rate_per_hour))
+        .collect();
+    let fcfg = ForecastConfig {
+        enabled: true,
+        ..Default::default()
+    };
+    let mut st = ForecastState::default();
+    let mut w = 0u64;
+    b.run("forecast_observe_predict", || {
+        st.observe(&fcfg, w, &loads);
+        let _ = std::hint::black_box(st.forecast_vector(&fcfg, w + 1));
+        w += 1;
+    });
+    let cands: Vec<EffectEstimate> = reg
+        .iter()
+        .map(|a| EffectEstimate {
+            app: a.name.to_string(),
+            variant: "o1".to_string(),
+            cpu_secs: 2.0,
+            pattern_secs: 1.0,
+            reduction_per_req: 1.0,
+            usage_count: a.rate_per_hour as u64,
+            effect_secs: a.rate_per_hour,
+        })
+        .collect();
+    b.run("apply_forecast_plan_residency", || {
+        let adjusted = apply_forecast(&base, &loads);
+        let _ = std::hint::black_box(plan_residency(&adjusted, &cands, 4, SEATS));
+    });
+
+    // Scores: fleet-served FPGA requests per simulated second.
+    let horizon_d = diurnal.windows.len() as f64 * W;
+    let horizon_f = flash.windows.len() as f64 * W;
+    let sum = |v: &[f64]| v.iter().sum::<f64>();
+    let d_ratio = sum(&d_pro) / sum(&d_re);
+    let f_ratio = sum(&f_pro) / sum(&f_re);
+    let (d_regret, d_regret_peak) = regret("diurnal", &d_or, &d_pro, &d_re);
+    let (f_regret, f_regret_peak) = regret("flash", &f_or, &f_pro, &f_re);
+
+    println!("\ndiurnal: proactive {:.0} vs reactive {:.0} fpga-served ({d_ratio:.2}x), oracle {:.0}",
+        sum(&d_pro), sum(&d_re), sum(&d_or));
+    println!("flash:   proactive {:.0} vs reactive {:.0} fpga-served ({f_ratio:.2}x), oracle {:.0}",
+        sum(&f_pro), sum(&f_re), sum(&f_or));
+    println!("drift:   {rebalances} rebalance(s), final card split {split:?}");
+    println!("identity (forecast off == reactive reference): {identity_ok}");
+
+    // Decision traces for the schema gate: proactive runs carry
+    // window+forecast events, the drift run adds rebalance events.
+    let mut jsonl = drift_env.trace_mut().expect("telemetry").to_jsonl();
+    jsonl.push_str(&f_env.trace_mut().expect("telemetry").to_jsonl());
+    jsonl.push_str(&d_env.trace_mut().expect("telemetry").to_jsonl());
+    std::fs::write("BENCH_forecast_plan_trace.jsonl", jsonl)
+        .expect("write BENCH_forecast_plan_trace.jsonl");
+    println!("wrote BENCH_forecast_plan_trace.jsonl");
+
+    b.write_json(
+        "BENCH_forecast_plan.json",
+        &[
+            ("forecast_observe_predict", 1.0),
+            ("apply_forecast_plan_residency", 1.0),
+        ],
+        &[
+            ("diurnal_proactive_rps", sum(&d_pro) / horizon_d),
+            ("diurnal_reactive_rps", sum(&d_re) / horizon_d),
+            ("diurnal_oracle_rps", sum(&d_or) / horizon_d),
+            ("diurnal_speedup", d_ratio),
+            ("diurnal_regret_total", d_regret),
+            ("diurnal_regret_peak_window", d_regret_peak),
+            ("flash_proactive_rps", sum(&f_pro) / horizon_f),
+            ("flash_reactive_rps", sum(&f_re) / horizon_f),
+            ("flash_oracle_rps", sum(&f_or) / horizon_f),
+            ("flash_speedup", f_ratio),
+            ("flash_regret_total", f_regret),
+            ("flash_regret_peak_window", f_regret_peak),
+            ("drift_rebalances", rebalances as f64),
+            ("identity_ok", if identity_ok { 1.0 } else { 0.0 }),
+        ],
+    )
+    .expect("write BENCH_forecast_plan.json");
+    println!("wrote BENCH_forecast_plan.json");
+
+    assert!(
+        d_ratio >= 1.3,
+        "diurnal: proactive must serve >= 1.3x reactive ({d_ratio:.2}x)"
+    );
+    assert!(
+        f_ratio >= 1.3,
+        "flash: proactive must serve >= 1.3x reactive ({f_ratio:.2}x)"
+    );
+    assert!(rebalances >= 1, "drift scenario must rebalance at least once");
+    assert_eq!(split, vec![1, 3], "drift must settle on a 1/3 card split");
+    assert!(identity_ok, "forecast-off must match the reactive reference");
+}

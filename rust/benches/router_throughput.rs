@@ -10,12 +10,12 @@
 //! Results are also written to `BENCH_router_throughput.json` so the perf
 //! trajectory accumulates across PRs.
 
-use repro::apps::registry;
+use repro::apps::{registry, synthetic_registry};
 use repro::coordinator::ProductionEnv;
 use repro::fpga::device::ReconfigKind;
 use repro::fpga::part::D5005;
 use repro::util::bench::Bench;
-use repro::workload::{generate, Request};
+use repro::workload::{generate, generate_with, Merge, Request};
 
 fn main() {
     println!("== L3 coordinator throughput ==\n");
@@ -64,12 +64,35 @@ fn main() {
         let _ = std::hint::black_box(generate(&reg, 3600.0, 3));
     });
 
+    // Merge-strategy section on a 120-app registry: linear argmin scan
+    // vs binary heap vs the chunked (SIMD-friendly) scan. All three are
+    // bit-identical (asserted here and property-tested in workload);
+    // only the per-emission argmin cost differs.
+    let wide = synthetic_registry(120);
+    let linear = generate_with(&wide, 3600.0, 17, Some(Merge::Linear));
+    assert_eq!(linear, generate_with(&wide, 3600.0, 17, Some(Merge::Heap)));
+    assert_eq!(linear, generate_with(&wide, 3600.0, 17, Some(Merge::Chunked)));
+    let gen_wide = linear.len();
+    println!("merge section: 120 streams, {gen_wide} requests/h");
+    b.run("merge_linear_120_streams", || {
+        let _ = std::hint::black_box(generate_with(&wide, 3600.0, 17, Some(Merge::Linear)));
+    });
+    b.run("merge_heap_120_streams", || {
+        let _ = std::hint::black_box(generate_with(&wide, 3600.0, 17, Some(Merge::Heap)));
+    });
+    b.run("merge_chunked_120_streams", || {
+        let _ = std::hint::black_box(generate_with(&wide, 3600.0, 17, Some(Merge::Chunked)));
+    });
+
     b.write_json(
         "BENCH_router_throughput.json",
         &[
             ("serve_400h_trace", trace.len() as f64),
             ("serve_single_request_warm", 1.0),
             ("workload_generate_1h", gen_1h as f64),
+            ("merge_linear_120_streams", gen_wide as f64),
+            ("merge_heap_120_streams", gen_wide as f64),
+            ("merge_chunked_120_streams", gen_wide as f64),
         ],
         &[("rps", rps), ("trace_requests", trace.len() as f64)],
     )

@@ -138,6 +138,22 @@ pub struct AppSpec {
     size_bytes: OnceLock<Vec<f64>>,
 }
 
+impl Clone for AppSpec {
+    /// Clones the static description; the lazily-parsed program and
+    /// size-byte caches start empty in the clone and refill on first
+    /// use (they are pure functions of `source`/`sizes`).
+    fn clone(&self) -> Self {
+        AppSpec {
+            name: self.name,
+            source: self.source,
+            sizes: self.sizes.clone(),
+            rate_per_hour: self.rate_per_hour,
+            program: OnceLock::new(),
+            size_bytes: OnceLock::new(),
+        }
+    }
+}
+
 impl AppSpec {
     /// Parsed loop-IR program (cached).
     pub fn program(&self) -> &Program {

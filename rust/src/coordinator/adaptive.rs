@@ -13,6 +13,13 @@
 //! The loop also guards against flapping: a (app, variant) pair that was
 //! just replaced cannot be re-proposed in the immediately following
 //! window unless its effect ratio clears `flap_ratio` (> threshold).
+//!
+//! With [`ForecastConfig::enabled`] the loop turns proactive: each closed
+//! window feeds the per-app forecast model, step 6 plans residency
+//! against the *predicted* next window, and windows without a proposal
+//! may re-split card shares among the current residents when forecast
+//! drift leaves the hysteresis band (see [`super::forecast`]). Off — the
+//! default — the loop is byte-for-byte [`run_reactive_reference`].
 
 use crate::apps::{app_id, AppId};
 use crate::fpga::device::ReconfigKind;
@@ -21,8 +28,11 @@ use crate::util::json::Json;
 use crate::workload::generate;
 
 use super::env::Environment;
+use super::forecast::{self, ForecastConfig, ForecastState};
 use super::policy::Approval;
-use super::recon::{run_reconfiguration_with, RankCache, ReconConfig, ReconOutcome};
+use super::recon::{
+    run_reconfiguration_planned, run_reconfiguration_with, RankCache, ReconConfig, ReconOutcome,
+};
 
 /// Configuration of the continuous loop.
 #[derive(Clone, Debug)]
@@ -36,6 +46,9 @@ pub struct AdaptiveConfig {
     pub cooldown_windows: usize,
     /// Ratio a just-evicted logic must clear to come back immediately.
     pub flap_ratio: f64,
+    /// Forecast layer (proactive planning + rebalance). Disabled by
+    /// default — the reactive paper loop.
+    pub forecast: ForecastConfig,
 }
 
 impl Default for AdaptiveConfig {
@@ -46,6 +59,7 @@ impl Default for AdaptiveConfig {
             window_secs: 3600.0,
             cooldown_windows: 1,
             flap_ratio: 4.0,
+            forecast: ForecastConfig::default(),
         }
     }
 }
@@ -58,6 +72,7 @@ impl AdaptiveConfig {
     /// error instead of an empty loop.
     pub fn validate(&self) -> anyhow::Result<()> {
         self.recon.validate()?;
+        self.forecast.validate()?;
         anyhow::ensure!(
             self.windows >= 1,
             "adaptive config: windows must be >= 1 (0 runs nothing)"
@@ -85,7 +100,7 @@ impl AdaptiveConfig {
 /// deserialized) state. Each window's trace is seeded by its *absolute*
 /// window index, so a run split at any point re-generates the identical
 /// traffic the uninterrupted run would have served.
-#[derive(Clone, Debug, Default, PartialEq, Eq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct AdaptiveState {
     /// Windows left before the next recon cycle may run.
     pub cooldown: usize,
@@ -95,6 +110,9 @@ pub struct AdaptiveState {
     pub ranks: RankCache,
     /// The next window index to run.
     pub next_window: usize,
+    /// Forecast model state (EWMA levels, seasonal tables, rebalance
+    /// cooldown). Empty and inert while forecasting is disabled.
+    pub forecast: ForecastState,
 }
 
 impl AdaptiveState {
@@ -111,6 +129,7 @@ impl AdaptiveState {
             )
             .set("ranks", self.ranks.to_json())
             .set("next_window", self.next_window)
+            .set("forecast", self.forecast.to_json())
     }
 
     /// Restore a serialized state (see [`AdaptiveState::to_json`]).
@@ -131,6 +150,12 @@ impl AdaptiveState {
                     .ok_or_else(|| anyhow::anyhow!("adaptive state: missing ranks"))?,
             )?,
             next_window: j.usize_at("next_window")?,
+            // Tolerant default: snapshots written before the forecast
+            // layer existed restore with an empty (inert) model.
+            forecast: match j.get("forecast") {
+                Some(v) => ForecastState::from_json(v)?,
+                None => ForecastState::default(),
+            },
         })
     }
 }
@@ -221,6 +246,31 @@ where
             }
         }
 
+        // Forecast layer: feed the model the window that just closed and
+        // predict the next one. Runs on cooldown windows too — skipping
+        // them would leave holes in the seasonal table — and is entirely
+        // absent when disabled, keeping the off path byte-for-byte
+        // [`run_reactive_reference`].
+        let fvec = if cfg.forecast.enabled {
+            let to = env.now();
+            let from = (to - cfg.window_secs).max(0.0);
+            let observed = forecast::measure_window(env, from, to);
+            // Predict *before* observing so the trace records what the
+            // model believed going into this window, lined up against
+            // what actually arrived — the regret attribution the bench
+            // decomposes per decision.
+            let predicted = state.forecast.forecast_vector(&cfg.forecast, w as u64);
+            forecast::emit_forecast(env, w as u64, &observed, &predicted);
+            state.forecast.observe(&cfg.forecast, w as u64, &observed);
+            Some(
+                state
+                    .forecast
+                    .forecast_vector(&cfg.forecast, w as u64 + 1),
+            )
+        } else {
+            None
+        };
+
         // Cooling down: observe only.
         if state.cooldown > 0 {
             state.cooldown -= 1;
@@ -247,8 +297,13 @@ where
         } else {
             None
         };
-        let outcome =
-            run_reconfiguration_with(env, &rcfg, approval, &mut state.ranks)?;
+        let outcome = run_reconfiguration_planned(
+            env,
+            &rcfg,
+            approval,
+            &mut state.ranks,
+            fvec.as_deref(),
+        )?;
 
         // Flap suppression: if the proposal re-installs the most recently
         // evicted logic, require `flap_ratio`.
@@ -301,6 +356,150 @@ where
             if let Some(p) = outcome.proposal.as_ref() {
                 // A fresh install (no previous deployment) has an empty
                 // current app, which interns to None — nothing to flap to.
+                state.last_evicted = app_id(env.registry(), &p.current.app);
+            }
+            state.cooldown = cfg.cooldown_windows;
+        } else if let Some(f) = fvec.as_deref() {
+            // Between proposals the fleet membership stands, but forecast
+            // drift may have moved the fair card split. Re-split shares
+            // among the current residents when the drift leaves the
+            // hysteresis band — `deploy_plan`'s skip economy reprograms
+            // only the cards whose slot actually changes.
+            forecast::maybe_rebalance(
+                env,
+                &cfg.forecast,
+                &mut state.forecast,
+                w as u64,
+                f,
+                rcfg.kind,
+            );
+        }
+        reports.push(WindowReport {
+            window: w,
+            requests: n,
+            serving: env.deployment().map(|d| env.app_name(d.app).to_string()),
+            reconfigured,
+            outcome: Some(outcome),
+        });
+    }
+    Ok(reports)
+}
+
+/// The pre-forecast Step-7 loop, retained verbatim as the bit-identity
+/// oracle: [`run_adaptive_from`] with `cfg.forecast.enabled == false`
+/// must produce byte-identical behaviour to this function — the same
+/// reports, request records, trace events, and clock bits. The
+/// `prop_forecast_off_matches_reactive` proptest and the `forecast_plan`
+/// bench's identity section both assert that contract, so a forecast-off
+/// deployment is provably today's reactive controller.
+///
+/// `cfg.forecast` is ignored entirely here; everything else matches
+/// [`run_adaptive_from`].
+pub fn run_reactive_reference<E, F>(
+    env: &mut E,
+    cfg: &AdaptiveConfig,
+    approval: &mut Approval,
+    state: &mut AdaptiveState,
+    mut drift: F,
+) -> anyhow::Result<Vec<WindowReport>>
+where
+    E: Environment,
+    F: FnMut(usize, &mut E),
+{
+    cfg.validate()?;
+    let mut reports = Vec::new();
+
+    for w in state.next_window..cfg.windows {
+        state.next_window = w + 1;
+        drift(w, env);
+        let before = env.metrics_snapshot();
+        let t0 = env.now() + 1e-6;
+        let mut trace = generate(env.registry(), cfg.window_secs, 1000 + w as u64);
+        for r in &mut trace {
+            r.arrival += t0;
+        }
+        let n = trace.len();
+        if !trace.is_empty() {
+            env.run_window(&trace)?;
+        }
+
+        if let (Some(m0), Some(m1)) = (before, env.metrics_snapshot()) {
+            let d = m1.diff(&m0);
+            let at = env.now();
+            if let Some(log) = env.trace_mut() {
+                log.push(TraceEvent::Window {
+                    window: w as u64,
+                    at,
+                    requests: d.total_requests(),
+                    fpga: d.fpga_requests(),
+                    cpu: d.cpu_fallbacks(),
+                    stalls: d.stalls(),
+                    p50: d.latency_quantile(0.5),
+                    p99: d.latency_quantile(0.99),
+                });
+            }
+        }
+
+        if state.cooldown > 0 {
+            state.cooldown -= 1;
+            reports.push(WindowReport {
+                window: w,
+                requests: n,
+                outcome: None,
+                serving: env.deployment().map(|d| env.app_name(d.app).to_string()),
+                reconfigured: false,
+            });
+            continue;
+        }
+
+        let mut rcfg = cfg.recon.clone();
+        rcfg.long_window_secs = cfg.window_secs;
+        rcfg.short_window_secs = cfg.window_secs;
+        let prior = if state.last_evicted.is_some() {
+            env.residency()
+        } else {
+            None
+        };
+        let outcome =
+            run_reconfiguration_with(env, &rcfg, approval, &mut state.ranks)?;
+
+        let mut reconfigured = outcome.reconfig.is_some();
+        if let (Some(p), Some(evicted_app)) =
+            (outcome.proposal.as_ref(), state.last_evicted)
+        {
+            if reconfigured
+                && app_id(env.registry(), &p.best.app) == Some(evicted_app)
+                && p.ratio < cfg.flap_ratio
+            {
+                let at = env.now();
+                if let Some(log) = env.trace_mut() {
+                    log.push(TraceEvent::FlapRollback {
+                        at,
+                        window: w as u64,
+                        app: p.best.app.clone(),
+                    });
+                }
+                match &prior {
+                    Some(plan) => {
+                        env.deploy_plan(ReconfigKind::Static, plan);
+                    }
+                    None => {
+                        let improvement =
+                            p.current.cpu_secs / p.current.pattern_secs.max(1e-9);
+                        env.deploy(
+                            ReconfigKind::Static,
+                            &p.current.app.clone(),
+                            &p.current.variant.clone(),
+                            improvement.max(1.0),
+                        );
+                    }
+                }
+                reconfigured = false;
+            }
+        }
+
+        if reconfigured {
+            if let Some(p) = outcome.proposal.as_ref() {
                 state.last_evicted = app_id(env.registry(), &p.current.app);
             }
             state.cooldown = cfg.cooldown_windows;
@@ -496,11 +695,22 @@ mod tests {
 
     #[test]
     fn adaptive_state_roundtrips_through_json() {
+        let mut forecast = ForecastState::default();
+        forecast.observe(
+            &ForecastConfig {
+                season_windows: 3,
+                ..Default::default()
+            },
+            5,
+            &[(AppId(1), 12.5), (AppId(3), 0.0)],
+        );
+        forecast.rebalance_cooldown = 2;
         let state = AdaptiveState {
             cooldown: 2,
             last_evicted: Some(AppId(4)),
             ranks: RankCache::default(),
             next_window: 7,
+            forecast,
         };
         let back = AdaptiveState::from_json(
             &Json::parse(&state.to_json().to_pretty()).unwrap(),
@@ -511,6 +721,100 @@ mod tests {
         let none = AdaptiveState::default();
         let back = AdaptiveState::from_json(&none.to_json()).unwrap();
         assert_eq!(back, none);
+        // Snapshots written before the forecast layer (no `forecast`
+        // key) restore with an inert default model.
+        let legacy = Json::obj()
+            .set("cooldown", 1usize)
+            .set("last_evicted", Json::Null)
+            .set("ranks", RankCache::default().to_json())
+            .set("next_window", 3usize);
+        let back = AdaptiveState::from_json(&legacy).unwrap();
+        assert_eq!(back.next_window, 3);
+        assert_eq!(back.forecast, ForecastState::default());
+    }
+
+    #[test]
+    fn forecast_off_loop_matches_reactive_reference() {
+        // The default (forecast-off) loop must be byte-for-byte the
+        // retained reference: same reports and bit-identical histories.
+        let cfg = AdaptiveConfig {
+            windows: 6,
+            ..Default::default()
+        };
+        assert!(!cfg.forecast.enabled);
+
+        let mut ref_env = base_env();
+        let mut ap = Approval::auto_yes();
+        let mut ref_state = AdaptiveState::default();
+        let oracle =
+            run_reactive_reference(&mut ref_env, &cfg, &mut ap, &mut ref_state, |_, _| {})
+                .unwrap();
+
+        let mut env = base_env();
+        let mut ap = Approval::auto_yes();
+        let mut state = AdaptiveState::default();
+        let reports =
+            run_adaptive_from(&mut env, &cfg, &mut ap, &mut state, |_, _| {}).unwrap();
+
+        assert_eq!(reports.len(), oracle.len());
+        for (a, b) in reports.iter().zip(&oracle) {
+            assert_eq!(a.window, b.window);
+            assert_eq!(a.requests, b.requests);
+            assert_eq!(a.reconfigured, b.reconfigured);
+            assert_eq!(a.serving, b.serving);
+        }
+        assert_eq!(state.cooldown, ref_state.cooldown);
+        assert_eq!(state.last_evicted, ref_state.last_evicted);
+        assert_eq!(state.forecast, ForecastState::default());
+        assert_eq!(env.now().to_bits(), ref_env.now().to_bits());
+        let (h0, h1) = (ref_env.history(), env.history());
+        assert_eq!(h0.len(), h1.len());
+        for (a, b) in h0.all().iter().zip(h1.all()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.start.to_bits(), b.start.to_bits());
+            assert_eq!(a.finish.to_bits(), b.finish.to_bits());
+        }
+    }
+
+    #[test]
+    fn forecast_on_emits_one_forecast_event_per_window() {
+        use crate::fleet::FleetEnv;
+        let mut env = FleetEnv::new(registry(), D5005, 2);
+        env.enable_telemetry();
+        let reg = registry();
+        let td = crate::apps::find(&reg, "tdfir").unwrap();
+        let pre = search(td, "large", &OffloadConfig::default()).unwrap();
+        env.deploy(
+            ReconfigKind::Static,
+            "tdfir",
+            &pre.best.variant,
+            pre.improvement,
+        );
+        let cfg = AdaptiveConfig {
+            windows: 4,
+            forecast: ForecastConfig {
+                enabled: true,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut ap = Approval::auto_yes();
+        let mut state = AdaptiveState::default();
+        run_adaptive_from(&mut env, &cfg, &mut ap, &mut state, |_, _| {}).unwrap();
+        // One forecast event per window, cooldown windows included, with
+        // consecutive window stamps; the model has learned every app.
+        let windows: Vec<u64> = env
+            .trace_mut()
+            .expect("telemetry on")
+            .events()
+            .iter()
+            .filter_map(|e| match e {
+                TraceEvent::Forecast { window, .. } => Some(*window),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(windows, vec![0, 1, 2, 3]);
+        assert_eq!(state.forecast.apps.len(), registry().len());
     }
 
     #[test]

@@ -1,0 +1,596 @@
+//! Per-app load forecasting for proactive Step-7 planning.
+//!
+//! The reactive loop plans residency against the *trailing* window, so
+//! every adaptation pays a full detect-then-react lag and card shares go
+//! stale between proposals. This module fits a cheap incremental model
+//! per app from the columnar history index — an EWMA level plus an
+//! additive seasonal term keyed by window-of-day (Holt-Winters without
+//! the trend term) — and hands `recon::plan_residency` a *predicted*
+//! next-window load vector instead.
+//!
+//! Contracts:
+//!  * Forecasting off (`ForecastConfig::enabled == false`, the default)
+//!    is byte-for-byte today's reactive loop: no model state advances,
+//!    no trace events are emitted, no extra clock or PRNG draws happen.
+//!    The trailing-window carry-forward *is* the retained bit-identity
+//!    oracle, asserted by `prop_forecast_off_matches_reactive` and the
+//!    `forecast_plan` bench.
+//!  * Every proactive move is attributed: each closed window emits a
+//!    `Forecast` trace event (predicted vs observed per app), and every
+//!    between-proposal share re-split emits a `Rebalance` event.
+//!  * All model state serializes exact-bits via `util::json` so a warm
+//!    restart resumes proactive planning bit-identically.
+
+use crate::apps::AppId;
+use crate::fpga::device::ReconfigKind;
+use crate::telemetry::{ForecastSample, PlanShare, TraceEvent};
+use crate::util::json::Json;
+
+use super::env::Environment;
+use super::recon::{split_cards, LoadRanking, ResidencyPlan};
+
+/// Forecast-layer knobs, carried inside `AdaptiveConfig`.
+#[derive(Clone, Debug)]
+pub struct ForecastConfig {
+    /// Master switch. Off (default) keeps today's reactive behaviour
+    /// bit-for-bit.
+    pub enabled: bool,
+    /// EWMA smoothing of the deseasonalized level, in (0, 1].
+    pub alpha: f64,
+    /// EWMA smoothing of the additive seasonal term, in (0, 1].
+    pub gamma: f64,
+    /// Seasonal slots per cycle (windows per "day"). Window `w` maps to
+    /// slot `w % season_windows`.
+    pub season_windows: usize,
+    /// Hysteresis band for the between-proposal rebalance step: shares
+    /// are only re-split when the largest per-resident gap between the
+    /// forecast load share and the current card share exceeds this
+    /// fraction.
+    pub rebalance_band: f64,
+    /// Windows to hold off after a rebalance (hysteresis cursor) so a
+    /// forecast oscillating around the band edge cannot thrash cards.
+    pub rebalance_cooldown_windows: usize,
+}
+
+impl Default for ForecastConfig {
+    fn default() -> Self {
+        ForecastConfig {
+            enabled: false,
+            alpha: 0.3,
+            gamma: 0.3,
+            season_windows: 24,
+            rebalance_band: 0.25,
+            rebalance_cooldown_windows: 1,
+        }
+    }
+}
+
+impl ForecastConfig {
+    /// Reject smoothing factors outside (0, 1], an empty seasonal table,
+    /// or a degenerate hysteresis band with a clear error.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.alpha > 0.0 && self.alpha <= 1.0,
+            "forecast config: alpha must be in (0, 1], got {}",
+            self.alpha
+        );
+        anyhow::ensure!(
+            self.gamma > 0.0 && self.gamma <= 1.0,
+            "forecast config: gamma must be in (0, 1], got {}",
+            self.gamma
+        );
+        anyhow::ensure!(
+            self.season_windows >= 1,
+            "forecast config: season_windows must be >= 1"
+        );
+        anyhow::ensure!(
+            self.rebalance_band > 0.0 && self.rebalance_band.is_finite(),
+            "forecast config: rebalance_band must be positive and finite, got {}",
+            self.rebalance_band
+        );
+        Ok(())
+    }
+}
+
+/// One app's fitted model: deseasonalized level plus one additive
+/// seasonal coefficient per window-of-day slot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AppForecast {
+    pub app: AppId,
+    pub level: f64,
+    pub seasonal: Vec<f64>,
+}
+
+/// The forecast layer's cross-window state, serialized inside
+/// `AdaptiveState` so warm restarts resume proactive planning
+/// bit-identically. Apps appear in first-observed order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ForecastState {
+    pub apps: Vec<AppForecast>,
+    /// Windows left before the next rebalance may fire (hysteresis
+    /// cursor).
+    pub rebalance_cooldown: usize,
+}
+
+impl ForecastState {
+    /// Fold one closed window's per-app corrected loads into the model.
+    /// Standard additive Holt-Winters update (no trend):
+    ///
+    /// ```text
+    /// level'         = alpha * (y - seasonal[slot]) + (1 - alpha) * level
+    /// seasonal[slot] = gamma * (y - level') + (1 - gamma) * seasonal[slot]
+    /// ```
+    ///
+    /// A first observation seeds the level directly and leaves the
+    /// seasonal table at zero, so single-window histories predict the
+    /// trivial carry-forward.
+    pub fn observe(&mut self, cfg: &ForecastConfig, window: u64, loads: &[(AppId, f64)]) {
+        let slot = window as usize % cfg.season_windows;
+        for &(app, y) in loads {
+            match self.apps.iter_mut().find(|f| f.app == app) {
+                Some(f) => {
+                    let s_old = f.seasonal[slot];
+                    f.level = cfg.alpha * (y - s_old) + (1.0 - cfg.alpha) * f.level;
+                    f.seasonal[slot] =
+                        cfg.gamma * (y - f.level) + (1.0 - cfg.gamma) * s_old;
+                }
+                None => self.apps.push(AppForecast {
+                    app,
+                    level: y,
+                    seasonal: vec![0.0; cfg.season_windows],
+                }),
+            }
+        }
+    }
+
+    /// Predicted corrected load for `app` in `window`, clamped at zero.
+    /// `None` until the app has been observed at least once.
+    pub fn predict(&self, cfg: &ForecastConfig, app: AppId, window: u64) -> Option<f64> {
+        let slot = window as usize % cfg.season_windows;
+        self.apps
+            .iter()
+            .find(|f| f.app == app)
+            .map(|f| (f.level + f.seasonal[slot]).max(0.0))
+    }
+
+    /// The full predicted load vector for `window`, one entry per
+    /// tracked app in first-observed order.
+    pub fn forecast_vector(&self, cfg: &ForecastConfig, window: u64) -> Vec<(AppId, f64)> {
+        let slot = window as usize % cfg.season_windows;
+        self.apps
+            .iter()
+            .map(|f| (f.app, (f.level + f.seasonal[slot]).max(0.0)))
+            .collect()
+    }
+
+    /// Serialize for the warm-restart controller snapshot (exact bits).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set(
+                "apps",
+                Json::Arr(
+                    self.apps
+                        .iter()
+                        .map(|f| {
+                            Json::obj()
+                                .set("app", Json::Num(f.app.0 as f64))
+                                .set("level_bits", Json::from_f64_bits(f.level))
+                                .set(
+                                    "seasonal",
+                                    Json::Arr(
+                                        f.seasonal
+                                            .iter()
+                                            .map(|&s| Json::from_f64_bits(s))
+                                            .collect(),
+                                    ),
+                                )
+                        })
+                        .collect(),
+                ),
+            )
+            .set("rebalance_cooldown", self.rebalance_cooldown)
+    }
+
+    /// Restore a serialized state (see [`ForecastState::to_json`]).
+    pub fn from_json(j: &Json) -> anyhow::Result<ForecastState> {
+        let mut apps = Vec::new();
+        for e in j.arr_at("apps")? {
+            let mut seasonal = Vec::new();
+            for s in e.arr_at("seasonal")? {
+                seasonal.push(
+                    s.as_f64_bits()
+                        .ok_or_else(|| anyhow::anyhow!("forecast state: bad seasonal bits"))?,
+                );
+            }
+            apps.push(AppForecast {
+                app: AppId(e.usize_at("app")? as u16),
+                level: e.f64_bits_at("level_bits")?,
+                seasonal,
+            });
+        }
+        Ok(ForecastState {
+            apps,
+            rebalance_cooldown: j.usize_at("rebalance_cooldown")?,
+        })
+    }
+}
+
+/// Measure one closed window from the columnar history index: the
+/// corrected (CPU-equivalent) load of **every** registry app over
+/// `[from, to)`, zeros included. Observing zeros matters: an app whose
+/// flash crowd ended must decay back out of the plan instead of keeping
+/// a stale level forever.
+pub fn measure_window<E: Environment>(env: &E, from: f64, to: f64) -> Vec<(AppId, f64)> {
+    (0..env.registry().len())
+        .map(|i| {
+            let app = AppId(i as u16);
+            let (actual, _) = env.history().totals_in_window(app, from, to);
+            (app, actual * env.improvement_coef(app))
+        })
+        .collect()
+}
+
+/// Rewrite a step-1 ranking against a forecast vector: corrected loads
+/// are replaced by the predicted next-window loads (apps the forecast
+/// does not cover keep their trailing-window value) and the list is
+/// re-sorted. `plan_residency` then seats and sizes shares against the
+/// *predicted* mix instead of the trailing one.
+pub fn apply_forecast(
+    rankings: &[LoadRanking],
+    forecast: &[(AppId, f64)],
+) -> Vec<LoadRanking> {
+    let mut adjusted = rankings.to_vec();
+    for r in &mut adjusted {
+        if let Some(&(_, load)) = forecast.iter().find(|(a, _)| *a == r.app_id) {
+            r.corrected_total_secs = load;
+        }
+    }
+    adjusted.sort_by(|a, b| {
+        b.corrected_total_secs
+            .partial_cmp(&a.corrected_total_secs)
+            .unwrap()
+    });
+    adjusted
+}
+
+/// The between-proposal rebalance step: when the forecast load shares of
+/// the *current* residents have drifted out of the hysteresis band
+/// relative to their card shares, re-split the cards (membership,
+/// variants, and coefficients unchanged) and deploy through
+/// `deploy_plan`, whose skip economy reprograms only the cards that
+/// actually moved. Returns the drift and the deployed plan, or `None`
+/// when within band, cooling down, or there is nothing to re-split.
+pub fn maybe_rebalance<E: Environment>(
+    env: &mut E,
+    cfg: &ForecastConfig,
+    state: &mut ForecastState,
+    window: u64,
+    forecast: &[(AppId, f64)],
+    kind: ReconfigKind,
+) -> Option<(f64, ResidencyPlan)> {
+    if state.rebalance_cooldown > 0 {
+        state.rebalance_cooldown -= 1;
+        return None;
+    }
+    let mut plan = env.residency()?;
+    if plan.entries.len() < 2 {
+        return None;
+    }
+    let cards = plan.total_cards();
+    // Forecast load per resident; residents the forecast does not cover
+    // keep the load the plan was drawn from (no drift contribution).
+    let loads: Vec<f64> = plan
+        .entries
+        .iter()
+        .map(|e| {
+            forecast
+                .iter()
+                .find(|(a, _)| *a == e.app_id)
+                .map(|&(_, l)| l)
+                .unwrap_or(e.corrected_load_secs)
+        })
+        .collect();
+    let total: f64 = loads.iter().sum();
+    if total <= 0.0 {
+        return None;
+    }
+    let drift = plan
+        .entries
+        .iter()
+        .zip(&loads)
+        .map(|(e, &l)| (l / total - e.cards as f64 / cards as f64).abs())
+        .fold(0.0f64, f64::max);
+    if drift <= cfg.rebalance_band {
+        return None;
+    }
+    let alloc = split_cards(&loads, cards);
+    if plan
+        .entries
+        .iter()
+        .zip(&alloc)
+        .all(|(e, &a)| e.cards == a)
+    {
+        // Out of band but the floor/rounding yields the same split —
+        // nothing to deploy, and no cooldown burned.
+        return None;
+    }
+    for ((e, &a), &l) in plan.entries.iter_mut().zip(&alloc).zip(&loads) {
+        e.cards = a;
+        e.corrected_load_secs = l;
+    }
+    let at = env.now();
+    if env.trace_mut().is_some() {
+        let entries: Vec<PlanShare> = plan
+            .entries
+            .iter()
+            .map(|e| PlanShare {
+                app: e.app.clone(),
+                variant: e.variant.clone(),
+                cards: e.cards as u64,
+            })
+            .collect();
+        if let Some(log) = env.trace_mut() {
+            log.push(TraceEvent::Rebalance {
+                at,
+                window,
+                drift,
+                entries,
+            });
+        }
+    }
+    env.deploy_plan(kind, &plan);
+    state.rebalance_cooldown = cfg.rebalance_cooldown_windows;
+    Some((drift, plan))
+}
+
+/// Telemetry: the per-window forecast event — predicted (next window)
+/// vs observed (closed window) corrected load per registry app. No-op
+/// without a trace.
+pub fn emit_forecast<E: Environment>(
+    env: &mut E,
+    window: u64,
+    observed: &[(AppId, f64)],
+    predicted: &[(AppId, f64)],
+) {
+    let at = env.now();
+    if env.trace_mut().is_none() {
+        return;
+    }
+    let apps: Vec<ForecastSample> = observed
+        .iter()
+        .map(|&(app, obs)| ForecastSample {
+            app: env.app_name(app).to_string(),
+            predicted: predicted
+                .iter()
+                .find(|(a, _)| *a == app)
+                .map(|&(_, p)| p)
+                .unwrap_or(obs),
+            observed: obs,
+        })
+        .collect();
+    if let Some(log) = env.trace_mut() {
+        log.push(TraceEvent::Forecast { at, window, apps });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{app_id, registry, VariantId};
+    use crate::coordinator::recon::ResidencyEntry;
+    use crate::fleet::FleetEnv;
+    use crate::fpga::part::D5005;
+
+    fn cfg2() -> ForecastConfig {
+        ForecastConfig {
+            enabled: true,
+            season_windows: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn first_observation_seeds_level_and_predicts_carry_forward() {
+        let cfg = cfg2();
+        let mut st = ForecastState::default();
+        st.observe(&cfg, 0, &[(AppId(0), 12.5)]);
+        assert_eq!(st.predict(&cfg, AppId(0), 1), Some(12.5));
+        assert_eq!(st.predict(&cfg, AppId(1), 1), None);
+    }
+
+    #[test]
+    fn recursion_matches_hand_computation() {
+        let cfg = ForecastConfig {
+            alpha: 0.5,
+            gamma: 0.25,
+            season_windows: 2,
+            ..cfg2()
+        };
+        let mut st = ForecastState::default();
+        st.observe(&cfg, 0, &[(AppId(3), 10.0)]); // seeds level = 10
+        st.observe(&cfg, 1, &[(AppId(3), 2.0)]);
+        // level  = 0.5*(2 - 0) + 0.5*10 = 6
+        // s[1]   = 0.25*(2 - 6) + 0.75*0 = -1
+        st.observe(&cfg, 2, &[(AppId(3), 10.0)]);
+        // level  = 0.5*(10 - 0) + 0.5*6 = 8
+        // s[0]   = 0.25*(10 - 8) + 0.75*0 = 0.5
+        let f = &st.apps[0];
+        assert_eq!(f.level.to_bits(), 8.0f64.to_bits());
+        assert_eq!(f.seasonal[0].to_bits(), 0.5f64.to_bits());
+        assert_eq!(f.seasonal[1].to_bits(), (-1.0f64).to_bits());
+        // predict(3) = level + s[1] = 8 - 1 = 7
+        assert_eq!(st.predict(&cfg, AppId(3), 3), Some(7.0));
+    }
+
+    #[test]
+    fn seasonal_alternation_is_learned() {
+        // A hot/cold square wave with period 2: after a few cycles the
+        // model must predict hot for hot slots and cold for cold slots,
+        // where the carry-forward oracle is always exactly wrong.
+        let cfg = cfg2();
+        let mut st = ForecastState::default();
+        for w in 0..12u64 {
+            let y = if w % 2 == 0 { 100.0 } else { 4.0 };
+            st.observe(&cfg, w, &[(AppId(0), y)]);
+        }
+        let hot = st.predict(&cfg, AppId(0), 12).unwrap();
+        let cold = st.predict(&cfg, AppId(0), 13).unwrap();
+        assert!(
+            hot > 60.0 && cold < 40.0,
+            "hot slot {hot} must forecast well above cold slot {cold}"
+        );
+    }
+
+    #[test]
+    fn negative_predictions_clamp_to_zero() {
+        let cfg = cfg2();
+        let mut st = ForecastState::default();
+        st.observe(&cfg, 0, &[(AppId(0), 50.0)]);
+        for w in 1..10u64 {
+            st.observe(&cfg, w, &[(AppId(0), 0.0)]);
+        }
+        let p = st.predict(&cfg, AppId(0), 11).unwrap();
+        assert!(p >= 0.0, "prediction {p} must be clamped at zero");
+    }
+
+    #[test]
+    fn forecast_state_roundtrips_exact_bits() {
+        let st = ForecastState {
+            apps: vec![
+                AppForecast {
+                    app: AppId(2),
+                    level: 1.0 / 3.0,
+                    seasonal: vec![-0.1, f64::MIN_POSITIVE, 7.25e300],
+                },
+                AppForecast {
+                    app: AppId(0),
+                    level: -0.0,
+                    seasonal: vec![0.0, 0.0, 0.0],
+                },
+            ],
+            rebalance_cooldown: 3,
+        };
+        let back = ForecastState::from_json(
+            &Json::parse(&st.to_json().to_pretty()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.rebalance_cooldown, st.rebalance_cooldown);
+        assert_eq!(back.apps.len(), st.apps.len());
+        for (a, b) in st.apps.iter().zip(&back.apps) {
+            assert_eq!(a.app, b.app);
+            assert_eq!(a.level.to_bits(), b.level.to_bits());
+            assert_eq!(a.seasonal.len(), b.seasonal.len());
+            for (x, y) in a.seasonal.iter().zip(&b.seasonal) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn apply_forecast_reorders_and_rewrites_loads() {
+        let rank = |app: &str, id: u16, load: f64| LoadRanking {
+            app: app.to_string(),
+            app_id: AppId(id),
+            actual_total_secs: load,
+            corrected_total_secs: load,
+            usage_count: 10,
+            coef: 1.0,
+        };
+        let rankings = vec![rank("a", 0, 100.0), rank("b", 1, 40.0)];
+        let adjusted = apply_forecast(&rankings, &[(AppId(1), 500.0)]);
+        assert_eq!(adjusted[0].app, "b");
+        assert_eq!(adjusted[0].corrected_total_secs, 500.0);
+        // Apps outside the forecast keep their trailing-window load.
+        assert_eq!(adjusted[1].app, "a");
+        assert_eq!(adjusted[1].corrected_total_secs, 100.0);
+        // Empty forecast is the identity (ranking already sorted).
+        let same = apply_forecast(&rankings, &[]);
+        assert_eq!(same[0].app, "a");
+        assert_eq!(same[1].corrected_total_secs, 40.0);
+    }
+
+    fn two_resident_fleet() -> (FleetEnv, ResidencyPlan) {
+        let reg = registry();
+        let entry = |app: &str, cards: usize, load: f64| ResidencyEntry {
+            app: app.to_string(),
+            app_id: app_id(&reg, app).unwrap(),
+            variant: "o1".to_string(),
+            variant_id: VariantId::from_name("o1").unwrap(),
+            improvement_coef: 2.0,
+            cards,
+            corrected_load_secs: load,
+        };
+        let mut env = FleetEnv::new(registry(), D5005, 4);
+        env.enable_telemetry();
+        let plan = ResidencyPlan {
+            entries: vec![entry("tdfir", 3, 300.0), entry("mriq", 1, 100.0)],
+        };
+        env.deploy_plan(ReconfigKind::Static, &plan);
+        (env, plan)
+    }
+
+    #[test]
+    fn rebalance_resplits_cards_when_forecast_drifts_out_of_band() {
+        let (mut env, _) = two_resident_fleet();
+        let cfg = cfg2();
+        let mut st = ForecastState::default();
+        let td = app_id(&registry(), "tdfir").unwrap();
+        let mq = app_id(&registry(), "mriq").unwrap();
+        // Forecast inverts the load mix: tdfir 100 vs mriq 300.
+        let fvec = vec![(td, 100.0), (mq, 300.0)];
+        let (drift, plan) =
+            maybe_rebalance(&mut env, &cfg, &mut st, 5, &fvec, ReconfigKind::Static)
+                .expect("out-of-band drift must rebalance");
+        assert!(drift > cfg.rebalance_band, "drift {drift}");
+        assert_eq!(plan.entries[0].cards, 1, "tdfir share shrinks");
+        assert_eq!(plan.entries[1].cards, 3, "mriq share grows");
+        // Membership and variants untouched; the fleet now carries the
+        // new split.
+        let live = env.residency().unwrap();
+        assert_eq!(live.entries[0].app, "tdfir");
+        assert_eq!(live.entries[0].cards, 1);
+        assert_eq!(live.entries[1].cards, 3);
+        // A Rebalance trace event attributed the move.
+        let n = env
+            .trace_mut()
+            .unwrap()
+            .events()
+            .iter()
+            .filter(|e| e.kind() == "rebalance")
+            .count();
+        assert_eq!(n, 1);
+        // Cooldown: the immediately following window may not rebalance,
+        // even out of band.
+        assert_eq!(st.rebalance_cooldown, cfg.rebalance_cooldown_windows);
+        let back = vec![(td, 300.0), (mq, 100.0)];
+        assert!(
+            maybe_rebalance(&mut env, &cfg, &mut st, 6, &back, ReconfigKind::Static)
+                .is_none(),
+            "hysteresis cursor must block the next window"
+        );
+        assert_eq!(st.rebalance_cooldown, 0);
+    }
+
+    #[test]
+    fn rebalance_holds_within_hysteresis_band() {
+        let (mut env, plan) = two_resident_fleet();
+        let cfg = cfg2();
+        let mut st = ForecastState::default();
+        let td = app_id(&registry(), "tdfir").unwrap();
+        let mq = app_id(&registry(), "mriq").unwrap();
+        // Matches the current 3/1 split exactly: zero drift.
+        let fvec = vec![(td, 300.0), (mq, 100.0)];
+        assert!(maybe_rebalance(
+            &mut env,
+            &cfg,
+            &mut st,
+            5,
+            &fvec,
+            ReconfigKind::Static
+        )
+        .is_none());
+        let live = env.residency().unwrap();
+        assert_eq!(live.entries[0].cards, plan.entries[0].cards);
+        assert_eq!(st.rebalance_cooldown, 0, "no cooldown burned in band");
+    }
+}

@@ -9,24 +9,32 @@
 //!    generic over, implemented by the single-card [`ProductionEnv`]
 //!    and the multi-card [`crate::fleet::FleetEnv`];
 //!  * [`recon`]   — the six-step reconfiguration controller;
+//!  * [`forecast`] — per-app load forecasting for proactive Step-7
+//!    planning and the between-proposal rebalance step;
 //!  * [`policy`]  — threshold decision and user approval (step 4/5).
 
 pub mod adaptive;
 pub mod config;
 pub mod env;
+pub mod forecast;
 pub mod history;
 pub mod policy;
 pub mod recon;
 pub mod server;
 
 pub use adaptive::{
-    run_adaptive, run_adaptive_from, AdaptiveConfig, AdaptiveState, WindowReport,
+    run_adaptive, run_adaptive_from, run_reactive_reference, AdaptiveConfig, AdaptiveState,
+    WindowReport,
 };
 pub use env::Environment;
+pub use forecast::{
+    apply_forecast, maybe_rebalance, measure_window, ForecastConfig, ForecastState,
+};
 pub use history::{HistoryStore, RequestRecord, ServedBy};
 pub use policy::{Approval, ApprovalDecision, ThresholdPolicy};
 pub use recon::{
-    plan_residency, run_reconfiguration, run_reconfiguration_with, RankCache, ReconConfig,
-    ReconOutcome, ReconProposal, ResidencyEntry, ResidencyPlan,
+    plan_residency, run_reconfiguration, run_reconfiguration_planned, run_reconfiguration_with,
+    split_cards, RankCache, ReconConfig, ReconOutcome, ReconProposal, ResidencyEntry,
+    ResidencyPlan,
 };
 pub use server::{Deployment, ProductionEnv};

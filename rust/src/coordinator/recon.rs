@@ -59,6 +59,13 @@ pub struct ReconConfig {
     /// costs (§3.2 puts partial reconfiguration at "ms order" against the
     /// ~1 s static outage, hence the 5 ms default).
     pub partial_reconfig_fraction: f64,
+    /// Per-entry variant re-search: when a cycle proposes nothing, let
+    /// *secondary* residents upgrade their pattern/coefficient to this
+    /// window's search winner (their representative data drifted) without
+    /// a best-app flip — the primary stays put, membership and card
+    /// shares are untouched, and `deploy_plan`'s skip economy reprograms
+    /// only the upgraded entry's cards. Off by default.
+    pub variant_resweep: bool,
 }
 
 impl Default for ReconConfig {
@@ -74,6 +81,7 @@ impl Default for ReconConfig {
             kind: ReconfigKind::Static,
             artifact_cache: false,
             partial_reconfig_fraction: 5e-3,
+            variant_resweep: false,
         }
     }
 }
@@ -408,27 +416,11 @@ pub fn plan_residency(
     }
 
     // Proportional allocation with a one-card floor per chosen app.
-    let total_load: f64 = chosen.iter().map(|(r, _)| r.corrected_total_secs).sum();
-    let quota = |i: usize| -> f64 {
-        if total_load > 0.0 {
-            cards as f64 * chosen[i].0.corrected_total_secs / total_load
-        } else {
-            cards as f64 / k as f64
-        }
-    };
-    let mut alloc = vec![1usize; k];
-    for _ in 0..cards - k {
-        let mut pick = 0;
-        let mut best_deficit = f64::NEG_INFINITY;
-        for (i, &a) in alloc.iter().enumerate() {
-            let deficit = quota(i) - a as f64;
-            if deficit > best_deficit {
-                best_deficit = deficit;
-                pick = i;
-            }
-        }
-        alloc[pick] += 1;
-    }
+    let loads: Vec<f64> = chosen
+        .iter()
+        .map(|(r, _)| r.corrected_total_secs)
+        .collect();
+    let alloc = split_cards(&loads, cards);
 
     let entries = chosen
         .iter()
@@ -449,6 +441,40 @@ pub fn plan_residency(
         })
         .collect();
     ResidencyPlan { entries }
+}
+
+/// The share-split rule behind [`plan_residency`] (and the forecast
+/// layer's between-proposal rebalance, which must divide cards exactly
+/// the way a fresh plan would): proportional to load with a one-card
+/// floor per app, remaining cards handed out by largest quota deficit,
+/// ties toward the lower index. A zero total splits evenly.
+pub fn split_cards(loads: &[f64], cards: usize) -> Vec<usize> {
+    let k = loads.len();
+    if k == 0 || cards < k {
+        return vec![1; k.min(cards)];
+    }
+    let total_load: f64 = loads.iter().sum();
+    let quota = |i: usize| -> f64 {
+        if total_load > 0.0 {
+            cards as f64 * loads[i] / total_load
+        } else {
+            cards as f64 / k as f64
+        }
+    };
+    let mut alloc = vec![1usize; k];
+    for _ in 0..cards - k {
+        let mut pick = 0;
+        let mut best_deficit = f64::NEG_INFINITY;
+        for (i, &a) in alloc.iter().enumerate() {
+            let deficit = quota(i) - a as f64;
+            if deficit > best_deficit {
+                best_deficit = deficit;
+                pick = i;
+            }
+        }
+        alloc[pick] += 1;
+    }
+    alloc
 }
 
 /// Step-duration accounting (TXT-STEPS).
@@ -474,6 +500,11 @@ pub struct ReconOutcome {
     /// The heterogeneous residency plan step 6 deployed (`None` when the
     /// cycle deployed homogeneously or did not reconfigure at all).
     pub residency: Option<ResidencyPlan>,
+    /// The plan deployed by the per-entry variant re-search: a cycle that
+    /// proposed nothing but found a secondary resident's search winner
+    /// drifted away from its deployed variant (requires
+    /// [`ReconConfig::variant_resweep`]).
+    pub resweep: Option<ResidencyPlan>,
     pub steps: StepDurations,
 }
 
@@ -757,6 +788,23 @@ pub fn run_reconfiguration_with<E: Environment>(
     approval: &mut Approval,
     ranks: &mut RankCache,
 ) -> anyhow::Result<ReconOutcome> {
+    run_reconfiguration_planned(env, cfg, approval, ranks, None)
+}
+
+/// [`run_reconfiguration_with`] planning step 6 against a forecast load
+/// vector instead of the trailing window: analysis, search, effects, and
+/// the step-4/5 proposal all stay measurement-driven (the paper's
+/// contract), but the residency plan's seating and share split are drawn
+/// from the predicted next-window mix (see
+/// [`super::forecast::apply_forecast`]). `None` is byte-for-byte the
+/// reactive path.
+pub fn run_reconfiguration_planned<E: Environment>(
+    env: &mut E,
+    cfg: &ReconConfig,
+    approval: &mut Approval,
+    ranks: &mut RankCache,
+    forecast: Option<&[(AppId, f64)]>,
+) -> anyhow::Result<ReconOutcome> {
     cfg.validate()?;
     // ---- Step 1 ----------------------------------------------------------
     let t0 = Instant::now();
@@ -895,6 +943,14 @@ pub fn run_reconfiguration_with<E: Environment>(
 
     if !proposed {
         emit_proposal(env, &proposal, None);
+        // Per-entry variant re-search: no best-app flip this cycle, but a
+        // secondary resident's representative data may have drifted until
+        // this window's search winner differs from its deployed variant.
+        let mut resweep = None;
+        if cfg.variant_resweep && cfg.residency_apps > 1 && env.cards() > 1 {
+            resweep =
+                resweep_residency(env, cfg, &searches, &representatives, &mut steps)?;
+        }
         return Ok(ReconOutcome {
             rankings,
             representatives,
@@ -903,6 +959,7 @@ pub fn run_reconfiguration_with<E: Environment>(
             decision: None,
             reconfig: None,
             residency: None,
+            resweep,
             steps,
         });
     }
@@ -929,6 +986,7 @@ pub fn run_reconfiguration_with<E: Environment>(
             decision: Some(decision),
             reconfig: None,
             residency: None,
+            resweep: None,
             steps,
         });
     }
@@ -944,8 +1002,21 @@ pub fn run_reconfiguration_with<E: Environment>(
     let improvement = best.cpu_secs / best.pattern_secs;
     let mut residency = None;
     let report = if cfg.residency_apps > 1 && env.cards() > 1 {
-        let plan =
-            plan_residency(&rankings, &proposal.candidates, env.cards(), cfg.residency_apps);
+        // Proactive mode seats and sizes the plan against the predicted
+        // next-window loads; reactive mode (forecast `None`) keeps the
+        // trailing-window carry-forward — the bit-identity oracle.
+        let plan = match forecast {
+            Some(f) => {
+                let adjusted = super::forecast::apply_forecast(&rankings, f);
+                plan_residency(&adjusted, &proposal.candidates, env.cards(), cfg.residency_apps)
+            }
+            None => plan_residency(
+                &rankings,
+                &proposal.candidates,
+                env.cards(),
+                cfg.residency_apps,
+            ),
+        };
         if plan.entries.is_empty() {
             // No candidate pays offloaded (unreachable behind a proposed
             // step 4, kept as a defensive fallback).
@@ -975,8 +1046,67 @@ pub fn run_reconfiguration_with<E: Environment>(
         decision: Some(decision),
         reconfig: Some(report),
         residency,
+        resweep: None,
         steps,
     })
+}
+
+/// The per-entry variant re-search behind [`ReconConfig::variant_resweep`]:
+/// compare every *secondary* resident's deployed variant against this
+/// cycle's search winner for the same app (searched on this window's
+/// representative data). When the winner differs and strictly improves on
+/// the deployed pattern's time at that representative size, deploy the
+/// same plan with the entry's variant and coefficient upgraded — the
+/// primary and every card share stay put, so `deploy_plan` reprograms
+/// only the upgraded entry's cards.
+fn resweep_residency<E: Environment>(
+    env: &mut E,
+    cfg: &ReconConfig,
+    searches: &[OffloadResult],
+    representatives: &[Representative],
+    steps: &mut StepDurations,
+) -> anyhow::Result<Option<ResidencyPlan>> {
+    let Some(mut plan) = env.residency() else {
+        return Ok(None);
+    };
+    if plan.entries.len() < 2 {
+        return Ok(None);
+    }
+    let primary_app = env
+        .deployment()
+        .map(|d| env.app_name(d.app).to_string())
+        .unwrap_or_default();
+    let mut changed = false;
+    for e in &mut plan.entries {
+        if e.app == primary_app {
+            continue;
+        }
+        let Some(s) = searches.iter().find(|s| s.app == e.app) else {
+            continue;
+        };
+        if s.best.variant == e.variant {
+            continue;
+        }
+        let Some(rep) = representatives.iter().find(|r| r.app == e.app) else {
+            continue;
+        };
+        let deployed_secs = env.offloaded_time(&e.app, &rep.size, &e.variant)?;
+        if s.best.time_secs < deployed_secs {
+            e.variant = s.best.variant.clone();
+            e.variant_id = VariantId::from_name(&s.best.variant).ok_or_else(|| {
+                anyhow::anyhow!("resweep: non-canonical variant `{}`", s.best.variant)
+            })?;
+            e.improvement_coef = s.cpu_time_secs / s.best.time_secs;
+            changed = true;
+        }
+    }
+    if !changed {
+        return Ok(None);
+    }
+    emit_plan(env, &plan);
+    let report = env.deploy_plan(cfg.kind, &plan);
+    steps.reconfig_downtime_secs += report.downtime_secs;
+    Ok(Some(plan))
 }
 
 #[cfg(test)]
@@ -1289,6 +1419,171 @@ mod tests {
             out.proposal.unwrap().proposed,
             "k = 1 keeps the paper's re-proposal behaviour"
         );
+    }
+
+    #[test]
+    fn variant_resweep_upgrades_secondary_while_primary_stays_put() {
+        // A quiescent fleet (primary mriq already at this cycle's best —
+        // no proposal fires) holding a *stale-variant* tdfir secondary:
+        // with `variant_resweep` on, window 1 must upgrade the secondary
+        // to the search winner in place (same seats, same shares, same
+        // primary), and window 2 must find nothing left to upgrade.
+        let reg = registry();
+        let td = offload::search(
+            crate::apps::find(&reg, "tdfir").unwrap(),
+            "large",
+            &OffloadConfig::default(),
+        )
+        .unwrap();
+        let mq = offload::search(
+            crate::apps::find(&reg, "mriq").unwrap(),
+            "large",
+            &OffloadConfig::default(),
+        )
+        .unwrap();
+        // The worst non-winning trial is the deliberately stale deploy.
+        let stale = td
+            .trials
+            .iter()
+            .filter(|t| t.variant != td.best.variant)
+            .max_by(|a, b| a.time_secs.partial_cmp(&b.time_secs).unwrap())
+            .unwrap();
+        assert!(stale.time_secs > td.best.time_secs, "trial not stale");
+        let entry = |app: &str, variant: &str, coef: f64, cards: usize| ResidencyEntry {
+            app: app.to_string(),
+            app_id: app_id(&reg, app).unwrap(),
+            variant: variant.to_string(),
+            variant_id: VariantId::from_name(variant).unwrap(),
+            improvement_coef: coef,
+            cards,
+            corrected_load_secs: 0.0,
+        };
+        let mut env = crate::fleet::FleetEnv::new(registry(), D5005, 4);
+        env.deploy_plan(
+            ReconfigKind::Static,
+            &ResidencyPlan {
+                entries: vec![
+                    entry("mriq", &mq.best.variant, mq.improvement, 3),
+                    entry(
+                        "tdfir",
+                        &stale.variant,
+                        td.cpu_time_secs / stale.time_secs,
+                        1,
+                    ),
+                ],
+            },
+        );
+        let cfg = ReconConfig {
+            residency_apps: 2,
+            variant_resweep: true,
+            ..Default::default()
+        };
+        let mut ap = Approval::auto_yes();
+
+        // Window 1: upgrade.
+        let mut trace = generate(&env.registry, 3600.0, 42);
+        for r in &mut trace {
+            r.arrival += 2.0;
+        }
+        env.run_window(&trace).unwrap();
+        let out = run_reconfiguration(&mut env, &cfg, &mut ap).unwrap();
+        assert!(!out.proposal.as_ref().unwrap().proposed, "primary is best");
+        assert!(out.reconfig.is_none());
+        let plan = out.resweep.as_ref().expect("stale secondary must upgrade");
+        assert_eq!(plan.primary().app, "mriq");
+        let m = &plan.entries[0];
+        assert_eq!((m.variant.as_str(), m.cards), (mq.best.variant.as_str(), 3));
+        let t = &plan.entries[1];
+        assert_eq!((t.app.as_str(), t.cards), ("tdfir", 1));
+        assert_eq!(t.variant, td.best.variant, "upgraded to the winner");
+        assert!(
+            (t.improvement_coef - td.improvement).abs() < 1e-12,
+            "coefficient follows the winner: {} vs {}",
+            t.improvement_coef,
+            td.improvement
+        );
+
+        // Window 2 (same arrival seed, shifted): already at the winner —
+        // quiescent again.
+        let mut trace = generate(&env.registry, 3600.0, 42);
+        let t0 = env.now() + 2.0;
+        for r in &mut trace {
+            r.arrival += t0;
+        }
+        env.run_window(&trace).unwrap();
+        let out = run_reconfiguration(&mut env, &cfg, &mut ap).unwrap();
+        assert!(!out.proposal.as_ref().unwrap().proposed);
+        assert!(out.resweep.is_none(), "nothing left to upgrade");
+
+        // The knob defaults off: the same stale fleet without it never
+        // touches the secondary.
+        assert!(!ReconConfig::default().variant_resweep);
+    }
+
+    #[test]
+    fn planned_cycle_seats_and_sizes_by_the_forecast_vector() {
+        // Identical environments and trailing traffic; only the forecast
+        // vector differs. The residency plan must follow the vector —
+        // seats ordered by predicted load and shares split on it — not
+        // the trailing window the reactive planner uses.
+        let reg = registry();
+        let td_id = app_id(&reg, "tdfir").unwrap();
+        let mq_id = app_id(&reg, "mriq").unwrap();
+        let build = || {
+            let mut env = crate::fleet::FleetEnv::new(registry(), D5005, 4);
+            let td = offload::search(
+                crate::apps::find(&reg, "tdfir").unwrap(),
+                "large",
+                &OffloadConfig::default(),
+            )
+            .unwrap();
+            env.deploy(ReconfigKind::Static, "tdfir", &td.best.variant, td.improvement);
+            let mut trace = generate(&env.registry, 3600.0, 42);
+            for r in &mut trace {
+                r.arrival += 2.0;
+            }
+            env.run_window(&trace).unwrap();
+            env
+        };
+        let cfg = ReconConfig {
+            residency_apps: 2,
+            ..Default::default()
+        };
+
+        let mut env = build();
+        let mut ap = Approval::auto_yes();
+        let fc = [(td_id, 300.0), (mq_id, 100.0)];
+        let out = run_reconfiguration_planned(
+            &mut env,
+            &cfg,
+            &mut ap,
+            &mut RankCache::default(),
+            Some(&fc),
+        )
+        .unwrap();
+        let plan = out.residency.as_ref().expect("two residents");
+        assert_eq!(plan.primary().app, "tdfir");
+        assert_eq!(plan.entries[0].cards, 3, "4 x 300/400");
+        assert_eq!(plan.entries[1].app, "mriq");
+        assert_eq!(plan.entries[1].cards, 1);
+
+        // Inverted forecast, same measurements: the seating flips.
+        let mut env = build();
+        let mut ap = Approval::auto_yes();
+        let fc = [(td_id, 100.0), (mq_id, 300.0)];
+        let out = run_reconfiguration_planned(
+            &mut env,
+            &cfg,
+            &mut ap,
+            &mut RankCache::default(),
+            Some(&fc),
+        )
+        .unwrap();
+        let plan = out.residency.as_ref().expect("two residents");
+        assert_eq!(plan.primary().app, "mriq");
+        assert_eq!(plan.entries[0].cards, 3);
+        assert_eq!(plan.entries[1].app, "tdfir");
+        assert_eq!(plan.entries[1].cards, 1);
     }
 
     #[test]

@@ -35,6 +35,7 @@
 //! - reprogram card 0 -> tdfir/o1 (1.000s, outage until t=1.000)
 //!
 //! ## window 6 (t=25200.0s) — 412 requests, 390 fpga / 22 cpu, p99 1.0s
+//! - forecast: mriq predicted 3150.0s / observed 3200.5s, tdfir (...)
 //! - analysis: top mriq (241 uses, corrected 3200.5s), tdfir (...)
 //! - proposal: mriq/o2 over tdfir/o1, ratio 3.2x — proposed, approved
 //! - plan: mriq/o2 x3 cards, tdfir/o1 x1 card
@@ -45,7 +46,17 @@
 //!
 //! ## window 7 ...
 //! - flap_rollback: tdfir re-proposed within guard window; plan restored
+//!
+//! ## window 9 ...
+//! - rebalance: drift 0.31 — mriq/o2 x2 cards, tdfir/o1 x2 cards
 //! ```
+//!
+//! With forecast-driven planning on (`AdaptiveConfig::forecast`), each
+//! window opens with a `forecast` event (Holt-Winters prediction vs the
+//! observed corrected load, per app), and quiescent windows whose load
+//! shares drift out of the hysteresis band emit a `rebalance` event as
+//! the between-proposal step re-splits cards among the current
+//! residents.
 //!
 //! Each `window` event carries the *per-window* request/stall deltas and
 //! latency quantiles (diffed from the cumulative metrics), so a p99
@@ -61,7 +72,7 @@ pub mod trace;
 
 pub use export::{prometheus_text, write_jsonl};
 pub use metrics::{bucket_ceiling, bucket_floor, bucket_of, ServeMetrics, BUCKETS};
-pub use trace::{DecisionTrace, PlanShare, RankSample, TraceEvent};
+pub use trace::{DecisionTrace, ForecastSample, PlanShare, RankSample, TraceEvent};
 
 use crate::util::json::Json;
 

@@ -33,6 +33,18 @@ pub struct PlanShare {
     pub cards: u64,
 }
 
+/// One per-app row carried in a [`TraceEvent::Forecast`] event: the
+/// corrected load predicted for the *next* window next to the load
+/// actually measured in the window that just closed.
+#[derive(Clone, Debug)]
+pub struct ForecastSample {
+    pub app: String,
+    /// Predicted corrected load for the next window, seconds.
+    pub predicted: f64,
+    /// Observed corrected load in the closed window, seconds.
+    pub observed: f64,
+}
+
 /// A decision-trace event. All `f64` fields serialize as exact bits
 /// (`*_bits` keys in the JSON form); `at` is the virtual clock when the
 /// event was recorded, except `Rejoin`/`Reprogram` whose stamps follow
@@ -74,6 +86,22 @@ pub enum TraceEvent {
     Plan { at: f64, entries: Vec<PlanShare> },
     /// The Step-7 flap guard rolled a just-approved cycle back.
     FlapRollback { at: f64, window: u64, app: String },
+    /// The forecast layer closed a window: per-app predicted-vs-observed
+    /// corrected loads, the input the next proactive plan is drawn from.
+    Forecast {
+        at: f64,
+        window: u64,
+        apps: Vec<ForecastSample>,
+    },
+    /// The between-proposal rebalance step re-split card shares among
+    /// the *current* residents because measured drift left the
+    /// hysteresis band (membership unchanged — shares only).
+    Rebalance {
+        at: f64,
+        window: u64,
+        drift: f64,
+        entries: Vec<PlanShare>,
+    },
     /// Artifact-cache consultation for one transition entry: `hit`
     /// charges `fraction x cold` on every card flipped to this entry.
     Artifact {
@@ -109,6 +137,8 @@ impl TraceEvent {
             TraceEvent::Proposal { .. } => "proposal",
             TraceEvent::Plan { .. } => "plan",
             TraceEvent::FlapRollback { .. } => "flap_rollback",
+            TraceEvent::Forecast { .. } => "forecast",
+            TraceEvent::Rebalance { .. } => "rebalance",
             TraceEvent::Artifact { .. } => "artifact",
             TraceEvent::Drain { .. } => "drain",
             TraceEvent::Reprogram { .. } => "reprogram",
@@ -197,6 +227,45 @@ impl TraceEvent {
                 .set("at_bits", Json::from_f64_bits(*at))
                 .set("window", Json::from_u64(*window))
                 .set("app", app.as_str()),
+            TraceEvent::Forecast { at, window, apps } => base
+                .set("at_bits", Json::from_f64_bits(*at))
+                .set("window", Json::from_u64(*window))
+                .set(
+                    "apps",
+                    Json::Arr(
+                        apps.iter()
+                            .map(|s| {
+                                Json::obj()
+                                    .set("app", s.app.as_str())
+                                    .set("predicted_bits", Json::from_f64_bits(s.predicted))
+                                    .set("observed_bits", Json::from_f64_bits(s.observed))
+                            })
+                            .collect(),
+                    ),
+                ),
+            TraceEvent::Rebalance {
+                at,
+                window,
+                drift,
+                entries,
+            } => base
+                .set("at_bits", Json::from_f64_bits(*at))
+                .set("window", Json::from_u64(*window))
+                .set("drift_bits", Json::from_f64_bits(*drift))
+                .set(
+                    "entries",
+                    Json::Arr(
+                        entries
+                            .iter()
+                            .map(|e| {
+                                Json::obj()
+                                    .set("app", e.app.as_str())
+                                    .set("variant", e.variant.as_str())
+                                    .set("cards", Json::from_u64(e.cards))
+                            })
+                            .collect(),
+                    ),
+                ),
             TraceEvent::Artifact {
                 at,
                 app,
@@ -304,6 +373,37 @@ impl TraceEvent {
                 window: j.u64_at("window")?,
                 app: j.str_at("app")?.to_string(),
             }),
+            "forecast" => {
+                let mut apps = Vec::new();
+                for s in j.arr_at("apps")? {
+                    apps.push(ForecastSample {
+                        app: s.str_at("app")?.to_string(),
+                        predicted: s.f64_bits_at("predicted_bits")?,
+                        observed: s.f64_bits_at("observed_bits")?,
+                    });
+                }
+                Ok(TraceEvent::Forecast {
+                    at: j.f64_bits_at("at_bits")?,
+                    window: j.u64_at("window")?,
+                    apps,
+                })
+            }
+            "rebalance" => {
+                let mut entries = Vec::new();
+                for e in j.arr_at("entries")? {
+                    entries.push(PlanShare {
+                        app: e.str_at("app")?.to_string(),
+                        variant: e.str_at("variant")?.to_string(),
+                        cards: e.u64_at("cards")?,
+                    });
+                }
+                Ok(TraceEvent::Rebalance {
+                    at: j.f64_bits_at("at_bits")?,
+                    window: j.u64_at("window")?,
+                    drift: j.f64_bits_at("drift_bits")?,
+                    entries,
+                })
+            }
             "artifact" => Ok(TraceEvent::Artifact {
                 at: j.f64_bits_at("at_bits")?,
                 app: j.str_at("app")?.to_string(),
@@ -474,6 +574,39 @@ mod tests {
             window: 1,
             app: "tdfir".into(),
         });
+        t.push(TraceEvent::Forecast {
+            at: 7200.0,
+            window: 1,
+            apps: vec![
+                ForecastSample {
+                    app: "mriq".into(),
+                    predicted: 3150.25,
+                    observed: 3200.5,
+                },
+                ForecastSample {
+                    app: "tdfir".into(),
+                    predicted: 11.5,
+                    observed: f64::MIN_POSITIVE,
+                },
+            ],
+        });
+        t.push(TraceEvent::Rebalance {
+            at: 7200.5,
+            window: 1,
+            drift: 0.375,
+            entries: vec![
+                PlanShare {
+                    app: "mriq".into(),
+                    variant: "o2".into(),
+                    cards: 3,
+                },
+                PlanShare {
+                    app: "tdfir".into(),
+                    variant: "o1".into(),
+                    cards: 1,
+                },
+            ],
+        });
         t
     }
 
@@ -513,7 +646,9 @@ mod tests {
                 "plan",
                 "drain",
                 "rejoin",
-                "flap_rollback"
+                "flap_rollback",
+                "forecast",
+                "rebalance"
             ]
         );
     }

@@ -12,9 +12,17 @@
 //! by construction, so the trace comes out arrival-sorted without the
 //! post-hoc global sort the first implementation used. Small registries
 //! (the paper's five apps) merge with a linear-scan min; past
-//! [`HEAP_MERGE_MIN_STREAMS`] streams a binary heap takes over with the
-//! same FIFO tie-break, keeping the merge O(n log k) for the 100-app
-//! synthetic registries.
+//! [`HEAP_MERGE_MIN_STREAMS`] streams a binary heap takes over; past
+//! [`CHUNKED_MERGE_MIN_STREAMS`] a chunked argmin over a flat arrival
+//! cache replaces the heap — branch-light contiguous scans the
+//! auto-vectorizer can batch, which beats the heap's pointer-chasing for
+//! the 100-app synthetic registries. All three strategies produce the
+//! identical trace, FIFO ties included.
+//!
+//! [`modulated`] layers time-varying rates (diurnal sinusoids, step
+//! flash-crowds) on top via Poisson thinning, feeding the forecast bench.
+
+pub mod modulated;
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -27,6 +35,16 @@ use crate::util::prng::Rng;
 /// to a binary heap. The linear scan beats the heap's bookkeeping for the
 /// paper's five apps; the heap wins once the scan dominates.
 pub const HEAP_MERGE_MIN_STREAMS: usize = 9;
+
+/// Stream count at which the merge drops the heap for the chunked argmin:
+/// at this many lanes the flat cache's contiguous scans (k/8 chunk minima
+/// + one 8-lane rescan per pop) cost less than the heap's branchy
+/// sift-down, and the gap widens with k.
+pub const CHUNKED_MERGE_MIN_STREAMS: usize = 33;
+
+/// Lanes per chunk of the chunked argmin — one cache line of `f64`s, and
+/// a fixed-trip-count scan the compiler can unroll or vectorize.
+const MERGE_CHUNK: usize = 8;
 
 /// One production request. `Copy` — 32 bytes, no heap.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -62,14 +80,20 @@ pub fn generate(apps: &[AppSpec], duration_secs: f64, seed: u64) -> Vec<Request>
     generate_with(apps, duration_secs, seed, None)
 }
 
-/// Merge strategy override for equivalence tests.
+/// Merge strategy override for equivalence tests and the
+/// `router_throughput` bench's merge section. `None` in
+/// [`generate_with`] picks by stream count.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Merge {
+pub enum Merge {
     Linear,
     Heap,
+    Chunked,
 }
 
-fn generate_with(
+/// [`generate`] with an explicit merge strategy (`None` = auto-select by
+/// stream count). Every strategy yields the identical trace; this knob
+/// exists so equivalence tests and benches can force a path.
+pub fn generate_with(
     apps: &[AppSpec],
     duration_secs: f64,
     seed: u64,
@@ -101,15 +125,17 @@ fn generate_with(
     }
 
     let mut out = Vec::with_capacity((expected * 1.1) as usize + 16);
-    let use_heap = match merge {
-        Some(Merge::Heap) => true,
-        Some(Merge::Linear) => false,
-        None => streams.len() >= HEAP_MERGE_MIN_STREAMS,
-    };
-    if use_heap {
-        merge_heap(&mut streams, duration_secs, &mut out);
+    let strategy = merge.unwrap_or(if streams.len() >= CHUNKED_MERGE_MIN_STREAMS {
+        Merge::Chunked
+    } else if streams.len() >= HEAP_MERGE_MIN_STREAMS {
+        Merge::Heap
     } else {
-        merge_linear(&mut streams, duration_secs, &mut out);
+        Merge::Linear
+    });
+    match strategy {
+        Merge::Linear => merge_linear(&mut streams, duration_secs, &mut out),
+        Merge::Heap => merge_heap(&mut streams, duration_secs, &mut out),
+        Merge::Chunked => merge_chunked(&mut streams, duration_secs, &mut out),
     }
     out
 }
@@ -204,6 +230,68 @@ fn merge_heap(streams: &mut [Stream], duration_secs: f64, out: &mut Vec<Request>
             });
         }
     }
+}
+
+/// K-way merge on a chunked argmin: head arrivals live in a flat `f64`
+/// cache (exhausted lanes parked at `+inf`, so the scan has no validity
+/// branch), with a cached per-chunk minimum. Each pop scans the `k/8`
+/// chunk minima for the global min and rescans only the popped lane's
+/// 8-wide chunk — contiguous fixed-width loops the auto-vectorizer can
+/// batch, versus the heap's branchy sift-down. Strict `<` everywhere
+/// keeps ties FIFO toward the lower stream index (the earlier chunk holds
+/// the lower indices), so the trace is element-for-element the
+/// [`merge_linear`] trace.
+fn merge_chunked(streams: &mut [Stream], duration_secs: f64, out: &mut Vec<Request>) {
+    if streams.is_empty() {
+        return;
+    }
+    let mut arrivals: Vec<f64> = streams
+        .iter()
+        .map(|s| {
+            if s.next_arrival < duration_secs {
+                s.next_arrival
+            } else {
+                f64::INFINITY
+            }
+        })
+        .collect();
+    let chunks = arrivals.len().div_ceil(MERGE_CHUNK);
+    let mut mins: Vec<(f64, usize)> = (0..chunks).map(|c| chunk_min(&arrivals, c)).collect();
+    loop {
+        let mut best = mins[0];
+        for &m in &mins[1..] {
+            if m.0 < best.0 {
+                best = m;
+            }
+        }
+        if best.0.is_infinite() {
+            break;
+        }
+        let i = best.1;
+        emit(streams, i, out);
+        let next = streams[i].next_arrival;
+        arrivals[i] = if next < duration_secs {
+            next
+        } else {
+            f64::INFINITY
+        };
+        let c = i / MERGE_CHUNK;
+        mins[c] = chunk_min(&arrivals, c);
+    }
+}
+
+/// Min `(arrival, lane)` of one fixed-width chunk of the arrival cache,
+/// ties toward the lower lane.
+fn chunk_min(arrivals: &[f64], chunk: usize) -> (f64, usize) {
+    let lo = chunk * MERGE_CHUNK;
+    let hi = (lo + MERGE_CHUNK).min(arrivals.len());
+    let mut best = (arrivals[lo], lo);
+    for (i, &a) in arrivals[lo + 1..hi].iter().enumerate() {
+        if a < best.0 {
+            best = (a, lo + 1 + i);
+        }
+    }
+    best
 }
 
 /// Override one app's arrival rate (requests/hour) in place — the knob
@@ -399,6 +487,25 @@ mod tests {
     }
 
     #[test]
+    fn chunked_merge_is_bit_identical_to_linear_scan() {
+        // The chunked argmin must reproduce the linear-scan trace exactly
+        // across partial chunks (n % 8 != 0), single-chunk registries,
+        // and the 100+ lane counts it exists for.
+        for (n, dur, seed) in [
+            (5usize, 3600.0, 42u64),
+            (12, 1800.0, 7),
+            (40, 600.0, 3),
+            (100, 600.0, 9),
+            (150, 300.0, 21),
+        ] {
+            let reg = repro_registry(n);
+            let a = generate_with(&reg, dur, seed, Some(Merge::Linear));
+            let b = generate_with(&reg, dur, seed, Some(Merge::Chunked));
+            assert_eq!(a, b, "chunked merge diverged for {n} streams");
+        }
+    }
+
+    #[test]
     fn auto_merge_picks_heap_past_threshold_transparently() {
         // The public API must not change output when the stream count
         // crosses HEAP_MERGE_MIN_STREAMS.
@@ -409,6 +516,11 @@ mod tests {
         for w in auto.windows(2) {
             assert!(w[0].arrival <= w[1].arrival);
         }
+        // Likewise across the chunked threshold.
+        let reg = repro_registry(CHUNKED_MERGE_MIN_STREAMS + 2);
+        let auto = generate(&reg, 1200.0, 13);
+        let linear = generate_with(&reg, 1200.0, 13, Some(Merge::Linear));
+        assert_eq!(auto, linear);
     }
 
     #[test]

@@ -1,0 +1,293 @@
+//! Time-varying workload generation: diurnal sinusoids and step
+//! flash-crowds layered on the per-app Poisson streams.
+//!
+//! The base [`super::generate`] draws stationary Poisson arrivals — the
+//! right model for one observation window, but the forecast layer exists
+//! precisely because production rates are *not* stationary across a day.
+//! This module generates non-homogeneous Poisson processes by thinning
+//! (Lewis & Shedler): candidates are drawn at each app's peak rate and
+//! accepted with probability `rate(t) / peak`, which is exact for any
+//! bounded rate function and keeps each app's stream arrival-ordered by
+//! construction.
+//!
+//! The output contract matches [`super::generate`]: arrival-sorted
+//! requests with sequential ids and FIFO ties toward the lower app index,
+//! so a modulated trace drops into `run_window` and the history index
+//! exactly like a stationary one. Generation is deterministic per seed —
+//! the per-app PRNG split order is registry order, as in the base
+//! generator.
+
+use crate::apps::{AppId, AppSpec, SizeId};
+use crate::util::prng::Rng;
+
+use super::Request;
+
+/// One app's rate modulation over the generation horizon. The modulated
+/// rate is `base_rate * factor_at(t)`, never negative.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Modulation {
+    /// Stationary: `factor_at(t) == 1`.
+    Flat,
+    /// Sinusoidal day-shape: `1 + depth * sin(2π (t + phase_secs) /
+    /// period_secs)`, clamped at zero. `depth` in `[0, 1]` keeps the
+    /// rate non-negative without clamping; larger depths flat-line the
+    /// trough at zero.
+    Diurnal {
+        period_secs: f64,
+        depth: f64,
+        phase_secs: f64,
+    },
+    /// Step flash-crowd: rate multiplied by `factor` on
+    /// `[start_secs, end_secs)`, unchanged outside. `factor < 1` models
+    /// a brown-out dip.
+    Flash {
+        start_secs: f64,
+        end_secs: f64,
+        factor: f64,
+    },
+}
+
+impl Modulation {
+    /// Rate multiplier at virtual time `t` (clamped non-negative).
+    pub fn factor_at(&self, t: f64) -> f64 {
+        match *self {
+            Modulation::Flat => 1.0,
+            Modulation::Diurnal {
+                period_secs,
+                depth,
+                phase_secs,
+            } => {
+                let angle = std::f64::consts::TAU * (t + phase_secs) / period_secs;
+                (1.0 + depth * angle.sin()).max(0.0)
+            }
+            Modulation::Flash {
+                start_secs,
+                end_secs,
+                factor,
+            } => {
+                if t >= start_secs && t < end_secs {
+                    factor
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    /// An upper bound on [`Modulation::factor_at`] over all `t` — the
+    /// thinning envelope.
+    pub fn peak(&self) -> f64 {
+        match *self {
+            Modulation::Flat => 1.0,
+            Modulation::Diurnal { depth, .. } => 1.0 + depth.max(0.0),
+            Modulation::Flash { factor, .. } => factor.max(1.0),
+        }
+    }
+}
+
+/// Generate one window of modulated traffic. `profiles` is index-aligned
+/// with `apps` (one [`Modulation`] per registry slot); pass
+/// [`Modulation::Flat`] for apps that keep their stationary rate.
+///
+/// # Panics
+/// If `profiles.len() != apps.len()` — a misaligned profile table would
+/// silently modulate the wrong apps.
+pub fn generate_modulated(
+    apps: &[AppSpec],
+    profiles: &[Modulation],
+    duration_secs: f64,
+    seed: u64,
+) -> Vec<Request> {
+    assert_eq!(
+        profiles.len(),
+        apps.len(),
+        "one modulation profile per registry app"
+    );
+    let mut master = Rng::new(seed);
+    let mut lanes: Vec<Vec<Request>> = Vec::with_capacity(apps.len());
+    for (i, app) in apps.iter().enumerate() {
+        let mut rng = master.split();
+        let base_per_sec = app.rate_per_hour / 3600.0;
+        let m = profiles[i];
+        let peak = m.peak();
+        if base_per_sec <= 0.0 || peak <= 0.0 {
+            continue;
+        }
+        let weights: Vec<f64> = app.sizes.iter().map(|s| s.weight).collect();
+        let bytes: Vec<f64> = (0..app.sizes.len())
+            .map(|s| app.request_bytes_id(SizeId(s as u16)).unwrap_or(0.0))
+            .collect();
+        let mut lane = Vec::new();
+        let mut t = 0.0;
+        loop {
+            // Candidate at the envelope rate; thin down to rate(t).
+            t += rng.next_exp(base_per_sec * peak);
+            if t >= duration_secs {
+                break;
+            }
+            if rng.next_f64() * peak >= m.factor_at(t) {
+                continue;
+            }
+            let size = rng.pick_weighted(&weights);
+            lane.push(Request {
+                id: 0, // assigned at merge
+                app: AppId(i as u16),
+                size: SizeId(size as u16),
+                arrival: t,
+                bytes: bytes[size],
+            });
+        }
+        lanes.push(lane);
+    }
+
+    // Merge the per-app lanes (each sorted by construction) with the
+    // same strict-`<` FIFO tie-break as the stationary generator: lanes
+    // hold ascending app indices, so "first lane wins ties" is "lower
+    // app index wins ties".
+    let mut heads = vec![0usize; lanes.len()];
+    let total: usize = lanes.iter().map(Vec::len).sum();
+    let mut out = Vec::with_capacity(total);
+    while out.len() < total {
+        let mut best: Option<usize> = None;
+        for (i, lane) in lanes.iter().enumerate() {
+            if heads[i] >= lane.len() {
+                continue;
+            }
+            let earlier = match best {
+                None => true,
+                Some(b) => lane[heads[i]].arrival < lanes[b][heads[b]].arrival,
+            };
+            if earlier {
+                best = Some(i);
+            }
+        }
+        let Some(i) = best else { break };
+        let mut r = lanes[i][heads[i]];
+        heads[i] += 1;
+        r.id = out.len() as u64;
+        out.push(r);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{app_id, registry};
+    use crate::workload::boost_rate;
+
+    fn flat(n: usize) -> Vec<Modulation> {
+        vec![Modulation::Flat; n]
+    }
+
+    #[test]
+    fn deterministic_and_sorted_with_sequential_ids() {
+        let reg = registry();
+        let a = generate_modulated(&reg, &flat(reg.len()), 3600.0, 5);
+        let b = generate_modulated(&reg, &flat(reg.len()), 3600.0, 5);
+        assert_eq!(a, b);
+        let c = generate_modulated(&reg, &flat(reg.len()), 3600.0, 6);
+        assert_ne!(a, c);
+        for w in a.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
+        for (i, r) in a.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert!(r.arrival < 3600.0);
+        }
+    }
+
+    #[test]
+    fn flat_profiles_respect_base_rates() {
+        let reg = registry();
+        let reqs = generate_modulated(&reg, &flat(reg.len()), 3600.0, 42);
+        let td = app_id(&reg, "tdfir").unwrap();
+        let n = reqs.iter().filter(|r| r.app == td).count() as f64;
+        // Poisson(300) over 1h, ±4 sigma.
+        assert!((n - 300.0).abs() < 70.0, "{n}");
+    }
+
+    #[test]
+    fn diurnal_concentrates_arrivals_in_the_peak_half() {
+        let mut reg = registry();
+        boost_rate(&mut reg, "tdfir", 3600.0);
+        let mut profiles = flat(reg.len());
+        let td = app_id(&reg, "tdfir").unwrap();
+        profiles[td.0 as usize] = Modulation::Diurnal {
+            period_secs: 7200.0,
+            depth: 1.0,
+            phase_secs: 0.0,
+        };
+        let reqs = generate_modulated(&reg, &profiles, 7200.0, 3);
+        let tds: Vec<f64> = reqs
+            .iter()
+            .filter(|r| r.app == td)
+            .map(|r| r.arrival)
+            .collect();
+        let first = tds.iter().filter(|&&t| t < 3600.0).count() as f64;
+        let second = tds.len() as f64 - first;
+        // Integrated rate over the positive half-sine is (1 + 2/π) ≈ 1.64
+        // vs (1 − 2/π) ≈ 0.36 over the trough: better than 4:1.
+        assert!(
+            first > 2.0 * second,
+            "peak half {first} vs trough half {second}"
+        );
+    }
+
+    #[test]
+    fn flash_crowd_steps_the_rate_inside_its_window() {
+        let mut reg = registry();
+        boost_rate(&mut reg, "tdfir", 3600.0);
+        let mut profiles = flat(reg.len());
+        let td = app_id(&reg, "tdfir").unwrap();
+        profiles[td.0 as usize] = Modulation::Flash {
+            start_secs: 1000.0,
+            end_secs: 2000.0,
+            factor: 5.0,
+        };
+        let reqs = generate_modulated(&reg, &profiles, 3000.0, 8);
+        let in_flash = reqs
+            .iter()
+            .filter(|r| r.app == td && r.arrival >= 1000.0 && r.arrival < 2000.0)
+            .count() as f64;
+        let before = reqs
+            .iter()
+            .filter(|r| r.app == td && r.arrival < 1000.0)
+            .count() as f64;
+        // 5x the rate over an equal-length span, with generous slack.
+        assert!(
+            in_flash > 3.0 * before,
+            "flash {in_flash} vs baseline {before}"
+        );
+    }
+
+    #[test]
+    fn modulation_factors_and_peaks_are_consistent() {
+        let d = Modulation::Diurnal {
+            period_secs: 86400.0,
+            depth: 0.8,
+            phase_secs: 0.0,
+        };
+        for t in [0.0, 10000.0, 43200.0, 60000.0, 86400.0] {
+            let f = d.factor_at(t);
+            assert!(f >= 0.0, "t={t} f={f}");
+            assert!(f <= d.peak() + 1e-12, "t={t} f={f}");
+        }
+        // Deep troughs clamp at zero instead of going negative.
+        let deep = Modulation::Diurnal {
+            period_secs: 100.0,
+            depth: 2.0,
+            phase_secs: 0.0,
+        };
+        assert_eq!(deep.factor_at(75.0), 0.0);
+        // A dip flash keeps the envelope at the base rate.
+        let dip = Modulation::Flash {
+            start_secs: 0.0,
+            end_secs: 10.0,
+            factor: 0.25,
+        };
+        assert_eq!(dip.peak(), 1.0);
+        assert_eq!(dip.factor_at(5.0), 0.25);
+        assert_eq!(dip.factor_at(10.0), 1.0);
+    }
+}

@@ -6,8 +6,8 @@ use repro::apps::{app_id, registry, AppId, SizeId, VariantId};
 use repro::coordinator::history::{scan, HistoryStore, RequestRecord, ServedBy};
 use repro::coordinator::server::Deployment;
 use repro::coordinator::{
-    run_adaptive, run_adaptive_from, AdaptiveConfig, AdaptiveState, Approval,
-    ProductionEnv, ReconConfig, ReconOutcome, ResidencyPlan,
+    run_adaptive, run_adaptive_from, run_reactive_reference, AdaptiveConfig, AdaptiveState,
+    Approval, ForecastConfig, ProductionEnv, ReconConfig, ReconOutcome, ResidencyPlan,
     run_reconfiguration,
 };
 use repro::fleet::plane::{run_partitioned, CardHorizons};
@@ -898,6 +898,27 @@ fn recon_outcomes_agree(a: &ReconOutcome, b: &ReconOutcome) -> Result<(), String
         _ => return Err("proposal presence diverged".into()),
     }
     ensure(a.decision == b.decision, "decision")?;
+    for (name, pa, pb) in [
+        ("residency", &a.residency, &b.residency),
+        ("resweep", &a.resweep, &b.resweep),
+    ] {
+        match (pa, pb) {
+            (Some(x), Some(y)) => {
+                ensure(x.entries.len() == y.entries.len(), format!("{name} entries"))?;
+                for (e, f) in x.entries.iter().zip(&y.entries) {
+                    ensure(
+                        e.app == f.app
+                            && e.variant == f.variant
+                            && e.cards == f.cards
+                            && e.improvement_coef.to_bits() == f.improvement_coef.to_bits(),
+                        format!("{name} share for {}", e.app),
+                    )?;
+                }
+            }
+            (None, None) => {}
+            _ => return Err(format!("{name} presence diverged")),
+        }
+    }
     match (&a.reconfig, &b.reconfig) {
         (Some(x), Some(y)) => {
             ensure(
@@ -1049,8 +1070,10 @@ fn prop_data_plane_replay_matches_fleet_oracle() {
 /// resumed run must be bit-identical to an uninterrupted W-window oracle:
 /// request records, recon outcomes, clock, per-card horizons, stall
 /// counts, and the artifact manifest. Runs with the artifact cache both
-/// on and off, so the shortened partial-reconfiguration outages round-trip
-/// through the snapshot too.
+/// on and off (so the shortened partial-reconfiguration outages
+/// round-trip through the snapshot) and with forecasting both on and
+/// off (so the Holt-Winters levels, seasonal tables, and rebalance
+/// cooldown resume bit-identically too).
 #[test]
 fn prop_warm_restart_resumes_bit_identically() {
     forall(
@@ -1064,9 +1087,10 @@ fn prop_warm_restart_resumes_bit_identically() {
                 1 + rng.next_below(windows as u64 - 1) as usize,
                 rng.next_u64(),
                 rng.next_f64() < 0.5,
+                rng.next_f64() < 0.5,
             )
         },
-        |&(cards, windows, k, seed, cache)| {
+        |&(cards, windows, k, seed, cache, forecast_on)| {
             let cfg = AdaptiveConfig {
                 recon: ReconConfig {
                     artifact_cache: cache,
@@ -1077,6 +1101,11 @@ fn prop_warm_restart_resumes_bit_identically() {
                 window_secs: 600.0 + (seed % 7) as f64 * 100.0,
                 cooldown_windows: 1,
                 flap_ratio: 4.0,
+                forecast: ForecastConfig {
+                    enabled: forecast_on,
+                    season_windows: 3,
+                    ..Default::default()
+                },
             };
             let fresh = |cfg: &AdaptiveConfig| {
                 let mut env = FleetEnv::new(registry(), D5005, cards);
@@ -1415,7 +1444,7 @@ fn prop_metrics_merge_is_shard_order_independent() {
 /// bits included — even NaNs and infinities from raw bit patterns.
 #[test]
 fn prop_trace_jsonl_roundtrip_exact() {
-    use repro::telemetry::{DecisionTrace, PlanShare, RankSample, TraceEvent};
+    use repro::telemetry::{DecisionTrace, ForecastSample, PlanShare, RankSample, TraceEvent};
     fn word(rng: &mut Rng) -> String {
         let names = ["tdfir", "mriq", "dft", "sobel", "app-x"];
         names[rng.next_below(names.len() as u64) as usize].to_string()
@@ -1436,7 +1465,7 @@ fn prop_trace_jsonl_roundtrip_exact() {
                         rng.next_f64() * 1e4
                     }
                 };
-                let ev = match rng.next_below(9) {
+                let ev = match rng.next_below(11) {
                     0 => TraceEvent::Window {
                         window: rng.next_below(64),
                         at: f(rng),
@@ -1505,6 +1534,29 @@ fn prop_trace_jsonl_roundtrip_exact() {
                         downtime: f(rng),
                         outage_until: f(rng),
                     },
+                    8 => TraceEvent::Forecast {
+                        at: f(rng),
+                        window: rng.next_below(64),
+                        apps: (0..rng.next_below(4))
+                            .map(|_| ForecastSample {
+                                app: word(rng),
+                                predicted: f(rng),
+                                observed: f(rng),
+                            })
+                            .collect(),
+                    },
+                    9 => TraceEvent::Rebalance {
+                        at: f(rng),
+                        window: rng.next_below(64),
+                        drift: f(rng),
+                        entries: (0..rng.next_below(4))
+                            .map(|_| PlanShare {
+                                app: word(rng),
+                                variant: word(rng),
+                                cards: rng.next_below(64),
+                            })
+                            .collect(),
+                    },
                     _ => TraceEvent::Rejoin {
                         at: f(rng),
                         card: rng.next_below(64) as u16,
@@ -1522,6 +1574,99 @@ fn prop_trace_jsonl_roundtrip_exact() {
             // The array (snapshot) form agrees with the line form.
             let arr = DecisionTrace::from_json(&t.to_json()).map_err(|e| e.to_string())?;
             ensure(arr.to_jsonl() == jsonl, "array/JSONL forms diverged")
+        },
+    );
+}
+
+/// The forecast layer's bit-identity oracle: with `forecast.enabled`
+/// false (the default), `run_adaptive_from` must be byte-for-byte the
+/// retained pre-forecast loop `run_reactive_reference` — same window
+/// reports, recon outcomes, clock bits, request-record bits, and
+/// decision-trace JSONL — on random fleet sizes, window counts, and
+/// window lengths. Forecasting off may not even *touch* the trace.
+#[test]
+fn prop_forecast_off_matches_reactive() {
+    forall(
+        6,
+        0xF0CA57,
+        |rng| {
+            (
+                1 + rng.next_below(3) as usize,
+                2 + rng.next_below(4) as usize,
+                600.0 + rng.next_below(5) as f64 * 300.0,
+            )
+        },
+        |&(cards, windows, window_secs)| {
+            let cfg = AdaptiveConfig {
+                windows,
+                window_secs,
+                ..Default::default()
+            };
+            ensure(!cfg.forecast.enabled, "forecast must default off")?;
+            let fresh = || {
+                let mut env = FleetEnv::new(registry(), D5005, cards);
+                env.enable_telemetry();
+                env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+                env
+            };
+
+            let mut ref_env = fresh();
+            let mut ap = Approval::auto_yes();
+            let mut ref_state = AdaptiveState::default();
+            let oracle =
+                run_reactive_reference(&mut ref_env, &cfg, &mut ap, &mut ref_state, |_, _| {})
+                    .map_err(|e| e.to_string())?;
+
+            let mut env = fresh();
+            let mut ap = Approval::auto_yes();
+            let mut state = AdaptiveState::default();
+            let reports = run_adaptive_from(&mut env, &cfg, &mut ap, &mut state, |_, _| {})
+                .map_err(|e| e.to_string())?;
+
+            ensure(reports.len() == oracle.len(), "report count")?;
+            for (a, b) in reports.iter().zip(&oracle) {
+                ensure(a.window == b.window, "window index")?;
+                ensure(a.requests == b.requests, format!("window {} requests", a.window))?;
+                ensure(
+                    a.reconfigured == b.reconfigured,
+                    format!("window {} reconfigured", a.window),
+                )?;
+                ensure(a.serving == b.serving, format!("window {} serving", a.window))?;
+                match (&a.outcome, &b.outcome) {
+                    (Some(x), Some(y)) => recon_outcomes_agree(x, y)?,
+                    (None, None) => {}
+                    _ => return Err(format!("window {} outcome presence", a.window)),
+                }
+            }
+            ensure(state.cooldown == ref_state.cooldown, "cooldown")?;
+            ensure(state.last_evicted == ref_state.last_evicted, "flap guard")?;
+            ensure(
+                state.forecast == repro::coordinator::ForecastState::default(),
+                "forecast state must stay empty while disabled",
+            )?;
+            ensure(
+                env.clock.now().to_bits() == ref_env.clock.now().to_bits(),
+                "clock bits",
+            )?;
+            ensure(env.history.len() == ref_env.history.len(), "history length")?;
+            for (x, y) in env.history.all().iter().zip(ref_env.history.all()) {
+                ensure(
+                    x.id == y.id
+                        && x.start.to_bits() == y.start.to_bits()
+                        && x.finish.to_bits() == y.finish.to_bits()
+                        && x.served_by == y.served_by,
+                    format!("record bits for {}", x.id),
+                )?;
+            }
+            let (ta, tb) = (
+                env.telemetry().ok_or("telemetry")?,
+                ref_env.telemetry().ok_or("telemetry")?,
+            );
+            ensure(
+                ta.trace.to_jsonl() == tb.trace.to_jsonl(),
+                "decision trace diverged with forecasting disabled",
+            )?;
+            ensure(ta.metrics == tb.metrics, "metrics diverged")
         },
     );
 }

@@ -51,6 +51,13 @@ KINDS = {
     },
     "plan": {"at_bits": "bits", "entries": "arr"},
     "flap_rollback": {"at_bits": "bits", "window": "u64", "app": "str"},
+    "forecast": {"at_bits": "bits", "window": "u64", "apps": "arr"},
+    "rebalance": {
+        "at_bits": "bits",
+        "window": "u64",
+        "drift_bits": "bits",
+        "entries": "arr",
+    },
     "artifact": {
         "at_bits": "bits",
         "app": "str",
@@ -70,10 +77,12 @@ KINDS = {
     "rejoin": {"at_bits": "bits", "card": "num"},
 }
 
-# Sub-object schemas for the two array-carrying events.
+# Sub-object schemas for the array-carrying events ("entries" is shared
+# by plan and rebalance — both carry residency shares).
 SUB = {
     "top": {"app": "str", "usage": "u64", "corrected_bits": "bits"},
     "entries": {"app": "str", "variant": "str", "cards": "u64"},
+    "apps": {"app": "str", "predicted_bits": "bits", "observed_bits": "bits"},
 }
 
 
@@ -200,6 +209,23 @@ def describe(ev):
         return (
             f"`t={at}` **flap guard**: rolled back {ev['app']} "
             f"in window {ev['window']}"
+        )
+    if k == "forecast":
+        rows = ", ".join(
+            f"{s['app']} {fmt_t(s['observed_bits'])} -> {fmt_t(s['predicted_bits'])}"
+            for s in ev["apps"]
+        )
+        return (
+            f"`t={at}` forecast (window {ev['window']}, observed -> "
+            f"predicted): [{rows or '-'}]"
+        )
+    if k == "rebalance":
+        shares = ", ".join(
+            f"{e['app']}:{e['variant']} x{e['cards']}" for e in ev["entries"]
+        )
+        return (
+            f"`t={at}` **rebalance** (window {ev['window']}, drift "
+            f"{ev['drift_bits']:.3f}): [{shares or '-'}]"
         )
     if k == "artifact":
         word = "hit (partial reconfig)" if ev["hit"] else "miss (cold compile)"
