@@ -55,15 +55,22 @@
 //! decision trace. `TRACE_JSONL=path` writes the trace as JSONL —
 //! render it with `python3 tools/render_trace.py path`.
 //!
+//! Chaos drills ride on the same loop: `FAIL_AT=<secs>` scripts a card
+//! failure (`FAIL_CARD` picks the victim, default 0) at that virtual
+//! time and `REPAIR_AT=<secs>` brings it back — the fleet fails over
+//! the dead card's queue with zero loss, the next cycle re-plans around
+//! the hole, and the repaired card re-seats through the artifact cache.
+//!
 //!     cargo run --release --example adaptive_operation
 //!     SERVE_THREADS=8 cargo run --release --example adaptive_operation
 //!     TRACE_JSONL=trace.jsonl cargo run --release --example adaptive_operation
+//!     FAIL_AT=9000 REPAIR_AT=16200 cargo run --release --example adaptive_operation
 
 use repro::apps::registry;
 use repro::coordinator::adaptive::{run_adaptive_from, AdaptiveConfig, AdaptiveState};
 use repro::coordinator::config::RunConfig;
 use repro::coordinator::{Approval, ForecastConfig};
-use repro::fleet::{ConcurrentFleet, FleetEnv};
+use repro::fleet::{ConcurrentFleet, FaultPlan, FleetEnv};
 use repro::fpga::device::{CardId, ReconfigKind};
 use repro::fpga::part::D5005;
 use repro::offload::{search, OffloadConfig};
@@ -101,6 +108,25 @@ fn main() -> anyhow::Result<()> {
     // the service launches only after the initial outage has passed.
     env.deploy(ReconfigKind::Static, "tdfir", &pre.best.variant, pre.improvement);
     env.advance_to(2.0);
+
+    // Chaos knobs: script a card failure (and optional repair) in
+    // seconds of virtual time. The serve path fails the card's queued
+    // work over with zero loss and the controller re-plans around it.
+    let fail_at: Option<f64> = std::env::var("FAIL_AT").ok().and_then(|s| s.parse().ok());
+    let repair_at: Option<f64> = std::env::var("REPAIR_AT").ok().and_then(|s| s.parse().ok());
+    let fail_card: u16 = std::env::var("FAIL_CARD")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    if let Some(at) = fail_at {
+        env.set_fault_plan(FaultPlan::single(CardId(fail_card), at, repair_at));
+        println!(
+            "chaos: card {fail_card} scripted to fail at t={at:.0} s{}\n",
+            repair_at
+                .map(|r| format!(", repair at t={r:.0} s"))
+                .unwrap_or_default()
+        );
+    }
 
     // The serve-thread knob: N > 1 fans each window out across the
     // lock-free data plane; N = 1 serves inline. Either way the results
@@ -171,6 +197,22 @@ fn main() -> anyhow::Result<()> {
     let snap = Json::parse(&snapshot).map_err(|e| anyhow::anyhow!("snapshot: {e}"))?;
     let mut restored = FleetEnv::new(registry(), D5005, CARDS);
     restored.restore_state(snap.get("env").expect("snapshot env"))?;
+    // Fault plans are scenario input, not controller state, so the
+    // snapshot does not carry them: re-arm any events scheduled wholly
+    // after the redeploy; a pair straddling it loses its repair.
+    let snap_t = restored.clock.now();
+    match fail_at {
+        Some(at) if at > snap_t => {
+            restored.set_fault_plan(FaultPlan::single(CardId(fail_card), at, repair_at));
+        }
+        Some(_) if repair_at.is_some_and(|r| r > snap_t) => {
+            println!(
+                "chaos: scripted repair straddles the hour-6 redeploy — dropped \
+                 (fault plans are scenario input, not controller state)"
+            );
+        }
+        _ => {}
+    }
     let mut state = AdaptiveState::from_json(snap.get("loop").expect("snapshot loop"))?;
     let mut env = ConcurrentFleet::new(restored, threads);
 

@@ -311,7 +311,15 @@ where
         if let (Some(p), Some(evicted_app)) =
             (outcome.proposal.as_ref(), state.last_evicted)
         {
+            // A fault-forced re-plan is exempt: when the prior plan was
+            // sized for a card count that no longer exists (a card failed
+            // or rejoined mid-window), rolling back would re-target a
+            // dead card — or strand a repaired one — so the guard yields.
+            let prior_fits_fleet = !prior
+                .as_ref()
+                .is_some_and(|plan| plan.total_cards() != env.cards());
             if reconfigured
+                && prior_fits_fleet
                 && app_id(env.registry(), &p.best.app) == Some(evicted_app)
                 && p.ratio < cfg.flap_ratio
             {
@@ -467,7 +475,14 @@ where
         if let (Some(p), Some(evicted_app)) =
             (outcome.proposal.as_ref(), state.last_evicted)
         {
+            // Same fault exemption as the planned loop: never roll back
+            // onto a plan sized for a fleet that has since lost or
+            // regained a card.
+            let prior_fits_fleet = !prior
+                .as_ref()
+                .is_some_and(|plan| plan.total_cards() != env.cards());
             if reconfigured
+                && prior_fits_fleet
                 && app_id(env.registry(), &p.best.app) == Some(evicted_app)
                 && p.ratio < cfg.flap_ratio
             {

@@ -294,6 +294,46 @@ impl HistoryStore {
         col.dist.add(r.bytes);
     }
 
+    /// Rewrite the *service outcome* of one already-pushed record — the
+    /// failover path re-serving a dead card's queued work on another card
+    /// or the CPU. Only `start`/`finish`/`service_secs`/`served_by`
+    /// change; identity and arrival (`id`, `app`, `size`, `bytes`,
+    /// `arrival`) are immutable, so the arrival-ordered index axes and
+    /// the push-time byte histograms stay valid untouched.
+    ///
+    /// Cold path, deliberately: the app's whole prefix vector is rebuilt
+    /// by the same left fold `push` performs, which keeps every anchored
+    /// prefix lookup bit-identical to both the scan oracle over the
+    /// amended rows and to a [`HistoryStore::from_json`] replay of the
+    /// amended store. Card failures are rare; O(app history) per amend
+    /// is the price of keeping the hot paths exact and branch-free.
+    pub fn amend(
+        &mut self,
+        row: usize,
+        start: f64,
+        finish: f64,
+        service_secs: f64,
+        served_by: ServedBy,
+    ) {
+        let r = &mut self.records[row];
+        r.start = start;
+        r.finish = finish;
+        r.service_secs = service_secs;
+        r.served_by = served_by;
+        let col = &mut self.columns[r.app.0 as usize];
+        let i = col
+            .rows
+            .binary_search(&(row as u32))
+            .expect("amend: row must belong to the record's app column");
+        col.service[i] = service_secs;
+        let mut acc = 0.0;
+        col.prefix[0] = 0.0;
+        for (k, &s) in col.service.iter().enumerate() {
+            acc += s;
+            col.prefix[k + 1] = acc;
+        }
+    }
+
     /// Pre-size every buffer (row store and **each** app column) for
     /// `additional` more requests, so a serving loop never reallocates
     /// regardless of how the trace splits across apps. That worst-case
@@ -832,6 +872,51 @@ mod tests {
             h.apps_in_window(0.0, f64::INFINITY),
             back.apps_in_window(0.0, f64::INFINITY)
         );
+    }
+
+    #[test]
+    fn amend_rewrites_outcome_and_refolds_prefix_exactly() {
+        let services = [1e-9, 3.7, 2.5e8, 1e-3, 7.1];
+        let mut h = HistoryStore::with_apps(2);
+        for (i, &s) in services.iter().enumerate() {
+            let mut r = rec((i % 2) as u16, i as f64, s);
+            r.id = i as u64;
+            r.served_by = ServedBy::Fpga(CardId(1));
+            h.push(r);
+        }
+        // Re-serve row 2 (app 0's second record) on the CPU, later and
+        // slower — the failover shape.
+        h.amend(2, 10.0, 14.0, 4.0, ServedBy::Cpu);
+        let r = &h.all()[2];
+        assert_eq!(r.served_by, ServedBy::Cpu);
+        assert_eq!(r.start, 10.0);
+        assert_eq!(r.finish, 14.0);
+        assert_eq!(r.arrival, 2.0, "identity fields untouched");
+        // Every window total still bit-matches the scan oracle over the
+        // amended rows (prefix refold == scan's left fold).
+        for from in 0..services.len() {
+            for to in from..=services.len() {
+                for app in 0..2u16 {
+                    let (isum, icnt) =
+                        h.totals_in_window(AppId(app), from as f64, to as f64);
+                    let (ssum, scnt) = scan::totals_in_window(
+                        h.all(),
+                        AppId(app),
+                        from as f64,
+                        to as f64,
+                    );
+                    assert_eq!(isum.to_bits(), ssum.to_bits(), "[{from},{to})");
+                    assert_eq!(icnt, scnt);
+                }
+            }
+        }
+        // A JSON replay of the amended store rebuilds the same index.
+        let text = h.to_json().to_pretty();
+        let back = HistoryStore::from_json(&Json::parse(&text).unwrap(), 2).unwrap();
+        let (s0, n0) = h.totals_in_window(AppId(0), 0.0, f64::INFINITY);
+        let (s1, n1) = back.totals_in_window(AppId(0), 0.0, f64::INFINITY);
+        assert_eq!(s0.to_bits(), s1.to_bits());
+        assert_eq!(n0, n1);
     }
 
     #[test]

@@ -943,6 +943,59 @@ pub fn run_reconfiguration_planned<E: Environment>(
 
     if !proposed {
         emit_proposal(env, &proposal, None);
+        // Fault-forced re-plan: a card failure (or a repaired card
+        // rejoining) changed the healthy card count out from under the
+        // active residency plan. Re-seat the plan around the hole right
+        // now — this is not a best-app flip, so it bypasses the step-4/5
+        // proposal (no approval prompt, no cooldown reset), and the
+        // Step-7 flap guard exempts the changed card count from
+        // rollback. Seating and shares come from the same ranking (or
+        // forecast-adjusted ranking) step 6 would use.
+        if cfg.residency_apps > 1
+            && env.cards() >= 1
+            && env
+                .residency()
+                .is_some_and(|p| p.total_cards() != env.cards())
+        {
+            let plan = match forecast {
+                Some(f) => {
+                    let adjusted = super::forecast::apply_forecast(&rankings, f);
+                    plan_residency(
+                        &adjusted,
+                        &proposal.candidates,
+                        env.cards(),
+                        cfg.residency_apps,
+                    )
+                }
+                None => plan_residency(
+                    &rankings,
+                    &proposal.candidates,
+                    env.cards(),
+                    cfg.residency_apps,
+                ),
+            };
+            if !plan.entries.is_empty() {
+                emit_plan(env, &plan);
+                let report = env.deploy_plan(cfg.kind, &plan);
+                steps.reconfig_downtime_secs = report.downtime_secs;
+                let residency = if plan.entries.len() > 1 {
+                    Some(plan)
+                } else {
+                    None
+                };
+                return Ok(ReconOutcome {
+                    rankings,
+                    representatives,
+                    searches,
+                    proposal: Some(proposal),
+                    decision: None,
+                    reconfig: Some(report),
+                    residency,
+                    resweep: None,
+                    steps,
+                });
+            }
+        }
         // Per-entry variant re-search: no best-app flip this cycle, but a
         // secondary resident's representative data may have drifted until
         // this window's search winner differs from its deployed variant.

@@ -83,6 +83,7 @@ use crate::util::json::Json;
 use crate::workload::Request;
 
 use super::artifact::ArtifactLibrary;
+use super::fault::{FaultEvent, FaultPlan};
 use super::pool::CardPool;
 use super::router::FleetRouter;
 use super::snapshot::RoutingEvent;
@@ -178,6 +179,20 @@ pub struct FleetEnv {
     /// preallocated slots, no allocation) and the decision trace is
     /// appended on the cold control paths alongside `routing_log`.
     telemetry: Option<Telemetry>,
+    /// Armed chaos schedule (`None` = no fault injection, the default —
+    /// the fleet is then bitwise the pre-chaos fleet; a single branch on
+    /// the serve path is the whole cost).
+    fault_plan: Option<FaultPlan>,
+    /// Next unfired `fault_plan` event index.
+    fault_cursor: usize,
+    /// Per-card failed flags, indexed by `CardId.0`. A failed card is
+    /// unroutable, excluded from every deploy target, and counts out of
+    /// [`FleetEnv::healthy_cards`] until its `Repair` event fires.
+    failed: Vec<bool>,
+    /// Repaired cards waiting out their re-seat outage: `(card,
+    /// rejoin_at)`. Processed alongside fault events — the card rejoins
+    /// the rotation at `rejoin_at` exactly, like a roll rejoin.
+    pending_rejoins: Vec<(CardId, f64)>,
 }
 
 impl FleetEnv {
@@ -205,6 +220,10 @@ impl FleetEnv {
             models: HashMap::new(),
             artifacts: None,
             telemetry: None,
+            fault_plan: None,
+            fault_cursor: 0,
+            failed: vec![false; cards],
+            pending_rejoins: Vec::new(),
             registry,
         }
     }
@@ -304,14 +323,69 @@ impl FleetEnv {
         self.active_plan = None;
         self.roll = None;
         self.routing_log.clear();
+        // The armed fault plan is scenario input like the strategy, not
+        // operational state: a reset replay fires the same schedule.
+        self.fault_cursor = 0;
+        self.failed = vec![false; cards];
+        self.pending_rejoins.clear();
         if let Some(t) = self.telemetry.as_mut() {
             t.reset();
         }
     }
 
-    /// Number of cards in the pool.
+    /// Arm a chaos schedule. Events fire lazily as the virtual clock
+    /// advances past them (on serves and window boundaries), exactly
+    /// like an in-flight roll. Replaces any previously armed plan;
+    /// already-fired events of the old plan are not undone.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.fault_plan = Some(plan);
+        self.fault_cursor = 0;
+    }
+
+    /// Builder form of [`FleetEnv::set_fault_plan`].
+    pub fn with_fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.set_fault_plan(plan);
+        self
+    }
+
+    /// The armed chaos schedule, if any.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.fault_plan.as_ref()
+    }
+
+    /// Is `card` currently dead (failed and not yet repaired)?
+    pub fn is_failed(&self, card: CardId) -> bool {
+        self.failed[card.0 as usize]
+    }
+
+    /// Cards currently alive (pool size minus failed cards) — the card
+    /// count the controller plans residency against.
+    pub fn healthy_cards(&self) -> usize {
+        self.pool.len() - self.failed.iter().filter(|&&f| f).count()
+    }
+
+    /// Any chaos-driven routing change due at or before `t`: an unfired
+    /// fault event, or a repaired card whose re-seat outage ends by `t`.
+    /// The concurrent plane checks this per window and falls back to the
+    /// sequential path when it fires mid-window, the same pattern as
+    /// `roll_in_progress` (fault windows are rare and correctness-
+    /// critical; steady failed or healthy windows still fan out).
+    pub fn fault_activity_before(&self, t: f64) -> bool {
+        if self.pending_rejoins.iter().any(|&(_, at)| at <= t) {
+            return true;
+        }
+        self.fault_plan
+            .as_ref()
+            .and_then(|p| p.peek(self.fault_cursor))
+            .is_some_and(|e| e.at() <= t)
+    }
+
+    /// Number of cards currently alive — [`FleetEnv::healthy_cards`];
+    /// the pool's physical size (dead cards included) is
+    /// `self.pool.len()`. Without fault injection the two are equal, so
+    /// every pre-chaos caller is unchanged.
     pub fn cards(&self) -> usize {
-        self.pool.len()
+        self.healthy_cards()
     }
 
     /// The fleet's logical deployment (what it is converging on).
@@ -474,12 +548,15 @@ impl FleetEnv {
             id,
             variant,
             improvement_coef,
-            self.pool.len(),
+            self.healthy_cards(),
         ));
-        // Every card is (re)programmed unconditionally — the paper's
-        // semantics; only the plan path below skips matching slots.
+        // Every healthy card is (re)programmed unconditionally — the
+        // paper's semantics; only the plan path below skips matching
+        // slots. Dead cards are untargetable until their repair.
         let entries = vec![(dep, app.to_string(), variant.to_string())];
-        let targets = vec![Some(0); self.pool.len()];
+        let targets = (0..self.pool.len())
+            .map(|i| if self.failed[i] { None } else { Some(0) })
+            .collect();
         self.transition(kind, entries, targets)
     }
 
@@ -491,23 +568,32 @@ impl FleetEnv {
     /// and a transition only pays outages on the cards that change.
     ///
     /// Panics on an empty plan or a plan whose card total differs from
-    /// the pool's — controller bugs, same contract as `deploy`.
+    /// the healthy-card count — controller bugs, same contract as
+    /// `deploy`. (Without fault injection "healthy" is the whole pool,
+    /// so the pre-chaos contract is unchanged; with dead cards the
+    /// controller plans for the cards that exist *operationally*, and
+    /// entry blocks map onto the healthy cards in ascending index
+    /// order, holes skipped.)
     pub fn deploy_plan(&mut self, kind: ReconfigKind, plan: &ResidencyPlan) -> ReconfigReport {
         assert!(!plan.entries.is_empty(), "deploy_plan: empty residency plan");
         assert_eq!(
             plan.total_cards(),
-            self.pool.len(),
-            "deploy_plan: plan must cover every card exactly once"
+            self.healthy_cards(),
+            "deploy_plan: plan must cover every healthy card exactly once"
         );
         let entries: Vec<TargetLogic> = plan
             .entries
             .iter()
             .map(|e| (e.deployment(), e.app.clone(), e.variant.clone()))
             .collect();
-        let mut targets: Vec<Option<usize>> = Vec::with_capacity(self.pool.len());
-        for (ei, e) in plan.entries.iter().enumerate() {
-            for _ in 0..e.cards {
-                targets.push(Some(ei));
+        let mut targets: Vec<Option<usize>> = vec![None; self.pool.len()];
+        {
+            let mut healthy = (0..self.pool.len()).filter(|&i| !self.failed[i]);
+            for (ei, e) in plan.entries.iter().enumerate() {
+                for _ in 0..e.cards {
+                    let i = healthy.next().expect("plan sized to healthy cards");
+                    targets[i] = Some(ei);
+                }
             }
         }
         // Skip cards already holding their exact plan slot.
@@ -605,6 +691,11 @@ impl FleetEnv {
     /// (outage horizon, `RoutingEvent` stamp, roll rejoin time, stall
     /// accounting, downtime totals) reads it off the report, so a
     /// cache-shortened outage propagates with no special cases.
+    /// `effective` is the virtual time the routing change is stamped
+    /// with: the current clock on the ordinary deploy paths, the event
+    /// time when a fault-processing step reprograms mid-advance (the
+    /// clock has already jumped to the triggering arrival, but the
+    /// repair happened at its scheduled instant).
     #[allow(clippy::too_many_arguments)]
     fn reprogram(
         &mut self,
@@ -615,13 +706,13 @@ impl FleetEnv {
         app: &str,
         variant: &str,
         dep: Deployment,
+        effective: f64,
     ) -> ReconfigReport {
         let report = self
             .pool
             .reconfigure_card_with_downtime(card, at, kind, downtime_secs, app, variant, dep);
         self.router.note_deploy(card, dep.app);
         let outage_until = report.started_at + report.downtime_secs;
-        let effective = self.clock.now();
         self.routing_log.push(RoutingEvent::Reprogram {
             card,
             dep,
@@ -675,10 +766,15 @@ impl FleetEnv {
         let mut first = None;
         for (i, t) in targets.iter().enumerate() {
             let card = CardId(i as u16);
+            // Dead cards are untargeted AND must not be rejoined — they
+            // stay out of the rotation until their repair event.
+            if self.failed[i] {
+                continue;
+            }
             if let Some(ei) = t {
                 let (dep, app, variant) = &entries[*ei];
                 let report =
-                    self.reprogram(card, now, kind, downtimes[*ei], app, variant, *dep);
+                    self.reprogram(card, now, kind, downtimes[*ei], app, variant, *dep, now);
                 if first.is_none() {
                     first = Some(report);
                 }
@@ -736,10 +832,18 @@ impl FleetEnv {
     /// Called on every serve (no-op without a roll) and at window
     /// boundaries.
     fn advance_roll(&mut self) {
+        self.advance_roll_until(self.clock.now());
+    }
+
+    /// [`FleetEnv::advance_roll`] with an explicit horizon: the fault
+    /// processor calls this with each fault-event time *before* firing
+    /// the event, so roll rejoins with earlier virtual stamps reach the
+    /// routing log first and the log stays time-ordered (the
+    /// `ChainBuilder` asserts it).
+    fn advance_roll_until(&mut self, now: f64) {
         let Some(mut roll) = self.roll.take() else {
             return;
         };
-        let now = self.clock.now();
         loop {
             if let Some((card, rejoin_at)) = roll.reprogramming {
                 if now < rejoin_at {
@@ -762,8 +866,12 @@ impl FleetEnv {
                 self.router.set_routable(card, true);
                 roll.reprogramming = None;
             }
-            // Cards keeping their current logic are not drained at all.
-            while roll.next < roll.targets.len() && roll.targets[roll.next].is_none() {
+            // Cards keeping their current logic are not drained at all;
+            // neither are failed cards — their plan slot is a hole the
+            // fault-forced re-plan fills, not a roll target.
+            while roll.next < roll.targets.len()
+                && (roll.targets[roll.next].is_none() || self.failed[roll.next])
+            {
                 roll.next += 1;
             }
             if roll.next >= roll.targets.len() {
@@ -793,16 +901,218 @@ impl FleetEnv {
                 app,
                 variant,
                 *dep,
+                now,
             );
             roll.reprogramming = Some((card, start + report.downtime_secs));
         }
         self.roll = Some(roll);
     }
 
-    /// Advance the virtual clock (e.g. to a window boundary), letting an
-    /// in-flight roll rejoin any card whose outage has passed.
+    /// Fire every armed chaos item due by the current clock — scheduled
+    /// `Fail`/`Repair` events and repaired-card re-seat rejoins — in
+    /// virtual-time order (rejoins first on ties, so a card is back in
+    /// rotation before a same-instant fault elsewhere re-dispatches onto
+    /// it). Each item first catches the roll up to its own time, keeping
+    /// the routing log's effective stamps non-decreasing. The un-armed
+    /// fleet pays exactly one branch here — the whole serve-path cost of
+    /// the chaos engine.
+    fn advance_chaos(&mut self) {
+        if self.fault_plan.is_none() && self.pending_rejoins.is_empty() {
+            return;
+        }
+        let now = self.clock.now();
+        loop {
+            let rejoin = self
+                .pending_rejoins
+                .iter()
+                .enumerate()
+                .filter(|&(_, &(_, at))| at <= now)
+                .min_by(|a, b| {
+                    a.1 .1.partial_cmp(&b.1 .1).expect("rejoin times are finite")
+                })
+                .map(|(i, &(card, at))| (i, card, at));
+            let event = self
+                .fault_plan
+                .as_ref()
+                .and_then(|p| p.peek(self.fault_cursor))
+                .filter(|e| e.at() <= now)
+                .copied();
+            match (rejoin, event) {
+                (None, None) => return,
+                (Some((i, card, at)), ev) => {
+                    if let Some(e) = ev.filter(|e| e.at() < at) {
+                        self.fault_cursor += 1;
+                        self.fire_fault(e);
+                    } else {
+                        self.pending_rejoins.swap_remove(i);
+                        self.fire_pending_rejoin(card, at);
+                    }
+                }
+                (None, Some(e)) => {
+                    self.fault_cursor += 1;
+                    self.fire_fault(e);
+                }
+            }
+        }
+    }
+
+    fn fire_fault(&mut self, e: FaultEvent) {
+        match e {
+            FaultEvent::Fail { card, at } => self.fire_fail(card, at),
+            FaultEvent::Repair { card, at } => self.fire_repair(card, at),
+        }
+    }
+
+    /// The card dies at `at`: it leaves the rotation and the holder index
+    /// (`RoutingEvent::Fail`, folded by the snapshot chain like a drain
+    /// plus a slot wipe), its device horizons truncate to the failure
+    /// instant, and every request it had queued or in flight past `at`
+    /// is re-served — on the surviving holders when any hold its app, on
+    /// the CPU pool otherwise. **Zero requests are lost**; their history
+    /// rows are amended in place (cold path — fails are rare, the full
+    /// history scan is deliberate simplicity).
+    fn fire_fail(&mut self, card: CardId, at: f64) {
+        self.advance_roll_until(at);
+        if let Some(roll) = self.roll.as_mut() {
+            // A roll mid-reprogram on the dying card never finishes; the
+            // roll moves on past the hole.
+            if roll.reprogramming.is_some_and(|(c, _)| c == card) {
+                roll.reprogramming = None;
+            }
+        }
+        self.failed[card.0 as usize] = true;
+        self.pending_rejoins.retain(|&(c, _)| c != card);
+        self.router.note_fail(card);
+        self.pool.fail_card(card, at);
+        self.routing_log
+            .push(RoutingEvent::Fail { card, effective: at });
+        if let Some(t) = self.telemetry.as_mut() {
+            t.trace.push(TraceEvent::Fail { at, card: card.0 });
+        }
+        let orphans: Vec<(usize, RequestRecord)> = self
+            .history
+            .all()
+            .iter()
+            .enumerate()
+            .filter(|&(_, r)| r.served_by == ServedBy::Fpga(card) && r.finish > at)
+            .map(|(row, r)| (row, *r))
+            .collect();
+        let mut moved = 0u64;
+        let mut cpu = 0u64;
+        for (row, r) in orphans {
+            if let Some(target) = self.router.route(&self.pool, r.app, at) {
+                let dep = self
+                    .pool
+                    .deployment(target)
+                    .expect("routed card holds logic");
+                let service = self
+                    .table
+                    .service_time(r.app, r.size, dep.variant)
+                    .expect("failover re-serves an already-served app/size");
+                let (start, finish, stalled) = self.pool.schedule(target, at, service);
+                if stalled {
+                    self.router.record_stall();
+                }
+                self.history
+                    .amend(row, start, finish, service, ServedBy::Fpga(target));
+                moved += 1;
+            } else {
+                let service = self
+                    .table
+                    .service_time(r.app, r.size, VariantId::CPU)
+                    .expect("the CPU lane exists for every table app/size");
+                self.history
+                    .amend(row, at, at + service, service, ServedBy::Cpu);
+                cpu += 1;
+            }
+        }
+        if let Some(t) = self.telemetry.as_mut() {
+            t.trace.push(TraceEvent::Failover {
+                at,
+                card: card.0,
+                moved,
+                cpu,
+            });
+        }
+    }
+
+    /// The card comes back **blank** at `at`. With a residency intent it
+    /// re-seats to the plan's primary logic through the one reprogram
+    /// choke point — the artifact cache (when attached) turns that into
+    /// a warm partial reconfig — and rejoins when the outage ends (a
+    /// pending rejoin, processed like a roll rejoin at its exact time).
+    /// With no plan the blank card simply rejoins: it can hold no logic
+    /// until a deploy targets it.
+    fn fire_repair(&mut self, card: CardId, at: f64) {
+        self.advance_roll_until(at);
+        self.failed[card.0 as usize] = false;
+        let seat = self.active_plan.as_ref().map(|p| {
+            let e = p.primary();
+            (e.deployment(), e.app.clone(), e.variant.clone())
+        });
+        let Some((dep, app, variant)) = seat else {
+            self.routing_log
+                .push(RoutingEvent::Rejoin { card, effective: at });
+            if let Some(t) = self.telemetry.as_mut() {
+                t.trace.push(TraceEvent::Repair {
+                    at,
+                    card: card.0,
+                    downtime: 0.0,
+                });
+                t.trace.push(TraceEvent::Rejoin { at, card: card.0 });
+            }
+            self.router.set_routable(card, true);
+            return;
+        };
+        let kind = ReconfigKind::Static;
+        let cold = kind.downtime_secs();
+        let downtime = match self.artifacts.as_mut() {
+            None => cold,
+            Some(lib) => {
+                let hit = lib.acquire(dep, &app, &variant, at);
+                let dt = if hit { lib.fraction() * cold } else { cold };
+                if let Some(t) = self.telemetry.as_mut() {
+                    t.trace.push(TraceEvent::Artifact {
+                        at,
+                        app: app.clone(),
+                        variant: variant.clone(),
+                        hit,
+                        downtime: dt,
+                    });
+                }
+                dt
+            }
+        };
+        if let Some(t) = self.telemetry.as_mut() {
+            t.trace.push(TraceEvent::Repair {
+                at,
+                card: card.0,
+                downtime,
+            });
+        }
+        let report = self.reprogram(card, at, kind, downtime, &app, &variant, dep, at);
+        self.pending_rejoins
+            .push((card, report.started_at + report.downtime_secs));
+    }
+
+    /// A repaired card's re-seat outage ended at `at`: back into the
+    /// rotation, logged at `at` exactly (same contract as a roll rejoin).
+    fn fire_pending_rejoin(&mut self, card: CardId, at: f64) {
+        self.advance_roll_until(at);
+        self.routing_log
+            .push(RoutingEvent::Rejoin { card, effective: at });
+        if let Some(t) = self.telemetry.as_mut() {
+            t.trace.push(TraceEvent::Rejoin { at, card: card.0 });
+        }
+        self.router.set_routable(card, true);
+    }
+
+    /// Advance the virtual clock (e.g. to a window boundary), letting
+    /// due fault events fire and an in-flight roll rejoin any card whose
+    /// outage has passed.
     pub fn advance_to(&mut self, t: f64) {
         self.clock.advance_to(t);
+        self.advance_chaos();
         self.advance_roll();
     }
 
@@ -815,6 +1125,7 @@ impl FleetEnv {
     /// across calls.
     pub fn serve(&mut self, req: &Request) -> anyhow::Result<RequestRecord> {
         self.clock.advance_to(req.arrival.max(self.clock.now()));
+        self.advance_chaos();
         self.advance_roll();
         let mut stalled = false;
         let record = if let Some(card) = self.router.route(&self.pool, req.app, req.arrival)
@@ -952,10 +1263,30 @@ impl FleetEnv {
             Some(a) => state.set("artifacts", a.to_json()),
             None => state.set("artifacts", Json::Null),
         };
-        match &self.telemetry {
+        state = match &self.telemetry {
             Some(t) => state.set("telemetry", t.to_json()),
             None => state.set("telemetry", Json::Null),
-        }
+        };
+        state = match &self.fault_plan {
+            Some(p) => state.set("fault_plan", p.to_json()),
+            None => state.set("fault_plan", Json::Null),
+        };
+        let rejoins: Vec<Json> = self
+            .pending_rejoins
+            .iter()
+            .map(|&(card, at)| {
+                Json::obj()
+                    .set("card", card.0 as usize)
+                    .set("rejoin_bits", Json::from_f64_bits(at))
+            })
+            .collect();
+        state
+            .set("fault_cursor", Json::from_u64(self.fault_cursor as u64))
+            .set(
+                "failed",
+                Json::Arr(self.failed.iter().map(|&f| Json::Bool(f)).collect()),
+            )
+            .set("pending_rejoins", Json::Arr(rejoins))
     }
 
     /// Restore a [`FleetEnv::save_state`] snapshot into this environment,
@@ -1048,6 +1379,52 @@ impl FleetEnv {
         self.telemetry = match j.get("telemetry") {
             Some(Json::Null) | None => None,
             Some(t) => Some(Telemetry::from_json(t)?),
+        };
+        // Chaos fields: missing keys (pre-chaos snapshot) read as "no
+        // fault injection", keeping old snapshots restorable.
+        self.fault_plan = match j.get("fault_plan") {
+            Some(Json::Null) | None => None,
+            Some(p) => Some(FaultPlan::from_json(p)?),
+        };
+        self.fault_cursor = match j.get("fault_cursor") {
+            None => 0,
+            Some(c) => c
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("malformed `fault_cursor`"))?,
+        };
+        self.failed = match j.get("failed") {
+            None => vec![false; self.pool.len()],
+            Some(f) => {
+                let arr = f
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("malformed `failed`"))?;
+                anyhow::ensure!(
+                    arr.len() == self.pool.len(),
+                    "snapshot `failed` has {} cards, pool has {}",
+                    arr.len(),
+                    self.pool.len()
+                );
+                arr.iter()
+                    .map(|b| {
+                        b.as_bool()
+                            .ok_or_else(|| anyhow::anyhow!("malformed `failed` flag"))
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?
+            }
+        };
+        self.pending_rejoins = match j.get("pending_rejoins") {
+            None => Vec::new(),
+            Some(r) => r
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("malformed `pending_rejoins`"))?
+                .iter()
+                .map(|e| {
+                    Ok((
+                        CardId(e.usize_at("card")? as u16),
+                        e.f64_bits_at("rejoin_bits")?,
+                    ))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?,
         };
         self.routing_log.clear();
         Ok(())
@@ -1230,7 +1607,7 @@ impl Environment for FleetEnv {
     }
 
     fn cards(&self) -> usize {
-        self.pool.len()
+        self.healthy_cards()
     }
 
     fn is_resident(&self, app: AppId, variant: VariantId) -> bool {
@@ -1664,7 +2041,7 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "cover every card")]
+    #[should_panic(expected = "cover every healthy card")]
     fn deploy_plan_rejects_malformed_plans() {
         let mut env = FleetEnv::new(registry(), D5005, 4);
         let plan = plan_of(&env, &[("tdfir", 1), ("mriq", 1)]);
@@ -1904,5 +2281,249 @@ mod tests {
         let mut back = FleetEnv::new(registry(), D5005, 2);
         back.restore_state(&plain.save_state()).expect("restore");
         assert!(back.telemetry().is_none());
+    }
+
+    #[test]
+    fn card_failure_reroutes_in_flight_work_and_loses_nothing() {
+        let mut env = fleet_with_tdfir(2).with_telemetry();
+        // Six simultaneous arrivals: three queue on each card's FIFO.
+        // Failing card 0 mid-queue (1.5 service times in) orphans its
+        // second and third records whatever the table's service time is.
+        let s = env.offloaded_time("tdfir", "large", "o1").unwrap();
+        let fail_at = 2.0 + 1.5 * s;
+        env.set_fault_plan(FaultPlan::single(CardId(0), fail_at, None));
+        let burst = tdfir_burst(&env, 6, 2.0);
+        env.run_window(&burst).unwrap();
+        let dying: Vec<u64> = env
+            .history
+            .all()
+            .iter()
+            .filter(|r| r.served_by == ServedBy::Fpga(CardId(0)) && r.finish > fail_at)
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(dying.len(), 2, "card 0 must hold work past the failure");
+
+        // The next arrival advances the clock past the failure and
+        // fires it. Zero requests are lost: every orphaned record is
+        // re-served on the survivor (it still holds tdfir).
+        let (td, td_l) = env.resolve("tdfir", "large").unwrap();
+        let probe = Request {
+            id: 99,
+            app: td,
+            size: td_l,
+            arrival: 2.0 + 10.0 * s,
+            bytes: 2.2e6,
+        };
+        let r = env.serve(&probe).unwrap();
+        assert_eq!(r.served_by, ServedBy::Fpga(CardId(1)));
+        assert!(env.is_failed(CardId(0)));
+        assert_eq!(env.healthy_cards(), 1);
+        assert_eq!(env.history.len(), 7, "no record was dropped");
+        for rec in env.history.all() {
+            assert!(
+                !(rec.served_by == ServedBy::Fpga(CardId(0)) && rec.finish > fail_at),
+                "{rec:?} still finishes on the dead card"
+            );
+            assert!(rec.finish >= rec.start, "{rec:?}");
+        }
+        // Re-dispatched work restarts at the failure instant or later,
+        // behind the survivor's FIFO.
+        for id in &dying {
+            let rec = env.history.all().iter().find(|r| r.id == *id).unwrap();
+            assert_eq!(rec.served_by, ServedBy::Fpga(CardId(1)));
+            assert!(rec.start >= fail_at, "{rec:?} restarted before the failure");
+        }
+        // The failure and the failover are visible in the routing log
+        // and the decision trace.
+        assert!(env
+            .routing_log()
+            .iter()
+            .any(|e| matches!(e, RoutingEvent::Fail { card: CardId(0), .. })));
+        let trace = &env.telemetry().unwrap().trace;
+        assert!(trace
+            .events()
+            .iter()
+            .any(|e| matches!(e, TraceEvent::Fail { card: 0, .. })));
+        assert!(trace.events().iter().any(|e| matches!(
+            e,
+            TraceEvent::Failover { card: 0, moved: 2, cpu: 0, .. }
+        )));
+    }
+
+    #[test]
+    fn failed_sole_holder_falls_over_to_the_cpu_pool() {
+        // One card: when it dies there is no surviving holder, so the
+        // orphans land on the CPU pool at the failure instant.
+        let mut env = fleet_with_tdfir(1);
+        let s = env.offloaded_time("tdfir", "large", "o1").unwrap();
+        let fail_at = 2.0 + 1.5 * s;
+        env.set_fault_plan(FaultPlan::single(CardId(0), fail_at, None));
+        let burst = tdfir_burst(&env, 3, 2.0);
+        env.run_window(&burst).unwrap();
+        env.advance_to(2.0 + 10.0 * s);
+        assert_eq!(env.healthy_cards(), 0);
+        assert_eq!(env.history.len(), 3);
+        let on_cpu = env
+            .history
+            .all()
+            .iter()
+            .filter(|r| r.served_by == ServedBy::Cpu)
+            .count();
+        assert_eq!(on_cpu, 2, "both orphans fell over to the CPU pool");
+        for rec in env.history.all() {
+            if rec.served_by == ServedBy::Cpu {
+                assert_eq!(rec.start, fail_at, "{rec:?} re-served at the failure");
+            } else {
+                assert!(rec.finish <= fail_at, "{rec:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn repaired_card_reseats_warm_through_the_artifact_cache() {
+        let mut env = FleetEnv::new(registry(), D5005, 2).with_artifact_cache(0.25);
+        env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+        env.set_fault_plan(FaultPlan::single(CardId(1), 5.0, Some(10.0)));
+        let warm = tdfir_burst(&env, 2, 2.0);
+        env.run_window(&warm).unwrap();
+        // Past the failure: one card down.
+        env.advance_to(6.0);
+        assert!(env.is_failed(CardId(1)));
+        assert_eq!(env.healthy_cards(), 1);
+        assert!(env.pool.card(CardId(1)).logic().is_none(), "logic wiped");
+        // Past the repair: the card re-seats to the plan's primary via
+        // the cache (its tdfir bitstream is on the shelf from the t=0
+        // compile) and rejoins after the warm fraction of the outage.
+        env.advance_to(12.0);
+        assert!(!env.is_failed(CardId(1)));
+        assert_eq!(env.healthy_cards(), 2);
+        let card = env.pool.card(CardId(1));
+        assert!(card.serves("tdfir"), "re-seated to the residency intent");
+        let reseat = card.reconfig_log.last().unwrap();
+        assert_eq!(reseat.started_at, 10.0);
+        assert_eq!(
+            reseat.downtime_secs, 0.25,
+            "warm partial reconfig, not the cold second"
+        );
+        assert!(env.router.is_routable(CardId(1)), "rejoined at 10.25");
+        // And it serves again.
+        let (td, td_l) = env.resolve("tdfir", "large").unwrap();
+        // Load card 0 so the repaired card is the better pick.
+        env.pool.schedule(CardId(0), 13.0, 50.0);
+        let r = env
+            .serve(&Request {
+                id: 77,
+                app: td,
+                size: td_l,
+                arrival: 13.0,
+                bytes: 2.2e6,
+            })
+            .unwrap();
+        assert_eq!(r.served_by, ServedBy::Fpga(CardId(1)));
+    }
+
+    #[test]
+    fn repair_without_a_plan_rejoins_blank() {
+        let mut env = FleetEnv::new(registry(), D5005, 2);
+        env.set_fault_plan(FaultPlan::single(CardId(0), 1.0, Some(2.0)));
+        env.advance_to(5.0);
+        assert!(!env.is_failed(CardId(0)));
+        assert!(env.router.is_routable(CardId(0)));
+        assert!(env.pool.card(CardId(0)).logic().is_none(), "still blank");
+        assert_eq!(env.pool.card(CardId(0)).reconfig_log.len(), 0);
+    }
+
+    #[test]
+    fn unfired_fault_plan_is_bitwise_the_unarmed_fleet() {
+        // Arming a schedule whose events never fire must cost nothing:
+        // the run is bit-identical to the fleet with no plan at all
+        // (and, by induction, to the pre-chaos fleet — the serve path's
+        // only chaos cost is one branch).
+        let mut a = fleet_with_tdfir(3);
+        let mut b = fleet_with_tdfir(3);
+        b.set_fault_plan(FaultPlan::single(CardId(0), 1e12, None));
+        let trace = generate(&registry(), 900.0, 23);
+        let shifted: Vec<Request> = trace
+            .iter()
+            .map(|r| {
+                let mut r = *r;
+                r.arrival += 2.0;
+                r
+            })
+            .collect();
+        for env in [&mut a, &mut b] {
+            env.run_window(&shifted).unwrap();
+            env.deploy(ReconfigKind::Static, "mriq", "o1", 2.0);
+            env.advance_to(env.clock.now() + 30.0);
+        }
+        assert_eq!(a.history.len(), b.history.len());
+        for (ra, rb) in a.history.all().iter().zip(b.history.all()) {
+            assert_eq!(ra.start.to_bits(), rb.start.to_bits());
+            assert_eq!(ra.finish.to_bits(), rb.finish.to_bits());
+            assert_eq!(ra.served_by, rb.served_by);
+        }
+        assert_eq!(a.serve_stalls(), b.serve_stalls());
+        for i in 0..3u16 {
+            let (ca, cb) = (a.pool.card(CardId(i)), b.pool.card(CardId(i)));
+            assert_eq!(ca.reconfig_log, cb.reconfig_log);
+            assert_eq!(ca.busy_until().to_bits(), cb.busy_until().to_bits());
+        }
+        assert_eq!(
+            format!("{:?}", a.routing_log()),
+            format!("{:?}", b.routing_log())
+        );
+    }
+
+    #[test]
+    fn chaos_state_rides_save_and_restore() {
+        // Snapshot between the repair firing and its re-seat rejoin, so
+        // the pending rejoin, the fired cursor, and the plan itself all
+        // have to ride the snapshot for the resumed run to be identical.
+        let mut env = fleet_with_tdfir(2);
+        env.set_fault_plan(FaultPlan::single(CardId(1), 5.0, Some(20.0)));
+        let warm = tdfir_burst(&env, 4, 2.0);
+        env.run_window(&warm).unwrap();
+        env.advance_to(20.5); // fail fired; repair fired; rejoin pends at 21
+        assert!(!env.is_failed(CardId(1)));
+        assert!(!env.router.is_routable(CardId(1)), "still re-seating");
+
+        let snap = env.save_state();
+        let mut back = FleetEnv::new(registry(), D5005, 2);
+        back.restore_state(&Json::parse(&snap.to_pretty()).unwrap())
+            .unwrap();
+        assert!(back.fault_plan().is_some());
+        assert!(!back.router.is_routable(CardId(1)));
+
+        let (td, td_l) = env.resolve("tdfir", "large").unwrap();
+        for (i, t) in [22.0, 22.5, 23.0].iter().enumerate() {
+            let req = Request {
+                id: 9_000 + i as u64,
+                app: td,
+                size: td_l,
+                arrival: *t,
+                bytes: 2.2e6,
+            };
+            let ra = env.serve(&req).unwrap();
+            let rb = back.serve(&req).unwrap();
+            assert_eq!(ra.start.to_bits(), rb.start.to_bits());
+            assert_eq!(ra.finish.to_bits(), rb.finish.to_bits());
+            assert_eq!(ra.served_by, rb.served_by);
+        }
+        assert!(env.router.is_routable(CardId(1)), "rejoin fired after restore");
+        assert!(back.router.is_routable(CardId(1)));
+    }
+
+    #[test]
+    fn fault_activity_before_sees_events_and_pending_rejoins() {
+        let mut env = fleet_with_tdfir(2);
+        assert!(!env.fault_activity_before(1e18), "unarmed fleet is quiet");
+        env.set_fault_plan(FaultPlan::single(CardId(0), 5.0, Some(10.0)));
+        assert!(!env.fault_activity_before(4.9));
+        assert!(env.fault_activity_before(5.0));
+        env.advance_to(10.5); // fail + repair fired; rejoin pends at 11
+        assert!(env.fault_activity_before(11.0), "pending rejoin counts");
+        assert!(!env.fault_activity_before(10.9));
+        env.advance_to(12.0);
+        assert!(!env.fault_activity_before(1e18), "schedule exhausted");
     }
 }

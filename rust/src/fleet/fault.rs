@@ -1,0 +1,247 @@
+//! Deterministic card-failure schedules — the chaos engine's input.
+//!
+//! A [`FaultPlan`] is a virtual-time script of `Fail{card, at}` /
+//! `Repair{card, at}` events injected into [`crate::fleet::FleetEnv`].
+//! Like the workload generator it is *deterministic*: the same plan
+//! against the same trace produces the same serve history bit for bit,
+//! which is what lets the N-thread [`crate::fleet::ConcurrentFleet`]
+//! replay a faulty run against the sequential oracle and lets the
+//! chaos bench gate "fault-plan-off is bitwise the pre-chaos fleet".
+//!
+//! The plan is validated at construction (loudly, like the history
+//! store's monotonicity assert): event times are finite and globally
+//! non-decreasing, and each card's events alternate Fail → Repair →
+//! Fail …, starting with a Fail. A malformed plan is a test-harness
+//! bug, not an operational state, so it panics instead of limping.
+//!
+//! Serialization rides every f64 as its exact IEEE-754 bits (see
+//! [`crate::util::json::Json::from_f64_bits`]) so a warm-restarted
+//! controller resumes mid-plan with the identical pending schedule.
+
+use crate::fpga::device::CardId;
+use crate::util::json::Json;
+
+/// One scripted fault event on the virtual clock.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultEvent {
+    /// Card dies at `at`: immediately unroutable, FIFO contents lost
+    /// (the fleet re-serves them — zero requests are lost fleet-wide),
+    /// loaded logic wiped.
+    Fail { card: CardId, at: f64 },
+    /// Card comes back at `at`: blank, and rejoins through the normal
+    /// reprogram path (the artifact cache makes re-seating a warm
+    /// partial reconfig when it holds the bitstream).
+    Repair { card: CardId, at: f64 },
+}
+
+impl FaultEvent {
+    /// The card the event acts on.
+    pub fn card(&self) -> CardId {
+        match *self {
+            FaultEvent::Fail { card, .. } | FaultEvent::Repair { card, .. } => card,
+        }
+    }
+
+    /// Virtual time the event fires.
+    pub fn at(&self) -> f64 {
+        match *self {
+            FaultEvent::Fail { at, .. } | FaultEvent::Repair { at, .. } => at,
+        }
+    }
+
+    fn kind_str(&self) -> &'static str {
+        match self {
+            FaultEvent::Fail { .. } => "fail",
+            FaultEvent::Repair { .. } => "repair",
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("kind", Json::Str(self.kind_str().to_string()))
+            .set("card", self.card().0 as usize)
+            .set("at", Json::from_f64_bits(self.at()))
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<FaultEvent> {
+        let card = CardId(j.usize_at("card")? as u16);
+        let at = j.f64_bits_at("at")?;
+        match j.str_at("kind")? {
+            "fail" => Ok(FaultEvent::Fail { card, at }),
+            "repair" => Ok(FaultEvent::Repair { card, at }),
+            other => anyhow::bail!("unknown fault event kind {other:?}"),
+        }
+    }
+}
+
+/// A validated, time-ordered fault schedule.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Build a plan from an already time-ordered event list.
+    ///
+    /// Panics if any event time is non-finite, if times are not globally
+    /// non-decreasing, or if any card's events fail to alternate
+    /// Fail/Repair starting with a Fail — each of those is a malformed
+    /// script, and firing it would silently corrupt the fleet's state.
+    pub fn new(events: Vec<FaultEvent>) -> FaultPlan {
+        let mut prev = f64::NEG_INFINITY;
+        // Per-card "currently failed" flags, grown on demand.
+        let mut down: Vec<bool> = Vec::new();
+        for e in &events {
+            assert!(e.at().is_finite(), "fault event time must be finite");
+            assert!(
+                e.at() >= prev,
+                "fault events must be time-ordered: {} after {}",
+                e.at(),
+                prev,
+            );
+            prev = e.at();
+            let idx = e.card().0 as usize;
+            if idx >= down.len() {
+                down.resize(idx + 1, false);
+            }
+            match e {
+                FaultEvent::Fail { card, .. } => {
+                    assert!(
+                        !down[idx],
+                        "card {} fails while already failed",
+                        card.0,
+                    );
+                    down[idx] = true;
+                }
+                FaultEvent::Repair { card, .. } => {
+                    assert!(
+                        down[idx],
+                        "card {} repaired while healthy",
+                        card.0,
+                    );
+                    down[idx] = false;
+                }
+            }
+        }
+        FaultPlan { events }
+    }
+
+    /// Convenience: one card dies at `fail_at` and (optionally) comes
+    /// back at `repair_at` — the single-fault scenario every bench and
+    /// the example's `FAIL_AT`/`REPAIR_AT` knobs script.
+    pub fn single(card: CardId, fail_at: f64, repair_at: Option<f64>) -> FaultPlan {
+        let mut events = vec![FaultEvent::Fail { card, at: fail_at }];
+        if let Some(at) = repair_at {
+            events.push(FaultEvent::Repair { card, at });
+        }
+        FaultPlan::new(events)
+    }
+
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// First scheduled event at index ≥ `cursor` (the env keeps the
+    /// cursor; the plan itself is immutable once armed).
+    pub fn peek(&self, cursor: usize) -> Option<&FaultEvent> {
+        self.events.get(cursor)
+    }
+
+    /// Serialize for the warm-restart controller snapshot (exact bits).
+    pub fn to_json(&self) -> Json {
+        Json::obj().set(
+            "events",
+            Json::Arr(self.events.iter().map(FaultEvent::to_json).collect()),
+        )
+    }
+
+    /// Restore a serialized plan (see [`FaultPlan::to_json`]); replays
+    /// construction-time validation on the decoded events.
+    pub fn from_json(j: &Json) -> anyhow::Result<FaultPlan> {
+        let events = j
+            .arr_at("events")?
+            .iter()
+            .map(FaultEvent::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(FaultPlan::new(events))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_orders_and_alternates() {
+        let p = FaultPlan::new(vec![
+            FaultEvent::Fail { card: CardId(1), at: 5.0 },
+            FaultEvent::Fail { card: CardId(0), at: 7.0 },
+            FaultEvent::Repair { card: CardId(1), at: 9.0 },
+            FaultEvent::Fail { card: CardId(1), at: 12.0 },
+        ]);
+        assert_eq!(p.len(), 4);
+        assert_eq!(p.peek(0).unwrap().card(), CardId(1));
+        assert_eq!(p.peek(4), None);
+    }
+
+    #[test]
+    fn single_builds_the_fail_repair_pair() {
+        let p = FaultPlan::single(CardId(2), 10.0, Some(20.0));
+        assert_eq!(
+            p.events(),
+            &[
+                FaultEvent::Fail { card: CardId(2), at: 10.0 },
+                FaultEvent::Repair { card: CardId(2), at: 20.0 },
+            ]
+        );
+        assert_eq!(FaultPlan::single(CardId(2), 10.0, None).len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "time-ordered")]
+    fn out_of_order_events_panic() {
+        let _ = FaultPlan::new(vec![
+            FaultEvent::Fail { card: CardId(0), at: 5.0 },
+            FaultEvent::Fail { card: CardId(1), at: 4.0 },
+        ]);
+    }
+
+    #[test]
+    #[should_panic(expected = "already failed")]
+    fn double_fail_panics() {
+        let _ = FaultPlan::new(vec![
+            FaultEvent::Fail { card: CardId(0), at: 5.0 },
+            FaultEvent::Fail { card: CardId(0), at: 6.0 },
+        ]);
+    }
+
+    #[test]
+    #[should_panic(expected = "while healthy")]
+    fn repair_of_healthy_card_panics() {
+        let _ = FaultPlan::new(vec![FaultEvent::Repair { card: CardId(0), at: 5.0 }]);
+    }
+
+    #[test]
+    fn json_roundtrips_exact_bits() {
+        let p = FaultPlan::new(vec![
+            FaultEvent::Fail { card: CardId(3), at: 0.1 + 0.2 },
+            FaultEvent::Repair { card: CardId(3), at: 1.0 / 3.0 + 1.0 },
+        ]);
+        let text = p.to_json().to_pretty();
+        let back = FaultPlan::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.len(), p.len());
+        for (a, b) in p.events().iter().zip(back.events()) {
+            assert_eq!(a.card(), b.card());
+            assert_eq!(a.at().to_bits(), b.at().to_bits());
+            assert_eq!(a.kind_str(), b.kind_str());
+        }
+    }
+}

@@ -80,9 +80,26 @@
 //! warm-restarted coordinator keeps its compiled artifacts;
 //! `benches/recon_cache.rs` gates the cumulative-downtime win on a
 //! homogeneous↔mixed oscillation.
+//!
+//! # Chaos engine
+//!
+//! [`fault`] injects deterministic card failures: a [`FaultPlan`] of
+//! virtual-time `Fail`/`Repair` events fires inside the serve loop. A
+//! failed card becomes immediately unroutable (`RoutingEvent::Fail` in
+//! the snapshot chain, folded like a drain), its queued FIFO work is
+//! re-served on the surviving holders or the CPU fallback (history
+//! records amended in place — **zero requests are lost**), and the
+//! §3.3 controller re-plans residency around the hole (the flap guard
+//! is exempted from rolling back a fault-forced plan). A repaired card
+//! comes back blank and re-seats through the normal reprogram path,
+//! which the artifact cache turns into a warm partial reconfig.
+//! `benches/chaos.rs` gates zero loss, bounded p99 under failure with
+//! adaptation on, the fault-forced re-plan, the warm rejoin, and the
+//! fault-plan-off ≡ pre-chaos-fleet bit identity.
 
 pub mod artifact;
 pub mod env;
+pub mod fault;
 pub mod plane;
 pub mod pool;
 pub mod router;
@@ -90,6 +107,7 @@ pub mod snapshot;
 
 pub use artifact::{Artifact, ArtifactKey, ArtifactLibrary};
 pub use env::{FleetEnv, ReconfigStrategy};
+pub use fault::{FaultEvent, FaultPlan};
 pub use plane::{ConcurrentFleet, DataShard, PlaneStats, ShardAssignment};
 pub use pool::CardPool;
 pub use router::FleetRouter;

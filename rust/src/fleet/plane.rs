@@ -504,6 +504,16 @@ impl ConcurrentFleet {
         if self.fleet.roll_in_progress() {
             return self.fleet.run_window(trace);
         }
+        // Chaos windows take the sequential path too, same policy as
+        // rolls: a failure mid-window re-routes in-flight work and
+        // amends history rows, which is inherently cross-card. Fault
+        // windows are rare and correctness-critical; steady windows —
+        // healthy or degraded — still fan out (the fresh horizons and
+        // root snapshot below already exclude dead cards).
+        let window_end = trace.last().unwrap().arrival.max(self.fleet.clock.now());
+        if self.fleet.fault_activity_before(window_end) {
+            return self.fleet.run_window(trace);
+        }
         let from = self.fleet.clock.now();
         // No control actions happen mid-window here, so the chain is a
         // single root snapshot of the current routing state; live
@@ -610,7 +620,7 @@ impl Environment for ConcurrentFleet {
     }
 
     fn cards(&self) -> usize {
-        self.fleet.pool.len()
+        self.fleet.healthy_cards()
     }
 
     fn is_resident(&self, app: AppId, variant: VariantId) -> bool {
@@ -789,5 +799,56 @@ mod tests {
         conc.run_window_concurrent(&next).unwrap();
         assert!(bitwise_equal(seq.history.all(), conc.fleet.history.all()));
         assert_eq!(seq.serve_stalls(), conc.fleet.serve_stalls());
+    }
+
+    #[test]
+    fn faulty_windows_fall_back_and_degraded_windows_still_match() {
+        use crate::fleet::fault::FaultPlan;
+        // A failure (no repair) mid-way through the first window; the
+        // second window runs on the degraded 3-card fleet. The N-thread
+        // plane must stay bit-identical to the sequential oracle through
+        // both — the fault window via the sequential fallback, the
+        // degraded steady window via the normal fan-out.
+        let mut seq = deployed_fleet(4);
+        let mut conc = ConcurrentFleet::new(deployed_fleet(4), 3);
+        let mut trace = generate(&seq.registry, 600.0, 31);
+        for r in &mut trace {
+            r.arrival += 2.0;
+        }
+        let mid = trace[trace.len() / 2].arrival;
+        let plan = FaultPlan::single(CardId(1), mid, None);
+        seq.set_fault_plan(plan.clone());
+        conc.fleet.set_fault_plan(plan);
+        let end1 = trace.last().unwrap().arrival;
+        assert!(conc.fleet.fault_activity_before(end1), "fault due this window");
+        seq.run_window(&trace).unwrap();
+        conc.run_window_concurrent(&trace).unwrap();
+        assert!(bitwise_equal(seq.history.all(), conc.fleet.history.all()));
+        assert!(seq.is_failed(CardId(1)) && conc.fleet.is_failed(CardId(1)));
+
+        // Steady degraded window: no pending fault activity, so this
+        // one fans out — and must still match the oracle bit for bit.
+        let mut next = generate(&seq.registry, 600.0, 32);
+        let t0 = seq.clock.now() + 1e-6;
+        for r in &mut next {
+            r.arrival += t0;
+        }
+        assert!(
+            !conc.fleet.fault_activity_before(next.last().unwrap().arrival),
+            "schedule exhausted: this window takes the concurrent path"
+        );
+        seq.run_window(&next).unwrap();
+        conc.run_window_concurrent(&next).unwrap();
+        assert!(bitwise_equal(seq.history.all(), conc.fleet.history.all()));
+        assert_eq!(seq.serve_stalls(), conc.fleet.serve_stalls());
+        for c in 0..4 {
+            let id = CardId(c as u16);
+            assert_eq!(
+                seq.pool.card(id).busy_until().to_bits(),
+                conc.fleet.pool.card(id).busy_until().to_bits(),
+                "card {c} horizon"
+            );
+        }
+        assert_eq!(Environment::cards(&conc), 3, "controller sees the hole");
     }
 }

@@ -159,6 +159,17 @@ impl CardPool {
         (start, finish, stalled)
     }
 
+    /// Chaos hook: card `id` dies at virtual time `at`. The device's
+    /// horizons truncate to `at` and its loaded logic is wiped (see
+    /// [`FpgaDevice::fail_at`]); the pool-level deployment is cleared in
+    /// the same step so every cold-path residency query (`serves`,
+    /// `cards_holding`, `deployments`) agrees with the router's
+    /// unroutable flag — a dead card holds nothing.
+    pub fn fail_card(&mut self, id: CardId, at: f64) {
+        self.cards[id.0 as usize].fail_at(at);
+        self.deployments[id.0 as usize] = None;
+    }
+
     /// Sync one card's FIFO horizon to a worker-computed value — the
     /// data plane's batch flush after a concurrently served window (see
     /// [`FpgaDevice::advance_busy_to`]; outage horizons are untouched,
@@ -215,6 +226,19 @@ mod tests {
         let (s2, _f2, stalled) = p.schedule(CardId(0), 1.5, 2.0);
         assert_eq!(s2, f1);
         assert!(!stalled, "FIFO queueing is not a stall");
+    }
+
+    #[test]
+    fn fail_card_clears_deployment_and_device_state() {
+        let mut p = CardPool::new(D5005, 2);
+        p.reconfigure_card(CardId(0), 0.0, ReconfigKind::Static, "tdfir", "o1", dep(0));
+        p.schedule(CardId(0), 1.0, 50.0);
+        p.fail_card(CardId(0), 5.0);
+        assert!(p.deployment(CardId(0)).is_none());
+        assert!(!p.serves("tdfir"));
+        assert_eq!(p.cards_holding(AppId(0)).count(), 0);
+        assert_eq!(p.card(CardId(0)).busy_until(), 5.0);
+        assert!(p.card(CardId(0)).logic().is_none());
     }
 
     #[test]

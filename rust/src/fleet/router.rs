@@ -136,6 +136,18 @@ impl FleetRouter {
         }
     }
 
+    /// Chaos hook: `card` died. It leaves the rotation like a drain AND
+    /// the router forgets its slot — the device's loaded logic is wiped
+    /// on failure (see `CardPool::fail_card`), so keeping the `card_app`
+    /// mirror would let a later bare rejoin resurrect a holder entry for
+    /// logic that no longer exists, diverging `route` from `route_scan`.
+    /// A repaired card re-enters through the normal
+    /// [`FleetRouter::note_deploy`] + [`FleetRouter::set_routable`] path.
+    pub fn note_fail(&mut self, card: CardId) {
+        self.set_routable(card, false);
+        self.card_app[card.0 as usize] = None;
+    }
+
     fn insert_holder(holders: &mut [Vec<u16>], app: AppId, card: u16) {
         let list = &mut holders[app.0 as usize];
         if let Err(pos) = list.binary_search(&card) {
@@ -323,6 +335,22 @@ mod tests {
         r.set_routable(CardId(2), true);
         assert_eq!(r.holders(AppId(2)), &[1, 2]);
         assert_eq!(r.holders(AppId(0)), &[0]);
+    }
+
+    #[test]
+    fn note_fail_forgets_the_slot_unlike_a_drain() {
+        let pool = pool_of(2, 0);
+        let mut r = FleetRouter::new(&pool, 4);
+        r.note_fail(CardId(0));
+        assert!(!r.is_routable(CardId(0)));
+        assert_eq!(r.holders(AppId(0)), &[1]);
+        // A bare rejoin (no reprogram) must NOT resurrect the holder —
+        // the dead card came back blank.
+        r.set_routable(CardId(0), true);
+        assert_eq!(r.holders(AppId(0)), &[1]);
+        // The normal redeploy path re-seats it.
+        r.note_deploy(CardId(0), AppId(0));
+        assert_eq!(r.holders(AppId(0)), &[0, 1]);
     }
 
     #[test]

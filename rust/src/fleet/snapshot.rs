@@ -36,6 +36,11 @@
 //!    `advance_roll` rejoins when `now >= rejoin_at`, so the first
 //!    arrival `>= rejoin_at` is the first request that can route to the
 //!    card — the same `>=` the crossing rule uses.
+//!  * [`RoutingEvent::Fail`] — chaos injection: the card died at
+//!    `effective`. Folded like a drain plus a slot wipe (the dead
+//!    card's logic is gone); the repaired card's comeback rides the
+//!    ordinary `Reprogram`/`Rejoin` events, so the chain needs no
+//!    repair variant.
 //!
 //! # The chain
 //!
@@ -80,6 +85,12 @@ pub enum RoutingEvent {
         outage_until: f64,
         effective: f64,
     },
+    /// Card died at `effective` (chaos injection): it leaves the
+    /// rotation like a drain AND its slot is forgotten — the device's
+    /// logic is wiped, so the builder must not keep a holder entry a
+    /// later bare rejoin could resurrect. A repaired card re-enters
+    /// through ordinary `Reprogram` + `Rejoin` events.
+    Fail { card: CardId, effective: f64 },
 }
 
 impl RoutingEvent {
@@ -88,7 +99,8 @@ impl RoutingEvent {
         match *self {
             RoutingEvent::Drain { effective, .. }
             | RoutingEvent::Rejoin { effective, .. }
-            | RoutingEvent::Reprogram { effective, .. } => effective,
+            | RoutingEvent::Reprogram { effective, .. }
+            | RoutingEvent::Fail { effective, .. } => effective,
         }
     }
 }
@@ -330,6 +342,10 @@ impl ChainBuilder {
                 self.router.note_deploy(card, dep.app);
                 self.card_dep[card.0 as usize] = Some(dep);
             }
+            RoutingEvent::Fail { card, .. } => {
+                self.router.note_fail(card);
+                self.card_dep[card.0 as usize] = None;
+            }
         }
     }
 
@@ -465,5 +481,47 @@ mod tests {
         assert_eq!(snaps[1].patches[0].outage_until, 11.0);
         assert_eq!(snaps[2].holders(td), &[0, 1], "rejoined");
         assert!(snaps[2].patches.is_empty());
+    }
+
+    #[test]
+    fn builder_folds_fail_as_drain_plus_slot_wipe() {
+        use crate::apps::registry;
+        use crate::fpga::device::ReconfigKind;
+        use crate::fpga::part::D5005;
+
+        let mut env = FleetEnv::new(registry(), D5005, 2);
+        env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.0);
+        let td = crate::apps::app_id(&env.registry, "tdfir").unwrap();
+        let mut b = ChainBuilder::from_env(&env);
+        let events = [
+            RoutingEvent::Fail {
+                card: CardId(0),
+                effective: 10.0,
+            },
+            // Repair comeback: ordinary reprogram + rejoin.
+            RoutingEvent::Reprogram {
+                card: CardId(0),
+                dep: dep(td.0),
+                outage_until: 20.05,
+                effective: 20.0,
+            },
+            RoutingEvent::Rejoin {
+                card: CardId(0),
+                effective: 20.05,
+            },
+        ];
+        let chain = b.chain(&events);
+        let snaps: Vec<_> = chain.snapshots().collect();
+        assert_eq!(snaps.len(), 4, "root + fail + reprogram + rejoin");
+        assert_eq!(snaps[1].holders(td), &[1], "dead card out of rotation");
+        assert!(snaps[1].card_dep[0].is_none(), "slot forgotten");
+        assert!(snaps[1].patches.is_empty(), "a failure patches no horizon");
+        assert_eq!(
+            snaps[2].holders(td),
+            &[1],
+            "reprogrammed but not yet rejoined"
+        );
+        assert_eq!(snaps[2].patches.len(), 1);
+        assert_eq!(snaps[3].holders(td), &[0, 1], "repaired card back");
     }
 }

@@ -166,6 +166,20 @@ impl FpgaDevice {
         (start, finish)
     }
 
+    /// Hard-fail hook: the card dies at virtual time `at`. Whatever the
+    /// FIFO pipeline was doing is lost — both horizons are truncated to
+    /// `at` (a dead card accrues no further backlog, and the fleet
+    /// re-serves its queued work elsewhere). The loaded logic is wiped:
+    /// a power-cycled card comes back blank and must be reprogrammed,
+    /// which is what makes the artifact cache's warm partial reconfig
+    /// matter on repair. Exact-bits assignment; horizons already past
+    /// are clamped *down*, never up.
+    pub fn fail_at(&mut self, at: f64) {
+        self.outage_until = self.outage_until.min(at);
+        self.busy_until = self.busy_until.min(at);
+        self.logic = None;
+    }
+
     /// Advance the FIFO horizon to `busy_until` — the data plane's
     /// batch flush syncing a worker-computed horizon back into the
     /// card after a concurrently served window (the worker replicated
@@ -283,6 +297,21 @@ mod tests {
         assert_eq!(fresh.busy_until().to_bits(), busy.to_bits());
         assert!(fresh.serves("tdfir"));
         assert!(fresh.reconfig_log.is_empty());
+    }
+
+    #[test]
+    fn fail_at_truncates_horizons_and_wipes_logic() {
+        let mut d = FpgaDevice::new(D5005);
+        d.reconfigure(0.0, ReconfigKind::Static, "tdfir", "o1");
+        d.schedule(1.0, 50.0);
+        assert_eq!(d.busy_until(), 51.0);
+        d.fail_at(10.0);
+        assert_eq!(d.busy_until(), 10.0, "queued backlog is gone");
+        assert_eq!(d.outage_until(), 1.0, "past outage is not extended");
+        assert!(d.logic().is_none(), "a dead card comes back blank");
+        // Horizons already behind `at` are left alone (clamp down only).
+        d.fail_at(20.0);
+        assert_eq!(d.busy_until(), 10.0);
     }
 
     #[test]

@@ -126,6 +126,23 @@ pub enum TraceEvent {
     /// A card re-entered the rotation (roll step 3), stamped at its
     /// exact rejoin time.
     Rejoin { at: f64, card: u16 },
+    /// Chaos: a card died at `at` — immediately unroutable, loaded
+    /// logic wiped, FIFO contents orphaned (see `Failover`).
+    Fail { at: f64, card: u16 },
+    /// Chaos: the orphaned work of a failed card was re-served —
+    /// `moved` records onto surviving holders, `cpu` onto the CPU
+    /// pool. Zero requests are lost; history rows are amended in place.
+    Failover {
+        at: f64,
+        card: u16,
+        moved: u64,
+        cpu: u64,
+    },
+    /// Chaos: a card came back at `at` (blank) and re-seats through the
+    /// normal reprogram path, paying `downtime` seconds of outage
+    /// (the artifact-cache fraction on a warm hit; 0 when the fleet has
+    /// no residency intent and the card rejoins bare).
+    Repair { at: f64, card: u16, downtime: f64 },
 }
 
 impl TraceEvent {
@@ -143,6 +160,9 @@ impl TraceEvent {
             TraceEvent::Drain { .. } => "drain",
             TraceEvent::Reprogram { .. } => "reprogram",
             TraceEvent::Rejoin { .. } => "rejoin",
+            TraceEvent::Fail { .. } => "fail",
+            TraceEvent::Failover { .. } => "failover",
+            TraceEvent::Repair { .. } => "repair",
         }
     }
 
@@ -298,6 +318,23 @@ impl TraceEvent {
             TraceEvent::Rejoin { at, card } => base
                 .set("at_bits", Json::from_f64_bits(*at))
                 .set("card", *card as usize),
+            TraceEvent::Fail { at, card } => base
+                .set("at_bits", Json::from_f64_bits(*at))
+                .set("card", *card as usize),
+            TraceEvent::Failover {
+                at,
+                card,
+                moved,
+                cpu,
+            } => base
+                .set("at_bits", Json::from_f64_bits(*at))
+                .set("card", *card as usize)
+                .set("moved", Json::from_u64(*moved))
+                .set("cpu", Json::from_u64(*cpu)),
+            TraceEvent::Repair { at, card, downtime } => base
+                .set("at_bits", Json::from_f64_bits(*at))
+                .set("card", *card as usize)
+                .set("downtime_bits", Json::from_f64_bits(*downtime)),
         }
     }
 
@@ -426,6 +463,21 @@ impl TraceEvent {
             "rejoin" => Ok(TraceEvent::Rejoin {
                 at: j.f64_bits_at("at_bits")?,
                 card: card_at(j)?,
+            }),
+            "fail" => Ok(TraceEvent::Fail {
+                at: j.f64_bits_at("at_bits")?,
+                card: card_at(j)?,
+            }),
+            "failover" => Ok(TraceEvent::Failover {
+                at: j.f64_bits_at("at_bits")?,
+                card: card_at(j)?,
+                moved: j.u64_at("moved")?,
+                cpu: j.u64_at("cpu")?,
+            }),
+            "repair" => Ok(TraceEvent::Repair {
+                at: j.f64_bits_at("at_bits")?,
+                card: card_at(j)?,
+                downtime: j.f64_bits_at("downtime_bits")?,
             }),
             other => anyhow::bail!("unknown trace event kind `{other}`"),
         }
@@ -607,6 +659,21 @@ mod tests {
                 },
             ],
         });
+        t.push(TraceEvent::Fail {
+            at: 7300.0,
+            card: 2,
+        });
+        t.push(TraceEvent::Failover {
+            at: 7300.0,
+            card: 2,
+            moved: 5,
+            cpu: 1,
+        });
+        t.push(TraceEvent::Repair {
+            at: 7400.0,
+            card: 2,
+            downtime: 0.05,
+        });
         t
     }
 
@@ -648,7 +715,10 @@ mod tests {
                 "rejoin",
                 "flap_rollback",
                 "forecast",
-                "rebalance"
+                "rebalance",
+                "fail",
+                "failover",
+                "repair"
             ]
         );
     }

@@ -45,6 +45,30 @@ pub enum Modulation {
         end_secs: f64,
         factor: f64,
     },
+    /// Two-state Markov-modulated rate (calm / burst). Time is cut into
+    /// slots of `slot_secs`; the chain starts in state 0 (calm) and at
+    /// each slot boundary flips with probability `transition[state]`.
+    /// Within a slot the multiplier is `rates[state]`. Slot draws are
+    /// counter-based on `(seed, slot)`, so `factor_at` is a pure function
+    /// of `t` — the same profile replays bit-identically however the
+    /// thinning loop interleaves its queries.
+    Markov {
+        rates: [f64; 2],
+        transition: [f64; 2],
+        slot_secs: f64,
+        seed: u64,
+    },
+    /// Linear mix shift: the multiplier ramps from `from_factor` before
+    /// `start_secs` to `to_factor` after `end_secs`, interpolating
+    /// linearly in between (clamped non-negative). Models one region's
+    /// traffic draining toward another — pair a ramp-down on one app
+    /// with a ramp-up on another over the same window.
+    MixShift {
+        start_secs: f64,
+        end_secs: f64,
+        from_factor: f64,
+        to_factor: f64,
+    },
 }
 
 impl Modulation {
@@ -71,6 +95,46 @@ impl Modulation {
                     1.0
                 }
             }
+            Modulation::Markov {
+                rates,
+                transition,
+                slot_secs,
+                seed,
+            } => {
+                let slots = if slot_secs > 0.0 {
+                    (t / slot_secs).floor() as u64
+                } else {
+                    0
+                };
+                // Replay the chain from slot 0: each boundary's flip draw
+                // is keyed on (seed, slot) alone, so the walk is
+                // deterministic and query-order independent. O(t/slot)
+                // per call, which is fine for window-scale horizons.
+                let mut state = 0usize;
+                for slot in 0..slots {
+                    let key = seed ^ slot.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                    if Rng::new(key).next_f64() < transition[state] {
+                        state ^= 1;
+                    }
+                }
+                rates[state].max(0.0)
+            }
+            Modulation::MixShift {
+                start_secs,
+                end_secs,
+                from_factor,
+                to_factor,
+            } => {
+                let f = if t <= start_secs || end_secs <= start_secs {
+                    from_factor
+                } else if t >= end_secs {
+                    to_factor
+                } else {
+                    let frac = (t - start_secs) / (end_secs - start_secs);
+                    from_factor + (to_factor - from_factor) * frac
+                };
+                f.max(0.0)
+            }
         }
     }
 
@@ -81,6 +145,14 @@ impl Modulation {
             Modulation::Flat => 1.0,
             Modulation::Diurnal { depth, .. } => 1.0 + depth.max(0.0),
             Modulation::Flash { factor, .. } => factor.max(1.0),
+            Modulation::Markov { rates, .. } => {
+                rates[0].max(rates[1]).max(0.0)
+            }
+            Modulation::MixShift {
+                from_factor,
+                to_factor,
+                ..
+            } => from_factor.max(to_factor).max(0.0),
         }
     }
 }
@@ -289,5 +361,124 @@ mod tests {
         assert_eq!(dip.peak(), 1.0);
         assert_eq!(dip.factor_at(5.0), 0.25);
         assert_eq!(dip.factor_at(10.0), 1.0);
+    }
+
+    #[test]
+    fn markov_chain_is_deterministic_and_alternates_when_forced() {
+        // transition probabilities of 1 make every slot boundary flip, so
+        // the chain mechanics are checkable without statistics: calm on
+        // even slots, burst on odd.
+        let m = Modulation::Markov {
+            rates: [1.0, 4.0],
+            transition: [1.0, 1.0],
+            slot_secs: 10.0,
+            seed: 99,
+        };
+        assert_eq!(m.factor_at(5.0), 1.0);
+        assert_eq!(m.factor_at(15.0), 4.0);
+        assert_eq!(m.factor_at(25.0), 1.0);
+        assert_eq!(m.factor_at(35.0), 4.0);
+        assert_eq!(m.peak(), 4.0);
+        // Pure function of t: replaying a query gives the same answer,
+        // and a sticky chain (transition 0) never leaves calm.
+        let sticky = Modulation::Markov {
+            rates: [0.5, 7.0],
+            transition: [0.0, 0.0],
+            slot_secs: 10.0,
+            seed: 1,
+        };
+        for t in [0.0, 123.0, 4567.0] {
+            assert_eq!(sticky.factor_at(t), 0.5);
+            assert_eq!(m.factor_at(t), m.factor_at(t));
+        }
+        // Negative rates clamp rather than inverting the thinning test.
+        let clamped = Modulation::Markov {
+            rates: [-1.0, 2.0],
+            transition: [0.0, 0.0],
+            slot_secs: 10.0,
+            seed: 1,
+        };
+        assert_eq!(clamped.factor_at(5.0), 0.0);
+    }
+
+    #[test]
+    fn markov_bursts_concentrate_arrivals() {
+        let mut reg = registry();
+        boost_rate(&mut reg, "tdfir", 3600.0);
+        let td = app_id(&reg, "tdfir").unwrap();
+        let m = Modulation::Markov {
+            rates: [0.2, 5.0],
+            transition: [0.1, 0.1],
+            slot_secs: 60.0,
+            seed: 2024,
+        };
+        let mut profiles = flat(reg.len());
+        profiles[td.0 as usize] = m;
+        let reqs = generate_modulated(&reg, &profiles, 7200.0, 21);
+        let (mut burst, mut calm) = (0.0f64, 0.0f64);
+        for r in reqs.iter().filter(|r| r.app == td) {
+            if m.factor_at(r.arrival) > 1.0 {
+                burst += 1.0;
+            } else {
+                calm += 1.0;
+            }
+        }
+        // Symmetric transition => ~equal state occupancy, so the 25x rate
+        // ratio should dominate arrival counts with a wide margin.
+        assert!(
+            burst > 5.0 * calm.max(1.0),
+            "burst {burst} vs calm {calm}"
+        );
+        // And the whole trace is reproducible per seed.
+        let again = generate_modulated(&reg, &profiles, 7200.0, 21);
+        assert_eq!(reqs, again);
+    }
+
+    #[test]
+    fn mix_shift_ramps_one_app_into_another() {
+        let drain = Modulation::MixShift {
+            start_secs: 1000.0,
+            end_secs: 2000.0,
+            from_factor: 4.0,
+            to_factor: 0.0,
+        };
+        assert_eq!(drain.factor_at(0.0), 4.0);
+        assert_eq!(drain.factor_at(1500.0), 2.0);
+        assert_eq!(drain.factor_at(2500.0), 0.0);
+        assert_eq!(drain.peak(), 4.0);
+        // Negative targets clamp at zero mid-ramp.
+        let neg = Modulation::MixShift {
+            start_secs: 0.0,
+            end_secs: 100.0,
+            from_factor: 1.0,
+            to_factor: -1.0,
+        };
+        assert_eq!(neg.factor_at(80.0), 0.0);
+        assert_eq!(neg.peak(), 1.0);
+
+        // Statistically: a draining app front-loads its arrivals.
+        let mut reg = registry();
+        boost_rate(&mut reg, "tdfir", 3600.0);
+        let td = app_id(&reg, "tdfir").unwrap();
+        let mut profiles = flat(reg.len());
+        profiles[td.0 as usize] = Modulation::MixShift {
+            start_secs: 0.0,
+            end_secs: 3600.0,
+            from_factor: 4.0,
+            to_factor: 0.0,
+        };
+        let reqs = generate_modulated(&reg, &profiles, 3600.0, 33);
+        let tds: Vec<f64> = reqs
+            .iter()
+            .filter(|r| r.app == td)
+            .map(|r| r.arrival)
+            .collect();
+        let first = tds.iter().filter(|&&t| t < 1800.0).count() as f64;
+        let second = tds.len() as f64 - first;
+        // Integrated rate 3:1 between the halves; require better than 2:1.
+        assert!(
+            first > 2.0 * second.max(1.0),
+            "front {first} vs back {second}"
+        );
     }
 }

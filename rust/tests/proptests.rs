@@ -11,8 +11,8 @@ use repro::coordinator::{
     run_reconfiguration,
 };
 use repro::fleet::plane::{run_partitioned, CardHorizons};
-use repro::fleet::snapshot::ChainBuilder;
-use repro::fleet::{CardPool, ConcurrentFleet, FleetEnv, FleetRouter};
+use repro::fleet::snapshot::{ChainBuilder, RoutingEvent};
+use repro::fleet::{CardPool, ConcurrentFleet, FaultEvent, FaultPlan, FleetEnv, FleetRouter};
 use repro::fpga::device::{CardId, FpgaDevice, ReconfigKind};
 use repro::fpga::part::D5005;
 use repro::loopir::interp::Interp;
@@ -686,6 +686,147 @@ fn prop_fleet_route_index_matches_scan() {
                     format!("route {fast:?} != scan {slow:?} for app {app} at {arrival}"),
                 )?;
             }
+            Ok(())
+        },
+    );
+}
+
+/// Chaos engine vs the routing oracle: random failure/repair sequences
+/// interleaved with a mid-trace rolling redeployment keep the routing
+/// index bit-identical to `route_scan` at every probe, lose zero
+/// requests, and never leave a record executing on a card inside its
+/// dead interval.
+#[test]
+fn prop_faulty_fleet_route_matches_scan() {
+    let reg = registry();
+    forall(
+        8,
+        0xC4A05,
+        |rng| {
+            let cards = 2 + rng.next_below(3) as usize;
+            let dur = 600.0 + rng.next_f64() * 1200.0;
+            // Distinct victim cards, each with a fail and an optional
+            // later repair; the global time sort below preserves every
+            // card's Fail → Repair alternation, so the plan validates.
+            let mut order: Vec<u16> = (0..cards as u16).collect();
+            for i in (1..cards).rev() {
+                order.swap(i, rng.next_below(i as u64 + 1) as usize);
+            }
+            let n_faults = 1 + rng.next_below((cards as u64).min(3)) as usize;
+            let faults: Vec<(u16, f64, Option<f64>)> = order[..n_faults]
+                .iter()
+                .map(|&c| {
+                    let fail_at = 2.0 + rng.next_f64() * dur * 0.8;
+                    let repair_at = if rng.next_f64() < 0.6 {
+                        Some(fail_at + 0.1 + rng.next_f64() * dur * 0.2)
+                    } else {
+                        None
+                    };
+                    (c, fail_at, repair_at)
+                })
+                .collect();
+            (
+                cards,
+                dur,
+                rng.next_u64(),
+                faults,
+                rng.next_f64(),
+                rng.next_below(5) as usize,
+                1.5 + rng.next_f64() * 1.5,
+            )
+        },
+        |(cards, dur, seed, faults, frac, app_i, coef)| {
+            let mut env = FleetEnv::new(registry(), D5005, *cards);
+            env.deploy(ReconfigKind::Static, "tdfir", "o1", 2.07);
+            let mut events: Vec<FaultEvent> = Vec::new();
+            for &(card, fail_at, repair_at) in faults {
+                events.push(FaultEvent::Fail {
+                    card: CardId(card),
+                    at: fail_at,
+                });
+                if let Some(at) = repair_at {
+                    events.push(FaultEvent::Repair {
+                        card: CardId(card),
+                        at,
+                    });
+                }
+            }
+            events.sort_by(|a, b| a.at().partial_cmp(&b.at()).unwrap());
+            env.set_fault_plan(FaultPlan::new(events));
+
+            let mut trace = generate(&reg, *dur, *seed);
+            for r in &mut trace {
+                r.arrival += 2.0;
+            }
+            if trace.len() < 8 {
+                return Ok(());
+            }
+            // A mid-trace redeploy so fault events land inside (or
+            // around) a rolling drain/reprogram/rejoin sequence.
+            let redeploy_at = 1 + (frac * (trace.len() - 2) as f64) as usize;
+            for (i, r) in trace.iter().enumerate() {
+                if i == redeploy_at {
+                    env.deploy(ReconfigKind::Static, reg[*app_i].name, "o1", *coef);
+                }
+                env.serve(r).map_err(|e| e.to_string())?;
+                if i % 7 == 0 {
+                    for a in 0..reg.len() {
+                        let app = AppId(a as u16);
+                        let fast = env.router.route(&env.pool, app, r.arrival);
+                        let slow = env.router.route_scan(&env.pool, app, r.arrival);
+                        ensure(
+                            fast == slow,
+                            format!(
+                                "route {fast:?} != scan {slow:?} for app {a} \
+                                 at {} (request {i})",
+                                r.arrival
+                            ),
+                        )?;
+                    }
+                }
+            }
+            // Flush any faults scheduled past the last arrival so the
+            // routing-log accounting below sees the whole script.
+            env.advance_to(2.0 + dur + 10.0);
+
+            // Zero requests lost: one record per request, in serve order,
+            // every one finite and well-formed.
+            ensure(env.history.len() == trace.len(), "requests lost")?;
+            for (i, r) in env.history.all().iter().enumerate() {
+                ensure(r.id == i as u64, "record id order broken")?;
+                ensure(
+                    r.finish.is_finite() && r.finish + 1e-9 >= r.start,
+                    format!("corrupt record {}", r.id),
+                )?;
+            }
+            // No record rides a card through its dead interval: anything
+            // on a failed card either finished by the failure or started
+            // at/after the repair (the rejoin is never earlier).
+            for &(card, fail_at, repair_at) in faults {
+                let back = repair_at.unwrap_or(f64::INFINITY);
+                for r in env.history.all() {
+                    if r.served_by == ServedBy::Fpga(CardId(card)) {
+                        ensure(
+                            r.finish <= fail_at + 1e-9 || r.start >= back,
+                            format!(
+                                "record {} rode card {card} through its \
+                                 dead interval",
+                                r.id
+                            ),
+                        )?;
+                    }
+                }
+            }
+            // Every scripted failure reached the routing log.
+            let fails = env
+                .routing_log()
+                .iter()
+                .filter(|e| matches!(e, RoutingEvent::Fail { .. }))
+                .count();
+            ensure(
+                fails == faults.len(),
+                format!("{fails} Fail events for {} faults", faults.len()),
+            )?;
             Ok(())
         },
     );
@@ -1465,7 +1606,7 @@ fn prop_trace_jsonl_roundtrip_exact() {
                         rng.next_f64() * 1e4
                     }
                 };
-                let ev = match rng.next_below(11) {
+                let ev = match rng.next_below(14) {
                     0 => TraceEvent::Window {
                         window: rng.next_below(64),
                         at: f(rng),
@@ -1557,9 +1698,24 @@ fn prop_trace_jsonl_roundtrip_exact() {
                             })
                             .collect(),
                     },
-                    _ => TraceEvent::Rejoin {
+                    10 => TraceEvent::Rejoin {
                         at: f(rng),
                         card: rng.next_below(64) as u16,
+                    },
+                    11 => TraceEvent::Fail {
+                        at: f(rng),
+                        card: rng.next_below(64) as u16,
+                    },
+                    12 => TraceEvent::Failover {
+                        at: f(rng),
+                        card: rng.next_below(64) as u16,
+                        moved: rng.next_u64(),
+                        cpu: rng.next_u64(),
+                    },
+                    _ => TraceEvent::Repair {
+                        at: f(rng),
+                        card: rng.next_below(64) as u16,
+                        downtime: f(rng),
                     },
                 };
                 t.push(ev);

@@ -75,6 +75,14 @@ KINDS = {
         "outage_until_bits": "bits",
     },
     "rejoin": {"at_bits": "bits", "card": "num"},
+    "fail": {"at_bits": "bits", "card": "num"},
+    "failover": {
+        "at_bits": "bits",
+        "card": "num",
+        "moved": "u64",
+        "cpu": "u64",
+    },
+    "repair": {"at_bits": "bits", "card": "num", "downtime_bits": "bits"},
 }
 
 # Sub-object schemas for the array-carrying events ("entries" is shared
@@ -243,6 +251,18 @@ def describe(ev):
         )
     if k == "rejoin":
         return f"`t={at}` rejoin card {ev['card']}"
+    if k == "fail":
+        return f"`t={at}` **card {ev['card']} FAILED** — unroutable, FIFO orphaned"
+    if k == "failover":
+        return (
+            f"`t={at}` **failover** from card {ev['card']}: {ev['moved']} "
+            f"request(s) re-served on surviving holders, {ev['cpu']} on cpu"
+        )
+    if k == "repair":
+        return (
+            f"`t={at}` **card {ev['card']} repaired** — re-seated with "
+            f"{fmt_t(ev['downtime_bits'])} downtime"
+        )
     raise AssertionError(k)  # unreachable: parse() rejected unknown kinds
 
 
